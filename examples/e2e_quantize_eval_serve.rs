@@ -1,0 +1,166 @@
+//! **The end-to-end driver** (DESIGN.md "End-to-end validation"): exercises all
+//! three layers on a real small workload and reports the paper's headline
+//! metrics. Recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example e2e_quantize_eval_serve
+//!
+//! Pipeline: load the JAX-trained nano LM (trained at `make artifacts` on the
+//! repository's own source corpus, loss curve in the manifest) → calibrate
+//! Hessians in Rust → QTIP-quantize every decoder linear (RHT + BlockLDLQ +
+//! tail-biting 3INST trellis) → evaluate held-out perplexity + zeroshot proxies
+//! fp32 vs 2-bit → verify the native fused decoder against the AOT Pallas/XLA
+//! artifact through PJRT → serve batched generation requests and report
+//! latency/throughput.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use qtip::coordinator::{quantize_model_qtip, GenRequest, ServerConfig, ServerHandle};
+use qtip::eval::{perplexity, zeroshot_suite};
+use qtip::hessian::collect_hessians;
+use qtip::model::{split_corpus, Transformer, WeightStore};
+use qtip::quant::QtipConfig;
+use qtip::runtime::{PjrtRuntime, Registry};
+use qtip::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    println!("== QTIP end-to-end driver ==\n");
+
+    // --- Layer 2 artifact: the trained model ---
+    let ws = WeightStore::load(&dir, "nano")
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    if let Some(meta) = ws.meta.get("loss_curve").and_then(|c| c.as_arr()) {
+        let first = &meta[0];
+        let last = &meta[meta.len() - 1];
+        println!(
+            "training loss curve (JAX, build time): step {} loss {:.3} -> step {} loss {:.3}",
+            first.as_arr().unwrap()[0],
+            first.as_arr().unwrap()[1].as_f64().unwrap(),
+            last.as_arr().unwrap()[0],
+            last.as_arr().unwrap()[1].as_f64().unwrap()
+        );
+    }
+    let model = Transformer::from_store(&ws);
+    println!(
+        "model: {} ({} params, {} layers, d={})\n",
+        ws.config.name,
+        ws.config.total_params(),
+        ws.config.n_layers,
+        ws.config.d_model
+    );
+
+    // --- Calibration + evaluation data (held-out source corpus) ---
+    let holdout = std::fs::read(dir.join("corpus_holdout.bin"))?;
+    let (calib_bytes, eval_bytes) = split_corpus(&holdout, 0.5);
+    let calib: Vec<Vec<u16>> = calib_bytes
+        .chunks(128)
+        .take(24)
+        .map(|c| c.iter().map(|&b| b as u16).collect())
+        .collect();
+
+    // --- fp32 baseline ---
+    let eval_tokens = 2048;
+    let base = perplexity(&model, eval_bytes, eval_tokens);
+    let base_zs = zeroshot_suite(&model, eval_bytes, 24, 7);
+    println!(
+        "fp32  : ppl {:.3} | zeroshot next-byte {:.3} copy {:.3} bracket {:.3}",
+        base.ppl, base_zs.next_byte_acc, base_zs.copy_acc, base_zs.bracket_acc
+    );
+
+    // --- Quantize (L3 pipeline) ---
+    let cfg = QtipConfig { l: 12, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 7 };
+    let hessians = collect_hessians(&model, &calib);
+    let mut qmodel = Transformer::from_store(&ws);
+    let t = std::time::Instant::now();
+    let report = quantize_model_qtip(&mut qmodel, &hessians, &cfg, 1, |l| {
+        eprintln!("  quantized {} ({}x{}) proxy {:.5}", l.name, l.rows, l.cols, l.metrics.relative_proxy);
+    });
+    println!(
+        "\nquantized {} layers in {:.1}s: {:.2}x compression, mean rel-proxy {:.5}",
+        report.layers.len(),
+        t.elapsed().as_secs_f64(),
+        report.compression_ratio(),
+        report.mean_relative_proxy()
+    );
+
+    // --- Quality after quantization ---
+    qmodel.ensure_caches();
+    let qppl = perplexity(&qmodel, eval_bytes, eval_tokens);
+    let qzs = zeroshot_suite(&qmodel, eval_bytes, 24, 7);
+    println!(
+        "2-bit : ppl {:.3} | zeroshot next-byte {:.3} copy {:.3} bracket {:.3}",
+        qppl.ppl, qzs.next_byte_acc, qzs.copy_acc, qzs.bracket_acc
+    );
+
+    // --- Cross-layer parity: native fused decode vs AOT Pallas artifact ---
+    let reg = Registry::open(&dir)?;
+    let rt = PjrtRuntime::cpu()?;
+    // nano's attention matrices are 128x128; find the matching L=16 artifact and
+    // re-quantize one layer at L=16 for the check.
+    if let Some(info) = reg.find_decode_matvec(128, 128, "3inst", 2) {
+        let exe = reg.load_decode_matvec(&rt, info)?;
+        let w0 = ws.get("l0.q");
+        let h0 = &hessians.by_layer["l0.q"];
+        let cfg16 = QtipConfig { l: 16, ..cfg.clone() };
+        let qm = qtip::quant::quantize_matrix_qtip(w0, h0, &cfg16).qm;
+        let mut rng = Rng::new(1);
+        let x = rng.gauss_vec(128);
+        let y_native = qm.matvec(&x);
+        let y_pjrt = exe.matvec(&qm, &x)?;
+        let maxdiff = y_native
+            .iter()
+            .zip(&y_pjrt)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max);
+        println!("\nPJRT parity (l0.q @ L=16): native vs Pallas-AOT max diff {maxdiff:.2e}");
+        assert!(maxdiff < 1e-3, "three-layer parity violated");
+    }
+
+    // --- Serve batched requests over the quantized model ---
+    println!("\nserving 6 batched generation requests (quantized decode path)...");
+    let server = ServerHandle::spawn(
+        Arc::new(qmodel),
+        ServerConfig { max_batch: 3, kv_budget_bytes: 64 << 20 },
+    );
+    let prompts = ["fn main() {", "pub struct ", "import numpy", "## Usage", "let mut x = ", "def train("];
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            server.submit(GenRequest {
+                id: i as u64,
+                prompt: p.to_string(),
+                max_new_tokens: 48,
+                temperature: 0.7,
+                top_k: 30,
+                seed: i as u64 + 1,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv()?;
+        let preview: String = r
+            .text
+            .chars()
+            .map(|c| if c == '\n' { '¶' } else { c })
+            .take(46)
+            .collect();
+        println!(
+            "  [req {}] ttft {:>6.1} ms | {:>6.1} tok/s | {preview:?}",
+            r.id,
+            r.ttft * 1e3,
+            r.decode_tok_per_sec
+        );
+    }
+    let stats = server.shutdown();
+    println!(
+        "\nserved {} requests / {} tokens; aggregate decode throughput {:.1} tok/s (peak batch {})",
+        stats.completed,
+        stats.total_generated_tokens,
+        stats.throughput_tok_per_sec(),
+        stats.peak_batch
+    );
+    println!("\n== e2e driver complete: all three layers verified on a real workload ==");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Quick interactive check: quantize i.i.d. Gaussian sequences with each code and
+//! report MSE (the Table 1 setting, reduced sample count).
+use qtip::codes::build_code;
+use qtip::trellis::{quantize_tail_biting, Trellis, Viterbi, ViterbiWorkspace};
+use qtip::util::rng::Rng;
+use qtip::util::stats::mse;
+
+fn main() {
+    let t_len = 256;
+    let n_seqs: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    for (name, l, k, v) in [
+        ("1mad", 16u32, 2u32, 1u32),
+        ("3inst", 16, 2, 1),
+        ("lut", 16, 2, 1),
+        ("hyb", 16, 2, 2),
+    ] {
+        let code = build_code(name, l, v, 0xC0DE);
+        let values = code.materialize();
+        let trellis = Trellis::new(l, k, v);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(1);
+        let mut ws = ViterbiWorkspace::new();
+        let mut total = 0.0;
+        let start = std::time::Instant::now();
+        for _ in 0..n_seqs {
+            let seq = rng.gauss_vec(t_len);
+            let sol = quantize_tail_biting(&vit, &seq, &mut ws);
+            let dec = vit.decode(&sol.states);
+            total += mse(&dec, &seq);
+        }
+        println!(
+            "{name:>6} L={l} k={k} V={v}: MSE {:.4}  ({:.2} s, {} seqs)",
+            total / n_seqs as f64,
+            start.elapsed().as_secs_f64(),
+            n_seqs
+        );
+    }
+}

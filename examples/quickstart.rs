@@ -1,0 +1,72 @@
+//! Quickstart: quantize a single weight matrix with QTIP and inspect the result.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the full per-matrix pipeline on synthetic data: RHT incoherence
+//! processing → BlockLDLQ with tail-biting trellis coding (3INST computed code)
+//! → packed 2-bit artifact → fused decode-matvec.
+
+use qtip::quant::{quantize_matrix_qtip, QtipConfig};
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+use qtip::util::stats::mse;
+
+fn main() {
+    // A synthetic "layer": correlated weights + a realistic activation Hessian.
+    let (m, n) = (128usize, 256usize);
+    let mut rng = Rng::new(42);
+    let w = Matrix::gaussian(m, n, 0.02, &mut rng);
+    let acts = Matrix::gaussian(n, 2 * n, 1.0, &mut rng);
+    let mut h = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for t in 0..2 * n {
+                s += acts.at(i, t) * acts.at(j, t);
+            }
+            *h.at_mut(i, j) = s / (2 * n) as f32;
+        }
+    }
+
+    // The paper's configuration, scaled down to L=12 for a fast demo
+    // (L=16 is the headline setting; try it with `--release` patience).
+    let cfg = QtipConfig {
+        l: 12,
+        k: 2,
+        v: 1,
+        tx: 16,
+        ty: 16,
+        code: "3inst".into(),
+        seed: 7,
+    };
+    println!("quantizing {m}x{n} to {} bits/weight (code={}, L={})...", cfg.k, cfg.code, cfg.l);
+    let res = quantize_matrix_qtip(&w, &h, &cfg);
+
+    println!("  relative proxy loss : {:.5}", res.metrics.relative_proxy);
+    println!("  normalized MSE      : {:.5}", res.metrics.mse);
+    println!(
+        "  artifact size       : {} bytes (fp32 was {} — {:.1}x smaller)",
+        res.qm.size_bytes(),
+        m * n * 4,
+        (m * n * 4) as f64 / res.qm.size_bytes() as f64
+    );
+
+    // The decode path: fused trellis-decode matvec vs explicit reconstruction.
+    let x = rng.gauss_vec(n);
+    let y_fused = res.qm.matvec(&x);
+    let y_rec = res.qm.reconstruct_w().matvec(&x);
+    println!(
+        "  fused vs reconstructed matvec max diff: {:.2e}",
+        y_fused
+            .iter()
+            .zip(&y_rec)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    );
+    let y_exact = w.matvec(&x);
+    println!(
+        "  end-to-end output MSE vs fp32: {:.3e} (output var {:.3e})",
+        mse(&y_fused, &y_exact),
+        qtip::util::stats::variance(&y_exact)
+    );
+}

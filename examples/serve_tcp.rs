@@ -1,0 +1,54 @@
+//! Network serving demo: quantize the trained nano model, expose it over the
+//! newline-JSON TCP protocol, and drive it with in-process clients.
+//!
+//!     cargo run --release --example serve_tcp
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+
+use qtip::coordinator::{quantize_model_qtip, ServerConfig, ServerHandle, TcpFrontend};
+use qtip::hessian::collect_hessians;
+use qtip::model::{split_corpus, Transformer, WeightStore};
+use qtip::quant::QtipConfig;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ws = WeightStore::load(&dir, "nano")
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    let mut model = Transformer::from_store(&ws);
+
+    // Quick 2-bit quantization.
+    let holdout = std::fs::read(dir.join("corpus_holdout.bin"))?;
+    let (calib, _) = split_corpus(&holdout, 0.5);
+    let seqs: Vec<Vec<u16>> = calib
+        .chunks(128)
+        .take(12)
+        .map(|c| c.iter().map(|&b| b as u16).collect())
+        .collect();
+    let hs = collect_hessians(&model, &seqs);
+    let cfg = QtipConfig { l: 12, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 7 };
+    let report = quantize_model_qtip(&mut model, &hs, &cfg, 1, |_| {});
+    model.ensure_caches();
+    println!("model quantized ({:.2}x); starting TCP front-end...", report.compression_ratio());
+
+    let server = Arc::new(ServerHandle::spawn(Arc::new(model), ServerConfig::default()));
+    let fe = TcpFrontend::spawn(server, "127.0.0.1:0")?;
+    println!("listening on {}", fe.addr);
+
+    // Drive it like an external client would.
+    for (i, prompt) in ["fn quantize(", "let trellis = ", "## QTIP"].iter().enumerate() {
+        let mut s = TcpStream::connect(fe.addr)?;
+        writeln!(
+            s,
+            r#"{{"prompt": "{prompt}", "max_new_tokens": 40, "temperature": 0.7, "seed": {i}}}"#
+        )?;
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line)?;
+        println!("client {i} <- {}", line.trim());
+    }
+    fe.shutdown();
+    println!("done.");
+    Ok(())
+}

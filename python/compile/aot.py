@@ -1,0 +1,170 @@
+"""AOT lowering driver: jit → StableHLO → XLA HLO **text** artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Also emits the cross-language contracts:
+  * golden_codes.json — decode values for states 0..1023 per compute code
+    (pinned by both pytest and `cargo test`),
+  * hyb_lut_q9.json / hyb_lut_q6.json — the shared HYB LUTs (numpy k-means on
+    an empirical Gaussian, seeded),
+  * aot_manifest.json — index of every artifact with shapes/geometry.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import codes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: without it the shift/index
+    # tables inside the kernel are elided as `constant({...})`, which XLA
+    # 0.5.1's text parser silently re-materializes as ZEROS.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constants survived — artifact would be corrupt"
+    return text
+
+
+def train_hyb_lut(q, v, seed, iters=30):
+    """Seeded numpy k-means on (g, |g|) — the shared HYB LUT contract."""
+    rng = np.random.default_rng(seed)
+    k = 1 << q
+    n = max(k * 64, 1 << 14)
+    pts = rng.standard_normal((n, v)).astype(np.float32)
+    pts[:, -1] = np.abs(pts[:, -1])
+    # k-means++ light: random distinct init is fine at this n/k ratio.
+    centroids = pts[rng.choice(n, size=k, replace=False)].copy()
+    for _ in range(iters):
+        d2 = ((pts[:, None, :] - centroids[None]) ** 2).sum(-1)  # (n, k)
+        assign = d2.argmin(1)
+        for c in range(k):
+            m = assign == c
+            if m.any():
+                centroids[c] = pts[m].mean(0)
+    return centroids
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"artifacts": [], "golden": "golden_codes.json"}
+
+    # --- golden code vectors ---
+    states = jnp.arange(1024, dtype=jnp.uint32)
+    golden = {
+        "states": list(range(1024)),
+        "1mad": np.asarray(codes.onemad_decode(states)).astype(float).tolist(),
+        "3inst": np.asarray(codes.threeinst_decode(states)).astype(float).tolist(),
+    }
+    (out / "golden_codes.json").write_text(json.dumps(golden))
+    print("[aot] wrote golden_codes.json")
+
+    # --- shared HYB LUTs ---
+    for q, v in [(9, 2), (6, 1)]:
+        lut = train_hyb_lut(q, v, seed=0xB0B + q)
+        (out / f"hyb_lut_q{q}.json").write_text(
+            json.dumps({"q": q, "v": v, "lut": lut.reshape(-1).astype(float).tolist()})
+        )
+        print(f"[aot] wrote hyb_lut_q{q}.json")
+
+    # --- HLO artifacts: fused decode-matvec graphs ---
+    jobs = [
+        # (name, rows, cols, l, k, v, code)
+        ("decode_matvec_3inst_128x128_k2", 128, 128, 16, 2, 1, "3inst"),
+        ("decode_matvec_3inst_512x128_k2", 512, 128, 16, 2, 1, "3inst"),
+        ("decode_matvec_3inst_128x512_k2", 128, 512, 16, 2, 1, "3inst"),
+        ("decode_matvec_1mad_128x128_k2", 128, 128, 16, 2, 1, "1mad"),
+        ("decode_matvec_3inst_128x128_k4", 128, 128, 16, 4, 1, "3inst"),
+    ]
+    for name, rows, cols, l, k, v, code in jobs:
+        fn, meta = model_mod.quantized_matvec_fn(rows, cols, l, k, v, code)
+        ex_args = model_mod.example_args_matvec(rows, cols, l, k, v)
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        (out / path).write_text(text)
+        manifest["artifacts"].append(
+            dict(
+                name=name,
+                path=path,
+                kind="decode_matvec",
+                rows=rows,
+                cols=cols,
+                l=l,
+                k=k,
+                v=v,
+                code=code,
+                tx=16,
+                ty=16,
+                padded_len=meta["padded_len"],
+            )
+        )
+        print(f"[aot] lowered {name} ({len(text)} chars)")
+
+    # --- quantized MLP block (composition demo) ---
+    d, dff, l, k = 128, 512, 16, 2
+    mlp_fn, _ = model_mod.quantized_mlp_fn(d, dff, l, k, "3inst")
+    pg = model_mod.example_args_matvec(dff, d, l, k, 1)[0]
+    pd = model_mod.example_args_matvec(d, dff, l, k, 1)[0]
+    xs = jax.ShapeDtypeStruct((d,), jnp.float32)
+    ss = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(mlp_fn).lower(pg, pg, pd, xs, ss, ss, ss)
+    (out / "quantized_mlp_3inst_128_k2.hlo.txt").write_text(to_hlo_text(lowered))
+    manifest["artifacts"].append(
+        dict(
+            name="quantized_mlp_3inst_128_k2",
+            path="quantized_mlp_3inst_128_k2.hlo.txt",
+            kind="quantized_mlp",
+            d_model=d,
+            d_ff=dff,
+            l=l,
+            k=k,
+            code="3inst",
+        )
+    )
+    print("[aot] lowered quantized_mlp_3inst_128_k2")
+
+    # --- dense baseline matvec ---
+    dense = model_mod.f32_matvec_fn()
+    lowered = jax.jit(dense).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128,), jnp.float32),
+    )
+    (out / "matvec_f32_128x128.hlo.txt").write_text(to_hlo_text(lowered))
+    manifest["artifacts"].append(
+        dict(
+            name="matvec_f32_128x128",
+            path="matvec_f32_128x128.hlo.txt",
+            kind="dense_matvec",
+            rows=128,
+            cols=128,
+        )
+    )
+    print("[aot] lowered matvec_f32_128x128")
+
+    (out / "aot_manifest.json").write_text(json.dumps(manifest))
+    print(f"[aot] manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

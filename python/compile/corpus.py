@@ -1,0 +1,47 @@
+"""Offline corpus loading — mirrors rust/src/model/tokenizer.rs exactly
+(same extensions, same skip rules, same deterministic traversal, same
+train/holdout split) so Python training and Rust evaluation agree on the data.
+"""
+
+import os
+from pathlib import Path
+
+EXTS = {".rs", ".py", ".md", ".toml", ".txt"}
+SKIP_DIRS = {"target", ".git", "artifacts"}
+
+
+def load_corpus(roots, max_bytes):
+    out = bytearray()
+    stack = [Path(r) for r in roots]
+    while stack:
+        d = stack.pop()
+        try:
+            entries = sorted(p for p in d.iterdir())
+        except OSError:
+            continue
+        for p in entries:
+            if len(out) >= max_bytes:
+                return bytes(out[:max_bytes])
+            if p.is_dir():
+                if p.name not in SKIP_DIRS:
+                    stack.append(p)
+            elif p.suffix in EXTS:
+                try:
+                    out += p.read_bytes()
+                    out += b"\n"
+                except OSError:
+                    pass
+    return bytes(out[:max_bytes])
+
+
+def split_corpus(corpus, holdout_frac=0.1):
+    cut = int(len(corpus) * (1.0 - holdout_frac))
+    return corpus[:cut], corpus[cut:]
+
+
+def default_roots():
+    here = Path(__file__).resolve().parent.parent.parent  # repo root
+    roots = [here]
+    if os.path.isdir("/opt/xla-example/src"):
+        roots.append(Path("/opt/xla-example/src"))
+    return roots

@@ -1,0 +1,87 @@
+"""Bit-exact JAX mirrors of the Rust compute codes (rust/src/codes/*).
+
+These are the L-bit-state -> pseudorandom-Gaussian decoders of paper §3.1,
+written with jnp.uint32 wrap-around arithmetic and f16 bitcasts so that the
+Pallas kernel (decode.py), the jnp reference (ref.py), and the Rust decoder all
+agree bit-for-bit. Frozen constants are documented in DESIGN.md §7; golden
+vectors are emitted by aot.py and checked on both sides.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+# --- 1MAD (Alg. 1) ---
+ONEMAD_A = 34038481
+ONEMAD_B = 76625530
+ONEMAD_MEAN = 510.0
+ONEMAD_STD = 147.8005413
+
+# --- 3INST (Alg. 2) ---
+THREEINST_A = 89226354
+THREEINST_B = 64248484
+THREEINST_MASK = 0x8FFF
+THREEINST_MAGIC = 0x3B60  # f16 bits of 0.922
+THREEINST_STD = 1.2443900210
+
+
+def onemad_decode(states):
+    """Decode uint32 state words to approx-N(0,1) float32 (1MAD)."""
+    states = states.astype(jnp.uint32)
+    x = states * jnp.uint32(ONEMAD_A) + jnp.uint32(ONEMAD_B)
+    s = (
+        (x & jnp.uint32(0xFF))
+        + ((x >> jnp.uint32(8)) & jnp.uint32(0xFF))
+        + ((x >> jnp.uint32(16)) & jnp.uint32(0xFF))
+        + (x >> jnp.uint32(24))
+    )
+    return (s.astype(jnp.float32) - ONEMAD_MEAN) * (1.0 / ONEMAD_STD)
+
+
+def _f16_bits_to_f32(bits16):
+    """Reinterpret uint16 as IEEE binary16, widen to f32."""
+    h = lax.bitcast_convert_type(bits16.astype(jnp.uint16), jnp.float16)
+    return h.astype(jnp.float32)
+
+
+def threeinst_decode(states):
+    """Decode uint32 state words to approx-N(0,1) float32 (3INST)."""
+    states = states.astype(jnp.uint32)
+    x = states * jnp.uint32(THREEINST_A) + jnp.uint32(THREEINST_B)
+    lo = (x & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+    hi = (x >> jnp.uint32(16)).astype(jnp.uint16)
+    mask = jnp.uint16(THREEINST_MASK)
+    magic = jnp.uint16(THREEINST_MAGIC)
+    m1 = _f16_bits_to_f32((lo & mask) ^ magic)
+    m2 = _f16_bits_to_f32((hi & mask) ^ magic)
+    return (m1 + m2) * (1.0 / THREEINST_STD)
+
+
+def hyb_hash(states):
+    """Klimov-Shamir T-function x <- x^2 + x (mod 2^32)."""
+    x = states.astype(jnp.uint32)
+    return x * x + x
+
+
+def hyb_decode(states, lut, q):
+    """Decode via hashed lookup (Alg. 3). `lut` is (2^q, V) float32.
+
+    Returns (N, V) float32 — bit 15 of the hash flips the sign of the last
+    component.
+    """
+    x = hyb_hash(states)
+    idx = (x >> jnp.uint32(15 - q)) & jnp.uint32((1 << q) - 1)
+    v = jnp.asarray(lut, jnp.float32)[idx]  # (N, V)
+    flip = ((x >> jnp.uint32(15)) & jnp.uint32(1)).astype(jnp.float32)
+    sign = 1.0 - 2.0 * flip
+    return v.at[:, -1].multiply(sign)
+
+
+def decode_by_name(name, states, lut=None, q=None):
+    if name == "1mad":
+        return onemad_decode(states)
+    if name == "3inst":
+        return threeinst_decode(states)
+    if name == "hyb":
+        assert lut is not None and q is not None
+        return hyb_decode(states, lut, q)
+    raise ValueError(f"unknown code '{name}'")

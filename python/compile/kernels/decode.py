@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernel: fused trellis-decode + matvec (paper §3.1, §4.3).
+
+One grid instance per 16-row output tile. Each instance walks the row's packed
+tiles, extracts every L-bit window with static shift tables (the bitstream is
+little-endian, so a window is `(lo >> sh) | (hi << (32-sh))` — the "bitshift
+decode"), maps states to weights with the compute code, and accumulates the
+tile-local GEMV. The decoded weights never leave registers/VMEM: no `rows×cols`
+f32 tensor is materialized (asserted by tests on the lowered HLO).
+
+TPU note (DESIGN.md §Hardware-Adaptation): `interpret=True` is mandatory here —
+the CPU PJRT plugin cannot execute Mosaic custom calls. BlockSpecs express the
+same HBM→VMEM schedule the CUDA kernels express with threadblocks; per-tile
+VMEM = tile_words·4 B (packed) + 64 B (x tile) + 64 B (acc) ≪ VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import codes
+
+
+def _window_tables(steps, kv, l):
+    """Static per-step word-index and shift tables for window extraction."""
+    bit = np.arange(steps, dtype=np.int64) * kv
+    w_idx = (bit >> 5).astype(np.int32)
+    sh = (bit & 31).astype(np.uint32)
+    del l
+    return w_idx, sh
+
+
+def _extract_states(words, w_idx, sh, l):
+    """Vectorized little-endian window extraction (uint32 arithmetic only)."""
+    lo = words[w_idx]
+    hi = words[w_idx + 1]
+    # (hi << (32-sh)) without an out-of-range shift when sh == 0:
+    # (hi << (31-sh)) << 1 drops to 0 exactly when sh == 0.
+    high = (hi << (jnp.uint32(31) - sh)) << jnp.uint32(1)
+    return ((lo >> sh) | high) & jnp.uint32((1 << l) - 1)
+
+
+def _decode_states(name, states, lut, q):
+    if name == "1mad":
+        return codes.onemad_decode(states)[:, None]
+    if name == "3inst":
+        return codes.threeinst_decode(states)[:, None]
+    if name == "hyb":
+        return codes.hyb_decode(states, lut, q)
+    raise ValueError(name)
+
+
+def make_decode_matvec(rows, cols, l, k, v, code, tx=16, ty=16, lut=None, q=None):
+    """Build the fused decode-matvec as a jax function.
+
+    Signature of the returned fn:
+        fn(packed: uint32[tiles_r, tiles_c * padded_len], x: f32[cols],
+           scale: f32[]) -> f32[rows]
+    """
+    assert rows % tx == 0 and cols % ty == 0
+    t = tx * ty
+    assert t % v == 0
+    steps = t // v
+    kv = k * v
+    total_bits = steps * kv
+    padded_len = (total_bits + (l - kv)) // 32 + 2
+    tiles_r, tiles_c = rows // tx, cols // ty
+    w_idx_np, sh_np = _window_tables(steps, kv, l)
+    has_lut = lut is not None
+    lut_np = None if lut is None else np.asarray(lut, np.float32)
+
+    # Pallas forbids captured array constants: the static shift tables (and the
+    # HYB LUT) enter as explicit kernel inputs, broadcast to every grid step.
+    def kernel(packed_ref, x_ref, w_idx_ref, sh_ref, *rest):
+        lut_ref = rest[0] if has_lut else None
+        o_ref = rest[-1]
+        words_row = packed_ref[0, :]
+        w_idx = w_idx_ref[...]
+        sh = sh_ref[...]
+        lut_arr = lut_ref[...] if has_lut else None
+        acc = jnp.zeros((tx,), jnp.float32)
+        for bj in range(tiles_c):
+            words = words_row[bj * padded_len : (bj + 1) * padded_len]
+            states = _extract_states(words, w_idx, sh, l)
+            vals = _decode_states(code, states, lut_arr, q)  # (steps, v)
+            w_tile = vals.reshape(tx, ty)
+            acc = acc + w_tile @ x_ref[bj * ty : (bj + 1) * ty]
+        o_ref[...] = acc
+
+    in_specs = [
+        pl.BlockSpec((1, tiles_c * padded_len), lambda i: (i, 0)),
+        pl.BlockSpec((cols,), lambda i: (0,)),
+        pl.BlockSpec((steps,), lambda i: (0,)),
+        pl.BlockSpec((steps,), lambda i: (0,)),
+    ]
+    if has_lut:
+        in_specs.append(pl.BlockSpec(lut_np.shape, lambda i: (0,) * lut_np.ndim))
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(tiles_r,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tx,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+    w_idx_c = jnp.asarray(w_idx_np)
+    sh_c = jnp.asarray(sh_np)
+
+    if has_lut:
+        lut_c = jnp.asarray(lut_np)
+
+        def fn(packed, x, scale):
+            return call(packed, x, w_idx_c, sh_c, lut_c) * scale
+
+    else:
+
+        def fn(packed, x, scale):
+            return call(packed, x, w_idx_c, sh_c) * scale
+
+    return fn, dict(padded_len=padded_len, tiles_r=tiles_r, tiles_c=tiles_c)
+
+
+@functools.lru_cache(maxsize=None)
+def cached_decode_matvec(rows, cols, l, k, v, code, tx=16, ty=16):
+    """LUT-free codes only (hashable args) — used by tests."""
+    return make_decode_matvec(rows, cols, l, k, v, code, tx, ty)

@@ -1,0 +1,139 @@
+"""Pure-numpy correctness oracle for the trellis decode + matvec.
+
+Independent implementation (numpy int arithmetic, no JAX) of:
+  * the little-endian packed bitstream / window extraction (DESIGN.md §7),
+  * the compute codes (1MAD / 3INST / HYB),
+  * the tiled decode-matvec the Pallas kernel computes.
+
+pytest compares kernels/decode.py (and the jnp decode in codes.py) against this
+module; the Rust test-suite pins the same golden vectors from aot.py.
+"""
+
+import numpy as np
+
+
+# ---------- packed stream helpers ----------
+
+def pack_bits(bits):
+    """Pack a 0/1 array (little-endian bit order) into uint32 words."""
+    bits = np.asarray(bits, dtype=np.uint64)
+    n_words = (len(bits) + 31) // 32
+    words = np.zeros(n_words, dtype=np.uint64)
+    for p, b in enumerate(bits):
+        words[p // 32] |= np.uint64(int(b) & 1) << np.uint64(p % 32)
+    return words.astype(np.uint32)
+
+
+def pad_for_decode(words, total_bits, l, kv):
+    """Duplicate the head L-kV bits after the stream end + 1 spare word
+    (mirror of rust trellis::packing::pad_for_decode)."""
+    words = np.asarray(words, dtype=np.uint32)
+    pad_bits = l - kv
+    padded_bits = total_bits + pad_bits
+    out = np.zeros(padded_bits // 32 + 2, dtype=np.uint32)
+    out[: len(words)] = words
+    for i in range(pad_bits):
+        b = (int(words[i // 32]) >> (i % 32)) & 1
+        p = total_bits + i
+        out[p // 32] |= np.uint32(b << (p % 32))
+    return out
+
+
+def decode_window(padded, bit_offset, l):
+    """State at bit_offset: one unaligned 64-bit load, shift, mask."""
+    w = bit_offset >> 5
+    sh = bit_offset & 31
+    lo = int(padded[w])
+    hi = int(padded[w + 1]) if w + 1 < len(padded) else 0
+    pair = lo | (hi << 32)
+    return (pair >> sh) & ((1 << l) - 1)
+
+
+# ---------- codes (independent numpy implementations) ----------
+
+M32 = 1 << 32
+
+
+def onemad_ref(state):
+    x = (34038481 * int(state) + 76625530) % M32
+    s = (x & 0xFF) + ((x >> 8) & 0xFF) + ((x >> 16) & 0xFF) + (x >> 24)
+    return np.float32(
+        (np.float32(s) - np.float32(510.0)) * (np.float32(1.0) / np.float32(147.8005413))
+    )
+
+
+def _f16(bits):
+    return np.float32(np.array([bits], dtype=np.uint16).view(np.float16)[0])
+
+
+def threeinst_ref(state):
+    x = (89226354 * int(state) + 64248484) % M32
+    m1 = _f16(((x & 0xFFFF) & 0x8FFF) ^ 0x3B60)
+    m2 = _f16((((x >> 16) & 0xFFFF) & 0x8FFF) ^ 0x3B60)
+    return np.float32((m1 + m2) * (np.float32(1.0) / np.float32(1.2443900210)))
+
+
+def hyb_ref(state, lut, q):
+    x = (int(state) * int(state) + int(state)) % M32
+    idx = (x >> (15 - q)) & ((1 << q) - 1)
+    v = np.array(lut[idx], dtype=np.float32).copy()
+    if x & (1 << 15):
+        v[-1] = -v[-1]
+    return v
+
+
+def decode_ref(name, state, lut=None, q=None):
+    if name == "1mad":
+        return np.array([onemad_ref(state)], dtype=np.float32)
+    if name == "3inst":
+        return np.array([threeinst_ref(state)], dtype=np.float32)
+    if name == "hyb":
+        return hyb_ref(state, lut, q)
+    raise ValueError(name)
+
+
+# ---------- tiled decode + matvec oracle ----------
+
+def decode_tile_ref(padded_words, l, k, v, tx, ty, name, lut=None, q=None):
+    """Decode one tx*ty tile (row-major) from its padded word stream."""
+    t = tx * ty
+    steps = t // v
+    out = np.zeros(t, dtype=np.float32)
+    for step in range(steps):
+        state = decode_window(padded_words, step * k * v, l)
+        vals = decode_ref(name, state, lut, q)
+        out[step * v : (step + 1) * v] = vals
+    return out.reshape(tx, ty)
+
+
+def matvec_ref(packed_tiles, l, k, v, tx, ty, name, x, scale, lut=None, q=None):
+    """y = scale * decode(W) @ x over a (tiles_r, tiles_c, tile_words) layout."""
+    tiles_r, tiles_c, _ = packed_tiles.shape
+    y = np.zeros(tiles_r * tx, dtype=np.float32)
+    for bi in range(tiles_r):
+        for bj in range(tiles_c):
+            w = decode_tile_ref(packed_tiles[bi, bj], l, k, v, tx, ty, name, lut, q)
+            y[bi * tx : (bi + 1) * tx] += w @ x[bj * ty : (bj + 1) * ty]
+    return y * np.float32(scale)
+
+
+def random_packed_tiles(rng, tiles_r, tiles_c, l, k, v, tx, ty):
+    """Random (valid) tail-biting streams: ANY cyclic bitstring is a valid walk,
+    so random bits + pad_for_decode give a well-formed tile."""
+    t = tx * ty
+    steps = t // v
+    kv = k * v
+    total_bits = steps * kv
+    tile_words_packed = (total_bits + 31) // 32
+    padded_len = (total_bits + (l - kv)) // 32 + 2
+    tiles = np.zeros((tiles_r, tiles_c, padded_len), dtype=np.uint32)
+    for bi in range(tiles_r):
+        for bj in range(tiles_c):
+            raw = rng.integers(0, M32, size=tile_words_packed, dtype=np.uint64).astype(
+                np.uint32
+            )
+            extra = tile_words_packed * 32 - total_bits
+            if extra:
+                raw[-1] &= np.uint32((1 << (32 - extra)) - 1)
+            tiles[bi, bj] = pad_for_decode(raw, total_bits, l, kv)
+    return tiles

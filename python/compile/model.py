@@ -1,0 +1,64 @@
+"""Layer-2 JAX compute graphs: the quantized linear primitives (wrapping the L1
+Pallas kernel) and a composed quantized transformer-MLP block, all AOT-lowered
+by aot.py to HLO text for the Rust runtime.
+
+Python builds these graphs exactly once at `make artifacts`; the Rust
+coordinator executes the compiled artifacts via PJRT on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode
+
+
+def quantized_matvec_fn(rows, cols, l, k, v, code, lut=None, q=None):
+    """The fused decode+GEMV graph: (packed, x, scale) -> y."""
+    fn, meta = decode.make_decode_matvec(rows, cols, l, k, v, code, lut=lut, q=q)
+    return fn, meta
+
+
+def quantized_mlp_fn(d_model, d_ff, l, k, code):
+    """A SwiGLU MLP with all three projections quantized — demonstrates that L1
+    kernels compose into larger L2 graphs under one jit/HLO module:
+
+        y = down( silu(gate(x)) * up(x) )
+
+    Signature: (packed_gate, packed_up, packed_down, x,
+                scale_gate, scale_up, scale_down) -> y
+    """
+    gate_fn, gmeta = decode.make_decode_matvec(d_ff, d_model, l, k, 1, code)
+    up_fn, _ = decode.make_decode_matvec(d_ff, d_model, l, k, 1, code)
+    down_fn, dmeta = decode.make_decode_matvec(d_model, d_ff, l, k, 1, code)
+
+    def fn(pg, pu, pd, x, sg, su, sd):
+        g = gate_fn(pg, x, sg)
+        u = up_fn(pu, x, su)
+        h = jax.nn.silu(g) * u
+        return down_fn(pd, h, sd)
+
+    return fn, dict(gate=gmeta, down=dmeta)
+
+
+def f32_matvec_fn():
+    """Dense baseline graph for the throughput comparison artifacts."""
+
+    def fn(w, x):
+        return w @ x
+
+    return fn
+
+
+def example_args_matvec(rows, cols, l, k, v, tx=16, ty=16):
+    """ShapeDtypeStructs for lowering the quantized matvec."""
+    t = tx * ty
+    steps = t // v
+    kv = k * v
+    total_bits = steps * kv
+    padded_len = (total_bits + (l - kv)) // 32 + 2
+    tiles_r, tiles_c = rows // tx, cols // ty
+    return (
+        jax.ShapeDtypeStruct((tiles_r, tiles_c * padded_len), jnp.uint32),
+        jax.ShapeDtypeStruct((cols,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )

@@ -1,0 +1,253 @@
+"""Layer-2 build-time trainer: a Llama-style byte-level GPT in pure JAX
+(hand-rolled Adam — no optax offline), architecture-identical to
+rust/src/model/transformer.rs (RMSNorm, adjacent-pair RoPE, SwiGLU, untied head).
+
+Trains the `micro` and `nano` presets on the repository's own source corpus and
+exports weights in the shared manifest+blob format (model/weights.rs). Runs
+once at `make artifacts`; Python never touches the request path.
+
+Usage: python -m compile.train --out ../artifacts [--budget-secs 480]
+"""
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+
+CONFIGS = {
+    "micro": dict(vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=256, max_seq=256),
+    "nano": dict(vocab=256, d_model=128, n_layers=2, n_heads=4, d_ff=512, max_seq=256),
+    "small": dict(vocab=256, d_model=256, n_layers=6, n_heads=8, d_ff=1024, max_seq=256),
+}
+ROPE_THETA = 10_000.0
+RMS_EPS = 1e-5
+
+
+def tensor_names(cfg):
+    names = ["tok_emb"]
+    for i in range(cfg["n_layers"]):
+        for t in ["attn_norm", "q", "k", "v", "o", "mlp_norm", "gate", "up", "down"]:
+            names.append(f"l{i}.{t}")
+    names += ["out_norm", "head"]
+    return names
+
+
+def tensor_shape(cfg, name):
+    d, f, v = cfg["d_model"], cfg["d_ff"], cfg["vocab"]
+    if name in ("tok_emb", "head"):
+        return (v, d)
+    if name == "out_norm":
+        return (d,)
+    part = name.split(".")[1]
+    return {
+        "attn_norm": (d,),
+        "mlp_norm": (d,),
+        "q": (d, d),
+        "k": (d, d),
+        "v": (d, d),
+        "o": (d, d),
+        "gate": (f, d),
+        "up": (f, d),
+        "down": (d, f),
+    }[part]
+
+
+def init_params(cfg, key):
+    params = {}
+    for name in tensor_names(cfg):
+        shape = tensor_shape(cfg, name)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            std = 1.0 / np.sqrt(shape[-1])
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+    return params
+
+
+def rmsnorm(x, gain):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * gain
+
+
+def rope(x, positions):
+    """Adjacent-pair RoPE, matching transformer.rs::rope_rotate.
+    x: (..., T, H, Dh); positions: (T,)"""
+    dh = x.shape[-1]
+    idx = np.arange(0, dh, 2)
+    freq = ROPE_THETA ** (-(idx.astype(np.float32)) / dh)  # (dh/2,)
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]  # (T, dh/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[None, :, None, :] if x.ndim == 4 else sin
+    cos = cos[None, :, None, :] if x.ndim == 4 else cos
+    a = x[..., 0::2]
+    b = x[..., 1::2]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    out = jnp.stack([ra, rb], axis=-1).reshape(x.shape)
+    return out
+
+
+def forward(params, tokens, cfg):
+    """tokens: (B, T) int32 -> logits (B, T, vocab)."""
+    b, t = tokens.shape
+    d = cfg["d_model"]
+    h = cfg["n_heads"]
+    dh = d // h
+    x = params["tok_emb"][tokens]  # (B,T,D)
+    positions = jnp.arange(t)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for i in range(cfg["n_layers"]):
+        xn = rmsnorm(x, params[f"l{i}.attn_norm"])
+        q = (xn @ params[f"l{i}.q"].T).reshape(b, t, h, dh)
+        k = (xn @ params[f"l{i}.k"].T).reshape(b, t, h, dh)
+        v = (xn @ params[f"l{i}.v"].T).reshape(b, t, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        mix = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, t, d)
+        x = x + mix @ params[f"l{i}.o"].T
+        xn = rmsnorm(x, params[f"l{i}.mlp_norm"])
+        gate = xn @ params[f"l{i}.gate"].T
+        up = xn @ params[f"l{i}.up"].T
+        act = jax.nn.silu(gate) * up
+        x = x + act @ params[f"l{i}.down"].T
+    x = rmsnorm(x, params["out_norm"])
+    return x @ params["head"].T
+
+
+def loss_fn(params, tokens, cfg):
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_key",))
+def train_step(params, opt_m, opt_v, tokens, step, lr_base, cfg_key):
+    cfg = CONFIGS[cfg_key]
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    warmup = 20.0
+    lr = lr_base * jnp.minimum(1.0, (step + 1) / warmup)
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_v, grads)
+    tcorr1 = 1 - b1 ** (step + 1)
+    tcorr2 = 1 - b2 ** (step + 1)
+    new_params = jax.tree.map(
+        lambda p, m, v: p - lr * (m / tcorr1) / (jnp.sqrt(v / tcorr2) + eps),
+        params,
+        new_m,
+        new_v,
+    )
+    return new_params, new_m, new_v, loss
+
+
+def batches(data, batch, seq, rng):
+    n = len(data) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([data[i : i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def export(params, cfg, name, out_dir, meta):
+    names = tensor_names(cfg)
+    blob = bytearray()
+    tensors = []
+    offset = 0
+    for tname in names:
+        arr = np.asarray(params[tname], np.float32)
+        tensors.append(
+            dict(name=tname, shape=list(arr.shape), offset=offset)
+        )
+        blob += arr.tobytes()
+        offset += arr.size
+    manifest = dict(
+        config=dict(
+            name=name,
+            vocab=cfg["vocab"],
+            d_model=cfg["d_model"],
+            n_layers=cfg["n_layers"],
+            n_heads=cfg["n_heads"],
+            d_ff=cfg["d_ff"],
+            max_seq=cfg["max_seq"],
+            rope_theta=ROPE_THETA,
+            rms_eps=RMS_EPS,
+        ),
+        weights_file=f"model_{name}.bin",
+        tensors=tensors,
+        meta=meta,
+    )
+    (out_dir / f"model_{name}.json").write_text(json.dumps(manifest))
+    (out_dir / f"model_{name}.bin").write_bytes(bytes(blob))
+    print(f"[train] exported {name}: {offset} floats -> model_{name}.bin")
+
+
+def train_model(name, data_train, out_dir, budget_secs, batch=8, lr=3e-3, max_steps=2000):
+    cfg = CONFIGS[name]
+    key = jax.random.PRNGKey(hash(name) & 0xFFFF)
+    params = init_params(cfg, key)
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(1234)
+    gen = batches(np.frombuffer(data_train, dtype=np.uint8), batch, cfg["max_seq"], rng)
+    losses = []
+    start = time.time()
+    step = 0
+    while step < max_steps and time.time() - start < budget_secs:
+        tokens = next(gen)
+        params, opt_m, opt_v, loss = train_step(
+            params, opt_m, opt_v, tokens, step, lr, name
+        )
+        if step % 10 == 0 or step == max_steps - 1:
+            losses.append([step, float(loss)])
+            print(f"[train/{name}] step {step} loss {float(loss):.4f} "
+                  f"({time.time()-start:.0f}s)", flush=True)
+        step += 1
+    meta = dict(
+        steps=step,
+        final_loss=losses[-1][1] if losses else None,
+        loss_curve=losses,
+        seconds=round(time.time() - start, 1),
+        corpus_bytes=len(data_train),
+    )
+    export(params, cfg, name, out_dir, meta)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--budget-secs", type=float, default=420.0)
+    ap.add_argument("--models", default="micro,nano")
+    args = ap.parse_args()
+    from pathlib import Path
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    raw = corpus_mod.load_corpus(corpus_mod.default_roots(), 4 << 20)
+    train_data, holdout = corpus_mod.split_corpus(raw, 0.1)
+    (out_dir / "corpus_holdout.bin").write_bytes(holdout)
+    print(f"[train] corpus {len(raw)} bytes ({len(holdout)} held out)")
+
+    models = args.models.split(",")
+    # Split the budget: micro converges fast, nano gets the bulk.
+    shares = {"micro": 0.25, "nano": 0.75, "small": 1.0}
+    total_share = sum(shares.get(m, 1.0) for m in models)
+    for m in models:
+        budget = args.budget_secs * shares.get(m, 1.0) / total_share
+        train_model(m, train_data, out_dir, budget)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Code-decoder correctness: jnp implementations vs the independent numpy
+oracle, plus distributional and golden-vector pins."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import codes, ref
+
+ARTIFACTS = Path(__file__).resolve().parent.parent.parent / "artifacts"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16 - 1))
+def test_onemad_matches_ref(state):
+    got = float(np.asarray(codes.onemad_decode(np.array([state], np.uint32)))[0])
+    want = float(ref.onemad_ref(state))
+    assert got == pytest.approx(want, abs=1e-6)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16 - 1))
+def test_threeinst_matches_ref(state):
+    got = float(np.asarray(codes.threeinst_decode(np.array([state], np.uint32)))[0])
+    want = float(ref.threeinst_ref(state))
+    assert got == pytest.approx(want, abs=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**16 - 1),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hyb_matches_ref(state, lut_seed):
+    rng = np.random.default_rng(lut_seed)
+    q = 9
+    lut = rng.standard_normal((1 << q, 2)).astype(np.float32)
+    got = np.asarray(codes.hyb_decode(np.array([state], np.uint32), lut, q))[0]
+    want = ref.hyb_ref(state, lut, q)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_large_states_wrap():
+    # u32 wrap-around must hold for the largest states (L up to 24).
+    s = np.array([2**24 - 1, 2**20, 12345678], np.uint32)
+    a = np.asarray(codes.onemad_decode(s))
+    b = np.array([ref.onemad_ref(int(x)) for x in s])
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_moments_near_standard_gaussian():
+    states = np.arange(2**16, dtype=np.uint32)
+    for fn in (codes.onemad_decode, codes.threeinst_decode):
+        vals = np.asarray(fn(states))
+        assert abs(vals.mean()) < 0.02
+        assert abs(vals.std() - 1.0) < 0.02
+
+
+def test_neighbor_decorrelation():
+    # Figure 3: overlapping windows must decode to near-uncorrelated values.
+    states = np.arange(2**16, dtype=np.uint32)
+    for fn in (codes.onemad_decode, codes.threeinst_decode):
+        a = np.asarray(fn(states))
+        b = np.asarray(fn(states >> np.uint32(2)))
+        corr = abs(np.corrcoef(a, b)[0, 1])
+        assert corr < 0.05, corr
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "golden_codes.json").exists(), reason="run make artifacts")
+def test_golden_file_pins_both_sides():
+    golden = json.loads((ARTIFACTS / "golden_codes.json").read_text())
+    states = np.array(golden["states"], np.uint32)
+    np.testing.assert_allclose(
+        np.asarray(codes.onemad_decode(states)), np.array(golden["1mad"]), atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(codes.threeinst_decode(states)), np.array(golden["3inst"]), atol=1e-6
+    )
+    # And the numpy oracle agrees.
+    for i in [0, 1, 17, 1023]:
+        assert ref.onemad_ref(i) == pytest.approx(golden["1mad"][i], abs=1e-6)
+        assert ref.threeinst_ref(i) == pytest.approx(golden["3inst"][i], abs=1e-6)
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "hyb_lut_q9.json").exists(), reason="run make artifacts")
+def test_hyb_lut_artifact_shape():
+    j = json.loads((ARTIFACTS / "hyb_lut_q9.json").read_text())
+    lut = np.array(j["lut"], np.float32).reshape(1 << j["q"], j["v"])
+    assert lut.shape == (512, 2)
+    # Folded half-space training: last component non-negative.
+    assert (lut[:, -1] >= 0).all()
+    # Covers the Gaussian bulk.
+    assert lut[:, 0].min() < -2.0 and lut[:, 0].max() > 2.0

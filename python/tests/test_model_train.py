@@ -1,0 +1,100 @@
+"""L2 model/trainer sanity: architecture invariants, loss descent on a toy
+pattern, and export-format integrity."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from compile import train
+
+
+CFG = dict(vocab=256, d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq=64)
+
+
+def toy_params(seed=0):
+    return train.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def test_forward_shape_and_finite():
+    p = toy_params()
+    toks = np.arange(2 * 16).reshape(2, 16).astype(np.int32) % 256
+    logits = train.forward(p, toks, CFG)
+    assert logits.shape == (2, 16, 256)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    p = toy_params()
+    toks = np.random.default_rng(0).integers(0, 256, (4, 33)).astype(np.int32)
+    loss = float(train.loss_fn(p, toks, CFG))
+    assert abs(loss - np.log(256)) < 1.5
+
+
+def test_causality():
+    p = toy_params(1)
+    a = np.array([[1, 2, 3, 4, 5]], np.int32)
+    b = np.array([[1, 2, 3, 4, 250]], np.int32)
+    la = np.asarray(train.forward(p, a, CFG))
+    lb = np.asarray(train.forward(p, b, CFG))
+    np.testing.assert_allclose(la[0, :4], lb[0, :4], atol=1e-5)
+
+
+def test_loss_decreases_on_repetitive_data():
+    # A trivially learnable stream: repeated byte pattern.
+    cfg_key = "micro"
+    cfg = train.CONFIGS[cfg_key]
+    params = train.init_params(cfg, jax.random.PRNGKey(2))
+    m = jax.tree.map(np.zeros_like, params)
+    v = jax.tree.map(np.zeros_like, params)
+    pattern = (b"qtip! " * 2000)
+    data = np.frombuffer(pattern, np.uint8)
+    gen = train.batches(data, 4, cfg["max_seq"], np.random.default_rng(0))
+    losses = []
+    for step in range(8):
+        toks = next(gen)
+        params, m, v, loss = train.train_step(params, m, v, toks, step, 3e-3, cfg_key)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_rope_adjacent_pair_convention():
+    # rope() must rotate pairs (2i, 2i+1) — position 0 is identity.
+    x = np.random.default_rng(3).standard_normal((1, 2, 1, 8)).astype(np.float32)
+    import jax.numpy as jnp
+
+    out = np.asarray(train.rope(jnp.asarray(x), jnp.array([0, 1])))
+    np.testing.assert_allclose(out[0, 0], x[0, 0], atol=1e-6)
+    # Position 1, pair 0 rotates by angle 1.
+    a, b = x[0, 1, 0, 0], x[0, 1, 0, 1]
+    c, s = np.cos(1.0), np.sin(1.0)
+    np.testing.assert_allclose(out[0, 1, 0, 0], a * c - b * s, rtol=1e-5)
+    np.testing.assert_allclose(out[0, 1, 0, 1], a * s + b * c, rtol=1e-5)
+
+
+def test_export_roundtrip(tmp_path):
+    p = toy_params(4)
+    cfg = dict(CFG)
+    train.export(p, cfg, "testmodel", tmp_path, meta=dict(steps=0))
+    manifest = json.loads((tmp_path / "model_testmodel.json").read_text())
+    blob = np.fromfile(tmp_path / "model_testmodel.bin", np.float32)
+    total = sum(int(np.prod(t["shape"])) for t in manifest["tensors"])
+    assert len(blob) == total
+    # Offsets are contiguous and ordered.
+    off = 0
+    for t in manifest["tensors"]:
+        assert t["offset"] == off
+        off += int(np.prod(t["shape"]))
+    # Spot-check one tensor's bytes.
+    t0 = next(t for t in manifest["tensors"] if t["name"] == "l0.q")
+    arr = blob[t0["offset"] : t0["offset"] + 32 * 32].reshape(32, 32)
+    np.testing.assert_allclose(arr, np.asarray(p["l0.q"]), atol=0)
+
+
+def test_tensor_names_match_rust_convention():
+    names = train.tensor_names(CFG)
+    assert names[0] == "tok_emb"
+    assert names[-2:] == ["out_norm", "head"]
+    assert "l0.attn_norm" in names and "l1.down" in names
+    assert len(names) == 1 + 2 * 9 + 2

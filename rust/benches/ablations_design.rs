@@ -1,0 +1,169 @@
+//! Design-choice ablations (ours, beyond the paper's tables — DESIGN.md §5):
+//!  (a) Viterbi prefix-min optimization vs textbook edge relaxation (same argmin,
+//!      measured speedup);
+//!  (b) tail-biting strategies: free-end vs Algorithm 4 vs exact;
+//!  (c) incoherence processing on/off: proxy loss impact of the RHT.
+
+use qtip::bench::{f3, f4, samples, Table};
+use qtip::codes::PureLutCode;
+use qtip::quant::{quantize_matrix_qtip, QtipConfig, RhtContext};
+use qtip::trellis::{
+    quantize_tail_biting, quantize_tail_biting_exact, Trellis, Viterbi, ViterbiWorkspace,
+};
+use qtip::util::linalg::regularize_spd;
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+use qtip::util::stats::mse;
+use qtip::util::Timer;
+
+fn main() {
+    // (a) Viterbi implementations.
+    let mut table = Table::new(
+        "Ablation A — Viterbi: prefix-min (ours) vs textbook relaxation",
+        &["L", "k", "fast ms/seq", "naive ms/seq", "speedup", "cost match"],
+    );
+    for (l, k) in [(10u32, 2u32), (12, 2), (12, 4)] {
+        let trellis = Trellis::new(l, k, 1);
+        let code = PureLutCode::new(l, 1, 1);
+        let vit = Viterbi::new(trellis, &code.table);
+        let mut rng = Rng::new(5);
+        let seq = rng.gauss_vec(256);
+        let mut ws = ViterbiWorkspace::new();
+        let reps = samples(5);
+        let t = Timer::start();
+        let mut fast_cost = 0.0;
+        for _ in 0..reps {
+            fast_cost = vit.quantize(&seq, None, None, &mut ws).1;
+        }
+        let fast_ms = t.millis() / reps as f64;
+        let t = Timer::start();
+        let mut naive_cost = 0.0;
+        for _ in 0..reps.min(2) {
+            naive_cost = vit.quantize_naive(&seq, None, None).1;
+        }
+        let naive_ms = t.millis() / reps.min(2) as f64;
+        table.row(vec![
+            l.to_string(),
+            k.to_string(),
+            f3(fast_ms),
+            f3(naive_ms),
+            format!("{:.2}x", naive_ms / fast_ms),
+            if (fast_cost - naive_cost).abs() < 1e-3 * (1.0 + naive_cost) {
+                "yes".into()
+            } else {
+                format!("NO ({fast_cost} vs {naive_cost})")
+            },
+        ]);
+    }
+    table.emit("ablation_viterbi.md");
+
+    // (b) Tail-biting strategies.
+    let mut table = Table::new(
+        "Ablation B — tail-biting: free-end (needs +L-kV bits) vs Alg.4 vs exact",
+        &["k", "free MSE (lower bound)", "Alg.4 MSE", "exact MSE", "Alg.4 overhead %"],
+    );
+    for k in [1u32, 2, 3] {
+        let trellis = Trellis::new(10, k, 1);
+        let code = PureLutCode::new(10, 1, 2);
+        let vit = Viterbi::new(trellis, &code.table);
+        let mut rng = Rng::new(6);
+        let mut ws = ViterbiWorkspace::new();
+        let n = samples(24);
+        let (mut free, mut alg4, mut exact) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let seq = rng.gauss_vec(128);
+            let (fs, _) = vit.quantize(&seq, None, None, &mut ws);
+            free += mse(&vit.decode(&fs), &seq);
+            let a = quantize_tail_biting(&vit, &seq, &mut ws);
+            alg4 += mse(&vit.decode(&a.states), &seq);
+            let e = quantize_tail_biting_exact(&vit, &seq, &mut ws);
+            exact += mse(&vit.decode(&e.states), &seq);
+        }
+        let (free, alg4, exact) = (free / n as f64, alg4 / n as f64, exact / n as f64);
+        table.row(vec![
+            k.to_string(),
+            f4(free),
+            f4(alg4),
+            f4(exact),
+            format!("{:.2}", 100.0 * (alg4 - exact) / exact),
+        ]);
+    }
+    table.emit("ablation_tailbiting.md");
+
+    // (c) RHT on/off.
+    let mut table = Table::new(
+        "Ablation C — incoherence processing: relative proxy loss with/without RHT",
+        &["weight structure", "with RHT", "without RHT", "RHT wins?"],
+    );
+    let n = 64;
+    let mut rng = Rng::new(7);
+    let cfg = QtipConfig { l: 12, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 3 };
+    for (label, w) in [
+        ("iid gaussian", Matrix::gaussian(n, n, 1.0, &mut rng)),
+        ("outlier-heavy", {
+            let mut w = Matrix::gaussian(n, n, 0.3, &mut rng);
+            for _ in 0..40 {
+                let r = rng.below(n);
+                let c = rng.below(n);
+                *w.at_mut(r, c) = rng.gauss_f32() * 8.0;
+            }
+            w
+        }),
+    ] {
+        let a = Matrix::gaussian(n, 2 * n, 1.0, &mut rng);
+        let mut h = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for t in 0..2 * n {
+                    s += a.at(i, t) * a.at(j, t);
+                }
+                *h.at_mut(i, j) = s / (2 * n) as f32;
+            }
+        }
+        let h = regularize_spd(&h, 1e-2);
+        // With RHT (the normal pipeline).
+        let with = quantize_matrix_qtip(&w, &h, &cfg).metrics.relative_proxy;
+        // Without RHT: quantize in the original basis — use identity signs by
+        // evaluating proxy on a direct LDLQ with the same rounder geometry.
+        // (Simplest faithful off-switch: transform with an RHT whose effect we
+        // undo by pre-conjugating — here we instead quantize W directly via the
+        // same code path on an already-incoherent basis carrier: apply the
+        // pipeline to (W, H) where the RHT seed gives identical signs = +1.)
+        let without = {
+            // Monkey-path: identity RHT == all-+1 signs; emulate by pre-applying
+            // the inverse transform so the pipeline's RHT cancels.
+            // Same seed as the pipeline's internal context => exact cancellation.
+            let ctx = RhtContext::new(w.rows, w.cols, cfg.seed);
+            let w_pre = ctx.restore_weight(&w);
+            // H side: V S H S V^T cancelled likewise.
+            let mut h_pre = h.clone();
+            // restore_hessian = apply inverse conjugation on both sides.
+            // Reuse transform via two column/row passes of the inverse:
+            let mut col = vec![0.0f32; h_pre.rows];
+            for c in 0..h_pre.cols {
+                for r in 0..h_pre.rows {
+                    col[r] = h_pre.at(r, c);
+                }
+                qtip::util::hadamard::rht_inverse(&mut col, &ctx.sign_cols);
+                for r in 0..h_pre.rows {
+                    *h_pre.at_mut(r, c) = col[r];
+                }
+            }
+            for r in 0..h_pre.rows {
+                qtip::util::hadamard::rht_inverse(h_pre.row_mut(r), &ctx.sign_cols);
+            }
+            let h_pre = regularize_spd(&h_pre, 1e-2);
+            let mut c2 = cfg.clone();
+            c2.seed = cfg.seed; // pipeline derives the same ctx internally per seed
+            quantize_matrix_qtip(&w_pre, &h_pre, &c2).metrics.relative_proxy
+        };
+        table.row(vec![
+            label.into(),
+            f4(with),
+            f4(without),
+            if with <= without { "yes".into() } else { "no".into() },
+        ]);
+    }
+    table.emit("ablation_rht.md");
+}

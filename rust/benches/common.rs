@@ -1,0 +1,91 @@
+//! Shared helpers for the experiment benches (included via `#[path]`).
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use qtip::coordinator::{quantize_model_baseline, quantize_model_qtip, QuantizeReport};
+use qtip::eval::perplexity;
+use qtip::hessian::{collect_hessians, HessianSet};
+use qtip::model::{split_corpus, Transformer, WeightStore};
+use qtip::quant::{BaselineKind, QtipConfig};
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load a trained model + (calibration seqs, eval bytes); None if artifacts absent.
+pub struct Workload {
+    pub name: String,
+    pub store: WeightStore,
+    pub calib: Vec<Vec<u16>>,
+    pub eval: Vec<u8>,
+}
+
+impl Workload {
+    pub fn load(name: &str, n_calib: usize) -> Option<Workload> {
+        let dir = artifacts_dir();
+        let store = WeightStore::load(&dir, name).ok()?;
+        let holdout = std::fs::read(dir.join("corpus_holdout.bin")).ok()?;
+        let (calib_bytes, eval) = split_corpus(&holdout, 0.5);
+        let calib = calib_bytes
+            .chunks(128)
+            .take(n_calib)
+            .map(|c| c.iter().map(|&b| b as u16).collect())
+            .collect();
+        Some(Workload { name: name.into(), store, calib, eval: eval.to_vec() })
+    }
+
+    pub fn model(&self) -> Transformer {
+        Transformer::from_store(&self.store)
+    }
+
+    pub fn hessians(&self, model: &Transformer) -> HessianSet {
+        collect_hessians(model, &self.calib)
+    }
+
+    /// Quantize with QTIP and return (ppl, report).
+    pub fn qtip_ppl(
+        &self,
+        hs: &HessianSet,
+        cfg: &QtipConfig,
+        eval_tokens: usize,
+    ) -> (f64, QuantizeReport) {
+        let mut m = self.model();
+        let report = quantize_model_qtip(&mut m, hs, cfg, 1, |_| {});
+        m.ensure_caches();
+        let rep = perplexity(&m, &self.eval, eval_tokens);
+        (rep.ppl, report)
+    }
+
+    /// Quantize with a baseline rounder and return (ppl, report).
+    pub fn baseline_ppl(
+        &self,
+        hs: &HessianSet,
+        kind: &BaselineKind,
+        eval_tokens: usize,
+    ) -> (f64, QuantizeReport) {
+        let mut m = self.model();
+        let report = quantize_model_baseline(&mut m, hs, kind, 0xBA5E, 1);
+        let rep = perplexity(&m, &self.eval, eval_tokens);
+        (rep.ppl, report)
+    }
+
+    pub fn fp32_ppl(&self, eval_tokens: usize) -> f64 {
+        perplexity(&self.model(), &self.eval, eval_tokens).ppl
+    }
+}
+
+pub fn qtip_cfg(code: &str, l: u32, k: u32, v: u32) -> QtipConfig {
+    QtipConfig { l, k, v, tx: 16, ty: 16, code: code.into(), seed: 0x5171_50 }
+}
+
+/// Skip message when `make artifacts` hasn't run.
+pub fn require_workload(name: &str, n_calib: usize) -> Option<Workload> {
+    match Workload::load(name, n_calib) {
+        Some(w) => Some(w),
+        None => {
+            println!("SKIPPED: trained model '{name}' not found — run `make artifacts` first");
+            None
+        }
+    }
+}

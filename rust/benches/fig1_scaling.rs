@@ -1,0 +1,59 @@
+//! **Figure 1 reproduction (shape)**: quality vs total compressed size across
+//! model scales and bitrates — "2 bit models scale better than 4 bit models".
+//!
+//! We sweep {micro, nano} × {2, 3, 4} bits and emit the (bytes, ppl) frontier.
+//! Shape to hold: at matched storage, the larger-model/lower-bit point is at
+//! least as good as the smaller-model/higher-bit point (the 2-bit frontier
+//! dominates as scale grows).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{qtip_cfg, require_workload};
+use qtip::bench::{f3, samples, Table};
+
+fn main() {
+    let eval_tokens = 256 * samples(4);
+    let mut table = Table::new(
+        "Figure 1 — ppl vs compressed decoder size (QTIP 3INST, L=12)",
+        &["model", "bits", "decoder KiB", "ppl"],
+    );
+    let mut points: Vec<(String, u32, f64, f64)> = Vec::new();
+
+    for name in ["micro", "nano"] {
+        let Some(w) = require_workload(name, 16) else { continue };
+        let model = w.model();
+        let hs = w.hessians(&model);
+        let fp32 = w.fp32_ppl(eval_tokens);
+        println!("{name}: fp32 ppl {fp32:.3}");
+        for k in [2u32, 3, 4] {
+            let (ppl, rep) = w.qtip_ppl(&hs, &qtip_cfg("3inst", 12, k, 1), eval_tokens);
+            let kib = rep.bytes_after as f64 / 1024.0;
+            table.row(vec![name.into(), k.to_string(), f3(kib), f3(ppl)]);
+            points.push((name.into(), k, kib, ppl));
+            println!("  k={k}: {kib:.0} KiB -> ppl {ppl:.3}");
+        }
+    }
+    table.emit("fig1_scaling.md");
+
+    // The Figure-1 comparison: nano@2bit vs micro@4bit (similar storage class).
+    let nano2 = points.iter().find(|p| p.0 == "nano" && p.1 == 2);
+    let micro4 = points.iter().find(|p| p.0 == "micro" && p.1 == 4);
+    if let (Some(n2), Some(m4)) = (nano2, micro4) {
+        println!(
+            "\nFigure-1 check: nano@2bit ({:.0} KiB, ppl {:.3}) vs micro@4bit ({:.0} KiB, ppl {:.3}) — larger-model-fewer-bits {}",
+            n2.2,
+            n2.3,
+            m4.2,
+            m4.3,
+            if n2.3 < m4.3 { "WINS (matches paper)" } else { "does not win at this scale" }
+        );
+    }
+    // CSV for plotting.
+    let mut csv = String::from("model,bits,kib,ppl\n");
+    for (m, k, kib, ppl) in &points {
+        csv.push_str(&format!("{m},{k},{kib:.1},{ppl:.4}\n"));
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig1_scaling.csv", csv).ok();
+}

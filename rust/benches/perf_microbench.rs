@@ -1,0 +1,135 @@
+//! §Perf microbenchmarks: per-layer hot-path rates feeding EXPERIMENTS.md §Perf.
+//!  * code decode rate (weights/s) per code — the ALU cost the paper counts;
+//!  * fused decode-matvec rate vs dense GEMV (bandwidth view);
+//!  * Viterbi quantization rate (state·steps/s) — encode-side throughput;
+//!  * sgemm GF/s and RHT transforms/s (substrate rooflines).
+
+use qtip::bench::{f2, samples, Table};
+use qtip::codes::{build_code, Code};
+use qtip::quant::{CodeSpec, QuantizedMatrix};
+use qtip::trellis::{Trellis, Viterbi, ViterbiWorkspace};
+use qtip::util::hadamard::hadamard_inplace;
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+use qtip::util::Timer;
+
+fn main() {
+    let scale = samples(1) as f64;
+    let mut table = Table::new("§Perf microbenchmarks", &["kernel", "metric", "value"]);
+
+    // Decode rates.
+    for name in ["1mad", "3inst", "hyb", "lut"] {
+        let v = if name == "hyb" { 2 } else { 1 };
+        let code = build_code(name, 16, v, 1);
+        let n = (4 << 20) as u32;
+        let mut out = [0.0f32; 2];
+        let t = Timer::start();
+        let mut acc = 0.0f32;
+        for s in 0..n {
+            code.decode(s & 0xFFFF, &mut out[..v as usize]);
+            acc += out[0];
+        }
+        std::hint::black_box(acc);
+        let rate = (n as f64 * v as f64) / t.secs() / 1e6;
+        table.row(vec![
+            format!("decode {name} (dyn-dispatch)"),
+            "Mweights/s".into(),
+            f2(rate),
+        ]);
+    }
+
+    // Fused decode-matvec vs dense GEMV at d=2048.
+    let d = 2048;
+    let qm = QuantizedMatrix::synthetic(d, d, Trellis::new(16, 2, 1), CodeSpec::ThreeInst, 16, 16, 2);
+    let mut rng = Rng::new(3);
+    let x = rng.gauss_vec(d);
+    let mut y = vec![0.0f32; d];
+    let t = Timer::start();
+    let mut iters = 0;
+    while t.secs() < 0.5 * scale {
+        y.fill(0.0);
+        qm.matvec_tilde(&x, &mut y);
+        iters += 1;
+    }
+    let per = t.secs() / iters as f64;
+    table.row(vec![
+        "fused decode-matvec 3inst 2048²".into(),
+        "Mweights/s".into(),
+        f2((d * d) as f64 / per / 1e6),
+    ]);
+
+    let w = Matrix::gaussian(d, d, 0.1, &mut rng);
+    let t = Timer::start();
+    let mut iters = 0;
+    while t.secs() < 0.5 * scale {
+        qtip::util::matrix::gemv(&w, &x, &mut y);
+        iters += 1;
+    }
+    let per = t.secs() / iters as f64;
+    table.row(vec![
+        "dense GEMV 2048²".into(),
+        "GF/s".into(),
+        f2(2.0 * (d * d) as f64 / per / 1e9),
+    ]);
+
+    // GEMM roofline.
+    let a = Matrix::gaussian(256, 256, 1.0, &mut rng);
+    let b = Matrix::gaussian(256, 256, 1.0, &mut rng);
+    let t = Timer::start();
+    let mut iters = 0;
+    while t.secs() < 0.5 * scale {
+        std::hint::black_box(a.matmul(&b));
+        iters += 1;
+    }
+    let per = t.secs() / iters as f64;
+    table.row(vec![
+        "sgemm 256³".into(),
+        "GF/s".into(),
+        f2(2.0 * 256f64.powi(3) / per / 1e9),
+    ]);
+
+    // Viterbi encode rate.
+    for l in [12u32, 16] {
+        let trellis = Trellis::new(l, 2, 1);
+        let code = build_code("3inst", l, 1, 1);
+        let values = code.materialize();
+        let vit = Viterbi::new(trellis, &values);
+        let mut ws = ViterbiWorkspace::new();
+        let seq = rng.gauss_vec(256);
+        let t = Timer::start();
+        let mut iters = 0;
+        while t.secs() < 0.5 * scale {
+            std::hint::black_box(vit.quantize(&seq, None, None, &mut ws));
+            iters += 1;
+        }
+        let per = t.secs() / iters as f64;
+        let states_steps = (1u64 << l) as f64 * 256.0;
+        table.row(vec![
+            format!("viterbi L={l} T=256"),
+            "Mstate·step/s".into(),
+            f2(states_steps / per / 1e6),
+        ]);
+        table.row(vec![
+            format!("viterbi L={l} quantize rate"),
+            "Kweights/s".into(),
+            f2(256.0 / per / 1e3),
+        ]);
+    }
+
+    // RHT.
+    let mut buf = rng.gauss_vec(4096);
+    let t = Timer::start();
+    let mut iters = 0;
+    while t.secs() < 0.3 * scale {
+        hadamard_inplace(&mut buf);
+        iters += 1;
+    }
+    let per = t.secs() / iters as f64;
+    table.row(vec![
+        "FWHT n=4096".into(),
+        "Mel/s".into(),
+        f2(4096.0 / per / 1e6),
+    ]);
+
+    table.emit("perf_microbench.md");
+}

@@ -1,0 +1,72 @@
+//! **Table 10 reproduction**: ablation on trellis size L (k=2, V=1), pure-lookup
+//! codebook vs the computed code.
+//!
+//! Paper: W2 ppl improves monotonically 8→10→12→16, and at L=16 the computed
+//! 3INST code ("0 Kb of cache") matches the equal-geometry LUT — i.e. QTIP's
+//! compute trick costs no quality. We also report the decoder table bytes that
+//! motivate the whole exercise.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{qtip_cfg, require_workload};
+use qtip::bench::{f3, samples, Table};
+use qtip::util::Timer;
+
+fn main() {
+    let Some(w) = require_workload("nano", 16) else { return };
+    let eval_tokens = 256 * samples(4);
+    let model = w.model();
+    let hs = w.hessians(&model);
+    let fp32 = w.fp32_ppl(eval_tokens);
+
+    let mut table = Table::new(
+        "Table 10 — ablation on L (k=2, V=1): quality ↑ with L; computed code ≈ LUT at equal L",
+        &["codebook", "L", "decoder table bytes", "ppl", "secs"],
+    );
+    println!("fp32 ppl {fp32:.3}\n");
+
+    for l in [8u32, 10, 12, 14] {
+        let t = Timer::start();
+        let (ppl, rep) = w.qtip_ppl(&hs, &qtip_cfg("lut", l, 2, 1), eval_tokens);
+        let bytes = (1usize << l) * 2;
+        table.row(vec![
+            "LUT".into(),
+            l.to_string(),
+            bytes.to_string(),
+            f3(ppl),
+            format!("{:.0}", t.secs()),
+        ]);
+        println!("LUT L={l}: ppl {ppl:.3} ({:.0}s, {:.1}x)", t.secs(), rep.compression_ratio());
+    }
+    for l in [12u32, 14] {
+        let t = Timer::start();
+        let (ppl, _) = w.qtip_ppl(&hs, &qtip_cfg("3inst", l, 2, 1), eval_tokens);
+        table.row(vec![
+            "3INST (computed)".into(),
+            l.to_string(),
+            "0".into(),
+            f3(ppl),
+            format!("{:.0}", t.secs()),
+        ]);
+        println!("3INST L={l}: ppl {ppl:.3}");
+    }
+    // L=16 rows (the paper's headline geometry) — heavier; enabled by default,
+    // drop QTIP_BENCH_SAMPLES to skip-by-time if needed.
+    if samples(4) >= 4 {
+        for code in ["lut", "3inst"] {
+            let t = Timer::start();
+            let (ppl, _) = w.qtip_ppl(&hs, &qtip_cfg(code, 16, 2, 1), eval_tokens);
+            let bytes = if code == "lut" { (1usize << 16) * 2 } else { 0 };
+            table.row(vec![
+                format!("{code} @ L=16"),
+                "16".into(),
+                bytes.to_string(),
+                f3(ppl),
+                format!("{:.0}", t.secs()),
+            ]);
+            println!("{code} L=16: ppl {ppl:.3} ({:.0}s)", t.secs());
+        }
+    }
+    table.emit("table10_ablation_L.md");
+}

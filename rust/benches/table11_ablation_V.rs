@@ -1,0 +1,42 @@
+//! **Table 11 reproduction**: ablation on code vector dimension V at k=2.
+//!
+//! Paper: at L=12 quality degrades as V grows (1 → 2 → 4); a larger L recovers
+//! it (L=16 V=2 ≈ L=12 V=1), and HYB matches the equal-geometry LUT.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{qtip_cfg, require_workload};
+use qtip::bench::{f3, samples, Table};
+
+fn main() {
+    let Some(w) = require_workload("nano", 16) else { return };
+    let eval_tokens = 256 * samples(4);
+    let model = w.model();
+    let hs = w.hessians(&model);
+    let fp32 = w.fp32_ppl(eval_tokens);
+    println!("fp32 ppl {fp32:.3}\n");
+
+    let mut table = Table::new(
+        "Table 11 — ablation on V (k=2): quality ↓ with V at fixed L, recovered by larger L",
+        &["codebook", "L", "V", "ppl"],
+    );
+
+    for (code, l, v) in [
+        ("lut", 12u32, 1u32),
+        ("lut", 12, 2),
+        ("lut", 12, 4),
+        ("lut", 14, 1),
+        ("lut", 14, 2),
+        ("hyb", 14, 2),
+    ] {
+        let mut cfg = qtip_cfg(code, l, 2, v);
+        if code == "hyb" {
+            cfg.seed = 0xB0B;
+        }
+        let (ppl, _) = w.qtip_ppl(&hs, &cfg, eval_tokens);
+        table.row(vec![code.into(), l.to_string(), v.to_string(), f3(ppl)]);
+        println!("{code} L={l} V={v}: ppl {ppl:.3}");
+    }
+    table.emit("table11_ablation_V.md");
+}

@@ -1,0 +1,44 @@
+//! **Table 15/16 reproduction (shape)**: the "no speed constraint" quality
+//! ceiling — a pure-lookup L=14 codebook with T_x=32, T_y=8 (smaller LDLQ group,
+//! same 256 dimension), vs the fast HYB configuration and the VQ baseline.
+//!
+//! Shape to hold: LUT-L14 (quality ceiling) ≤ HYB ≤ E8P-VQ perplexity.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{qtip_cfg, require_workload};
+use qtip::bench::{f3, samples, Table};
+use qtip::quant::BaselineKind;
+
+fn main() {
+    let Some(w) = require_workload("nano", 16) else { return };
+    let eval_tokens = 256 * samples(4);
+    let model = w.model();
+    let hs = w.hessians(&model);
+    let fp32 = w.fp32_ppl(eval_tokens);
+    println!("fp32 ppl {fp32:.3}\n");
+
+    let mut table = Table::new(
+        "Table 15 — pure-LUT L=14 (Tx=32, Ty=8; 32KB codebook, future-hardware config)",
+        &["bits", "LUT L=14 Tx=32 Ty=8", "HYB L=12 (fast)", "E8P-RVQ"],
+    );
+
+    for k in [4u32, 3, 2] {
+        let mut lut_cfg = qtip_cfg("lut", 14, k, 1);
+        lut_cfg.tx = 32;
+        lut_cfg.ty = 8;
+        let (pl, _) = w.qtip_ppl(&hs, &lut_cfg, eval_tokens);
+        let mut hyb_cfg = qtip_cfg("hyb", 12, k, 2);
+        hyb_cfg.seed = 0xB0B;
+        let (ph, _) = w.qtip_ppl(&hs, &hyb_cfg, eval_tokens);
+        let (pv, _) = w.baseline_ppl(
+            &hs,
+            &BaselineKind::E8Rvq { k, entries: 1 << 16 },
+            eval_tokens,
+        );
+        table.row(vec![k.to_string(), f3(pl), f3(ph), f3(pv)]);
+        println!("k={k}: lut14 {pl:.3} | hyb {ph:.3} | e8p {pv:.3}");
+    }
+    table.emit("table15_lut14.md");
+}

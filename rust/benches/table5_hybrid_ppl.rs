@@ -1,0 +1,51 @@
+//! **Table 5 reproduction (shape)**: the hybrid lookup-computed code vs VQ
+//! methods across model sizes and bitrates (micro + nano as the Llama-1/2 family
+//! substitute).
+//!
+//! Shape to hold: QTIP-HYB ≤ E8P-VQ ≤ scalar at every (model, bits); everything
+//! approaches fp32 as bits increase.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{qtip_cfg, require_workload};
+use qtip::bench::{f3, samples, Table};
+use qtip::quant::BaselineKind;
+
+fn main() {
+    let eval_tokens = 256 * samples(6);
+    let mut table = Table::new(
+        "Table 5 — QTIP (HYB, V=2 Q=9) vs VQ baselines: held-out ppl",
+        &["model", "fp32", "bits", "QTIP HYB", "QTIP 3INST", "E8P-RVQ", "Scalar"],
+    );
+
+    for name in ["micro", "nano"] {
+        let Some(w) = require_workload(name, 16) else { continue };
+        let model = w.model();
+        let hs = w.hessians(&model);
+        let fp32 = w.fp32_ppl(eval_tokens);
+        for k in [4u32, 3, 2] {
+            let mut hyb_cfg = qtip_cfg("hyb", 12, k, 2);
+            hyb_cfg.seed = 0xB0B;
+            let (ph, _) = w.qtip_ppl(&hs, &hyb_cfg, eval_tokens);
+            let (p3, _) = w.qtip_ppl(&hs, &qtip_cfg("3inst", 12, k, 1), eval_tokens);
+            let (pv, _) = w.baseline_ppl(
+                &hs,
+                &BaselineKind::E8Rvq { k, entries: 1 << 16 },
+                eval_tokens,
+            );
+            let (ps, _) = w.baseline_ppl(&hs, &BaselineKind::Scalar { k }, eval_tokens);
+            table.row(vec![
+                name.into(),
+                f3(fp32),
+                k.to_string(),
+                f3(ph),
+                f3(p3),
+                f3(pv),
+                f3(ps),
+            ]);
+            println!("{name} k={k}: hyb {ph:.3} 3inst {p3:.3} e8p {pv:.3} scalar {ps:.3} (fp32 {fp32:.3})");
+        }
+    }
+    table.emit("table5_hybrid_ppl.md");
+}

@@ -1,0 +1,67 @@
+//! **Tables 6 / 12 / 13 / 14 reproduction (shape)**: zeroshot-proxy accuracy
+//! before/after quantization, per code.
+//!
+//! Shape to hold: 4-bit ≈ fp32 on every task; at 2 bits QTIP degrades less than
+//! the scalar baseline (the paper's "QTIP matches or exceeds" claim).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{qtip_cfg, require_workload};
+use qtip::bench::{f3, samples, Table};
+use qtip::coordinator::{quantize_model_baseline, quantize_model_qtip};
+use qtip::eval::zeroshot_suite;
+use qtip::quant::BaselineKind;
+
+fn main() {
+    let Some(w) = require_workload("nano", 16) else { return };
+    let cases = 16 * samples(2);
+    let model = w.model();
+    let hs = w.hessians(&model);
+
+    let mut table = Table::new(
+        "Table 6/12/13 — zeroshot-proxy accuracy (next-byte / copy / bracket)",
+        &["method", "bits", "next-byte", "copy", "bracket", "mean"],
+    );
+    let zs = zeroshot_suite(&model, &w.eval, cases, 7);
+    table.row(vec![
+        "fp32".into(),
+        "32".into(),
+        f3(zs.next_byte_acc),
+        f3(zs.copy_acc),
+        f3(zs.bracket_acc),
+        f3(zs.mean()),
+    ]);
+
+    for code in ["1mad", "3inst"] {
+        for k in [4u32, 2] {
+            let mut m = w.model();
+            quantize_model_qtip(&mut m, &hs, &qtip_cfg(code, 12, k, 1), 1, |_| {});
+            m.ensure_caches();
+            let z = zeroshot_suite(&m, &w.eval, cases, 7);
+            table.row(vec![
+                format!("QTIP {code}"),
+                k.to_string(),
+                f3(z.next_byte_acc),
+                f3(z.copy_acc),
+                f3(z.bracket_acc),
+                f3(z.mean()),
+            ]);
+            println!("{code} k={k}: mean {:.3}", z.mean());
+        }
+    }
+    for k in [4u32, 2] {
+        let mut m = w.model();
+        quantize_model_baseline(&mut m, &hs, &BaselineKind::Scalar { k }, 1, 1);
+        let z = zeroshot_suite(&m, &w.eval, cases, 7);
+        table.row(vec![
+            "Scalar LDLQ".into(),
+            k.to_string(),
+            f3(z.next_byte_acc),
+            f3(z.copy_acc),
+            f3(z.bracket_acc),
+            f3(z.mean()),
+        ]);
+    }
+    table.emit("table6_zeroshot.md");
+}

@@ -1,0 +1,320 @@
+//! E8-lattice 8-D vector quantizer — the QuIP#-style "E8P" comparator.
+//!
+//! QuIP# quantizes 8-weight groups to a 2^16-entry codebook built from the E8
+//! lattice (the densest 8-D packing). We reproduce the construction from first
+//! principles: E8 = D8 ∪ (D8 + ½·1) where D8 = {x ∈ Z^8 : Σx even}; the codebook is
+//! the 2^16 lowest-norm lattice points (ball of E8), globally scaled to minimize
+//! N(0,1) distortion. Encoding is exact nearest-neighbor search.
+//!
+//! This is the paper's Table 1 "VQ / QuIP# E8P" column (0.089 MSE at 2 bits) and
+//! the proximal VQ baseline inside BlockLDLQ for the perplexity tables. Higher
+//! bitrates follow QuIP#'s residual scheme: E8 for the first 2 bits/weight, then
+//! Lloyd–Max scalar stages on the residual (`E8Rvq`).
+
+use super::lloydmax::LloydMax;
+use crate::util::rng::Rng;
+
+/// An 8-D codebook of E8 lattice points.
+#[derive(Clone, Debug)]
+pub struct E8Codebook {
+    /// `n × 8` row-major entries, *after* global scaling.
+    pub entries: Vec<f32>,
+    /// Squared norms of each entry (precomputed for NN search).
+    norms: Vec<f32>,
+    /// The global scale applied to the raw lattice points.
+    pub scale: f32,
+}
+
+/// Enumerate all points of D8 (+ optional half offset) with squared norm ≤ r2.
+fn enumerate_coset(half: bool, r2: f64, out: &mut Vec<([f32; 8], f64)>) {
+    // Recursive enumeration with norm budget pruning.
+    fn rec(
+        dim: usize,
+        half: bool,
+        point: &mut [f32; 8],
+        sum_int: i64,
+        norm2: f64,
+        r2: f64,
+        out: &mut Vec<([f32; 8], f64)>,
+    ) {
+        if dim == 8 {
+            // D8 condition: integer-part sum even. For the half coset the shifted
+            // coordinates are c+0.5 with c ∈ Z; E8's half coset requires Σ(2x) ≡ 0
+            // (mod 4) ⇔ Σc even as well (all-half vectors with Σx ∈ 2Z + 2).
+            if sum_int % 2 == 0 {
+                out.push((*point, norm2));
+            }
+            return;
+        }
+        let offset = if half { 0.5f64 } else { 0.0 };
+        let bound = (r2 - norm2).sqrt();
+        let lo = (-bound - offset).ceil() as i64;
+        let hi = (bound - offset).floor() as i64;
+        for c in lo..=hi {
+            let x = c as f64 + offset;
+            let n2 = norm2 + x * x;
+            if n2 <= r2 + 1e-9 {
+                point[dim] = x as f32;
+                rec(dim + 1, half, point, sum_int + c, n2, r2, out);
+            }
+        }
+    }
+    let mut point = [0.0f32; 8];
+    rec(0, half, &mut point, 0, 0.0, r2, out);
+}
+
+impl E8Codebook {
+    /// Build the `n`-entry E8 ball codebook (n = 2^16 for the paper's setting),
+    /// scaled to minimize MSE on an N(0,1) sample.
+    pub fn build(n: usize, seed: u64) -> Self {
+        // Grow the radius until enough lattice points are enumerated.
+        let mut r2 = 4.0;
+        let mut pts: Vec<([f32; 8], f64)> = Vec::new();
+        loop {
+            pts.clear();
+            enumerate_coset(false, r2, &mut pts);
+            enumerate_coset(true, r2, &mut pts);
+            if pts.len() >= n {
+                break;
+            }
+            r2 += 2.0; // E8 shells live at even squared norms
+        }
+        // Lowest-norm first; deterministic tie-break by coordinates.
+        pts.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1)
+                .unwrap()
+                .then_with(|| a.0.partial_cmp(&b.0).unwrap())
+        });
+        pts.truncate(n);
+
+        let mut raw = Vec::with_capacity(n * 8);
+        for (p, _) in &pts {
+            raw.extend_from_slice(p);
+        }
+
+        // Line-search the global scale on a Gaussian sample.
+        let mut rng = Rng::new(seed);
+        let sample: Vec<f32> = rng.gauss_vec(8 * 512);
+        let mut best = (f64::INFINITY, 1.0f32);
+        let mut s = 0.20f32;
+        while s <= 1.2 {
+            let cb = Self::from_raw(&raw, s);
+            let mut err = 0.0;
+            for v in sample.chunks(8) {
+                let q = cb.quantize_vec(v);
+                err += v.iter().zip(&q).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            }
+            if err < best.0 {
+                best = (err, s);
+            }
+            s += 0.025;
+        }
+        Self::from_raw(&raw, best.1)
+    }
+
+    fn from_raw(raw: &[f32], scale: f32) -> Self {
+        let entries: Vec<f32> = raw.iter().map(|&x| x * scale).collect();
+        let norms = entries
+            .chunks(8)
+            .map(|c| c.iter().map(|&x| x * x).sum::<f32>())
+            .collect();
+        E8Codebook { entries, norms, scale }
+    }
+
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+
+    /// Bits per weight of this codebook used alone: log2(n)/8.
+    pub fn bits_per_weight(&self) -> f64 {
+        (self.len() as f64).log2() / 8.0
+    }
+
+    /// Exact nearest neighbor: argmin ||x - c||² = argmin (||c||² − 2⟨x,c⟩).
+    pub fn encode(&self, x: &[f32]) -> usize {
+        assert_eq!(x.len(), 8);
+        let mut best = f32::INFINITY;
+        let mut arg = 0usize;
+        for (i, c) in self.entries.chunks_exact(8).enumerate() {
+            let mut dot = 0.0f32;
+            for j in 0..8 {
+                dot += x[j] * c[j];
+            }
+            let score = self.norms[i] - 2.0 * dot;
+            if score < best {
+                best = score;
+                arg = i;
+            }
+        }
+        arg
+    }
+
+    /// Quantize one 8-vector (returns the reconstruction).
+    pub fn quantize_vec(&self, x: &[f32]) -> Vec<f32> {
+        let i = self.encode(x);
+        self.entries[i * 8..(i + 1) * 8].to_vec()
+    }
+
+    /// Quantize a sequence (length divisible by 8).
+    pub fn quantize_all(&self, xs: &[f32]) -> Vec<f32> {
+        assert_eq!(xs.len() % 8, 0);
+        let mut out = Vec::with_capacity(xs.len());
+        for v in xs.chunks_exact(8) {
+            out.extend_from_slice(&self.quantize_vec(v));
+        }
+        out
+    }
+}
+
+/// Residual VQ: an E8 stage (2 bits/weight) followed by Lloyd–Max scalar stages
+/// (1 bit each) on the residual — QuIP#'s recipe for 3- and 4-bit models.
+#[derive(Clone)]
+pub struct E8Rvq {
+    pub e8: E8Codebook,
+    pub residual_stages: Vec<LloydMax>,
+    /// Residual std per stage (the scalar stage is trained on N(0,1) and scaled).
+    residual_scales: Vec<f32>,
+}
+
+impl E8Rvq {
+    /// `k` total bits per weight (k >= 2): E8 for 2, scalar stages for the rest.
+    pub fn build(k: u32, e8_entries: usize, seed: u64) -> Self {
+        assert!(k >= 2);
+        let e8 = E8Codebook::build(e8_entries, seed);
+        let mut rng = Rng::new(seed ^ 0xE8);
+        let mut residual_stages = Vec::new();
+        let mut residual_scales = Vec::new();
+        // Estimate residual scale empirically stage by stage.
+        let sample: Vec<f32> = rng.gauss_vec(8 * 256);
+        let mut resid: Vec<f32> = {
+            let q = e8.quantize_all(&sample);
+            sample.iter().zip(&q).map(|(a, b)| a - b).collect()
+        };
+        for stage in 0..(k - 2) {
+            let var =
+                resid.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / resid.len() as f64;
+            let scale = (var.sqrt() as f32).max(1e-6);
+            let lm = LloydMax::train(1, 100_000, seed ^ (stage as u64 + 1));
+            resid = resid
+                .iter()
+                .map(|&r| r - scale * lm.quantize(r / scale))
+                .collect();
+            residual_stages.push(lm);
+            residual_scales.push(scale);
+        }
+        E8Rvq { e8, residual_stages, residual_scales }
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        self.e8.bits_per_weight() + self.residual_stages.len() as f64
+    }
+
+    /// Quantize a sequence (length divisible by 8).
+    pub fn quantize_all(&self, xs: &[f32]) -> Vec<f32> {
+        let mut rec = self.e8.quantize_all(xs);
+        let mut resid: Vec<f32> = xs.iter().zip(&rec).map(|(a, b)| a - b).collect();
+        for (lm, &scale) in self.residual_stages.iter().zip(&self.residual_scales) {
+            for (r, out) in resid.iter_mut().zip(rec.iter_mut()) {
+                let q = scale * lm.quantize(*r / scale);
+                *out += q;
+                *r -= q;
+            }
+        }
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mse;
+
+    #[test]
+    fn e8_shell_counts() {
+        // The E8 theta series: 240 vectors of norm² 2, 2160 of norm² 4.
+        let mut pts = Vec::new();
+        enumerate_coset(false, 2.0, &mut pts);
+        enumerate_coset(true, 2.0, &mut pts);
+        let shell2 = pts.iter().filter(|(_, n)| (n - 2.0).abs() < 1e-6).count();
+        assert_eq!(shell2, 240);
+        pts.clear();
+        enumerate_coset(false, 4.0, &mut pts);
+        enumerate_coset(true, 4.0, &mut pts);
+        let shell4 = pts.iter().filter(|(_, n)| (n - 4.0).abs() < 1e-6).count();
+        assert_eq!(shell4, 2160);
+    }
+
+    #[test]
+    fn all_points_are_e8() {
+        let mut pts = Vec::new();
+        enumerate_coset(false, 6.0, &mut pts);
+        enumerate_coset(true, 6.0, &mut pts);
+        for (p, _) in &pts {
+            let doubled: Vec<i64> = p.iter().map(|&x| (2.0 * x).round() as i64).collect();
+            // All coords integer or all half-integer.
+            let all_even = doubled.iter().all(|&d| d % 2 == 0);
+            let all_odd = doubled.iter().all(|&d| d % 2 != 0);
+            assert!(all_even || all_odd, "{p:?}");
+            // Sum of coordinates even (E8 condition).
+            let s: f64 = p.iter().map(|&x| x as f64).sum();
+            assert!((s / 2.0 - (s / 2.0).round()).abs() < 1e-9, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn small_codebook_quantizes() {
+        let cb = E8Codebook::build(1024, 1);
+        assert_eq!(cb.len(), 1024);
+        let mut rng = Rng::new(2);
+        let xs = rng.gauss_vec(8 * 64);
+        let rec = cb.quantize_all(&xs);
+        let e = mse(&rec, &xs);
+        // 10 bits / 8 weights = 1.25 bpw; must beat nothing fancy but be sane.
+        assert!(e < 0.5, "MSE {e}");
+    }
+
+    #[test]
+    fn encode_is_exact_nn() {
+        let cb = E8Codebook::build(512, 3);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let x = rng.gauss_vec(8);
+            let i = cb.encode(&x);
+            let mut best = f64::INFINITY;
+            let mut arg = 0;
+            for (j, c) in cb.entries.chunks_exact(8).enumerate() {
+                let d: f64 = x.iter().zip(c).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+                if d < best {
+                    best = d;
+                    arg = j;
+                }
+            }
+            assert_eq!(i, arg);
+        }
+    }
+
+    #[test]
+    fn rvq_bits_accounting() {
+        let q3 = E8Rvq::build(3, 1024, 5);
+        assert_eq!(q3.residual_stages.len(), 1);
+        let q4 = E8Rvq::build(4, 1024, 5);
+        assert_eq!(q4.residual_stages.len(), 2);
+    }
+
+    #[test]
+    fn rvq_improves_with_bits() {
+        let mut rng = Rng::new(6);
+        let xs = rng.gauss_vec(8 * 128);
+        let mut prev = f64::INFINITY;
+        for k in 2..=4 {
+            let q = E8Rvq::build(k, 2048, 7);
+            let e = mse(&q.quantize_all(&xs), &xs);
+            assert!(e < prev, "k={k}: {e} !< {prev}");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Baseline quantizers the paper compares against (Table 1's SQ/VQ columns and the
+//! QuIP#-proxy comparator used in the perplexity tables).
+//!
+//! These are *in-repo reimplementations*, not wrappers: DESIGN.md §4 documents how
+//! each maps onto the published baseline (Lloyd–Max ↔ scalar SQ; `E8Codebook` ↔
+//! QuIP# E8P; `E8Rvq` ↔ QuIP#'s residual 3/4-bit recipe; scalar-LDLQ ↔ GPTQ —
+//! realized by using [`lloydmax::LloydMax`] as the inner rounder of
+//! `quant::ldlq`).
+
+pub mod e8p;
+pub mod lloydmax;
+
+pub use e8p::{E8Codebook, E8Rvq};
+pub use lloydmax::LloydMax;

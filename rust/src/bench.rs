@@ -1,0 +1,157 @@
+//! Benchmark harness (criterion substitute): wall-clock measurement with warmup
+//! and repetitions, plus paper-style table rendering shared by every
+//! `rust/benches/*` target and `EXPERIMENTS.md`.
+
+use crate::util::Timer;
+
+/// Time `f` with warmup; returns (mean_secs, std_secs) over `reps` runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / samples.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Run until at least `min_secs` elapsed, returning per-iteration seconds.
+pub fn time_throughput<F: FnMut()>(min_secs: f64, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let t = Timer::start();
+    let mut iters = 0usize;
+    while t.secs() < min_secs {
+        f();
+        iters += 1;
+    }
+    t.secs() / iters.max(1) as f64
+}
+
+/// A paper-style results table that renders as aligned text + markdown.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned markdown table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for width in &w {
+            sep.push_str(&format!("{:-<width$}|", "", width = width + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+
+    /// Print to stdout and append to `bench_results/<file>.md` for EXPERIMENTS.md.
+    pub fn emit(&self, file: &str) {
+        let text = self.render();
+        println!("{text}");
+        let dir = std::path::Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(dir.join(file), &text);
+    }
+}
+
+/// Format helpers.
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Shared bench environment: consistent seeds + sample-count overrides via env.
+pub fn samples(default: usize) -> usize {
+    std::env::var("QTIP_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Test", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("### Test"));
+        assert!(r.contains("| a  | bb |") || r.contains("| a | bb |"));
+        assert!(r.contains("| 1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn time_fn_returns_positive() {
+        let (mean, _) = time_fn(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(mean >= 0.0);
+    }
+
+    #[test]
+    fn samples_env_default() {
+        assert_eq!(samples(7), 7);
+    }
+}

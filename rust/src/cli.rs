@@ -1,0 +1,116 @@
+//! Minimal CLI argument parser (clap substitute): `--key value` / `--flag`
+//! options plus positional arguments, with typed getters and usage errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (after the subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get_usize(key, default as usize) as u32
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_args() {
+        // NB: grammar is greedy — `--name value` binds the following token, so
+        // flags must precede another `--option` or end the argv.
+        let a = parse("model pos2 --k 2 --code 3inst --l=16 --verbose");
+        assert_eq!(a.positional, vec!["model", "pos2"]);
+        assert_eq!(a.get("k"), Some("2"));
+        assert_eq!(a.get("code"), Some("3inst"));
+        assert_eq!(a.get("l"), Some("16"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--k 3 --temp 0.5 --seed 42");
+        assert_eq!(a.get_usize("k", 0), 3);
+        assert_eq!(a.get_f32("temp", 0.0), 0.5);
+        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get_usize("missing", 9), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        parse("--k abc").get_usize("k", 0);
+    }
+
+    #[test]
+    fn flag_before_end() {
+        let a = parse("--fast --k 2");
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.get_usize("k", 0), 2);
+    }
+}

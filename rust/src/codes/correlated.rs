@@ -1,0 +1,146 @@
+//! A deliberately *bad* trellis code: Gaussian marginal but linear in the state
+//! word, so overlapping windows (which share most of their bits) decode to nearly
+//! identical values. This is the Figure 3 far-left panel — the failure mode that
+//! motivates the pseudorandom computed codes.
+
+use super::Code;
+
+/// Inverse standard normal CDF (Acklam's rational approximation, |eps| < 1.2e-8).
+pub fn probit(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "probit domain");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Gaussian-marginal code that is monotone in the state integer.
+#[derive(Clone, Copy, Debug)]
+pub struct CorrelatedCode {
+    l: u32,
+}
+
+impl CorrelatedCode {
+    pub fn new(l: u32) -> Self {
+        assert!(l <= 24);
+        CorrelatedCode { l }
+    }
+}
+
+impl Code for CorrelatedCode {
+    fn l(&self) -> u32 {
+        self.l
+    }
+
+    fn v(&self) -> u32 {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "corr"
+    }
+
+    #[inline]
+    fn decode(&self, state: u32, out: &mut [f32]) {
+        let n = (1u64 << self.l) as f64;
+        let u = (state as f64 + 0.5) / n;
+        out[0] = probit(u) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn probit_known_values() {
+        assert!(probit(0.5).abs() < 1e-8);
+        assert!((probit(0.975) - 1.959964).abs() < 1e-4);
+        assert!((probit(0.025) + 1.959964).abs() < 1e-4);
+        assert!((probit(0.841344746) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn probit_symmetry() {
+        for p in [0.01, 0.1, 0.3, 0.45] {
+            assert!((probit(p) + probit(1.0 - p)).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn marginal_is_gaussian() {
+        let code = CorrelatedCode::new(14);
+        let values = code.materialize();
+        assert!(stats::mean(&values).abs() < 1e-3);
+        assert!((stats::std_dev(&values) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn neighbors_strongly_correlated() {
+        // The windows of a bitshift walk share L-kV bits. In the little-endian
+        // orientation state_{t+1} = (state_t >> kV) | new<<(L-kV): the *low* bits of
+        // the current state are the *high* bits of... of the previous window's
+        // shifted copy; a monotone-in-integer code correlates those windows whose
+        // shared bits sit at the top of the integer. Check the pairing used by
+        // Figure 3: (s, s >> kV | d << (L-kV)) averaged over d.
+        let code = CorrelatedCode::new(16);
+        let values = code.materialize();
+        // Pair each state with a successor sharing its top bits: since the code is
+        // monotone in the integer, states (s, s ^ lowbit) are near-identical, and
+        // successors that keep the high bits (d reproducing them) stay correlated.
+        // The aggregate neighbor correlation must be far from zero (vs <0.05 for
+        // the computed codes).
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for s in 0..(1u32 << 16) {
+            a.push(values[s as usize]);
+            // Successor choosing new bits equal to the old top bits (worst case
+            // plausible walk under a smooth source).
+            let succ = (s >> 2) | (s & 0xC000);
+            b.push(values[succ as usize]);
+        }
+        let corr = stats::pearson(&a, &b);
+        assert!(corr > 0.5, "expected strong correlation, got {corr}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Algorithm 3 "HYB": hybrid computed-lookup code.
+//!
+//! The state is mixed with the invertible hash `X ← X² + X (mod 2³²)` (Klimov &
+//! Shamir), bits `(15−Q)..14` index a `2^Q × V` LUT, and bit 15 flips the sign of
+//! the last vector component — an effective codebook of `2^(Q+1)` entries while
+//! storing half of them. With Q=9, V=2 the LUT is 2 KiB of FP16 on GPU (bank-
+//! conflict-free in shared memory); we keep the same geometry so it stays
+//! L1-resident on CPU too.
+//!
+//! Unlike the pure-computed codes the LUT is differentiable, so it can be
+//! initialized by k-means on an empirical i.i.d. Gaussian (paper §3.1.2) and
+//! fine-tuned afterwards.
+
+use super::kmeans::kmeans;
+use super::Code;
+use crate::util::rng::Rng;
+
+/// The Klimov–Shamir T-function hash used by HYB.
+#[inline(always)]
+pub fn hash(x: u32) -> u32 {
+    x.wrapping_mul(x).wrapping_add(x)
+}
+
+/// Hybrid computed-lookup code.
+#[derive(Clone, Debug)]
+pub struct HybridCode {
+    l: u32,
+    v: u32,
+    /// log2 LUT entries.
+    pub q: u32,
+    /// `2^Q × V` lookup table (row-major).
+    pub lut: Vec<f32>,
+}
+
+impl HybridCode {
+    /// Build from an existing LUT (e.g. the one shipped in the AOT artifact
+    /// manifest, so Rust and the Pallas kernel agree bit-for-bit).
+    pub fn from_lut(l: u32, v: u32, q: u32, lut: Vec<f32>) -> Self {
+        assert!(v == 1 || v == 2, "HYB supports V in {{1,2}}");
+        assert!(q <= 14, "index bits must fit below bit 15");
+        assert_eq!(lut.len(), (1usize << q) * v as usize);
+        HybridCode { l, v, q, lut }
+    }
+
+    /// Initialize the LUT with k-means on an empirical i.i.d. Gaussian, folding the
+    /// sign symmetry: the last component is trained on |g| since bit 15 mirrors it.
+    /// Default training budget is modest; `train_with` exposes the knobs for the
+    /// quality-critical benches (Table 1 / Table 5).
+    pub fn train(l: u32, v: u32, q: u32, seed: u64) -> Self {
+        let k = 1usize << q;
+        Self::train_with(l, v, q, seed, (k * 48).max(4096), 25)
+    }
+
+    /// See [`Self::train`].
+    pub fn train_with(l: u32, v: u32, q: u32, seed: u64, n_points: usize, iters: usize) -> Self {
+        assert!(v == 1 || v == 2);
+        let k = 1usize << q;
+        let mut rng = Rng::new(seed ^ 0x9_71B);
+        let dim = v as usize;
+        let mut pts = Vec::with_capacity(n_points * dim);
+        for _ in 0..n_points {
+            for j in 0..dim {
+                let g = rng.gauss_f32();
+                // Fold the mirrored component into the positive half-space.
+                pts.push(if j == dim - 1 { g.abs() } else { g });
+            }
+        }
+        let km = kmeans(&pts, dim, k, iters, &mut rng);
+        HybridCode::from_lut(l, v, q, km.centroids)
+    }
+
+    /// LUT index and sign flip for a state.
+    #[inline(always)]
+    pub fn index(&self, state: u32) -> (usize, bool) {
+        let x = hash(state);
+        let idx = ((x >> (15 - self.q)) & ((1 << self.q) - 1)) as usize;
+        let flip = x & (1 << 15) != 0;
+        (idx, flip)
+    }
+}
+
+impl Code for HybridCode {
+    fn l(&self) -> u32 {
+        self.l
+    }
+
+    fn v(&self) -> u32 {
+        self.v
+    }
+
+    fn name(&self) -> &'static str {
+        "hyb"
+    }
+
+    #[inline]
+    fn decode(&self, state: u32, out: &mut [f32]) {
+        let (idx, flip) = self.index(state);
+        let v = self.v as usize;
+        let base = idx * v;
+        out[..v].copy_from_slice(&self.lut[base..base + v]);
+        if flip {
+            out[v - 1] = -out[v - 1];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn hash_golden() {
+        // Klimov–Shamir T-function, wrapping mod 2^32.
+        assert_eq!(hash(0), 0);
+        assert_eq!(hash(1), 2);
+        assert_eq!(hash(7), 56);
+        assert_eq!(hash(1000), 1_001_000);
+    }
+
+    #[test]
+    fn hash_wraps() {
+        // 0xFFFF^2 + 0xFFFF = 0xFFFE0001 + 0xFFFF = 0xFFFF0000 (mod 2^32)
+        assert_eq!(hash(0xFFFF), 0xFFFF_0000);
+        assert_eq!(hash(0x10000), 0x0001_0000); // 2^32 + 2^16 wraps to 2^16
+    }
+
+    #[test]
+    fn index_uses_expected_bits() {
+        let code = HybridCode::from_lut(16, 2, 9, vec![0.0; 512 * 2]);
+        for s in [0u32, 3, 1234, 65535] {
+            let x = hash(s);
+            let (idx, flip) = code.index(s);
+            assert_eq!(idx, ((x >> 6) & 0x1FF) as usize);
+            assert_eq!(flip, x & 0x8000 != 0);
+        }
+    }
+
+    #[test]
+    fn sign_flip_mirrors_last_component() {
+        let mut lut = vec![0.0f32; 512 * 2];
+        for i in 0..512 {
+            lut[i * 2] = i as f32;
+            lut[i * 2 + 1] = 1.0;
+        }
+        let code = HybridCode::from_lut(16, 2, 9, lut);
+        let mut out = [0.0f32; 2];
+        let mut seen_flip = false;
+        let mut seen_noflip = false;
+        for s in 0..4096u32 {
+            code.decode(s, &mut out);
+            let (idx, flip) = code.index(s);
+            assert_eq!(out[0], idx as f32);
+            assert_eq!(out[1], if flip { -1.0 } else { 1.0 });
+            seen_flip |= flip;
+            seen_noflip |= !flip;
+        }
+        assert!(seen_flip && seen_noflip, "both branches must occur");
+    }
+
+    #[test]
+    fn trained_lut_covers_gaussian() {
+        let code = HybridCode::train(12, 2, 7, 7);
+        // The effective codebook must be symmetric in its last component and cover
+        // the bulk + tails of N(0, I_2). (Marginal std over *states* is > 1 by
+        // design: k-means spaces entries ~density^(1/3).)
+        let values = code.materialize();
+        let xs: Vec<f32> = values.iter().step_by(2).copied().collect();
+        let ys: Vec<f32> = values.iter().skip(1).step_by(2).copied().collect();
+        assert!(stats::mean(&xs).abs() < 0.08);
+        assert!(stats::mean(&ys).abs() < 0.08, "sign flip must re-center ys");
+        for comp in [&xs, &ys] {
+            let min = comp.iter().cloned().fold(f32::INFINITY, f32::min);
+            let max = comp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(min < -2.0 && max > 2.0, "component must cover tails");
+        }
+    }
+
+    #[test]
+    fn v1_arm_variant() {
+        // §4.3: Q=6, V=1 HYB for ARM NEON table lookup.
+        let code = HybridCode::train(16, 1, 6, 3);
+        assert_eq!(code.lut.len(), 64);
+        let values = code.materialize();
+        assert!(stats::mean(&values).abs() < 0.06);
+        // 64 half-entries mirrored: all of N(0,1)'s mass must be within reach.
+        let max = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(max > 2.5 && -max < values.iter().cloned().fold(f32::INFINITY, f32::min) + 0.5);
+    }
+
+    #[test]
+    fn quantizing_gaussian_with_hyb_beats_scalar() {
+        // The effective 2^(Q+1) 2D codebook must beat 2-bit scalar Lloyd-Max MSE
+        // when used with a trellis (smoke version of Table 1's HYB column).
+        use crate::trellis::{Trellis, Viterbi, ViterbiWorkspace};
+        use crate::util::rng::Rng;
+        let code = HybridCode::train(12, 2, 9, 11);
+        let values = code.materialize();
+        let trellis = Trellis::new(12, 2, 2);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(5);
+        let seq = rng.gauss_vec(256);
+        let mut ws = ViterbiWorkspace::new();
+        let (states, _) = vit.quantize(&seq, None, None, &mut ws);
+        let dec = vit.decode(&states);
+        let mse = stats::mse(&dec, &seq);
+        assert!(mse < 0.118, "HYB trellis MSE {mse} should beat scalar 0.118");
+    }
+}

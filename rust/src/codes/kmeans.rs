@@ -1,0 +1,193 @@
+//! k-means (k-means++ init + Lloyd iterations) for codebook training.
+//!
+//! Used to initialize the HYB code's LUT on an empirical 2D Gaussian (paper §3.1.2),
+//! to build the Lloyd–Max scalar baseline (k-means in 1D is exactly Lloyd–Max), and
+//! to sanity-train small VQ codebooks for comparisons.
+
+use crate::util::rng::Rng;
+
+/// Result of a k-means run over `dim`-dimensional points.
+pub struct KMeans {
+    pub centroids: Vec<f32>, // k * dim
+    pub dim: usize,
+    pub inertia: f64,
+}
+
+/// Squared distance between a point and a centroid.
+#[inline]
+fn dist2(p: &[f32], c: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for i in 0..p.len() {
+        let d = (p[i] - c[i]) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Index of the nearest centroid (brute force).
+pub fn nearest(point: &[f32], centroids: &[f32], dim: usize) -> usize {
+    let k = centroids.len() / dim;
+    let mut best = 0;
+    let mut bd = f64::INFINITY;
+    for c in 0..k {
+        let d = dist2(point, &centroids[c * dim..(c + 1) * dim]);
+        if d < bd {
+            bd = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Run k-means on `points` (n × dim, row-major) into `k` clusters.
+pub fn kmeans(points: &[f32], dim: usize, k: usize, iters: usize, rng: &mut Rng) -> KMeans {
+    assert!(dim > 0 && points.len() % dim == 0);
+    let n = points.len() / dim;
+    assert!(n >= k, "need at least k points");
+
+    // k-means++ seeding.
+    let mut centroids = vec![0.0f32; k * dim];
+    let first = rng.below(n);
+    centroids[..dim].copy_from_slice(&points[first * dim..(first + 1) * dim]);
+    let mut d2 = vec![0.0f64; n];
+    for i in 0..n {
+        d2[i] = dist2(&points[i * dim..(i + 1) * dim], &centroids[..dim]);
+    }
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let mut target = rng.uniform() * total;
+        let mut pick = n - 1;
+        for (i, &d) in d2.iter().enumerate() {
+            target -= d;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        let dst = c * dim;
+        centroids.copy_within(0..0, 0); // no-op, keeps clippy quiet about styles
+        centroids[dst..dst + dim].copy_from_slice(&points[pick * dim..(pick + 1) * dim]);
+        for i in 0..n {
+            let d = dist2(&points[i * dim..(i + 1) * dim], &centroids[dst..dst + dim]);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    // Lloyd iterations.
+    let mut assign = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    for _ in 0..iters {
+        // Assignment.
+        let mut new_inertia = 0.0f64;
+        for i in 0..n {
+            let p = &points[i * dim..(i + 1) * dim];
+            let c = nearest(p, &centroids, dim);
+            assign[i] = c;
+            new_inertia += dist2(p, &centroids[c * dim..(c + 1) * dim]);
+        }
+        // Update.
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for j in 0..dim {
+                sums[c * dim + j] += points[i * dim + j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed an empty cluster at a random point.
+                let pick = rng.below(n);
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&points[pick * dim..(pick + 1) * dim]);
+            } else {
+                for j in 0..dim {
+                    centroids[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+        if (inertia - new_inertia).abs() < 1e-9 * inertia.max(1.0) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+    KMeans { centroids, dim, inertia }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let mut pts = Vec::new();
+        let centers = [(-10.0f32, -10.0), (10.0, 10.0), (-10.0, 10.0)];
+        for _ in 0..300 {
+            let c = centers[rng.below(3)];
+            pts.push(c.0 + rng.gauss_f32() * 0.1);
+            pts.push(c.1 + rng.gauss_f32() * 0.1);
+        }
+        let km = kmeans(&pts, 2, 3, 30, &mut rng);
+        // Each true center must be close to some centroid.
+        for c in centers {
+            let mut best = f64::INFINITY;
+            for i in 0..3 {
+                let d = ((km.centroids[i * 2] - c.0) as f64).powi(2)
+                    + ((km.centroids[i * 2 + 1] - c.1) as f64).powi(2);
+                best = best.min(d);
+            }
+            assert!(best < 0.1, "center {c:?} not recovered: {best}");
+        }
+    }
+
+    #[test]
+    fn lloyd_max_1d_2bit_matches_theory() {
+        // k-means on N(0,1) with k=4 is the 2-bit Lloyd–Max quantizer.
+        // Optimal levels ±0.4528, ±1.510; MSE = 0.1175 (paper Table 1's 0.118).
+        let mut rng = Rng::new(2);
+        let pts = rng.gauss_vec(200_000);
+        let km = kmeans(&pts, 1, 4, 60, &mut rng);
+        let mut levels = km.centroids.clone();
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((levels[0] + 1.510).abs() < 0.05, "{levels:?}");
+        assert!((levels[1] + 0.4528).abs() < 0.03, "{levels:?}");
+        assert!((levels[2] - 0.4528).abs() < 0.03, "{levels:?}");
+        assert!((levels[3] - 1.510).abs() < 0.05, "{levels:?}");
+        let mse = km.inertia / 200_000.0;
+        assert!((mse - 0.1175).abs() < 0.005, "mse {mse}");
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Rng::new(3);
+        let pts = rng.gauss_vec(5_000);
+        let i2 = kmeans(&pts, 1, 2, 25, &mut rng).inertia;
+        let i4 = kmeans(&pts, 1, 4, 25, &mut rng).inertia;
+        let i8 = kmeans(&pts, 1, 8, 25, &mut rng).inertia;
+        assert!(i2 > i4 && i4 > i8);
+    }
+
+    #[test]
+    fn nearest_is_argmin() {
+        let centroids = vec![0.0f32, 0.0, 5.0, 5.0, -3.0, 2.0];
+        assert_eq!(nearest(&[4.9, 4.8], &centroids, 2), 1);
+        assert_eq!(nearest(&[-2.0, 1.5], &centroids, 2), 2);
+        assert_eq!(nearest(&[0.1, -0.2], &centroids, 2), 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(9);
+        let pts1 = r1.gauss_vec(1000);
+        let km1 = kmeans(&pts1, 1, 8, 10, &mut r1);
+        let mut r2 = Rng::new(9);
+        let pts2 = r2.gauss_vec(1000);
+        let km2 = kmeans(&pts2, 1, 8, 10, &mut r2);
+        assert_eq!(km1.centroids, km2.centroids);
+    }
+}

@@ -1,0 +1,134 @@
+//! Pure-lookup random Gaussian code.
+//!
+//! Each state's value is an i.i.d. N(0,1) draw keyed deterministically by
+//! (seed, state). This is the quality ceiling among bitshift-trellis codes: the
+//! paper's Table 1 "RPTC" column and the LUT rows of Tables 10/11/15 use exactly
+//! this construction. It is *not* decode-friendly at L ≳ 12 — the materialized
+//! table would blow out L1 (the point of §3.1's computed codes) — but quantization
+//! quality comparisons need it.
+
+use super::Code;
+use crate::util::rng::mix64;
+
+/// Deterministic standard normal from a 64-bit key (Box–Muller on two hashes).
+#[inline]
+fn key_gauss(key: u64) -> f32 {
+    let a = mix64(key);
+    let b = mix64(key ^ 0xD6E8_FEB8_6659_FD93);
+    // 53-bit uniforms.
+    let u1 = 1.0 - (a >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let u2 = (b >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let r = (-2.0 * u1.ln()).sqrt();
+    (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+}
+
+/// Pure-lookup i.i.d. Gaussian codebook.
+#[derive(Clone, Debug)]
+pub struct PureLutCode {
+    l: u32,
+    v: u32,
+    seed: u64,
+    /// Materialized at construction: the encode path needs it anyway, and tests
+    /// read it directly.
+    pub table: Vec<f32>,
+}
+
+impl PureLutCode {
+    pub fn new(l: u32, v: u32, seed: u64) -> Self {
+        assert!(l <= 24);
+        let states = 1usize << l;
+        let mut table = Vec::with_capacity(states * v as usize);
+        for s in 0..states {
+            for j in 0..v {
+                table.push(key_gauss(
+                    (seed << 1) ^ ((s as u64) << 3) ^ (j as u64).wrapping_mul(0xB5AD_4ECE_DA1C_E2A9),
+                ));
+            }
+        }
+        PureLutCode { l, v, seed, table }
+    }
+
+    /// Storage footprint of the codebook in bytes (FP16), for Table 10's size column.
+    pub fn codebook_bytes(&self) -> usize {
+        self.table.len() * 2
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl Code for PureLutCode {
+    fn l(&self) -> u32 {
+        self.l
+    }
+
+    fn v(&self) -> u32 {
+        self.v
+    }
+
+    fn name(&self) -> &'static str {
+        "lut"
+    }
+
+    #[inline]
+    fn decode(&self, state: u32, out: &mut [f32]) {
+        let v = self.v as usize;
+        let base = state as usize * v;
+        out[..v].copy_from_slice(&self.table[base..base + v]);
+    }
+
+    fn materialize(&self) -> Vec<f32> {
+        self.table.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = PureLutCode::new(10, 1, 42);
+        let b = PureLutCode::new(10, 1, 42);
+        let c = PureLutCode::new(10, 1, 43);
+        assert_eq!(a.table, b.table);
+        assert_ne!(a.table, c.table);
+    }
+
+    #[test]
+    fn marginals_standard_gaussian() {
+        let code = PureLutCode::new(16, 1, 1);
+        assert!(stats::mean(&code.table).abs() < 0.02);
+        assert!((stats::std_dev(&code.table) - 1.0).abs() < 0.02);
+        assert!((stats::kurtosis(&code.table) - 3.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn neighbor_states_uncorrelated() {
+        // The defining property the computed codes must emulate (Figure 3 far-right).
+        let code = PureLutCode::new(16, 1, 2);
+        let a: Vec<f32> = (0..65536u32).map(|s| code.table[s as usize]).collect();
+        let b: Vec<f32> = (0..65536u32).map(|s| code.table[(s >> 2) as usize]).collect();
+        assert!(stats::pearson(&a, &b).abs() < 0.02);
+    }
+
+    #[test]
+    fn v2_layout() {
+        let code = PureLutCode::new(8, 2, 5);
+        assert_eq!(code.table.len(), 512);
+        let mut out = [0.0f32; 2];
+        code.decode(37, &mut out);
+        assert_eq!(out[0], code.table[74]);
+        assert_eq!(out[1], code.table[75]);
+    }
+
+    #[test]
+    fn codebook_bytes_table10() {
+        // Table 10's CB size column: L=16, V=1 FP16 LUT = 128 KiB... the paper
+        // counts Kb (kilobits): 2^16 states * 16 bits = 1.05 Mb. We report bytes.
+        let code = PureLutCode::new(16, 1, 0);
+        assert_eq!(code.codebook_bytes(), 131072);
+    }
+}

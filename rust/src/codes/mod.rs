@@ -1,0 +1,139 @@
+//! Trellis node-value codes (paper §3.1.1–3.1.2).
+//!
+//! A code maps an L-bit trellis state to a value in R^V. QTIP's contribution is a
+//! family of *computed* codes that turn the state into a pseudorandom approximate
+//! Gaussian in a handful of ALU instructions, so no `2^L × V` codebook has to live
+//! in cache at decode time:
+//!
+//! * [`onemad::OneMadCode`] — Alg. 1 "1MAD": LCG + horizontal byte add (≈3 ops).
+//! * [`threeinst::ThreeInstCode`] — Alg. 2 "3INST": LCG + mask/XOR into two FP16
+//!   halves + add (3 ops).
+//! * [`hybrid::HybridCode`] — Alg. 3 "HYB": integer hash + lookup in a tiny
+//!   (cache-resident, fine-tunable) LUT + sign flip (amortized 2 ops).
+//! * [`lut::PureLutCode`] — pure-lookup i.i.d. Gaussian codebook (the RPTC-style
+//!   quality ceiling; Tables 1, 10, 11, 15).
+//! * [`correlated::CorrelatedCode`] — deliberately miscorrelated code (Figure 3
+//!   far-left): Gaussian marginal, linear in the state, so neighboring windows
+//!   produce strongly correlated values. Quality foil for the computed codes.
+//!
+//! All integer semantics are u32-exact and mirrored by
+//! `python/compile/kernels/codes.py`; golden-vector tests pin both sides.
+
+pub mod correlated;
+pub mod hybrid;
+pub mod kmeans;
+pub mod lut;
+pub mod onemad;
+pub mod threeinst;
+
+pub use correlated::CorrelatedCode;
+pub use hybrid::HybridCode;
+pub use lut::PureLutCode;
+pub use onemad::OneMadCode;
+pub use threeinst::ThreeInstCode;
+
+/// A trellis node-value code: decodes an L-bit state word into V weights.
+pub trait Code: Send + Sync {
+    /// State width in bits.
+    fn l(&self) -> u32;
+    /// Values produced per state.
+    fn v(&self) -> u32;
+    /// Short identifier ("1mad", "3inst", "hyb", "lut", "corr").
+    fn name(&self) -> &'static str;
+    /// Decode one state into `out` (length == V).
+    fn decode(&self, state: u32, out: &mut [f32]);
+
+    /// Materialize the full `2^L × V` codebook (for Viterbi quantization — the
+    /// *encode* side is allowed to hold the table; only decode must be compute-only).
+    fn materialize(&self) -> Vec<f32> {
+        let states = 1usize << self.l();
+        let v = self.v() as usize;
+        let mut values = vec![0.0f32; states * v];
+        for s in 0..states {
+            let (chunk, _) = values[s * v..].split_at_mut(v);
+            self.decode(s as u32, chunk);
+        }
+        values
+    }
+}
+
+/// Instantiate a code by name with the given trellis geometry.
+/// `hyb` trains its LUT deterministically from `seed` (Q=9 for V=2, Q=6 for V=1,
+/// matching the paper's GPU and ARM configurations).
+pub fn build_code(name: &str, l: u32, v: u32, seed: u64) -> Box<dyn Code> {
+    match name {
+        "1mad" => {
+            assert_eq!(v, 1, "1MAD is a 1D code");
+            Box::new(OneMadCode::new(l))
+        }
+        "3inst" => {
+            assert_eq!(v, 1, "3INST is a 1D code");
+            Box::new(ThreeInstCode::new(l))
+        }
+        "hyb" => {
+            let q = if v == 2 { 9 } else { 6 };
+            Box::new(HybridCode::train(l, v, q, seed))
+        }
+        "lut" => Box::new(PureLutCode::new(l, v, seed)),
+        "corr" => {
+            assert_eq!(v, 1, "correlated demo code is 1D");
+            Box::new(CorrelatedCode::new(l))
+        }
+        other => panic!("unknown code '{other}' (expected 1mad|3inst|hyb|lut|corr)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// The computed codes must produce approximately standard-Gaussian marginals —
+    /// that is the property that lets RHT-processed weights be trellis-coded well.
+    /// (HYB is excluded by design: its k-means LUT spaces entries ~density^(1/3), so
+    /// the uniform-over-states marginal is deliberately heavier-tailed; what matters
+    /// for HYB is *coverage*, checked in `hybrid::tests`.)
+    #[test]
+    fn all_codes_near_standard_gaussian() {
+        for name in ["1mad", "3inst", "lut", "corr"] {
+            let v = 1;
+            let code = build_code(name, 14, v, 7);
+            let values = code.materialize();
+            let m = stats::mean(&values);
+            let sd = stats::std_dev(&values);
+            assert!(m.abs() < 0.05, "{name}: mean {m}");
+            assert!((sd - 1.0).abs() < 0.12, "{name}: std {sd}");
+        }
+        // HYB: symmetric (sign flip) and covering.
+        let code = build_code("hyb", 14, 1, 7);
+        let values = code.materialize();
+        assert!(stats::mean(&values).abs() < 0.06, "hyb mean");
+        let min = values.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(min < -2.5 && max > 2.5, "hyb must cover the Gaussian tails");
+    }
+
+    #[test]
+    fn materialize_matches_decode() {
+        let code = build_code("3inst", 12, 1, 0);
+        let values = code.materialize();
+        let mut out = [0.0f32];
+        for s in [0u32, 1, 77, 4095] {
+            code.decode(s, &mut out);
+            assert_eq!(values[s as usize], out[0]);
+        }
+    }
+
+    #[test]
+    fn hyb_v2_geometry() {
+        let code = build_code("hyb", 16, 2, 3);
+        assert_eq!(code.v(), 2);
+        assert_eq!(code.materialize().len(), 65536 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown code")]
+    fn unknown_code_panics() {
+        build_code("nope", 16, 1, 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Algorithm 1 "1MAD": a lookup-free computed Gaussian code.
+//!
+//! A linear congruential generator expands the L-bit state into a pseudorandom
+//! 32-bit word; the horizontal sum of its four bytes is approximately Gaussian by
+//! the CLT (n=4 uniforms), and a final multiply-add centers and scales it. On an
+//! NVIDIA GPU this is MAD + AND, `vabsdiff4` (byte sum), and MAD — hence "1MAD" per
+//! weight amortized; here the identical u32 arithmetic runs on CPU and inside the
+//! Pallas kernel (`python/compile/kernels/codes.py`).
+
+use super::Code;
+
+/// LCG multiplier from the paper (§3.1.1).
+pub const A: u32 = 34038481;
+/// LCG increment from the paper (§3.1.1).
+pub const B: u32 = 76625530;
+/// Mean of the four-byte sum: 4 * 255/2.
+pub const MEAN: f32 = 510.0;
+/// Std of the four-byte sum: sqrt(4 * (256^2 - 1) / 12). Frozen cross-language.
+pub const STD: f32 = 147.8005413;
+
+/// Decode one state word to an approximately N(0,1) scalar.
+#[inline(always)]
+pub fn decode_scalar(state: u32) -> f32 {
+    let x = A.wrapping_mul(state).wrapping_add(B);
+    // Sum of the four bytes (the GPU form is one vabsdiff4 against 0).
+    let s = (x & 0xFF) + ((x >> 8) & 0xFF) + ((x >> 16) & 0xFF) + (x >> 24);
+    (s as f32 - MEAN) * (1.0 / STD)
+}
+
+/// The 1MAD code (V=1).
+#[derive(Clone, Copy, Debug)]
+pub struct OneMadCode {
+    l: u32,
+}
+
+impl OneMadCode {
+    pub fn new(l: u32) -> Self {
+        assert!(l <= 32);
+        OneMadCode { l }
+    }
+}
+
+impl Code for OneMadCode {
+    fn l(&self) -> u32 {
+        self.l
+    }
+
+    fn v(&self) -> u32 {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "1mad"
+    }
+
+    #[inline]
+    fn decode(&self, state: u32, out: &mut [f32]) {
+        out[0] = decode_scalar(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn golden_vectors() {
+        // Frozen cross-language golden values (mirrored in python/tests).
+        // state 0: X = B = 76625530 = 0x0491367A -> bytes 0x7A+0x36+0x91+0x04 = 325
+        let expect0 = (325.0f64 - 510.0) / 147.8005413;
+        assert!((decode_scalar(0) as f64 - expect0).abs() < 1e-6);
+        // state 1: X = A + B = 110664011 = 0x0698994B -> 0x06+0x98+0x99+0x4B = 386
+        let x: u32 = 110664011;
+        let s = (x & 0xFF) + ((x >> 8) & 0xFF) + ((x >> 16) & 0xFF) + (x >> 24);
+        assert_eq!(s, 386);
+        let expect1 = (s as f32 - 510.0) / 147.8005413;
+        assert!((decode_scalar(1) - expect1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wrapping_is_mod_2_32() {
+        // Large states must wrap, not panic/saturate.
+        let v = decode_scalar(u32::MAX);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn marginal_moments() {
+        let code = OneMadCode::new(16);
+        let values = code.materialize();
+        let m = stats::mean(&values);
+        let sd = stats::std_dev(&values);
+        let kurt = stats::kurtosis(&values);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((sd - 1.0).abs() < 0.02, "std {sd}");
+        // CLT with n=4: kurtosis slightly platykurtic (~2.7), far from uniform (1.8).
+        assert!((kurt - 2.7).abs() < 0.3, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn output_is_bounded() {
+        // Byte-sum construction bounds outputs to ±510/147.8 ≈ ±3.45 sigma.
+        let code = OneMadCode::new(16);
+        for v in code.materialize() {
+            assert!(v.abs() <= 3.46);
+        }
+    }
+
+    #[test]
+    fn neighbor_decorrelation() {
+        // Figure 3 (left-center): consecutive trellis windows of a k=2 stream —
+        // state pairs (s, next) sharing L-2 bits — must be nearly uncorrelated.
+        let l = 16u32;
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for s in 0..(1u32 << l) {
+            // Next-window states for newbits=0: next = s >> 2 (top bits zero).
+            let next = s >> 2;
+            a.push(decode_scalar(s));
+            b.push(decode_scalar(next));
+        }
+        let corr = stats::pearson(&a, &b).abs();
+        assert!(corr < 0.05, "1MAD neighbor correlation {corr}");
+    }
+}

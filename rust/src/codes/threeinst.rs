@@ -1,0 +1,159 @@
+//! Algorithm 2 "3INST": a lookup-free computed Gaussian code.
+//!
+//! An LCG expands the state to a 32-bit word X. Each 16-bit half of X is masked to
+//! its sign bit, bottom-two exponent bits, and mantissa, then XOR-ed into the
+//! corresponding fields of the magic FP16 constant m = 0.922 (bits 0x3B60). Each
+//! half is therefore an FP16 with random sign, random mantissa, and exponent in
+//! {2^-3 .. 2^0} · [1,2) — approximately a mirrored exponential. The sum of the two
+//! halves is close to Gaussian. On GPU: MAD, lop3 (mask+XOR with the packed
+//! duplicated magic), HADD2 — 3 instructions for two weights.
+
+use super::Code;
+
+/// LCG multiplier from the paper (§3.1.1).
+pub const A: u32 = 89226354;
+/// LCG increment from the paper (§3.1.1).
+pub const B: u32 = 64248484;
+/// Mask: sign (bit 15), bottom two exponent bits (bits 11, 10), mantissa (9..0).
+pub const MASK: u16 = 0x8FFF;
+/// f16 bits of the magic constant 0.922.
+pub const MAGIC: u16 = 0x3B60;
+/// Std of (m1 + m2) over the full 2^16 u16 grid; frozen cross-language constant
+/// (see DESIGN.md §7). Computed once from the exact f16 semantics.
+pub const STD: f32 = 1.2443900210;
+
+/// Branch-free binary16→f32 for the masked-XOR outputs: `(w & MASK) ^ MAGIC`
+/// always has exponent field in 01100..=01111 (never subnormal/inf/nan), so the
+/// general converter's special cases are dead — this is the §Perf hot-path
+/// specialization (asserted equivalent to `f16_to_f32` in tests).
+#[inline(always)]
+fn f16_normal_to_f32(bits: u16) -> f32 {
+    let sign = (bits as u32 & 0x8000) << 16;
+    let exp_man = (bits as u32 & 0x7FFF) << 13;
+    // Rebias exponent: +(127-15) << 23.
+    f32::from_bits(sign | (exp_man + (112u32 << 23)))
+}
+
+/// Decode one state word to an approximately N(0,1) scalar.
+#[inline(always)]
+pub fn decode_scalar(state: u32) -> f32 {
+    let x = A.wrapping_mul(state).wrapping_add(B);
+    let m1 = f16_normal_to_f32(((x & 0xFFFF) as u16 & MASK) ^ MAGIC);
+    let m2 = f16_normal_to_f32(((x >> 16) as u16 & MASK) ^ MAGIC);
+    (m1 + m2) * (1.0 / STD)
+}
+
+/// The 3INST code (V=1).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreeInstCode {
+    l: u32,
+}
+
+impl ThreeInstCode {
+    pub fn new(l: u32) -> Self {
+        assert!(l <= 32);
+        ThreeInstCode { l }
+    }
+}
+
+impl Code for ThreeInstCode {
+    fn l(&self) -> u32 {
+        self.l
+    }
+
+    fn v(&self) -> u32 {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "3inst"
+    }
+
+    #[inline]
+    fn decode(&self, state: u32, out: &mut [f32]) {
+        out[0] = decode_scalar(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::f16::{f16_to_f32, f32_to_f16};
+    use crate::util::stats;
+
+    #[test]
+    fn magic_constant_is_0922() {
+        assert_eq!(f32_to_f16(0.922), MAGIC);
+    }
+
+    #[test]
+    fn fast_f16_path_matches_general_converter() {
+        // The hot-path specialization must agree with the exact converter on
+        // every value the masked-XOR construction can produce.
+        for w in 0u32..=0xFFFF {
+            let bits = ((w as u16) & MASK) ^ MAGIC;
+            assert_eq!(
+                f16_normal_to_f32(bits),
+                f16_to_f32(bits),
+                "bits {bits:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn mask_covers_expected_fields() {
+        // sign | exp[1:0] | mantissa
+        assert_eq!(MASK, 0x8000 | (0b00011 << 10) | 0x3FF);
+    }
+
+    #[test]
+    fn golden_vectors() {
+        // state 0: X = B = 64248484 = 0x03D45EA4
+        let x: u32 = 64248484;
+        assert_eq!(A.wrapping_mul(0).wrapping_add(B), x);
+        let lo = (x & 0xFFFF) as u16; // 0x5EA4
+        let hi = (x >> 16) as u16; // 0x03D4
+        let m1 = f16_to_f32((lo & MASK) ^ MAGIC);
+        let m2 = f16_to_f32((hi & MASK) ^ MAGIC);
+        let expect = (m1 + m2) / STD;
+        assert!((decode_scalar(0) - expect).abs() < 1e-7);
+        // Sanity: masked-XOR keeps exponent within [magic_exp-3, magic_exp].
+        // magic exp field = 01110; flipping bottom two bits spans 01100..01111.
+        for w in [lo, hi] {
+            let e = (((w & MASK) ^ MAGIC) >> 10) & 0x1F;
+            assert!((0b01100..=0b01111).contains(&e));
+        }
+    }
+
+    #[test]
+    fn marginal_moments() {
+        let code = ThreeInstCode::new(16);
+        let values = code.materialize();
+        assert!(stats::mean(&values).abs() < 0.01);
+        assert!((stats::std_dev(&values) - 1.0).abs() < 0.01);
+        // Sum of two mirrored exponentials: mildly leptokurtic vs the Gaussian.
+        let kurt = stats::kurtosis(&values);
+        assert!((2.5..4.0).contains(&kurt), "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn neighbor_decorrelation() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for s in 0..(1u32 << 16) {
+            a.push(decode_scalar(s));
+            b.push(decode_scalar(s >> 2));
+        }
+        let corr = stats::pearson(&a, &b).abs();
+        assert!(corr < 0.05, "3INST neighbor correlation {corr}");
+    }
+
+    #[test]
+    fn values_bounded_by_construction() {
+        // Each half has |value| < 2 (exponent <= 0 field 01111 -> [1,2)); sum < 4.
+        let code = ThreeInstCode::new(16);
+        for v in code.materialize() {
+            assert!(v.abs() < 4.0 / STD + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: the quantization job pipeline (`pipeline`) and the
+//! batched generation server (`server`). Rust owns the event loop, process
+//! topology, and metrics; compiled XLA artifacts and the native fused decoder do
+//! the math.
+
+pub mod pipeline;
+pub mod server;
+pub mod tcp;
+
+pub use pipeline::{quantize_model_baseline, quantize_model_qtip, LayerReport, QuantizeReport};
+pub use server::{GenRequest, GenResponse, ServerConfig, ServerHandle, ServerStats};
+pub use tcp::TcpFrontend;

@@ -1,0 +1,252 @@
+//! The quantization job pipeline: per-layer jobs (RHT → BlockLDLQ(TCQ) → pack)
+//! fanned across workers, with progress reporting and per-layer metrics. This is
+//! what `qtip quantize` runs and what the perplexity benches call.
+
+use std::sync::Mutex;
+
+use crate::hessian::HessianSet;
+use crate::model::transformer::{Linear, Transformer};
+use crate::quant::{
+    quantize_matrix_baseline, quantize_matrix_qtip, BaselineKind, QtipConfig, QuantMetrics,
+};
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::parallel_for;
+use crate::util::Timer;
+
+/// Per-layer outcome.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub bytes_before: usize,
+    pub bytes_after: usize,
+    pub metrics: QuantMetrics,
+}
+
+/// Whole-model quantization outcome.
+#[derive(Clone, Debug)]
+pub struct QuantizeReport {
+    pub layers: Vec<LayerReport>,
+    pub seconds: f64,
+    pub bytes_before: usize,
+    pub bytes_after: usize,
+}
+
+impl QuantizeReport {
+    pub fn mean_relative_proxy(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.metrics.relative_proxy).sum::<f64>()
+            / self.layers.len() as f64
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.bytes_before as f64 / self.bytes_after.max(1) as f64
+    }
+}
+
+/// Quantize every decoder linear of `model` in place with QTIP.
+/// `workers` bounds the job fan-out (the single-core CI machine uses 1).
+pub fn quantize_model_qtip(
+    model: &mut Transformer,
+    hessians: &HessianSet,
+    cfg: &QtipConfig,
+    workers: usize,
+    mut progress: impl FnMut(&LayerReport),
+) -> QuantizeReport {
+    let timer = Timer::start();
+    // Snapshot job inputs.
+    let jobs: Vec<(String, Matrix, Matrix)> = {
+        let linears = model.linears_mut();
+        linears
+            .iter()
+            .map(|(name, lin)| {
+                let w = match lin {
+                    Linear::Dense(w) => (*w).clone(),
+                    _ => panic!("layer '{name}' already quantized"),
+                };
+                let h = hessians
+                    .by_layer
+                    .get(name)
+                    .unwrap_or_else(|| panic!("no Hessian for layer '{name}'"))
+                    .clone();
+                (name.clone(), w, h)
+            })
+            .collect()
+    };
+
+    // Run jobs in parallel; results land in order-indexed slots.
+    let results: Vec<Mutex<Option<(String, crate::quant::QuantizeResult, usize)>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    parallel_for(jobs.len(), workers, |i| {
+        let (name, w, h) = &jobs[i];
+        // Derive a per-layer seed so RHT signs differ across layers.
+        let mut layer_cfg = cfg.clone();
+        layer_cfg.seed = cfg.seed ^ crate::util::rng::mix64(i as u64 + 1);
+        let res = quantize_matrix_qtip(w, h, &layer_cfg);
+        let before = w.data.len() * 4;
+        *results[i].lock().unwrap() = Some((name.clone(), res, before));
+    });
+
+    // Install quantized layers + collect reports.
+    let mut reports = Vec::new();
+    let mut by_name = std::collections::BTreeMap::new();
+    for slot in results {
+        let (name, res, before) = slot.into_inner().unwrap().unwrap();
+        let report = LayerReport {
+            name: name.clone(),
+            rows: res.qm.rows,
+            cols: res.qm.cols,
+            bytes_before: before,
+            bytes_after: res.qm.size_bytes(),
+            metrics: res.metrics,
+        };
+        progress(&report);
+        reports.push(report);
+        by_name.insert(name, res.qm);
+    }
+    for (name, lin) in model.linears_mut() {
+        let qm = by_name.remove(&name).unwrap();
+        *lin = Linear::Quantized { qm, cache: None };
+    }
+
+    let bytes_before: usize = reports.iter().map(|r| r.bytes_before).sum();
+    let bytes_after: usize = reports.iter().map(|r| r.bytes_after).sum();
+    QuantizeReport { layers: reports, seconds: timer.secs(), bytes_before, bytes_after }
+}
+
+/// Quantize with a baseline inner rounder (dense reconstructions installed —
+/// baselines are quality comparators, not serving paths).
+pub fn quantize_model_baseline(
+    model: &mut Transformer,
+    hessians: &HessianSet,
+    kind: &BaselineKind,
+    seed: u64,
+    workers: usize,
+) -> QuantizeReport {
+    let timer = Timer::start();
+    let jobs: Vec<(String, Matrix, Matrix)> = {
+        let linears = model.linears_mut();
+        linears
+            .iter()
+            .map(|(name, lin)| {
+                let w = match lin {
+                    Linear::Dense(w) => (*w).clone(),
+                    _ => panic!("layer '{name}' already quantized"),
+                };
+                (name.clone(), w, hessians.by_layer[name].clone())
+            })
+            .collect()
+    };
+    let results: Vec<Mutex<Option<(String, Matrix, QuantMetrics, usize)>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+    parallel_for(jobs.len(), workers, |i| {
+        let (name, w, h) = &jobs[i];
+        let res = quantize_matrix_baseline(w, h, kind, seed ^ i as u64);
+        let w_hat = res.reconstruct_w();
+        *results[i].lock().unwrap() =
+            Some((name.clone(), w_hat, res.metrics, w.data.len() * 4));
+    });
+
+    let mut reports = Vec::new();
+    let mut by_name = std::collections::BTreeMap::new();
+    for slot in results {
+        let (name, w_hat, metrics, before) = slot.into_inner().unwrap().unwrap();
+        // Baseline storage estimate: k bits/weight.
+        let after = (w_hat.data.len() as f64 * metrics.bits_per_weight / 8.0) as usize;
+        reports.push(LayerReport {
+            name: name.clone(),
+            rows: w_hat.rows,
+            cols: w_hat.cols,
+            bytes_before: before,
+            bytes_after: after,
+            metrics,
+        });
+        by_name.insert(name, w_hat);
+    }
+    for (name, lin) in model.linears_mut() {
+        *lin = Linear::Dense(by_name.remove(&name).unwrap());
+    }
+    let bytes_before: usize = reports.iter().map(|r| r.bytes_before).sum();
+    let bytes_after: usize = reports.iter().map(|r| r.bytes_after).sum();
+    QuantizeReport { layers: reports, seconds: timer.secs(), bytes_before, bytes_after }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hessian::collect_hessians;
+    use crate::model::{ModelConfig, Transformer, WeightStore};
+
+    fn tiny() -> Transformer {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 32;
+        Transformer::from_store(&WeightStore::random(&cfg, 5))
+    }
+
+    fn tiny_cfg() -> QtipConfig {
+        QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 3 }
+    }
+
+    #[test]
+    fn quantizes_whole_model() {
+        let mut model = tiny();
+        let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+        let hs = collect_hessians(&model, &seqs);
+        let mut n = 0;
+        let report = quantize_model_qtip(&mut model, &hs, &tiny_cfg(), 1, |_| n += 1);
+        assert_eq!(report.layers.len(), 7); // q,k,v,o,gate,up,down × 1 layer
+        assert_eq!(n, 7);
+        assert!(report.compression_ratio() > 8.0, "{}", report.compression_ratio());
+        // Model must still run (batch path needs caches).
+        model.ensure_caches();
+        let logits = model.forward_batch(&[1, 2, 3]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        // And the decode path.
+        let mut cache = crate::model::KvCache::new(&model.cfg);
+        let l = model.decode_step(&mut cache, 7);
+        assert!(l.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_model_stays_close_to_dense() {
+        let mut model = tiny();
+        let dense_logits = model.forward_batch(&[10, 20, 30, 40]);
+        let seqs = vec![
+            vec![10u16, 20, 30, 40, 50, 60, 70, 80],
+            vec![3u16, 1, 4, 1, 5, 9, 2, 6],
+        ];
+        let hs = collect_hessians(&model, &seqs);
+        let mut cfg = tiny_cfg();
+        cfg.k = 4; // 4-bit: near-lossless regime
+        quantize_model_qtip(&mut model, &hs, &cfg, 1, |_| {});
+        model.ensure_caches();
+        let q_logits = model.forward_batch(&[10, 20, 30, 40]);
+        // Compare softmax-ish behaviour: logits should be highly correlated.
+        let corr = crate::util::stats::pearson(&dense_logits.data, &q_logits.data);
+        assert!(corr > 0.95, "4-bit quantization wrecked the model: corr {corr}");
+    }
+
+    #[test]
+    fn baseline_pipeline_installs_dense() {
+        let mut model = tiny();
+        let seqs = vec![vec![2u16, 4, 6, 8, 10, 12, 14, 16]];
+        let hs = collect_hessians(&model, &seqs);
+        let report = quantize_model_baseline(
+            &mut model,
+            &hs,
+            &BaselineKind::Scalar { k: 2 },
+            1,
+            1,
+        );
+        assert_eq!(report.layers.len(), 7);
+        let logits = model.forward_batch(&[5, 6]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,368 @@
+//! The generation server: request queue → continuous batcher → token streaming.
+//!
+//! Table 4's serving context: batch-1 decoding is memory-bound, so the quantized
+//! model's fused decode-matvec is the hot path. The coordinator contributes the
+//! vLLM-style machinery around it: admission control against a KV-memory budget,
+//! a KV-cache pool (allocate on admit, recycle on completion), round-robin
+//! continuous batching (new requests join mid-flight), and per-request metrics
+//! (TTFT, decode tok/s).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::model::transformer::{KvCache, Transformer};
+use crate::model::ByteTokenizer;
+use crate::util::rng::Rng;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// 0.0 => greedy.
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+/// Completion with per-request serving metrics.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<u16>,
+    pub prompt_tokens: usize,
+    /// Seconds from admission to first generated token.
+    pub ttft: f64,
+    pub total_secs: f64,
+    pub decode_tok_per_sec: f64,
+}
+
+struct Active {
+    req: GenRequest,
+    cache: KvCache,
+    generated: Vec<u16>,
+    rng: Rng,
+    next_token: u16,
+    admitted_at: std::time::Instant,
+    first_token_at: Option<std::time::Instant>,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Max concurrently-decoding sequences.
+    pub max_batch: usize,
+    /// KV memory budget in bytes (admission control).
+    pub kv_budget_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 8, kv_budget_bytes: 256 << 20 }
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub completed: usize,
+    pub total_generated_tokens: usize,
+    pub total_decode_secs: f64,
+    pub peak_batch: usize,
+    pub peak_kv_bytes: usize,
+}
+
+impl ServerStats {
+    pub fn throughput_tok_per_sec(&self) -> f64 {
+        if self.total_decode_secs == 0.0 {
+            return 0.0;
+        }
+        self.total_generated_tokens as f64 / self.total_decode_secs
+    }
+}
+
+enum Msg {
+    Submit(GenRequest, Sender<GenResponse>),
+    Shutdown(Sender<ServerStats>),
+}
+
+/// Handle for submitting requests to a running server.
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Spawn the serving loop on its own thread.
+    pub fn spawn(model: Arc<Transformer>, cfg: ServerConfig) -> ServerHandle {
+        let (tx, rx) = channel::<Msg>();
+        let join = std::thread::spawn(move || serve_loop(model, cfg, rx));
+        ServerHandle { tx, join: Some(join) }
+    }
+
+    /// Submit a request; the response arrives on the returned receiver.
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Submit(req, tx)).expect("server gone");
+        rx
+    }
+
+    /// Graceful shutdown: drains in-flight work, returns aggregate stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Msg::Shutdown(tx));
+        let stats = rx.recv().unwrap_or_default();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        stats
+    }
+}
+
+fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
+    let tok = ByteTokenizer;
+    let mut waiting: VecDeque<(GenRequest, Sender<GenResponse>)> = VecDeque::new();
+    let mut active: Vec<(Active, Sender<GenResponse>)> = Vec::new();
+    let mut cache_pool: Vec<KvCache> = Vec::new();
+    let mut stats = ServerStats::default();
+    let mut shutting_down: Option<Sender<ServerStats>> = None;
+
+    loop {
+        // Drain the message queue (non-blocking while work exists; blocking idle).
+        loop {
+            let msg = if active.is_empty() && waiting.is_empty() && shutting_down.is_none() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Submit(req, tx) => waiting.push_back((req, tx)),
+                Msg::Shutdown(tx) => shutting_down = Some(tx),
+            }
+        }
+
+        // Admission: fill the batch while the KV budget allows.
+        let kv_bytes_per_seq = KvCache::new(&model.cfg).size_bytes();
+        while active.len() < cfg.max_batch
+            && !waiting.is_empty()
+            && (active.len() + 1) * kv_bytes_per_seq <= cfg.kv_budget_bytes
+        {
+            let (req, tx) = waiting.pop_front().unwrap();
+            let mut cache = cache_pool.pop().unwrap_or_else(|| KvCache::new(&model.cfg));
+            cache.clear();
+            // Prefill: run the prompt through the decode path.
+            let prompt_tokens = tok.encode(&req.prompt);
+            let budget = model.cfg.max_seq.saturating_sub(req.max_new_tokens + 1);
+            let prompt_tokens: Vec<u16> =
+                prompt_tokens.into_iter().take(budget.max(1)).collect();
+            let admitted_at = std::time::Instant::now();
+            let mut logits = vec![0.0];
+            for &t in &prompt_tokens {
+                logits = model.decode_step(&mut cache, t);
+            }
+            let mut rng = Rng::new(req.seed);
+            let next = Transformer::sample(&logits, req.temperature, req.top_k, &mut rng);
+            active.push((
+                Active {
+                    req,
+                    cache,
+                    generated: Vec::new(),
+                    rng,
+                    next_token: next,
+                    admitted_at,
+                    first_token_at: None,
+                },
+                tx,
+            ));
+            stats.peak_batch = stats.peak_batch.max(active.len());
+            stats.peak_kv_bytes = stats.peak_kv_bytes.max(active.len() * kv_bytes_per_seq);
+        }
+
+        if active.is_empty() {
+            if let Some(tx) = shutting_down.take() {
+                if waiting.is_empty() {
+                    let _ = tx.send(stats.clone());
+                    return;
+                }
+                shutting_down = Some(tx);
+            }
+            continue;
+        }
+
+        // One decode round: each active sequence advances one token (round-robin
+        // continuous batching — new admissions interleave between rounds).
+        let round_start = std::time::Instant::now();
+        let mut finished = Vec::new();
+        for (i, (a, _)) in active.iter_mut().enumerate() {
+            let t = a.next_token;
+            a.generated.push(t);
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(std::time::Instant::now());
+            }
+            let done = a.generated.len() >= a.req.max_new_tokens
+                || a.cache.len + 1 >= a.cache.capacity;
+            if done {
+                finished.push(i);
+                continue;
+            }
+            let logits = model.decode_step(&mut a.cache, t);
+            a.next_token =
+                Transformer::sample(&logits, a.req.temperature, a.req.top_k, &mut a.rng);
+        }
+        stats.total_decode_secs += round_start.elapsed().as_secs_f64();
+
+        // Retire finished sequences (largest index first).
+        for i in finished.into_iter().rev() {
+            let (a, tx) = active.swap_remove(i);
+            let now = std::time::Instant::now();
+            let total = (now - a.admitted_at).as_secs_f64();
+            let ttft = a
+                .first_token_at
+                .map(|t| (t - a.admitted_at).as_secs_f64())
+                .unwrap_or(total);
+            let decode_secs = (total - ttft).max(1e-9);
+            stats.completed += 1;
+            stats.total_generated_tokens += a.generated.len();
+            let resp = GenResponse {
+                id: a.req.id,
+                text: tok.decode(&a.generated),
+                tokens: a.generated.clone(),
+                prompt_tokens: a.cache.len - a.generated.len() + 1,
+                ttft,
+                total_secs: total,
+                decode_tok_per_sec: (a.generated.len() as f64 - 1.0).max(0.0) / decode_secs,
+            };
+            cache_pool.push(a.cache);
+            let _ = tx.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, WeightStore};
+
+    fn tiny_model() -> Arc<Transformer> {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 64;
+        Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 7)))
+    }
+
+    fn req(id: u64, prompt: &str, n: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: prompt.into(),
+            max_new_tokens: n,
+            temperature: 0.0,
+            top_k: 1,
+            seed: id,
+        }
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = ServerHandle::spawn(tiny_model(), ServerConfig::default());
+        let rx = server.submit(req(1, "hello", 8));
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.tokens.len(), 8);
+        assert!(resp.ttft >= 0.0 && resp.total_secs >= resp.ttft);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.total_generated_tokens, 8);
+    }
+
+    #[test]
+    fn batched_equals_sequential() {
+        // Correctness invariant of the batcher: per-request outputs must be
+        // identical to running each request alone (caches are independent).
+        let model = tiny_model();
+        let server = ServerHandle::spawn(model.clone(), ServerConfig::default());
+        let reqs: Vec<GenRequest> =
+            (0..6).map(|i| req(i, &format!("prompt {i}"), 6 + i as usize)).collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+        let batched: Vec<GenResponse> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        server.shutdown();
+
+        for (r, b) in reqs.iter().zip(&batched) {
+            let solo_server = ServerHandle::spawn(model.clone(), ServerConfig::default());
+            let solo = solo_server.submit(r.clone()).recv().unwrap();
+            solo_server.shutdown();
+            assert_eq!(solo.tokens, b.tokens, "request {} diverged under batching", r.id);
+        }
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let model = tiny_model();
+        let server = ServerHandle::spawn(
+            model,
+            ServerConfig { max_batch: 2, kv_budget_bytes: 1 << 30 },
+        );
+        let rxs: Vec<_> = (0..5).map(|i| server.submit(req(i, "x", 4))).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 5);
+        assert!(stats.peak_batch <= 2);
+    }
+
+    #[test]
+    fn kv_budget_limits_admission() {
+        let model = tiny_model();
+        let per_seq = KvCache::new(&model.cfg).size_bytes();
+        let server = ServerHandle::spawn(
+            model,
+            ServerConfig { max_batch: 8, kv_budget_bytes: per_seq * 2 },
+        );
+        let rxs: Vec<_> = (0..4).map(|i| server.submit(req(i, "y", 3))).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let stats = server.shutdown();
+        assert!(stats.peak_kv_bytes <= per_seq * 2);
+        assert_eq!(stats.completed, 4);
+    }
+
+    #[test]
+    fn deterministic_sampling_given_seed() {
+        let model = tiny_model();
+        let server = ServerHandle::spawn(model, ServerConfig::default());
+        let mk = || GenRequest {
+            id: 9,
+            prompt: "abc".into(),
+            max_new_tokens: 10,
+            temperature: 0.8,
+            top_k: 20,
+            seed: 1234,
+        };
+        let a = server.submit(mk()).recv().unwrap();
+        let b = server.submit(mk()).recv().unwrap();
+        server.shutdown();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn long_prompt_is_truncated_to_fit() {
+        let server = ServerHandle::spawn(tiny_model(), ServerConfig::default());
+        let long: String = "z".repeat(500);
+        let resp = server.submit(req(1, &long, 4)).recv().unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        server.shutdown();
+    }
+}

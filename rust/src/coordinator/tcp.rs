@@ -1,0 +1,191 @@
+//! TCP front-end for the generation server: newline-delimited JSON over a
+//! socket, one connection per client, requests multiplexed into the shared
+//! continuous batcher.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "fn main", "max_new_tokens": 32, "temperature": 0.7,
+//!       "top_k": 40, "seed": 1}
+//!   <- {"id": 0, "text": "...", "tokens": 32, "ttft_ms": 12.1,
+//!       "tok_per_sec": 154.2}
+//!
+//! Start with `qtip serve --tcp 127.0.0.1:7171` or [`TcpFrontend::spawn`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::server::{GenRequest, ServerHandle};
+use crate::util::json::Json;
+
+pub struct TcpFrontend {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpFrontend {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve until dropped.
+    pub fn spawn(server: Arc<ServerHandle>, addr: &str) -> Result<TcpFrontend> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let next_id = Arc::new(AtomicU64::new(0));
+        let join = std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let srv = server.clone();
+                        let ids = next_id.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &srv, &ids);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(TcpFrontend { addr: local, stop, join: Some(join) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn handle_conn(stream: TcpStream, server: &ServerHandle, ids: &AtomicU64) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let id = ids.fetch_add(1, Ordering::Relaxed);
+        let resp = match Json::parse(&line) {
+            Ok(j) => {
+                let req = GenRequest {
+                    id,
+                    prompt: j.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string(),
+                    max_new_tokens: j
+                        .get("max_new_tokens")
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or(32),
+                    temperature: j
+                        .get("temperature")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.7) as f32,
+                    top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
+                    seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
+                };
+                let r = server.submit(req).recv()?;
+                Json::obj(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("text", Json::Str(r.text)),
+                    ("tokens", Json::Num(r.tokens.len() as f64)),
+                    ("ttft_ms", Json::Num(r.ttft * 1e3)),
+                    ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
+                ])
+            }
+            Err(e) => Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("error", Json::Str(format!("bad request: {e}"))),
+            ]),
+        };
+        writeln!(writer, "{resp}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::model::{ModelConfig, Transformer, WeightStore};
+
+    fn tiny_server() -> Arc<ServerHandle> {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 64;
+        let model = Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 3)));
+        Arc::new(ServerHandle::spawn(model, ServerConfig::default()))
+    }
+
+    fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{line}").unwrap();
+        let mut r = BufReader::new(s);
+        let mut out = String::new();
+        r.read_line(&mut out).unwrap();
+        Json::parse(&out).unwrap()
+    }
+
+    #[test]
+    fn tcp_request_response() {
+        let server = tiny_server();
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let resp = roundtrip(
+            fe.addr,
+            r#"{"prompt": "hello", "max_new_tokens": 6, "temperature": 0, "top_k": 1}"#,
+        );
+        assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(6));
+        assert!(resp.get("text").unwrap().as_str().is_some());
+        assert!(resp.get("tok_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn tcp_bad_request_reports_error() {
+        let server = tiny_server();
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let resp = roundtrip(fe.addr, "{not json");
+        assert!(resp.get("error").is_some());
+        fe.shutdown();
+    }
+
+    #[test]
+    fn tcp_multiple_clients() {
+        let server = tiny_server();
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let addr = fe.addr;
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    roundtrip(
+                        addr,
+                        &format!(r#"{{"prompt": "p{i}", "max_new_tokens": 4, "temperature": 0}}"#),
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(4));
+        }
+        fe.shutdown();
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harness: held-out perplexity (the W2/C4 substitute) and the
+//! zeroshot-proxy task suite (the LM-Eval substitute) — see DESIGN.md §4.
+
+pub mod perplexity;
+pub mod zeroshot;
+
+pub use perplexity::{perplexity, PerplexityReport};
+pub use zeroshot::{zeroshot_suite, ZeroshotReport};

@@ -1,0 +1,103 @@
+//! Held-out perplexity, computed the OPTQ way (paper §A.3.4): the corpus is split
+//! into non-overlapping max_seq windows; loss is averaged over every next-token
+//! prediction.
+
+use crate::model::transformer::Transformer;
+use crate::util::matrix::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PerplexityReport {
+    pub nll: f64,
+    pub ppl: f64,
+    pub tokens: usize,
+    pub seconds: f64,
+}
+
+/// Log-softmax cross-entropy of row `r` of `logits` against `target`.
+fn nll_row(logits: &Matrix, r: usize, target: u16) -> f64 {
+    let row = logits.row(r);
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v)) as f64;
+    let lse = max
+        + row
+            .iter()
+            .map(|&v| ((v as f64) - max).exp())
+            .sum::<f64>()
+            .ln();
+    lse - row[target as usize] as f64
+}
+
+/// Evaluate perplexity of `model` on `data` (byte tokens), using at most
+/// `max_tokens` tokens in non-overlapping `max_seq` windows.
+pub fn perplexity(model: &Transformer, data: &[u8], max_tokens: usize) -> PerplexityReport {
+    let timer = crate::util::Timer::start();
+    let seq = model.cfg.max_seq;
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    let mut off = 0usize;
+    while off + seq + 1 <= data.len() && count < max_tokens {
+        let tokens: Vec<u16> = data[off..off + seq + 1].iter().map(|&b| b as u16).collect();
+        let logits = model.forward_batch(&tokens[..seq]);
+        for t in 0..seq {
+            nll += nll_row(&logits, t, tokens[t + 1]);
+            count += 1;
+            if count >= max_tokens {
+                break;
+            }
+        }
+        off += seq;
+    }
+    assert!(count > 0, "not enough data for even one window");
+    let mean = nll / count as f64;
+    PerplexityReport { nll: mean, ppl: mean.exp(), tokens: count, seconds: timer.secs() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Transformer, WeightStore};
+
+    fn tiny() -> Transformer {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 16;
+        Transformer::from_store(&WeightStore::random(&cfg, 9))
+    }
+
+    #[test]
+    fn random_model_near_uniform() {
+        // An untrained model should score close to -ln(1/256) per byte.
+        let model = tiny();
+        let data: Vec<u8> = (0..2000).map(|i| (i * 37 % 251) as u8).collect();
+        let rep = perplexity(&model, &data, 256);
+        assert!(rep.tokens == 256);
+        assert!((rep.nll - (256f64).ln()).abs() < 1.0, "nll {}", rep.nll);
+        assert!(rep.ppl > 50.0 && rep.ppl < 1000.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let model = tiny();
+        let data: Vec<u8> = (0..1000).map(|i| (i % 256) as u8).collect();
+        let a = perplexity(&model, &data, 128);
+        let b = perplexity(&model, &data, 128);
+        assert_eq!(a.nll, b.nll);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough data")]
+    fn too_little_data_panics() {
+        let model = tiny();
+        perplexity(&model, &[1, 2, 3], 100);
+    }
+
+    #[test]
+    fn nll_row_matches_manual() {
+        let logits = Matrix::from_vec(1, 4, vec![0.0, 1.0, 2.0, 3.0]);
+        let z: f64 = (0..4).map(|i| (i as f64 - 3.0).exp()).sum::<f64>().ln() + 3.0;
+        let expect = z - 1.0;
+        assert!((nll_row(&logits, 0, 1) - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,174 @@
+//! Zeroshot-proxy task suite — the LM-Eval substitute (DESIGN.md §4).
+//!
+//! Three deterministic tasks, scored like LM-Eval multiple choice / accuracy:
+//!
+//! * **next-byte** — top-1 next-token accuracy on held-out corpus windows
+//!   (the closest proxy to the broad-coverage zeroshot suites).
+//! * **copy** — induction: a random string is repeated; accuracy of continuing
+//!   the second occurrence. Tests the attention circuitry quantization most
+//!   easily damages.
+//! * **bracket** — multiple-choice: after a synthetic nested-bracket prefix, the
+//!   model must rank the *matching* closer above the two mismatched ones.
+
+use crate::model::transformer::Transformer;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ZeroshotReport {
+    pub next_byte_acc: f64,
+    pub copy_acc: f64,
+    pub bracket_acc: f64,
+}
+
+impl ZeroshotReport {
+    pub fn mean(&self) -> f64 {
+        (self.next_byte_acc + self.copy_acc + self.bracket_acc) / 3.0
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+/// Top-1 next-byte accuracy over `n_windows` held-out windows.
+pub fn next_byte_accuracy(model: &Transformer, data: &[u8], n_windows: usize) -> f64 {
+    let seq = model.cfg.max_seq.min(64);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut off = 0usize;
+    for _ in 0..n_windows {
+        if off + seq + 1 > data.len() {
+            break;
+        }
+        let tokens: Vec<u16> = data[off..off + seq + 1].iter().map(|&b| b as u16).collect();
+        let logits = model.forward_batch(&tokens[..seq]);
+        // Score the second half only (give the model context).
+        for t in seq / 2..seq {
+            if argmax(logits.row(t)) == tokens[t + 1] as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+        off += seq;
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// Induction-head copy task: "<s> X <s> X[..j]" → predict X[j].
+pub fn copy_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    let alphabet: Vec<u8> = (b'a'..=b'z').collect();
+    for _ in 0..n_cases {
+        let len = 8 + rng.below(8);
+        let s: Vec<u8> = (0..len).map(|_| alphabet[rng.below(26)]).collect();
+        let j = 2 + rng.below(len - 2);
+        let mut prompt: Vec<u16> = Vec::new();
+        prompt.push(b'|' as u16);
+        prompt.extend(s.iter().map(|&b| b as u16));
+        prompt.push(b'|' as u16);
+        prompt.extend(s[..j].iter().map(|&b| b as u16));
+        let logits = model.forward_batch(&prompt);
+        let pred = argmax(logits.row(prompt.len() - 1));
+        if pred == s[j] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_cases as f64
+}
+
+/// Multiple-choice bracket matching: rank the correct closer above distractors.
+pub fn bracket_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let pairs = [(b'(', b')'), (b'[', b']'), (b'{', b'}')];
+    let mut correct = 0usize;
+    for _ in 0..n_cases {
+        // Build a nested prefix and track the open stack.
+        let depth = 2 + rng.below(4);
+        let mut prompt: Vec<u16> = Vec::new();
+        let mut stack = Vec::new();
+        for _ in 0..depth {
+            let p = pairs[rng.below(3)];
+            prompt.push(p.0 as u16);
+            stack.push(p.1);
+            // Occasionally add filler content.
+            if rng.below(2) == 0 {
+                prompt.push(b'x' as u16);
+            }
+        }
+        // Close one level so the pattern "open...close" is visible, then ask.
+        let expected = *stack.last().unwrap();
+        let logits = model.forward_batch(&prompt);
+        let row = logits.row(prompt.len() - 1);
+        let scores: Vec<f32> = pairs.iter().map(|p| row[p.1 as usize]).collect();
+        let choice = pairs[argmax(&scores)].1;
+        if choice == expected {
+            correct += 1;
+        }
+    }
+    correct as f64 / n_cases as f64
+}
+
+/// Run the whole suite.
+pub fn zeroshot_suite(
+    model: &Transformer,
+    holdout: &[u8],
+    n_cases: usize,
+    seed: u64,
+) -> ZeroshotReport {
+    ZeroshotReport {
+        next_byte_acc: next_byte_accuracy(model, holdout, n_cases),
+        copy_acc: copy_accuracy(model, n_cases, seed),
+        bracket_acc: bracket_accuracy(model, n_cases, seed ^ 0xB0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Transformer, WeightStore};
+
+    fn tiny() -> Transformer {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 64;
+        Transformer::from_store(&WeightStore::random(&cfg, 21))
+    }
+
+    #[test]
+    fn suite_runs_and_bounds() {
+        let model = tiny();
+        let holdout: Vec<u8> = (0..4096).map(|i| (i * 31 % 251) as u8).collect();
+        let rep = zeroshot_suite(&model, &holdout, 8, 1);
+        for acc in [rep.next_byte_acc, rep.copy_acc, rep.bracket_acc] {
+            assert!((0.0..=1.0).contains(&acc));
+        }
+        assert!((0.0..=1.0).contains(&rep.mean()));
+    }
+
+    #[test]
+    fn random_model_bracket_near_chance() {
+        // 3-way multiple choice: untrained model ≈ 1/3.
+        let model = tiny();
+        let acc = bracket_accuracy(&model, 60, 7);
+        assert!(acc < 0.75, "untrained should not ace bracket matching: {acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let model = tiny();
+        let a = copy_accuracy(&model, 10, 3);
+        let b = copy_accuracy(&model, 10, 3);
+        assert_eq!(a, b);
+    }
+}

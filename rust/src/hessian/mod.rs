@@ -1,0 +1,315 @@
+//! Proxy-Hessian generation (paper §2, §A.3.2): `H = E_x[x xᵀ]` accumulated from
+//! calibration activations, one Hessian per linear-layer *input* site.
+//!
+//! The paper calibrates on RedPajama sequences; we calibrate on the offline source
+//! corpus (DESIGN.md §4). Activations are captured by running the dense model's
+//! batch forward and hooking the inputs of each linear layer.
+
+use std::collections::BTreeMap;
+
+use crate::model::transformer::{rmsnorm_row, rope_rotate, softmax_inplace, Transformer};
+use crate::model::ModelConfig;
+use crate::util::matrix::Matrix;
+
+/// Accumulates `Σ x xᵀ` and a sample count for one layer input site.
+#[derive(Clone, Debug)]
+pub struct HessianAccumulator {
+    pub sum: Matrix,
+    pub count: usize,
+}
+
+impl HessianAccumulator {
+    pub fn new(dim: usize) -> Self {
+        HessianAccumulator { sum: Matrix::zeros(dim, dim), count: 0 }
+    }
+
+    /// Rank-1 update with one activation vector.
+    pub fn update(&mut self, x: &[f32]) {
+        let n = self.sum.rows;
+        assert_eq!(x.len(), n);
+        for i in 0..n {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &mut self.sum.data[i * n..(i + 1) * n];
+            for (r, &xj) in row.iter_mut().zip(x) {
+                *r += xi * xj;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Batched update: each row of `xs` is one activation.
+    pub fn update_batch(&mut self, xs: &Matrix) {
+        assert_eq!(xs.cols, self.sum.rows);
+        // H += Xᵀ X via gemm (much faster than per-row rank-1 updates).
+        let xt = xs.transpose();
+        crate::util::matrix::gemm(&xt, xs, &mut self.sum);
+        self.count += xs.rows;
+    }
+
+    /// The mean-normalized Hessian `E[x xᵀ]`.
+    pub fn finalize(&self) -> Matrix {
+        let mut h = self.sum.clone();
+        if self.count > 0 {
+            h.scale(1.0 / self.count as f32);
+        }
+        h
+    }
+}
+
+/// The input sites that share a Hessian. In a pre-norm block, q/k/v share their
+/// input, and gate/up share theirs; o and down have their own.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Site {
+    Qkv(usize),
+    AttnOut(usize),
+    GateUp(usize),
+    MlpDown(usize),
+}
+
+impl Site {
+    pub fn dim(&self, cfg: &ModelConfig) -> usize {
+        match self {
+            Site::Qkv(_) | Site::AttnOut(_) | Site::GateUp(_) => cfg.d_model,
+            Site::MlpDown(_) => cfg.d_ff,
+        }
+    }
+
+    /// Which linear layer names consume this site's Hessian.
+    pub fn layer_names(&self) -> Vec<String> {
+        match self {
+            Site::Qkv(i) => vec![format!("l{i}.q"), format!("l{i}.k"), format!("l{i}.v")],
+            Site::AttnOut(i) => vec![format!("l{i}.o")],
+            Site::GateUp(i) => vec![format!("l{i}.gate"), format!("l{i}.up")],
+            Site::MlpDown(i) => vec![format!("l{i}.down")],
+        }
+    }
+}
+
+/// Collected Hessians for every linear layer of a model.
+pub struct HessianSet {
+    pub by_layer: BTreeMap<String, Matrix>,
+}
+
+/// Run the dense model over calibration sequences and accumulate per-site
+/// Hessians. This duplicates the forward-pass structure of
+/// `Transformer::forward_batch` with activation taps (kept in sync by the
+/// `hessians_match_forward` test).
+pub fn collect_hessians(model: &Transformer, sequences: &[Vec<u16>]) -> HessianSet {
+    let cfg = &model.cfg;
+    let mut accs: BTreeMap<String, HessianAccumulator> = BTreeMap::new();
+    for i in 0..cfg.n_layers {
+        for site in [Site::Qkv(i), Site::AttnOut(i), Site::GateUp(i), Site::MlpDown(i)] {
+            accs.insert(format!("{site:?}"), HessianAccumulator::new(site.dim(cfg)));
+        }
+    }
+
+    for tokens in sequences {
+        let taps = forward_with_taps(model, tokens);
+        for (i, tap) in taps.into_iter().enumerate() {
+            accs.get_mut(&format!("{:?}", Site::Qkv(i)))
+                .unwrap()
+                .update_batch(&tap.attn_in);
+            accs.get_mut(&format!("{:?}", Site::AttnOut(i)))
+                .unwrap()
+                .update_batch(&tap.attn_mid);
+            accs.get_mut(&format!("{:?}", Site::GateUp(i)))
+                .unwrap()
+                .update_batch(&tap.mlp_in);
+            accs.get_mut(&format!("{:?}", Site::MlpDown(i)))
+                .unwrap()
+                .update_batch(&tap.mlp_mid);
+        }
+    }
+
+    let mut by_layer = BTreeMap::new();
+    for i in 0..cfg.n_layers {
+        for site in [Site::Qkv(i), Site::AttnOut(i), Site::GateUp(i), Site::MlpDown(i)] {
+            let h = accs[&format!("{site:?}")].finalize();
+            for name in site.layer_names() {
+                by_layer.insert(name, h.clone());
+            }
+        }
+    }
+    HessianSet { by_layer }
+}
+
+/// Per-layer activation taps from one forward pass.
+struct LayerTaps {
+    /// Input to q/k/v (post attn_norm).
+    attn_in: Matrix,
+    /// Input to o (attention mix output).
+    attn_mid: Matrix,
+    /// Input to gate/up (post mlp_norm).
+    mlp_in: Matrix,
+    /// Input to down (activated hidden).
+    mlp_mid: Matrix,
+}
+
+fn forward_with_taps(model: &Transformer, tokens: &[u16]) -> Vec<LayerTaps> {
+    // Mirror of Transformer::forward_batch with taps; see that function for the
+    // canonical semantics (the parity test enforces agreement).
+    use crate::util::matrix::dot;
+    let cfg = &model.cfg;
+    let t_len = tokens.len();
+    let d = cfg.d_model;
+    let h = cfg.n_heads;
+    let dh = cfg.head_dim();
+    let mut taps = Vec::new();
+
+    let mut x = Matrix::zeros(t_len, d);
+    for (t, &tok) in tokens.iter().enumerate() {
+        x.row_mut(t).copy_from_slice(model.tok_emb.row(tok as usize));
+    }
+
+    for layer in &model.layers {
+        let mut xn = x.clone();
+        for r in 0..t_len {
+            rmsnorm_row(xn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
+        }
+        let attn_in = xn.clone();
+        let mut q = layer.attn.q.forward_batch(&xn);
+        let mut k = layer.attn.k.forward_batch(&xn);
+        let v = layer.attn.v.forward_batch(&xn);
+        for t in 0..t_len {
+            for head in 0..h {
+                rope_rotate(&mut q.row_mut(t)[head * dh..(head + 1) * dh], t, cfg.rope_theta);
+                rope_rotate(&mut k.row_mut(t)[head * dh..(head + 1) * dh], t, cfg.rope_theta);
+            }
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut attn_out = Matrix::zeros(t_len, d);
+        let mut scores = vec![0.0f32; t_len];
+        for head in 0..h {
+            let hs = head * dh;
+            for tq in 0..t_len {
+                for tk in 0..=tq {
+                    scores[tk] = dot(&q.row(tq)[hs..hs + dh], &k.row(tk)[hs..hs + dh]) * scale;
+                }
+                softmax_inplace(&mut scores[..=tq]);
+                let out = &mut attn_out.row_mut(tq)[hs..hs + dh];
+                for tk in 0..=tq {
+                    let w = scores[tk];
+                    let vrow = &v.row(tk)[hs..hs + dh];
+                    for i in 0..dh {
+                        out[i] += w * vrow[i];
+                    }
+                }
+            }
+        }
+        let attn_mid = attn_out.clone();
+        let proj = layer.attn.o.forward_batch(&attn_out);
+        x.axpy(1.0, &proj);
+
+        let mut xn = x.clone();
+        for r in 0..t_len {
+            rmsnorm_row(xn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
+        }
+        let mlp_in = xn.clone();
+        let gate = layer.mlp.gate.forward_batch(&xn);
+        let up = layer.mlp.up.forward_batch(&xn);
+        let mut act = gate;
+        for (a, &u) in act.data.iter_mut().zip(&up.data) {
+            let g = *a;
+            *a = g / (1.0 + (-g).exp()) * u;
+        }
+        let mlp_mid = act.clone();
+        let down = layer.mlp.down.forward_batch(&act);
+        x.axpy(1.0, &down);
+
+        taps.push(LayerTaps { attn_in, attn_mid, mlp_in, mlp_mid });
+    }
+    taps
+}
+
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, Transformer, WeightStore};
+    use crate::util::rng::Rng;
+
+    fn tiny() -> Transformer {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 2;
+        cfg.max_seq = 16;
+        Transformer::from_store(&WeightStore::random(&cfg, 3))
+    }
+
+    #[test]
+    fn accumulator_rank1() {
+        let mut acc = HessianAccumulator::new(3);
+        acc.update(&[1.0, 2.0, 0.0]);
+        acc.update(&[0.0, 1.0, -1.0]);
+        let h = acc.finalize();
+        // E[xxT] over two samples.
+        assert!((h.at(0, 0) - 0.5).abs() < 1e-6);
+        assert!((h.at(1, 1) - 2.5).abs() < 1e-6);
+        assert!((h.at(1, 2) + 0.5).abs() < 1e-6);
+        assert_eq!(h.at(0, 2), 0.0);
+    }
+
+    #[test]
+    fn batch_matches_rank1() {
+        let mut rng = Rng::new(1);
+        let xs = Matrix::gaussian(10, 8, 1.0, &mut rng);
+        let mut a = HessianAccumulator::new(8);
+        let mut b = HessianAccumulator::new(8);
+        for r in 0..10 {
+            a.update(xs.row(r));
+        }
+        b.update_batch(&xs);
+        let (ha, hb) = (a.finalize(), b.finalize());
+        for (x, y) in ha.data.iter().zip(&hb.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn hessians_are_symmetric_psd_ish() {
+        let model = tiny();
+        let seqs: Vec<Vec<u16>> = vec![vec![1, 2, 3, 4, 5, 6, 7, 8], vec![100, 90, 80, 70]];
+        let hs = collect_hessians(&model, &seqs);
+        assert_eq!(hs.by_layer.len(), 2 * 7);
+        for (name, h) in &hs.by_layer {
+            assert_eq!(h.rows, h.cols);
+            for i in 0..h.rows {
+                assert!(h.at(i, i) >= -1e-6, "{name}: negative diagonal");
+                for j in 0..i {
+                    assert!(
+                        (h.at(i, j) - h.at(j, i)).abs() < 1e-3,
+                        "{name}: asymmetric"
+                    );
+                }
+            }
+            // Regularized Hessian must be Choleskyable.
+            let reg = crate::util::linalg::regularize_spd(h, 1e-2);
+            assert!(crate::util::linalg::cholesky(&reg).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn qkv_share_hessian() {
+        let model = tiny();
+        let seqs = vec![vec![5u16, 6, 7, 8, 9, 10]];
+        let hs = collect_hessians(&model, &seqs);
+        assert_eq!(hs.by_layer["l0.q"].data, hs.by_layer["l0.k"].data);
+        assert_eq!(hs.by_layer["l0.q"].data, hs.by_layer["l0.v"].data);
+        assert_ne!(hs.by_layer["l0.q"].data, hs.by_layer["l0.o"].data);
+    }
+
+    #[test]
+    fn hessian_dims_match_layer_inputs() {
+        let model = tiny();
+        let seqs = vec![vec![1u16, 2, 3, 4]];
+        let hs = collect_hessians(&model, &seqs);
+        assert_eq!(hs.by_layer["l0.q"].rows, 32);
+        assert_eq!(hs.by_layer["l0.down"].rows, 64);
+    }
+}

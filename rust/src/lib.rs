@@ -1,0 +1,15 @@
+//! # QTIP: Quantization with Trellises and Incoherence Processing
+//!
+//! (full crate docs land with the remaining modules)
+pub mod util;
+pub mod trellis;
+pub mod codes;
+pub mod baselines;
+pub mod quant;
+pub mod model;
+pub mod hessian;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod cli;

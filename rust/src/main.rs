@@ -1,0 +1,277 @@
+//! `qtip` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         environment + artifact status
+//!   quantize --model nano --k 2  quantize a model, report per-layer metrics
+//!   eval     --model nano --k 2  perplexity + zeroshot before/after quantization
+//!   serve    --model nano        quantize then serve demo requests (batched);
+//!                                add --tcp 127.0.0.1:7171 for the network front-end
+//!   generate --prompt "..."      one-shot generation from a quantized model
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use qtip::cli::Args;
+use qtip::coordinator::{quantize_model_qtip, GenRequest, ServerConfig, ServerHandle};
+use qtip::eval::{perplexity, zeroshot_suite};
+use qtip::hessian::collect_hessians;
+use qtip::model::{load_corpus, split_corpus, ModelConfig, Transformer, WeightStore};
+use qtip::quant::QtipConfig;
+use qtip::util::threadpool::default_workers;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("QTIP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn load_model(name: &str) -> Result<Transformer> {
+    let dir = artifacts_dir();
+    match WeightStore::load(&dir, name) {
+        Ok(ws) => {
+            eprintln!("[qtip] loaded trained '{name}' from {dir:?}");
+            Ok(Transformer::from_store(&ws))
+        }
+        Err(e) => {
+            eprintln!("[qtip] no trained weights for '{name}' ({e}); using random init");
+            let cfg = ModelConfig::by_name(name);
+            Ok(Transformer::from_store(&WeightStore::random(&cfg, 0x5EED)))
+        }
+    }
+}
+
+fn calibration_sequences(model: &Transformer, n: usize) -> Vec<Vec<u16>> {
+    let dir = artifacts_dir();
+    let holdout = dir.join("corpus_holdout.bin");
+    let corpus = if holdout.exists() {
+        std::fs::read(&holdout).unwrap()
+    } else {
+        load_corpus(&[Path::new(env!("CARGO_MANIFEST_DIR"))], 1 << 20)
+    };
+    let (train, _) = split_corpus(&corpus, 0.5);
+    let seq = model.cfg.max_seq.min(128);
+    train
+        .chunks(seq)
+        .take(n)
+        .map(|c| c.iter().map(|&b| b as u16).collect())
+        .collect()
+}
+
+fn qtip_cfg_from_args(args: &Args) -> QtipConfig {
+    QtipConfig {
+        l: args.get_u32("l", 12),
+        k: args.get_u32("k", 2),
+        v: args.get_u32("v", 1),
+        tx: args.get_usize("tx", 16),
+        ty: args.get_usize("ty", 16),
+        code: args.get_or("code", "3inst").to_string(),
+        seed: args.get_u64("seed", 0x5171_50),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("qtip — Quantization with Trellises and Incoherence Processing");
+    println!("artifacts dir: {:?}", artifacts_dir());
+    for name in ["micro", "nano", "small"] {
+        let ok = artifacts_dir().join(format!("model_{name}.json")).exists();
+        println!(
+            "  model_{name}: {}",
+            if ok { "trained weights present" } else { "absent (random init fallback)" }
+        );
+    }
+    match qtip::runtime::Registry::open(&artifacts_dir()) {
+        Ok(reg) => {
+            println!("  AOT artifacts: {}", reg.artifacts.len());
+            for a in &reg.artifacts {
+                println!("    - {} ({})", a.name, a.kind);
+            }
+            let rt = qtip::runtime::PjrtRuntime::cpu()?;
+            println!("  PJRT platform: {}", rt.platform());
+        }
+        Err(e) => println!("  AOT artifacts: unavailable ({e})"),
+    }
+    println!("  workers: {}", default_workers());
+    Ok(())
+}
+
+fn quantize_inner(args: &Args) -> Result<(Transformer, qtip::coordinator::QuantizeReport)> {
+    let model_name = args.get_or("model", "nano");
+    let mut model = load_model(model_name)?;
+    let n_calib = args.get_usize("calib-seqs", 24);
+    eprintln!("[qtip] calibrating Hessians on {n_calib} sequences...");
+    let seqs = calibration_sequences(&model, n_calib);
+    let hessians = collect_hessians(&model, &seqs);
+    let cfg = qtip_cfg_from_args(args);
+    eprintln!(
+        "[qtip] quantizing with code={} L={} k={} V={} T={}x{}",
+        cfg.code, cfg.l, cfg.k, cfg.v, cfg.tx, cfg.ty
+    );
+    let report = quantize_model_qtip(&mut model, &hessians, &cfg, default_workers(), |layer| {
+        eprintln!(
+            "  {}: {}x{} proxy {:.5} mse {:.5} ({:.1}s)",
+            layer.name,
+            layer.rows,
+            layer.cols,
+            layer.metrics.relative_proxy,
+            layer.metrics.mse,
+            layer.metrics.seconds
+        );
+    });
+    Ok((model, report))
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let (_, report) = quantize_inner(args)?;
+    println!(
+        "quantized {} layers in {:.1}s: {} -> {} bytes ({:.2}x), mean rel. proxy {:.5}",
+        report.layers.len(),
+        report.seconds,
+        report.bytes_before,
+        report.bytes_after,
+        report.compression_ratio(),
+        report.mean_relative_proxy()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "nano");
+    let max_tokens = args.get_usize("tokens", 2048);
+    let holdout = std::fs::read(artifacts_dir().join("corpus_holdout.bin"))
+        .context("corpus_holdout.bin (run `make artifacts`)")?;
+
+    let dense = load_model(model_name)?;
+    let rep = perplexity(&dense, &holdout, max_tokens);
+    let zs = zeroshot_suite(&dense, &holdout, 24, 7);
+    println!(
+        "fp32      : ppl {:.3} (nll {:.4}, {} tok) | next-byte {:.3} copy {:.3} bracket {:.3}",
+        rep.ppl, rep.nll, rep.tokens, zs.next_byte_acc, zs.copy_acc, zs.bracket_acc
+    );
+
+    let (mut qmodel, report) = quantize_inner(args)?;
+    qmodel.ensure_caches();
+    let qrep = perplexity(&qmodel, &holdout, max_tokens);
+    let qzs = zeroshot_suite(&qmodel, &holdout, 24, 7);
+    println!(
+        "qtip-{}bit : ppl {:.3} (nll {:.4}) | next-byte {:.3} copy {:.3} bracket {:.3} | {:.2}x smaller",
+        args.get_u32("k", 2),
+        qrep.ppl,
+        qrep.nll,
+        qzs.next_byte_acc,
+        qzs.copy_acc,
+        qzs.bracket_acc,
+        report.compression_ratio(),
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut model = if args.has_flag("fp32") {
+        load_model(args.get_or("model", "nano"))?
+    } else {
+        quantize_inner(args)?.0
+    };
+    model.ensure_caches();
+    let server = ServerHandle::spawn(Arc::new(model), ServerConfig::default());
+    let req = GenRequest {
+        id: 0,
+        prompt: args.get_or("prompt", "fn main() {").to_string(),
+        max_new_tokens: args.get_usize("max-new", 128),
+        temperature: args.get_f32("temp", 0.7),
+        top_k: args.get_usize("top-k", 40),
+        seed: args.get_u64("seed", 1),
+    };
+    let resp = server.submit(req).recv()?;
+    println!("--- generation ({:.1} tok/s) ---", resp.decode_tok_per_sec);
+    println!("{}", resp.text);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (mut model, report) = quantize_inner(args)?;
+    model.ensure_caches();
+    // Network mode: expose the batcher over newline-JSON TCP and block.
+    if let Some(addr) = args.get("tcp") {
+        println!(
+            "serving quantized model ({:.2}x compression) over TCP...",
+            report.compression_ratio()
+        );
+        let server = std::sync::Arc::new(ServerHandle::spawn(
+            Arc::new(model),
+            ServerConfig {
+                max_batch: args.get_usize("max-batch", 4),
+                kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
+            },
+        ));
+        let fe = qtip::coordinator::TcpFrontend::spawn(server, addr)?;
+        println!("listening on {} (Ctrl-C to stop)", fe.addr);
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let n = args.get_usize("requests", 6);
+    println!(
+        "serving quantized model ({:.2}x compression); submitting {n} demo requests",
+        report.compression_ratio(),
+    );
+    let server = ServerHandle::spawn(
+        Arc::new(model),
+        ServerConfig {
+            max_batch: args.get_usize("max-batch", 4),
+            kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
+        },
+    );
+    let prompts = ["fn main", "pub struct", "import ", "## ", "let mut ", "def "];
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(GenRequest {
+                id: i as u64,
+                prompt: prompts[i % prompts.len()].to_string(),
+                max_new_tokens: args.get_usize("max-new", 48),
+                temperature: 0.7,
+                top_k: 40,
+                seed: i as u64,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv()?;
+        println!(
+            "[req {}] ttft {:.1} ms, {:.1} tok/s: {:?}",
+            r.id,
+            r.ttft * 1e3,
+            r.decode_tok_per_sec,
+            r.text.chars().take(40).collect::<String>()
+        );
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {})",
+        stats.completed,
+        stats.total_generated_tokens,
+        stats.throughput_tok_per_sec(),
+        stats.peak_batch
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "info".to_string() } else { argv.remove(0) };
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            eprintln!(
+                "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> [--model nano] [--k 2] [--l 12] [--code 3inst] ..."
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Transformer configuration. Dimensions are chosen to be Hadamard-transformable
+//! (powers of two, or 12/20·2^a) and divisible by the 16×16 QTIP tile, so every
+//! linear layer is quantizable without padding.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Byte-level vocab (256) — keeps the tokenizer trivial and offline.
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub rms_eps: f32,
+    /// Human-readable preset name.
+    pub name: String,
+}
+
+impl ModelConfig {
+    /// ~0.8M parameters: trained to convergence at build time (`make artifacts`).
+    pub fn nano() -> Self {
+        ModelConfig {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            rms_eps: 1e-5,
+            name: "nano".into(),
+        }
+    }
+
+    /// ~6.3M parameters: the primary evaluation model (briefly trained).
+    pub fn small() -> Self {
+        ModelConfig {
+            vocab: 256,
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 8,
+            d_ff: 1024,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            rms_eps: 1e-5,
+            name: "small".into(),
+        }
+    }
+
+    /// ~33M parameters: random weights, throughput experiments only (Table 4).
+    pub fn medium() -> Self {
+        ModelConfig {
+            vocab: 256,
+            d_model: 512,
+            n_layers: 8,
+            n_heads: 8,
+            d_ff: 2048,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+            rms_eps: 1e-5,
+            name: "medium".into(),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Self {
+        match name {
+            "nano" => Self::nano(),
+            "small" => Self::small(),
+            "medium" => Self::medium(),
+            other => panic!("unknown model preset '{other}'"),
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameters in the decoder weights (the quantizable part).
+    pub fn decoder_params(&self) -> usize {
+        // attn: q,k,v,o (d×d each); mlp: gate,up (d_ff×d), down (d×d_ff).
+        self.n_layers * (4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff)
+    }
+
+    /// Total parameters including embedding + head + norms.
+    pub fn total_params(&self) -> usize {
+        self.decoder_params()
+            + 2 * self.vocab * self.d_model
+            + (2 * self.n_layers + 1) * self.d_model
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("max_seq", Json::Num(self.max_seq as f64)),
+            ("rope_theta", Json::Num(self.rope_theta as f64)),
+            ("rms_eps", Json::Num(self.rms_eps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        ModelConfig {
+            vocab: j.req_usize("vocab"),
+            d_model: j.req_usize("d_model"),
+            n_layers: j.req_usize("n_layers"),
+            n_heads: j.req_usize("n_heads"),
+            d_ff: j.req_usize("d_ff"),
+            max_seq: j.req_usize("max_seq"),
+            rope_theta: j.get("rope_theta").and_then(|v| v.as_f64()).unwrap_or(10_000.0)
+                as f32,
+            rms_eps: j.get("rms_eps").and_then(|v| v.as_f64()).unwrap_or(1e-5) as f32,
+            name: j.req_str("name").to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_quantizable() {
+        for cfg in [ModelConfig::nano(), ModelConfig::small(), ModelConfig::medium()] {
+            assert_eq!(cfg.d_model % 16, 0);
+            assert_eq!(cfg.d_ff % 16, 0);
+            assert_eq!(cfg.d_model % cfg.n_heads, 0);
+            assert!(crate::util::hadamard::supported(cfg.d_model));
+            assert!(crate::util::hadamard::supported(cfg.d_ff));
+        }
+    }
+
+    #[test]
+    fn param_counts() {
+        let nano = ModelConfig::nano();
+        assert!((500_000..700_000).contains(&nano.total_params()), "{}", nano.total_params());
+        let small = ModelConfig::small();
+        assert!((6_000_000..7_000_000).contains(&small.total_params()));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ModelConfig::small();
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert_eq!(cfg, back);
+    }
+}

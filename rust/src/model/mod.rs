@@ -1,0 +1,13 @@
+//! The LLM substrate QTIP quantizes and serves: config presets, byte tokenizer +
+//! offline corpus, weight I/O (shared format with `python/compile/train.py`), and a
+//! Llama-style decoder with dense/quantized linear layers.
+
+pub mod config;
+pub mod tokenizer;
+pub mod transformer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use tokenizer::{load_corpus, split_corpus, ByteTokenizer};
+pub use transformer::{KvCache, Linear, Transformer};
+pub use weights::WeightStore;

@@ -1,0 +1,107 @@
+//! Byte-level tokenizer and offline corpus loading.
+//!
+//! The training/eval corpus is the repository's own source text (plus any
+//! directories the user points at) — real data that is always available offline.
+//! DESIGN.md §4 documents this as the substitute for Wikitext2/C4/RedPajama.
+
+use std::path::Path;
+
+/// Trivial byte-level tokenizer: token id == byte value (vocab 256).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u16> {
+        text.as_bytes().iter().map(|&b| b as u16).collect()
+    }
+
+    pub fn decode(&self, tokens: &[u16]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// Recursively gather text from source files under `roots`, filtered by extension.
+pub fn load_corpus(roots: &[&Path], max_bytes: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    let exts = ["rs", "py", "md", "toml", "txt"];
+    let mut stack: Vec<std::path::PathBuf> = roots.iter().map(|p| p.to_path_buf()).collect();
+    // Deterministic traversal order.
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = match std::fs::read_dir(&dir) {
+            Ok(rd) => rd.flatten().map(|e| e.path()).collect(),
+            Err(_) => continue,
+        };
+        entries.sort();
+        for p in entries {
+            if out.len() >= max_bytes {
+                return out;
+            }
+            if p.is_dir() {
+                let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if name != "target" && name != ".git" && name != "artifacts" {
+                    stack.push(p);
+                }
+            } else if p
+                .extension()
+                .and_then(|e| e.to_str())
+                .map(|e| exts.contains(&e))
+                .unwrap_or(false)
+            {
+                if let Ok(bytes) = std::fs::read(&p) {
+                    out.extend_from_slice(&bytes);
+                    out.push(b'\n');
+                }
+            }
+        }
+    }
+    out.truncate(max_bytes);
+    out
+}
+
+/// Deterministic train/held-out split: the final `holdout_frac` of the corpus is
+/// reserved for evaluation (the same convention `python/compile/train.py` uses).
+pub fn split_corpus(corpus: &[u8], holdout_frac: f64) -> (&[u8], &[u8]) {
+    let cut = ((corpus.len() as f64) * (1.0 - holdout_frac)) as usize;
+    corpus.split_at(cut)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = ByteTokenizer;
+        let s = "hello QTIP! 123\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn encode_is_bytes() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode("AB"), vec![65, 66]);
+    }
+
+    #[test]
+    fn corpus_loads_this_repo() {
+        let corpus = load_corpus(&[Path::new(env!("CARGO_MANIFEST_DIR"))], 1 << 16);
+        assert!(corpus.len() > 10_000, "repo source should provide text");
+        // Should contain recognizable Rust source.
+        let text = String::from_utf8_lossy(&corpus);
+        assert!(text.contains("fn "));
+    }
+
+    #[test]
+    fn split_is_disjoint_cover() {
+        let data: Vec<u8> = (0..=255).collect();
+        let (train, hold) = split_corpus(&data, 0.25);
+        assert_eq!(train.len(), 192);
+        assert_eq!(hold.len(), 64);
+        assert_eq!([train, hold].concat(), data);
+    }
+}

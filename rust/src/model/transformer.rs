@@ -1,0 +1,535 @@
+//! The transformer substrate: a Llama-style decoder (RMSNorm, RoPE attention,
+//! SwiGLU MLP) with two execution paths per linear layer:
+//!
+//! * **batch** (`forward_batch`) — full-sequence GEMMs for perplexity evaluation
+//!   and Hessian calibration; quantized layers use a dense reconstruction cache
+//!   (decode once, GEMM many).
+//! * **step** (`decode_step`) — single-token matvec with a KV cache: the serving
+//!   hot path, where quantized layers run the fused trellis-decode matvec
+//!   (Table 4's regime: batch-1 autoregressive decoding is memory-bound, so the
+//!   compressed stream beats fp32 on bandwidth).
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::WeightStore;
+use crate::quant::QuantizedMatrix;
+use crate::util::matrix::{gemm, Matrix};
+use crate::util::rng::Rng;
+
+/// A linear layer: dense or QTIP-quantized.
+pub enum Linear {
+    Dense(Matrix),
+    Quantized {
+        qm: QuantizedMatrix,
+        /// Dense reconstruction for batch paths (built on demand).
+        cache: Option<Matrix>,
+    },
+}
+
+impl Linear {
+    pub fn rows(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.rows,
+            Linear::Quantized { qm, .. } => qm.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.cols,
+            Linear::Quantized { qm, .. } => qm.cols,
+        }
+    }
+
+    /// Bytes this layer needs at inference.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.data.len() * 4,
+            Linear::Quantized { qm, .. } => qm.size_bytes(),
+        }
+    }
+
+    /// Build the dense reconstruction cache for quantized layers.
+    pub fn ensure_cache(&mut self) {
+        if let Linear::Quantized { qm, cache } = self {
+            if cache.is_none() {
+                *cache = Some(qm.reconstruct_w());
+            }
+        }
+    }
+
+    pub fn drop_cache(&mut self) {
+        if let Linear::Quantized { cache, .. } = self {
+            *cache = None;
+        }
+    }
+
+    /// y = W x (single vector; fused decode for quantized layers).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            Linear::Dense(w) => w.matvec(x),
+            Linear::Quantized { qm, .. } => qm.matvec(x),
+        }
+    }
+
+    /// Y = X Wᵀ for a T×in batch (dense path; quantized layers need the cache).
+    pub fn forward_batch(&self, x: &Matrix) -> Matrix {
+        let w = match self {
+            Linear::Dense(w) => w,
+            Linear::Quantized { cache, .. } => cache
+                .as_ref()
+                .expect("call ensure_cache() before batch forward on quantized layers"),
+        };
+        let mut out = Matrix::zeros(x.rows, w.rows);
+        let wt = w.transpose();
+        gemm(x, &wt, &mut out);
+        out
+    }
+}
+
+pub struct Attention {
+    pub q: Linear,
+    pub k: Linear,
+    pub v: Linear,
+    pub o: Linear,
+}
+
+pub struct Mlp {
+    pub gate: Linear,
+    pub up: Linear,
+    pub down: Linear,
+}
+
+pub struct Layer {
+    pub attn_norm: Vec<f32>,
+    pub attn: Attention,
+    pub mlp_norm: Vec<f32>,
+    pub mlp: Mlp,
+}
+
+/// Per-sequence KV cache.
+pub struct KvCache {
+    /// Per layer: (keys, values), each `max_seq × d_model` with `len` rows valid.
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        KvCache {
+            k: (0..cfg.n_layers)
+                .map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model))
+                .collect(),
+            v: (0..cfg.n_layers)
+                .map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model))
+                .collect(),
+            len: 0,
+            capacity: cfg.max_seq,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes held (for the server's cache manager accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|m| m.data.len() * 4)
+            .sum()
+    }
+}
+
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub tok_emb: Matrix,
+    pub layers: Vec<Layer>,
+    pub out_norm: Vec<f32>,
+    pub head: Linear,
+}
+
+pub(crate) fn rmsnorm_row(x: &mut [f32], gain: &[f32], eps: f32) {
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + eps as f64).sqrt() as f32;
+    for (v, &g) in x.iter_mut().zip(gain) {
+        *v *= inv * g;
+    }
+}
+
+/// RoPE rotation of one head-dim vector at `pos` (pairs (2i, 2i+1)).
+pub(crate) fn rope_rotate(x: &mut [f32], pos: usize, theta: f32) {
+    let dh = x.len();
+    let mut i = 0;
+    while i + 1 < dh {
+        let freq = theta.powf(-(i as f32) / dh as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let (a, b) = (x[i], x[i + 1]);
+        x[i] = a * cos - b * sin;
+        x[i + 1] = a * sin + b * cos;
+        i += 2;
+    }
+}
+
+pub(crate) fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+impl Transformer {
+    /// Assemble a dense model from a weight store.
+    pub fn from_store(ws: &WeightStore) -> Transformer {
+        let cfg = ws.config.clone();
+        let layers = (0..cfg.n_layers)
+            .map(|i| Layer {
+                attn_norm: ws.get(&format!("l{i}.attn_norm")).data.clone(),
+                attn: Attention {
+                    q: Linear::Dense(ws.get(&format!("l{i}.q")).clone()),
+                    k: Linear::Dense(ws.get(&format!("l{i}.k")).clone()),
+                    v: Linear::Dense(ws.get(&format!("l{i}.v")).clone()),
+                    o: Linear::Dense(ws.get(&format!("l{i}.o")).clone()),
+                },
+                mlp_norm: ws.get(&format!("l{i}.mlp_norm")).data.clone(),
+                mlp: Mlp {
+                    gate: Linear::Dense(ws.get(&format!("l{i}.gate")).clone()),
+                    up: Linear::Dense(ws.get(&format!("l{i}.up")).clone()),
+                    down: Linear::Dense(ws.get(&format!("l{i}.down")).clone()),
+                },
+            })
+            .collect();
+        Transformer {
+            cfg: cfg.clone(),
+            tok_emb: ws.get("tok_emb").clone(),
+            layers,
+            out_norm: ws.get("out_norm").data.clone(),
+            head: Linear::Dense(ws.get("head").clone()),
+        }
+    }
+
+    /// Iterate all quantizable linear layers with canonical names.
+    pub fn linears_mut(&mut self) -> Vec<(String, &mut Linear)> {
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            out.push((format!("l{i}.q"), &mut layer.attn.q));
+            out.push((format!("l{i}.k"), &mut layer.attn.k));
+            out.push((format!("l{i}.v"), &mut layer.attn.v));
+            out.push((format!("l{i}.o"), &mut layer.attn.o));
+            out.push((format!("l{i}.gate"), &mut layer.mlp.gate));
+            out.push((format!("l{i}.up"), &mut layer.mlp.up));
+            out.push((format!("l{i}.down"), &mut layer.mlp.down));
+        }
+        out
+    }
+
+    /// Total inference bytes of the decoder linears (+embeddings/head, fp32).
+    pub fn size_bytes(&self) -> usize {
+        let mut total = self.tok_emb.data.len() * 4 + self.head.size_bytes();
+        for l in &self.layers {
+            total += l.attn.q.size_bytes()
+                + l.attn.k.size_bytes()
+                + l.attn.v.size_bytes()
+                + l.attn.o.size_bytes()
+                + l.mlp.gate.size_bytes()
+                + l.mlp.up.size_bytes()
+                + l.mlp.down.size_bytes();
+        }
+        total
+    }
+
+    /// Build dense caches on all quantized layers (batch-path prerequisite).
+    pub fn ensure_caches(&mut self) {
+        for (_, lin) in self.linears_mut() {
+            lin.ensure_cache();
+        }
+    }
+
+    /// Full-sequence forward returning logits (T × vocab). Causal attention.
+    pub fn forward_batch(&self, tokens: &[u16]) -> Matrix {
+        let t_len = tokens.len();
+        let cfg = &self.cfg;
+        assert!(t_len <= cfg.max_seq, "sequence longer than max_seq");
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.head_dim();
+
+        // Embedding lookup.
+        let mut x = Matrix::zeros(t_len, d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.tok_emb.row(tok as usize));
+        }
+
+        for layer in &self.layers {
+            // --- Attention block ---
+            let mut xn = x.clone();
+            for r in 0..t_len {
+                rmsnorm_row(xn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
+            }
+            let mut q = layer.attn.q.forward_batch(&xn);
+            let mut k = layer.attn.k.forward_batch(&xn);
+            let v = layer.attn.v.forward_batch(&xn);
+            // RoPE per position per head.
+            for t in 0..t_len {
+                for head in 0..h {
+                    rope_rotate(&mut q.row_mut(t)[head * dh..(head + 1) * dh], t, cfg.rope_theta);
+                    rope_rotate(&mut k.row_mut(t)[head * dh..(head + 1) * dh], t, cfg.rope_theta);
+                }
+            }
+            // Scaled dot-product attention, causal.
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut attn_out = Matrix::zeros(t_len, d);
+            let mut scores = vec![0.0f32; t_len];
+            for head in 0..h {
+                let hs = head * dh;
+                for tq in 0..t_len {
+                    let qrow = &q.row(tq)[hs..hs + dh];
+                    for tk in 0..=tq {
+                        let krow = &k.row(tk)[hs..hs + dh];
+                        scores[tk] = crate::util::matrix::dot(qrow, krow) * scale;
+                    }
+                    softmax_inplace(&mut scores[..=tq]);
+                    let out = &mut attn_out.row_mut(tq)[hs..hs + dh];
+                    for tk in 0..=tq {
+                        let w = scores[tk];
+                        let vrow = &v.row(tk)[hs..hs + dh];
+                        for i in 0..dh {
+                            out[i] += w * vrow[i];
+                        }
+                    }
+                }
+            }
+            let proj = layer.attn.o.forward_batch(&attn_out);
+            x.axpy(1.0, &proj);
+
+            // --- MLP block ---
+            let mut xn = x.clone();
+            for r in 0..t_len {
+                rmsnorm_row(xn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
+            }
+            let gate = layer.mlp.gate.forward_batch(&xn);
+            let up = layer.mlp.up.forward_batch(&xn);
+            let mut act = gate;
+            for (a, &u) in act.data.iter_mut().zip(&up.data) {
+                *a = silu(*a) * u;
+            }
+            let down = layer.mlp.down.forward_batch(&act);
+            x.axpy(1.0, &down);
+        }
+
+        for r in 0..t_len {
+            rmsnorm_row(x.row_mut(r), &self.out_norm, self.cfg.rms_eps);
+        }
+        self.head.forward_batch(&x)
+    }
+
+    /// Single-token decode step with KV cache; returns the logits vector.
+    pub fn decode_step(&self, cache: &mut KvCache, token: u16) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let pos = cache.len;
+        assert!(pos < cache.capacity, "KV cache full");
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.head_dim();
+
+        let mut x = self.tok_emb.row(token as usize).to_vec();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut xn = x.clone();
+            rmsnorm_row(&mut xn, &layer.attn_norm, cfg.rms_eps);
+            let mut q = layer.attn.q.matvec(&xn);
+            let mut k = layer.attn.k.matvec(&xn);
+            let v = layer.attn.v.matvec(&xn);
+            for head in 0..h {
+                rope_rotate(&mut q[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
+                rope_rotate(&mut k[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
+            }
+            cache.k[li].row_mut(pos).copy_from_slice(&k);
+            cache.v[li].row_mut(pos).copy_from_slice(&v);
+
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut attn_out = vec![0.0f32; d];
+            let mut scores = vec![0.0f32; pos + 1];
+            for head in 0..h {
+                let hs = head * dh;
+                let qh = &q[hs..hs + dh];
+                for tk in 0..=pos {
+                    scores[tk] =
+                        crate::util::matrix::dot(qh, &cache.k[li].row(tk)[hs..hs + dh]) * scale;
+                }
+                softmax_inplace(&mut scores);
+                for tk in 0..=pos {
+                    let w = scores[tk];
+                    let vrow = &cache.v[li].row(tk)[hs..hs + dh];
+                    for i in 0..dh {
+                        attn_out[hs + i] += w * vrow[i];
+                    }
+                }
+            }
+            let proj = layer.attn.o.matvec(&attn_out);
+            for (xv, &p) in x.iter_mut().zip(&proj) {
+                *xv += p;
+            }
+
+            let mut xn = x.clone();
+            rmsnorm_row(&mut xn, &layer.mlp_norm, cfg.rms_eps);
+            let gate = layer.mlp.gate.matvec(&xn);
+            let up = layer.mlp.up.matvec(&xn);
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(&up)
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let down = layer.mlp.down.matvec(&act);
+            for (xv, &dn) in x.iter_mut().zip(&down) {
+                *xv += dn;
+            }
+        }
+        cache.len = pos + 1;
+        rmsnorm_row(&mut x, &self.out_norm, cfg.rms_eps);
+        self.head.matvec(&x)
+    }
+
+    /// Sample a token from logits (temperature + top-k; greedy if temp == 0).
+    pub fn sample(logits: &[f32], temp: f32, top_k: usize, rng: &mut Rng) -> u16 {
+        if temp <= 0.0 {
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u16;
+        }
+        let k = top_k.max(1).min(logits.len());
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(k);
+        let mut probs: Vec<f32> = idx.iter().map(|&i| logits[i] / temp).collect();
+        softmax_inplace(&mut probs);
+        let mut r = rng.uniform() as f32;
+        for (j, &p) in probs.iter().enumerate() {
+            r -= p;
+            if r <= 0.0 {
+                return idx[j] as u16;
+            }
+        }
+        idx[k - 1] as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn tiny_model(seed: u64) -> Transformer {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 2;
+        cfg.max_seq = 32;
+        cfg.name = "tiny".into();
+        let ws = WeightStore::random(&cfg, seed);
+        Transformer::from_store(&ws)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_model(1);
+        let logits = m.forward_batch(&[1, 2, 3, 4]);
+        assert_eq!(logits.rows, 4);
+        assert_eq!(logits.cols, 256);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_matches_batch_forward() {
+        // Token-by-token decode must reproduce the full-sequence logits.
+        let m = tiny_model(2);
+        let tokens = [10u16, 200, 37, 99, 5];
+        let batch = m.forward_batch(&tokens);
+        let mut cache = KvCache::new(&m.cfg);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let logits = m.decode_step(&mut cache, tok);
+            for (a, b) in logits.iter().zip(batch.row(t)) {
+                assert!((a - b).abs() < 1e-3, "pos {t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a future token must not affect earlier logits.
+        let m = tiny_model(3);
+        let a = m.forward_batch(&[1, 2, 3, 4]);
+        let b = m.forward_batch(&[1, 2, 3, 250]);
+        for t in 0..3 {
+            for c in 0..256 {
+                assert_eq!(a.at(t, c), b.at(t, c), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn rope_is_position_sensitive() {
+        // Permuting the prefix must change the last position's logits: a
+        // position-free (bag-of-prefix) attention would produce identical rows.
+        let m = tiny_model(4);
+        let a = m.forward_batch(&[9, 7, 7]);
+        let b = m.forward_batch(&[7, 9, 7]);
+        let ra: Vec<f32> = a.row(2).to_vec();
+        let rb: Vec<f32> = b.row(2).to_vec();
+        assert!(ra.iter().zip(&rb).any(|(x, y)| (x - y).abs() > 1e-4));
+    }
+
+    #[test]
+    fn sample_greedy_picks_argmax() {
+        let mut logits = vec![0.0f32; 256];
+        logits[42] = 10.0;
+        let mut rng = Rng::new(1);
+        assert_eq!(Transformer::sample(&logits, 0.0, 1, &mut rng), 42);
+    }
+
+    #[test]
+    fn sample_topk_restricts_support() {
+        let mut logits = vec![-100.0f32; 256];
+        logits[10] = 5.0;
+        logits[11] = 4.9;
+        logits[12] = 4.8;
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let t = Transformer::sample(&logits, 1.0, 3, &mut rng);
+            assert!([10, 11, 12].contains(&t));
+        }
+    }
+
+    #[test]
+    fn kv_cache_accounting() {
+        let m = tiny_model(5);
+        let cache = KvCache::new(&m.cfg);
+        assert_eq!(cache.size_bytes(), 2 * 2 * 32 * 32 * 4);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain_preserves_rms() {
+        let mut x = vec![3.0f32, -4.0, 0.0, 1.0];
+        let gain = vec![1.0f32; 4];
+        rmsnorm_row(&mut x, &gain, 1e-6);
+        let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((ms - 1.0).abs() < 1e-3);
+    }
+}

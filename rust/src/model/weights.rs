@@ -1,0 +1,213 @@
+//! Model weight I/O: a raw little-endian f32 blob plus a JSON manifest
+//! (`model_<name>.json` / `model_<name>.bin`), written by `python/compile/train.py`
+//! and read here. Rust can also write the format (used by tests and the
+//! quantization pipeline's dense export).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+
+/// A named collection of tensors with its model config.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Matrix>,
+    /// Training metadata (loss curve etc.) passed through from the manifest.
+    pub meta: Json,
+}
+
+impl WeightStore {
+    pub fn get(&self, name: &str) -> &Matrix {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor '{name}'"))
+    }
+
+    /// Canonical tensor names for a config (must match python/compile/train.py).
+    pub fn expected_names(cfg: &ModelConfig) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string()];
+        for i in 0..cfg.n_layers {
+            for t in ["attn_norm", "q", "k", "v", "o", "mlp_norm", "gate", "up", "down"] {
+                names.push(format!("l{i}.{t}"));
+            }
+        }
+        names.push("out_norm".into());
+        names.push("head".into());
+        names
+    }
+
+    pub fn expected_shape(cfg: &ModelConfig, name: &str) -> (usize, usize) {
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        if name == "tok_emb" || name == "head" {
+            return (cfg.vocab, d);
+        }
+        if name == "out_norm" {
+            return (1, d);
+        }
+        let part = name.split('.').nth(1).expect("layer tensor name");
+        match part {
+            "attn_norm" | "mlp_norm" => (1, d),
+            "q" | "k" | "v" | "o" => (d, d),
+            "gate" | "up" => (f, d),
+            "down" => (d, f),
+            other => panic!("unknown tensor part '{other}'"),
+        }
+    }
+
+    /// Load `<dir>/model_<name>.json` + `.bin`.
+    pub fn load(dir: &Path, name: &str) -> Result<WeightStore> {
+        let manifest_path = dir.join(format!("model_{name}.json"));
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let config = ModelConfig::from_json(j.get("config").context("manifest.config")?);
+        let bin_path = dir.join(j.req_str("weights_file"));
+        let mut bytes = Vec::new();
+        std::fs::File::open(&bin_path)
+            .with_context(|| format!("opening {bin_path:?}"))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() % 4 != 0 {
+            bail!("weight blob not a multiple of 4 bytes");
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for t in j.get("tensors").context("manifest.tensors")?.as_arr().unwrap() {
+            let tname = t.req_str("name").to_string();
+            let shape = t.get("shape").unwrap().as_arr().unwrap();
+            let (rows, cols) = match shape.len() {
+                1 => (1, shape[0].as_usize().unwrap()),
+                2 => (shape[0].as_usize().unwrap(), shape[1].as_usize().unwrap()),
+                _ => bail!("tensor '{tname}' has unsupported rank"),
+            };
+            let offset = t.req_usize("offset"); // in floats
+            let n = rows * cols;
+            if offset + n > floats.len() {
+                bail!("tensor '{tname}' out of range");
+            }
+            tensors.insert(
+                tname,
+                Matrix::from_vec(rows, cols, floats[offset..offset + n].to_vec()),
+            );
+        }
+        // Validate completeness and shapes.
+        for name in Self::expected_names(&config) {
+            let t = tensors
+                .get(&name)
+                .with_context(|| format!("manifest missing tensor '{name}'"))?;
+            let (r, c) = Self::expected_shape(&config, &name);
+            if (t.rows, t.cols) != (r, c) {
+                bail!("tensor '{name}' shape {:?} != expected {:?}", (t.rows, t.cols), (r, c));
+            }
+        }
+        let meta = j.get("meta").cloned().unwrap_or(Json::Null);
+        Ok(WeightStore { config, tensors, meta })
+    }
+
+    /// Write the manifest + blob (same format train.py emits).
+    pub fn save(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut offset = 0usize;
+        let mut tensor_entries = Vec::new();
+        let mut blob: Vec<u8> = Vec::new();
+        for tname in Self::expected_names(&self.config) {
+            let t = self.get(&tname);
+            let shape = if t.rows == 1 && !tname.contains('.') && tname.ends_with("norm")
+                || tname.ends_with("norm")
+            {
+                Json::Arr(vec![Json::Num(t.cols as f64)])
+            } else {
+                Json::Arr(vec![Json::Num(t.rows as f64), Json::Num(t.cols as f64)])
+            };
+            tensor_entries.push(Json::obj(vec![
+                ("name", Json::Str(tname.clone())),
+                ("shape", shape),
+                ("offset", Json::Num(offset as f64)),
+            ]));
+            for &v in &t.data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+            offset += t.data.len();
+        }
+        let manifest = Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("weights_file", Json::Str(format!("model_{name}.bin"))),
+            ("tensors", Json::Arr(tensor_entries)),
+            ("meta", self.meta.clone()),
+        ]);
+        std::fs::write(dir.join(format!("model_{name}.json")), manifest.to_string())?;
+        let mut f = std::fs::File::create(dir.join(format!("model_{name}.bin")))?;
+        f.write_all(&blob)?;
+        Ok(())
+    }
+
+    /// Random-initialized weights (throughput benches, tests).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> WeightStore {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        for name in Self::expected_names(cfg) {
+            let (r, c) = Self::expected_shape(cfg, &name);
+            let m = if name.ends_with("norm") {
+                Matrix::from_vec(r, c, vec![1.0; r * c])
+            } else {
+                // Scaled init ~ N(0, 1/sqrt(fan_in)).
+                let std = 1.0 / (c as f32).sqrt();
+                Matrix::gaussian(r, c, std, &mut rng)
+            };
+            tensors.insert(name, m);
+        }
+        WeightStore { config: cfg.clone(), tensors, meta: Json::Null }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_names_cover_model() {
+        let cfg = ModelConfig::nano();
+        let names = WeightStore::expected_names(&cfg);
+        assert_eq!(names.len(), 1 + cfg.n_layers * 9 + 2);
+        assert!(names.contains(&"l1.down".to_string()));
+    }
+
+    #[test]
+    fn random_store_has_valid_shapes() {
+        let cfg = ModelConfig::nano();
+        let ws = WeightStore::random(&cfg, 1);
+        for name in WeightStore::expected_names(&cfg) {
+            let t = ws.get(&name);
+            assert_eq!((t.rows, t.cols), WeightStore::expected_shape(&cfg, &name));
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::nano();
+        let ws = WeightStore::random(&cfg, 2);
+        let dir = std::env::temp_dir().join("qtip_test_weights");
+        ws.save(&dir, "roundtrip").unwrap();
+        let back = WeightStore::load(&dir, "roundtrip").unwrap();
+        assert_eq!(back.config, cfg);
+        for name in WeightStore::expected_names(&cfg) {
+            assert_eq!(back.get(&name).data, ws.get(&name).data, "{name}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_fails() {
+        let err = WeightStore::load(Path::new("/nonexistent"), "nope");
+        assert!(err.is_err());
+    }
+}

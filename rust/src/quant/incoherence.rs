@@ -1,0 +1,237 @@
+//! Incoherence processing with the Random Hadamard Transform (paper §2.1).
+//!
+//! `W̃ = V_m S_m W S_n V_nᵀ`, `H̃ = V_n S_n H S_n V_nᵀ` where `V_k` is a (seeded)
+//! orthonormal Hadamard matrix and `S_k` a random ±1 diagonal. With probability
+//! ≥ 1−δ this makes W̃ μ-incoherent with μ = 2·log(4mn/δ): entries become
+//! approximately i.i.d. Gaussian — the input distribution QTIP's trellis codes are
+//! designed for.
+//!
+//! At inference the transform never materializes Ŵ: `Wx = S_m V_mᵀ Ŵ̃ (V_n S_n x)`,
+//! i.e. an O(n log n) transform on the activations before the quantized matvec and
+//! an O(m log m) one after (`forward_activations` / `restore_outputs`).
+
+use crate::util::hadamard::{rht_forward, rht_inverse, supported};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// The per-matrix RHT context: two random sign vectors (the Hadamard factors are
+/// implicit/deterministic).
+#[derive(Clone, Debug)]
+pub struct RhtContext {
+    pub sign_rows: Vec<f32>,
+    pub sign_cols: Vec<f32>,
+}
+
+impl RhtContext {
+    pub fn new(rows: usize, cols: usize, seed: u64) -> Self {
+        assert!(supported(rows), "rows={rows} not a supported Hadamard size");
+        assert!(supported(cols), "cols={cols} not a supported Hadamard size");
+        let mut rng = Rng::new(seed ^ 0x52_48_54); // "RHT"
+        let sign_rows = (0..rows).map(|_| rng.sign()).collect();
+        let sign_cols = (0..cols).map(|_| rng.sign()).collect();
+        RhtContext { sign_rows, sign_cols }
+    }
+
+    /// Serialize the signs as bit flags for the artifact manifest.
+    pub fn sign_bits(signs: &[f32]) -> Vec<u32> {
+        let mut words = vec![0u32; signs.len().div_ceil(32)];
+        for (i, &s) in signs.iter().enumerate() {
+            if s < 0.0 {
+                words[i / 32] |= 1 << (i % 32);
+            }
+        }
+        words
+    }
+
+    pub fn signs_from_bits(words: &[u32], n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| if words[i / 32] >> (i % 32) & 1 == 1 { -1.0 } else { 1.0 })
+            .collect()
+    }
+
+    /// `W̃ = V_m S_m W S_n V_nᵀ`.
+    pub fn transform_weight(&self, w: &Matrix) -> Matrix {
+        assert_eq!(w.rows, self.sign_rows.len());
+        assert_eq!(w.cols, self.sign_cols.len());
+        let mut out = w.clone();
+        // Rows: each row r ← V_n S_n r (right factor S_n V_nᵀ acts as RHT on rows).
+        for r in 0..out.rows {
+            rht_forward(out.row_mut(r), &self.sign_cols);
+        }
+        // Columns: each col c ← V_m S_m c.
+        let mut col = vec![0.0f32; out.rows];
+        for c in 0..out.cols {
+            for r in 0..out.rows {
+                col[r] = out.at(r, c);
+            }
+            rht_forward(&mut col, &self.sign_rows);
+            for r in 0..out.rows {
+                *out.at_mut(r, c) = col[r];
+            }
+        }
+        out
+    }
+
+    /// Exact inverse of [`Self::transform_weight`].
+    pub fn restore_weight(&self, wt: &Matrix) -> Matrix {
+        let mut out = wt.clone();
+        let mut col = vec![0.0f32; out.rows];
+        for c in 0..out.cols {
+            for r in 0..out.rows {
+                col[r] = out.at(r, c);
+            }
+            rht_inverse(&mut col, &self.sign_rows);
+            for r in 0..out.rows {
+                *out.at_mut(r, c) = col[r];
+            }
+        }
+        for r in 0..out.rows {
+            rht_inverse(out.row_mut(r), &self.sign_cols);
+        }
+        out
+    }
+
+    /// `H̃ = V_n S_n H S_n V_nᵀ` (input-side conjugation; H is n×n).
+    pub fn transform_hessian(&self, h: &Matrix) -> Matrix {
+        assert_eq!(h.rows, h.cols);
+        assert_eq!(h.rows, self.sign_cols.len());
+        let mut out = h.clone();
+        for r in 0..out.rows {
+            rht_forward(out.row_mut(r), &self.sign_cols);
+        }
+        let mut col = vec![0.0f32; out.rows];
+        for c in 0..out.cols {
+            for r in 0..out.rows {
+                col[r] = out.at(r, c);
+            }
+            rht_forward(&mut col, &self.sign_cols);
+            for r in 0..out.rows {
+                *out.at_mut(r, c) = col[r];
+            }
+        }
+        out
+    }
+
+    /// Inference: transform an activation vector x ← V_n S_n x before the quantized
+    /// matvec (this matches `transform_weight`'s column conjugation).
+    pub fn forward_activations(&self, x: &mut [f32]) {
+        rht_forward(x, &self.sign_cols);
+    }
+
+    /// Inference: map the quantized matvec output back, y ← S_m V_mᵀ ỹ.
+    pub fn restore_outputs(&self, y: &mut [f32]) {
+        rht_inverse(y, &self.sign_rows);
+    }
+
+    /// Incoherence coefficient μ of a matrix: max |W_ij| · sqrt(mn) / ||W||_F.
+    pub fn mu(w: &Matrix) -> f64 {
+        let maxabs = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+        let fro = w.fro_norm();
+        if fro == 0.0 {
+            return 0.0;
+        }
+        maxabs * ((w.rows * w.cols) as f64).sqrt() / fro
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn weight_roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(64, 128, 1.0, &mut rng);
+        let ctx = RhtContext::new(64, 128, 7);
+        let wt = ctx.transform_weight(&w);
+        let back = ctx.restore_weight(&wt);
+        for (a, b) in back.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transform_preserves_frobenius() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::gaussian(32, 64, 2.0, &mut rng);
+        let ctx = RhtContext::new(32, 64, 8);
+        let wt = ctx.transform_weight(&w);
+        assert!((wt.fro_norm() - w.fro_norm()).abs() < 1e-3 * w.fro_norm());
+    }
+
+    #[test]
+    fn reduces_mu_of_spiky_matrix() {
+        // A matrix with one huge entry is maximally coherent; RHT must flatten it.
+        let mut w = Matrix::zeros(64, 64);
+        *w.at_mut(13, 57) = 100.0;
+        let before = RhtContext::mu(&w);
+        let ctx = RhtContext::new(64, 64, 9);
+        let after = RhtContext::mu(&ctx.transform_weight(&w));
+        assert!(before == 64.0, "spike mu = sqrt(mn)");
+        assert!(after < 3.0, "post-RHT mu {after}");
+    }
+
+    #[test]
+    fn gaussianizes_sparse_weights() {
+        // A sparse, heavy-tailed (outlier-dominated) matrix becomes approximately
+        // Gaussian after the RHT: each W̃ entry is a ±-signed average of all
+        // entries, so the CLT kicks in (kurtosis → 3).
+        let mut rng = Rng::new(3);
+        let mut w = Matrix::zeros(128, 128);
+        for _ in 0..200 {
+            let r = rng.below(128);
+            let c = rng.below(128);
+            *w.at_mut(r, c) = rng.gauss_f32() * 10.0;
+        }
+        let ctx = RhtContext::new(128, 128, 10);
+        let wt = ctx.transform_weight(&w);
+        let kurt_before = stats::kurtosis(&w.data);
+        let kurt_after = stats::kurtosis(&wt.data);
+        assert!(kurt_before > 20.0, "sparse outliers are heavy tailed: {kurt_before}");
+        assert!((kurt_after - 3.0).abs() < 0.8, "post-RHT kurtosis {kurt_after}");
+    }
+
+    #[test]
+    fn hessian_conjugation_preserves_quadratic_form() {
+        // tr(W̃ H̃ W̃ᵀ) == tr(W H Wᵀ): the proxy objective is invariant under RHT.
+        let mut rng = Rng::new(4);
+        let n = 32;
+        let a = Matrix::gaussian(n, n, 1.0, &mut rng);
+        let h = a.matmul(&a.transpose());
+        let w = Matrix::gaussian(16, n, 1.0, &mut rng);
+        let ctx = RhtContext::new(16, n, 11);
+        let ht = ctx.transform_hessian(&h);
+        let wt = ctx.transform_weight(&w);
+        let lhs = wt.matmul(&ht).matmul(&wt.transpose()).trace();
+        let rhs = w.matmul(&h).matmul(&w.transpose()).trace();
+        assert!((lhs - rhs).abs() < 1e-2 * rhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn inference_path_matches_materialized_product() {
+        // y = W x must equal restore_outputs(W̃ @ forward_activations(x)).
+        let mut rng = Rng::new(5);
+        let w = Matrix::gaussian(32, 64, 1.0, &mut rng);
+        let ctx = RhtContext::new(32, 64, 12);
+        let wt = ctx.transform_weight(&w);
+        let x = rng.gauss_vec(64);
+        let direct = w.matvec(&x);
+        let mut xt = x.clone();
+        ctx.forward_activations(&mut xt);
+        let mut y = wt.matvec(&xt);
+        ctx.restore_outputs(&mut y);
+        for (a, b) in y.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sign_bits_roundtrip() {
+        let mut rng = Rng::new(6);
+        let signs: Vec<f32> = (0..100).map(|_| rng.sign()).collect();
+        let bits = RhtContext::sign_bits(&signs);
+        let back = RhtContext::signs_from_bits(&bits, 100);
+        assert_eq!(signs, back);
+    }
+}

@@ -1,0 +1,230 @@
+//! BlockLDLQ adaptive rounding (paper Algorithm 5, §4, §A.2).
+//!
+//! Walks the columns of `W` in `T_y`-wide blocks from right to left; each block is
+//! rounded *after* adding the LDL feedback of the error committed on already-rounded
+//! blocks: `x = W_j + (W_{>j} − Ŵ_{>j}) · A_{>j,j}` with `A = L − I` from the
+//! `T_y`-block LDL decomposition `H = L D Lᵀ`.
+//!
+//! The inner rounder is pluggable ([`BlockRounder`]): QTIP's trellis quantizer
+//! (`quant::QtipRounder`), the E8P VQ proxy, or scalar Lloyd–Max (≈GPTQ). This
+//! isolates exactly the variable the paper studies — *what to round with*.
+
+use crate::util::matrix::{gemm, Matrix};
+
+use super::super::util::linalg::block_ldl;
+
+/// A rounding backend for one `m × T_y` column block.
+pub trait BlockRounder {
+    /// Block width T_y (must divide the Hessian dimension).
+    fn ty(&self) -> usize;
+    /// Round block `j` (block-column index, counted from the left) of the matrix.
+    /// Returns the reconstruction (same shape as `x`).
+    fn round_block(&mut self, j: usize, x: &Matrix) -> Matrix;
+}
+
+/// Run BlockLDLQ. `h` must already be SPD (see `linalg::regularize_spd`).
+/// Returns Ŵ.
+pub fn block_ldlq(w: &Matrix, h: &Matrix, rounder: &mut dyn BlockRounder) -> Matrix {
+    let (m, n) = (w.rows, w.cols);
+    assert_eq!(h.rows, n);
+    assert_eq!(h.cols, n);
+    let ty = rounder.ty();
+    assert!(n % ty == 0, "T_y={ty} must divide n={n}");
+    let nb = n / ty;
+
+    let (l, _d) = block_ldl(h, ty).expect("Hessian must be SPD (regularize first)");
+    // A = L - I; only the strictly-below-block part of each block column is used.
+    let mut w_hat = Matrix::zeros(m, n);
+    // Error on already-processed (right-side) columns: E = W - Ŵ, zero elsewhere.
+    let mut err = Matrix::zeros(m, n);
+
+    for j in (0..nb).rev() {
+        let c0 = j * ty;
+        let c1 = c0 + ty;
+        // Feedback: x = W_j + E_{:, c1:} @ L[c1:, c0:c1]  (A's diagonal block is 0).
+        let mut x = w.col_block(c0, c1);
+        if c1 < n {
+            let e_right = err.col_block(c1, n); // m × (n - c1)
+            let mut a_block = Matrix::zeros(n - c1, ty);
+            for r in c1..n {
+                for c in c0..c1 {
+                    *a_block.at_mut(r - c1, c - c0) = l.at(r, c);
+                }
+            }
+            gemm(&e_right, &a_block, &mut x); // x += E_right @ A_block
+        }
+        let x_hat = rounder.round_block(j, &x);
+        assert_eq!(x_hat.rows, m);
+        assert_eq!(x_hat.cols, ty);
+        w_hat.set_col_block(c0, &x_hat);
+        // Error feedback uses (x - x_hat): the *adjusted* target minus its rounding.
+        let mut e_blk = x;
+        e_blk.axpy(-1.0, &x_hat);
+        err.set_col_block(c0, &e_blk);
+    }
+    w_hat
+}
+
+/// A trivial rounder that applies a scalar quantization function entrywise —
+/// used by tests and the GPTQ-like scalar baseline.
+pub struct ScalarRounder<F: Fn(f32) -> f32> {
+    pub ty: usize,
+    pub f: F,
+}
+
+impl<F: Fn(f32) -> f32> BlockRounder for ScalarRounder<F> {
+    fn ty(&self) -> usize {
+        self.ty
+    }
+
+    fn round_block(&mut self, _j: usize, x: &Matrix) -> Matrix {
+        let mut out = x.clone();
+        for v in out.data.iter_mut() {
+            *v = (self.f)(*v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::proxy::proxy_loss;
+    use crate::util::linalg::regularize_spd;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        // A "realistic" Hessian: correlated activations.
+        let a = Matrix::gaussian(n, 2 * n, 1.0, &mut rng);
+        let mut h = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..2 * n {
+                    s += a.at(i, k) * a.at(j, k) * (1.0 + 0.5 * (k % 7) as f32);
+                }
+                *h.at_mut(i, j) = s / (2 * n) as f32;
+            }
+        }
+        regularize_spd(&h, 0.01)
+    }
+
+    fn round_to_grid(step: f32) -> impl Fn(f32) -> f32 {
+        move |x| (x / step).round() * step
+    }
+
+    #[test]
+    fn exact_rounder_is_identity() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(8, 16, 1.0, &mut rng);
+        let h = random_spd(16, 2);
+        let mut r = ScalarRounder { ty: 4, f: |x| x };
+        let w_hat = block_ldlq(&w, &h, &mut r);
+        for (a, b) in w_hat.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn beats_round_to_nearest_on_proxy_loss() {
+        // The whole point of LDLQ: error feedback lowers tr(ΔHΔᵀ) vs naive RTN.
+        let mut rng = Rng::new(3);
+        let w = Matrix::gaussian(16, 32, 1.0, &mut rng);
+        let h = random_spd(32, 4);
+        let step = 0.5f32;
+
+        let mut ldlq = ScalarRounder { ty: 4, f: round_to_grid(step) };
+        let w_ldlq = block_ldlq(&w, &h, &mut ldlq);
+
+        let mut w_rtn = w.clone();
+        for v in w_rtn.data.iter_mut() {
+            *v = (*v / step).round() * step;
+        }
+
+        let loss_ldlq = proxy_loss(&w, &w_ldlq, &h);
+        let loss_rtn = proxy_loss(&w, &w_rtn, &h);
+        assert!(
+            loss_ldlq < loss_rtn,
+            "LDLQ {loss_ldlq} must beat RTN {loss_rtn}"
+        );
+    }
+
+    #[test]
+    fn ldlq_recursion_invariant() {
+        // Ŵ_j == Q(W_j + (W−Ŵ)_{>j} A_{>j,j}) exactly, block by block.
+        let mut rng = Rng::new(5);
+        let n = 24;
+        let w = Matrix::gaussian(6, n, 1.0, &mut rng);
+        let h = random_spd(n, 6);
+        let ty = 4;
+        let step = 0.25f32;
+        let mut r = ScalarRounder { ty, f: round_to_grid(step) };
+        let w_hat = block_ldlq(&w, &h, &mut r);
+
+        // Recompute the feedback trajectory independently.
+        let (l, _) = crate::util::linalg::block_ldl(&h, ty).unwrap();
+        let err_full = {
+            let mut e = w.clone();
+            e.axpy(-1.0, &w_hat);
+            e
+        };
+        // err as produced uses adjusted targets; recompute x_j from scratch:
+        let nb = n / ty;
+        let mut err_adj = Matrix::zeros(6, n);
+        for j in (0..nb).rev() {
+            let c0 = j * ty;
+            let c1 = c0 + ty;
+            let mut x = w.col_block(c0, c1);
+            if c1 < n {
+                let e_right = err_adj.col_block(c1, n);
+                let mut a_block = Matrix::zeros(n - c1, ty);
+                for rr in c1..n {
+                    for cc in c0..c1 {
+                        *a_block.at_mut(rr - c1, cc - c0) = l.at(rr, cc);
+                    }
+                }
+                gemm(&e_right, &a_block, &mut x);
+            }
+            // Ŵ_j must equal Q(x).
+            for rr in 0..6 {
+                for cc in 0..ty {
+                    let q = (x.at(rr, cc) / step).round() * step;
+                    assert!(
+                        (q - w_hat.at(rr, c0 + cc)).abs() < 1e-4,
+                        "block {j} ({rr},{cc})"
+                    );
+                }
+            }
+            let mut e_blk = x;
+            e_blk.axpy(-1.0, &w_hat.col_block(c0, c1));
+            err_adj.set_col_block(c0, &e_blk);
+        }
+        let _ = err_full;
+    }
+
+    #[test]
+    fn ty_must_divide_n() {
+        let w = Matrix::zeros(4, 10);
+        let h = Matrix::identity(10);
+        let mut r = ScalarRounder { ty: 4, f: |x| x };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            block_ldlq(&w, &h, &mut r)
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn identity_hessian_equals_rtn() {
+        // With H = I there is no correlation to exploit: LDLQ == RTN exactly.
+        let mut rng = Rng::new(7);
+        let w = Matrix::gaussian(4, 12, 1.0, &mut rng);
+        let h = Matrix::identity(12);
+        let step = 0.5;
+        let mut r = ScalarRounder { ty: 4, f: round_to_grid(step) };
+        let w_hat = block_ldlq(&w, &h, &mut r);
+        for (a, &b) in w_hat.data.iter().zip(&w.data) {
+            assert_eq!(*a, (b / step).round() * step);
+        }
+    }
+}

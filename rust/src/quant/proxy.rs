@@ -1,0 +1,127 @@
+//! The per-layer proxy loss (paper Eq. 1): `ℓ(Ŵ) = tr((Ŵ−W) H (Ŵ−W)ᵀ)`.
+
+use crate::util::matrix::{gemv, Matrix};
+
+/// `tr((Ŵ−W) H (Ŵ−W)ᵀ)` — the adaptive-rounding objective.
+pub fn proxy_loss(w: &Matrix, w_hat: &Matrix, h: &Matrix) -> f64 {
+    assert_eq!(w.rows, w_hat.rows);
+    assert_eq!(w.cols, w_hat.cols);
+    assert_eq!(h.rows, w.cols);
+    assert_eq!(h.cols, w.cols);
+    let mut total = 0.0f64;
+    let mut diff = vec![0.0f32; w.cols];
+    let mut hd = vec![0.0f32; w.cols];
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            diff[c] = w_hat.at(r, c) - w.at(r, c);
+        }
+        gemv(h, &diff, &mut hd);
+        total += diff
+            .iter()
+            .zip(&hd)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum::<f64>();
+    }
+    total
+}
+
+/// Proxy loss normalized by the weight's own energy under H:
+/// `tr((Ŵ−W)H(Ŵ−W)ᵀ) / tr(W H Wᵀ)`. Comparable across layers and scales.
+pub fn relative_proxy_loss(w: &Matrix, w_hat: &Matrix, h: &Matrix) -> f64 {
+    let denom = proxy_loss(&Matrix::zeros(w.rows, w.cols), w, h);
+    if denom == 0.0 {
+        return 0.0;
+    }
+    proxy_loss(w, w_hat, h) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::gaussian(n, n, 1.0, &mut rng);
+        let mut h = a.matmul(&a.transpose());
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.5;
+        }
+        h
+    }
+
+    #[test]
+    fn zero_for_exact_reconstruction() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::gaussian(8, 16, 1.0, &mut rng);
+        let h = random_spd(16, 2);
+        assert_eq!(proxy_loss(&w, &w, &h), 0.0);
+    }
+
+    #[test]
+    fn positive_for_spd_hessian() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::gaussian(8, 16, 1.0, &mut rng);
+        let mut w_hat = w.clone();
+        *w_hat.at_mut(3, 5) += 0.1;
+        let h = random_spd(16, 4);
+        assert!(proxy_loss(&w, &w_hat, &h) > 0.0);
+    }
+
+    #[test]
+    fn identity_hessian_reduces_to_frobenius() {
+        let mut rng = Rng::new(5);
+        let w = Matrix::gaussian(8, 16, 1.0, &mut rng);
+        let w_hat = Matrix::gaussian(8, 16, 1.0, &mut rng);
+        let h = Matrix::identity(16);
+        let loss = proxy_loss(&w, &w_hat, &h);
+        let fro: f64 = w
+            .data
+            .iter()
+            .zip(&w_hat.data)
+            .map(|(&a, &b)| ((b - a) as f64).powi(2))
+            .sum();
+        assert!((loss - fro).abs() < 1e-3 * fro.max(1.0));
+    }
+
+    #[test]
+    fn matches_expectation_form() {
+        // tr((D)H(D)ᵀ) == E_x ||D x||² when H = xxᵀ summed over the sample.
+        let mut rng = Rng::new(6);
+        let n = 12;
+        let d = Matrix::gaussian(4, n, 1.0, &mut rng);
+        let xs: Vec<Vec<f32>> = (0..50).map(|_| rng.gauss_vec(n)).collect();
+        let mut h = Matrix::zeros(n, n);
+        for x in &xs {
+            for i in 0..n {
+                for j in 0..n {
+                    *h.at_mut(i, j) += x[i] * x[j];
+                }
+            }
+        }
+        let direct: f64 = xs
+            .iter()
+            .map(|x| d.matvec(x).iter().map(|&v| (v as f64).powi(2)).sum::<f64>())
+            .sum();
+        let via_trace = proxy_loss(&Matrix::zeros(4, n), &d, &h);
+        assert!((direct - via_trace).abs() < 1e-2 * direct);
+    }
+
+    #[test]
+    fn relative_loss_scale_invariant() {
+        let mut rng = Rng::new(7);
+        let w = Matrix::gaussian(8, 16, 1.0, &mut rng);
+        let mut w_hat = w.clone();
+        for v in w_hat.data.iter_mut() {
+            *v += 0.01 * rng.gauss_f32();
+        }
+        let h = random_spd(16, 8);
+        let r1 = relative_proxy_loss(&w, &w_hat, &h);
+        let mut w2 = w.clone();
+        let mut w_hat2 = w_hat.clone();
+        w2.scale(10.0);
+        w_hat2.scale(10.0);
+        let r2 = relative_proxy_loss(&w2, &w_hat2, &h);
+        assert!((r1 - r2).abs() < 1e-6 + 1e-3 * r1);
+    }
+}

@@ -1,0 +1,9 @@
+//! The XLA/PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust. Python is never on this
+//! path — the artifacts are compiled once per process and cached in a registry.
+
+pub mod pjrt;
+pub mod registry;
+
+pub use pjrt::{PjrtRuntime, QuantizedMatvecExe};
+pub use registry::{ArtifactInfo, Registry};

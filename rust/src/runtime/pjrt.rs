@@ -1,0 +1,105 @@
+//! PJRT client wrapper (the `xla` crate): HLO text → compile → execute.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §7).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::quant::QuantizedMatrix;
+
+/// A process-wide PJRT CPU client with a compiled-executable cache.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached per path).
+    pub fn load_hlo(&self, path: &Path) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with f32/u32 literal inputs; returns the first tuple element as f32s.
+    pub fn run_to_f32(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// A compiled fused decode-matvec artifact bound to its geometry, executable on
+/// any `QuantizedMatrix` with matching shape/code.
+pub struct QuantizedMatvecExe {
+    pub exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    pub rows: usize,
+    pub cols: usize,
+    pub tiles_r: usize,
+    pub row_words: usize,
+    pub code: String,
+    pub k: u32,
+    pub l: u32,
+}
+
+impl QuantizedMatvecExe {
+    /// Execute ỹ = Ŵ̃ x̃ through PJRT (incoherent space, like `matvec_tilde`).
+    pub fn matvec_tilde(&self, qm: &QuantizedMatrix, xt: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(qm.rows == self.rows && qm.cols == self.cols, "shape mismatch");
+        anyhow::ensure!(qm.code.name() == self.code, "code mismatch");
+        anyhow::ensure!(qm.trellis.k == self.k && qm.trellis.l == self.l, "trellis mismatch");
+        anyhow::ensure!(
+            qm.tile_words * qm.tiles_c() == self.row_words,
+            "packed layout mismatch: {} vs {}",
+            qm.tile_words * qm.tiles_c(),
+            self.row_words
+        );
+        let packed = xla::Literal::vec1(&qm.packed)
+            .reshape(&[self.tiles_r as i64, self.row_words as i64])?;
+        let x = xla::Literal::vec1(xt);
+        let scale = xla::Literal::from(qm.scale);
+        PjrtRuntime::run_to_f32(&self.exe, &[packed, x, scale])
+    }
+
+    /// Full path including the RHT sandwich (parity with `QuantizedMatrix::matvec`).
+    pub fn matvec(&self, qm: &QuantizedMatrix, x: &[f32]) -> Result<Vec<f32>> {
+        let mut xt = x.to_vec();
+        qm.rht.forward_activations(&mut xt);
+        let mut y = self.matvec_tilde(qm, &xt)?;
+        qm.rht.restore_outputs(&mut y);
+        Ok(y)
+    }
+}

@@ -1,0 +1,147 @@
+//! Artifact registry: parses `artifacts/aot_manifest.json` and hands out
+//! compiled executables by name.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::pjrt::{PjrtRuntime, QuantizedMatvecExe};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub l: u32,
+    pub k: u32,
+    pub v: u32,
+    pub code: String,
+    pub padded_len: usize,
+}
+
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Registry {
+    /// Parse `<dir>/aot_manifest.json`.
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("aot_manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").context("manifest.artifacts")?.as_arr().unwrap() {
+            artifacts.push(ArtifactInfo {
+                name: a.req_str("name").to_string(),
+                path: dir.join(a.req_str("path")),
+                kind: a.req_str("kind").to_string(),
+                rows: a.get("rows").and_then(|v| v.as_usize()).unwrap_or(0),
+                cols: a.get("cols").and_then(|v| v.as_usize()).unwrap_or(0),
+                l: a.get("l").and_then(|v| v.as_usize()).unwrap_or(0) as u32,
+                k: a.get("k").and_then(|v| v.as_usize()).unwrap_or(0) as u32,
+                v: a.get("v").and_then(|v| v.as_usize()).unwrap_or(1) as u32,
+                code: a
+                    .get("code")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                padded_len: a.get("padded_len").and_then(|v| v.as_usize()).unwrap_or(0),
+            });
+        }
+        Ok(Registry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find a decode-matvec artifact matching a shape/code/k, if one was lowered.
+    pub fn find_decode_matvec(
+        &self,
+        rows: usize,
+        cols: usize,
+        code: &str,
+        k: u32,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind == "decode_matvec"
+                && a.rows == rows
+                && a.cols == cols
+                && a.code == code
+                && a.k == k
+        })
+    }
+
+    /// Compile a decode-matvec artifact into an executable wrapper.
+    pub fn load_decode_matvec(
+        &self,
+        rt: &PjrtRuntime,
+        info: &ArtifactInfo,
+    ) -> Result<QuantizedMatvecExe> {
+        let exe = rt.load_hlo(&info.path)?;
+        Ok(QuantizedMatvecExe {
+            exe,
+            rows: info.rows,
+            cols: info.cols,
+            tiles_r: info.rows / 16,
+            row_words: (info.cols / 16) * info.padded_len,
+            code: info.code.clone(),
+            k: info.k,
+            l: info.l,
+        })
+    }
+
+    /// Load the shared HYB LUT contract (`hyb_lut_q{q}.json`).
+    pub fn load_hyb_lut(&self, q: u32) -> Result<Vec<f32>> {
+        let text = std::fs::read_to_string(self.dir.join(format!("hyb_lut_q{q}.json")))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("lut: {e}"))?;
+        Ok(j.get("lut")
+            .context("lut field")?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn registry_parses_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("aot_manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let reg = Registry::open(&dir).unwrap();
+        assert!(!reg.artifacts.is_empty());
+        let a = reg
+            .find_decode_matvec(128, 128, "3inst", 2)
+            .expect("3inst 128x128 k2 artifact");
+        assert_eq!(a.l, 16);
+        assert!(a.padded_len > 0);
+    }
+
+    #[test]
+    fn hyb_lut_loads() {
+        let dir = artifacts_dir();
+        if !dir.join("hyb_lut_q9.json").exists() {
+            return;
+        }
+        let reg = Registry::open(&dir).unwrap();
+        let lut = reg.load_hyb_lut(9).unwrap();
+        assert_eq!(lut.len(), 512 * 2);
+    }
+}

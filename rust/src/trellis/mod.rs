@@ -1,0 +1,203 @@
+//! The bitshift trellis (paper §3.1) and trellis-coded quantization machinery.
+//!
+//! An `(L, k, V)` trellis is a directed graph over `2^L` states where each state
+//! carries a value in R^V and has `2^kV` outgoing edges. QTIP uses the *bitshift*
+//! trellis: states are L-bit sliding windows over the quantized bitstream, so walking
+//! one step shifts the window by `kV` bits. We store the stream little-endian, which
+//! makes the decoder `word >> (t*kV) & (2^L-1)` — state transitions are
+//! `next = (cur >> kV) | (newbits << (L-kV))`.
+//!
+//! (The paper writes the window big-endian — `j = (i·2^kV mod 2^L) + c` — which is the
+//! same trellis up to bit reversal of the state labels; the little-endian orientation
+//! makes the predecessor set of state `j` a *contiguous* range `{(j & lowmask)·2^kV + d}`,
+//! which is what makes the optimized Viterbi inner loop cache-friendly. See
+//! `viterbi.rs`.)
+
+pub mod packing;
+pub mod tailbiting;
+pub mod viterbi;
+
+pub use tailbiting::{quantize_tail_biting, quantize_tail_biting_exact, TailBitingSolution};
+pub use viterbi::{Viterbi, ViterbiWorkspace};
+
+/// Parameters of an (L, k, V) bitshift trellis: `2^L` states, `k` bits per weight,
+/// values in R^V (so `kV` bits consumed per trellis step).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Trellis {
+    /// log2(number of states). 1..=24 supported.
+    pub l: u32,
+    /// Bits per weight.
+    pub k: u32,
+    /// Vector dimension of each node value.
+    pub v: u32,
+}
+
+impl Trellis {
+    pub fn new(l: u32, k: u32, v: u32) -> Self {
+        assert!(l >= 1 && l <= 24, "L={l} out of supported range");
+        assert!(k >= 1 && v >= 1, "k and V must be positive");
+        let kv = k * v;
+        assert!(kv < l, "need kV < L (kV={kv}, L={l})");
+        assert!(kv <= 8, "kV={kv} > 8 not supported (u8 backpointers)");
+        Trellis { l, k, v }
+    }
+
+    /// Number of states, 2^L.
+    #[inline]
+    pub fn states(&self) -> usize {
+        1usize << self.l
+    }
+
+    /// Bits consumed per trellis step (kV).
+    #[inline]
+    pub fn step_bits(&self) -> u32 {
+        self.k * self.v
+    }
+
+    /// Mask of the low `L - kV` bits (the part shared between consecutive states).
+    #[inline]
+    pub fn overlap_mask(&self) -> u32 {
+        (1u32 << (self.l - self.step_bits())) - 1
+    }
+
+    /// Number of distinct overlaps, 2^(L-kV).
+    #[inline]
+    pub fn overlaps(&self) -> usize {
+        1usize << (self.l - self.step_bits())
+    }
+
+    /// State mask, 2^L - 1.
+    #[inline]
+    pub fn state_mask(&self) -> u32 {
+        (1u32 << self.l) - 1
+    }
+
+    /// Walk one step: from `state`, consume `newbits` (kV bits).
+    #[inline]
+    pub fn next_state(&self, state: u32, newbits: u32) -> u32 {
+        debug_assert!(newbits < (1 << self.step_bits()));
+        (state >> self.step_bits()) | (newbits << (self.l - self.step_bits()))
+    }
+
+    /// Is (a -> b) an edge of the bitshift trellis?
+    #[inline]
+    pub fn is_edge(&self, a: u32, b: u32) -> bool {
+        (b & self.overlap_mask()) == (a >> self.step_bits())
+    }
+
+    /// Trellis steps needed to quantize a sequence of `t` weights (requires V | t).
+    #[inline]
+    pub fn steps_for(&self, t: usize) -> usize {
+        assert_eq!(t % self.v as usize, 0, "sequence length {t} not divisible by V");
+        t / self.v as usize
+    }
+
+    /// Verify a state path is a valid walk (and, if `tail_biting`, cyclic).
+    pub fn is_valid_walk(&self, states: &[u32], tail_biting: bool) -> bool {
+        if states.is_empty() {
+            return false;
+        }
+        for w in states.windows(2) {
+            if !self.is_edge(w[0], w[1]) {
+                return false;
+            }
+        }
+        if tail_biting {
+            let first = states[0];
+            let last = *states.last().unwrap();
+            if (last >> self.step_bits()) != (first & self.overlap_mask()) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Reconstruct the weight sequence from a state path given the materialized
+/// codebook (`values[state * V + j]`).
+pub fn decode_states(trellis: &Trellis, states: &[u32], values: &[f32]) -> Vec<f32> {
+    let v = trellis.v as usize;
+    assert_eq!(values.len(), trellis.states() * v);
+    let mut out = Vec::with_capacity(states.len() * v);
+    for &s in states {
+        let base = s as usize * v;
+        out.extend_from_slice(&values[base..base + v]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validates() {
+        let t = Trellis::new(16, 2, 1);
+        assert_eq!(t.states(), 65536);
+        assert_eq!(t.step_bits(), 2);
+        assert_eq!(t.overlaps(), 1 << 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "kV < L")]
+    fn rejects_kv_ge_l() {
+        Trellis::new(2, 2, 1);
+    }
+
+    #[test]
+    fn edges_follow_bitshift_rule() {
+        let t = Trellis::new(4, 1, 1); // 16 states, 2 edges out
+        // next of state 0b1011 with newbit 1 -> 0b1101
+        assert_eq!(t.next_state(0b1011, 1), 0b1101);
+        assert!(t.is_edge(0b1011, 0b1101));
+        assert!(t.is_edge(0b1011, 0b0101));
+        assert!(!t.is_edge(0b1011, 0b1110));
+        // Out-degree is exactly 2^kV.
+        let outs: Vec<u32> = (0..2u32).map(|c| t.next_state(0b1011, c)).collect();
+        assert_eq!(outs.len(), 2);
+        assert_ne!(outs[0], outs[1]);
+    }
+
+    #[test]
+    fn paper_figure2_trellis() {
+        // Figure 2: L=2, k=1, V=1 — each node transitions to the 2 nodes sharing
+        // its (in our orientation, low) overlap bit.
+        let t = Trellis::new(2, 1, 1);
+        assert_eq!(t.states(), 4);
+        for s in 0..4u32 {
+            let succs: Vec<u32> = (0..2).map(|c| t.next_state(s, c)).collect();
+            for &n in &succs {
+                assert!(t.is_edge(s, n));
+                // Overlap: low bit of n == high bit of s.
+                assert_eq!(n & 1, s >> 1);
+            }
+        }
+    }
+
+    #[test]
+    fn valid_walk_detection() {
+        let t = Trellis::new(4, 2, 1);
+        let mut states = vec![0b1010u32];
+        let mut s = states[0];
+        for c in [1u32, 3, 0, 2] {
+            s = t.next_state(s, c);
+            states.push(s);
+        }
+        assert!(t.is_valid_walk(&states, false));
+        let mut broken = states.clone();
+        broken[2] ^= 0b1; // flipping a low (overlap) bit breaks the edge
+        assert!(!t.is_valid_walk(&broken, false));
+    }
+
+    #[test]
+    fn decode_states_v2() {
+        let t = Trellis::new(4, 1, 2);
+        let mut values = vec![0.0f32; 16 * 2];
+        for s in 0..16 {
+            values[s * 2] = s as f32;
+            values[s * 2 + 1] = -(s as f32);
+        }
+        let out = decode_states(&t, &[3, 7], &values);
+        assert_eq!(out, vec![3.0, -3.0, 7.0, -7.0]);
+    }
+}

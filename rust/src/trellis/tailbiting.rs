@@ -1,0 +1,176 @@
+//! Tail-biting trellis quantization (paper §3.2, Algorithm 4, Table 2).
+//!
+//! A tail-biting walk's last state shares its high `L−kV` bits with the first
+//! state's low `L−kV` bits, so a length-T sequence costs exactly `kT` bits (no
+//! `L−kV`-bit start-state overhead). Exact tail-biting Viterbi is quadratic in the
+//! state count; Algorithm 4 approximates it with two Viterbi calls:
+//!
+//! 1. rotate the sequence by half its length and solve the *free* problem;
+//! 2. read off the overlap at the rotation point (which corresponds to the original
+//!    sequence's wrap-around boundary);
+//! 3. re-solve the original sequence with that overlap pinned at both ends.
+
+use super::viterbi::{Viterbi, ViterbiWorkspace};
+
+/// Result of a tail-biting quantization.
+#[derive(Clone, Debug)]
+pub struct TailBitingSolution {
+    /// One state per trellis step; satisfies the tail-biting constraint.
+    pub states: Vec<u32>,
+    /// Total squared error of the decoded walk.
+    pub cost: f64,
+    /// The pinned overlap (low `L-kV` bits of the first state).
+    pub overlap: u32,
+}
+
+/// Algorithm 4: approximate tail-biting quantization with two Viterbi calls.
+pub fn quantize_tail_biting(
+    vit: &Viterbi,
+    seq: &[f32],
+    ws: &mut ViterbiWorkspace,
+) -> TailBitingSolution {
+    let t = vit.trellis;
+    let steps = t.steps_for(seq.len());
+    assert!(steps >= 2, "tail-biting needs at least 2 steps");
+    assert!(
+        steps as u32 * t.step_bits() >= t.l,
+        "tail-biting needs steps*kV >= L (stream at least one window long)"
+    );
+
+    // Rotate right by half the steps (in weight units: V * steps/2).
+    let half = steps / 2;
+    let rot = half * t.v as usize;
+    let mut rotated = Vec::with_capacity(seq.len());
+    rotated.extend_from_slice(&seq[seq.len() - rot..]);
+    rotated.extend_from_slice(&seq[..seq.len() - rot]);
+
+    // Free solve on the rotated sequence.
+    let (rstates, _) = vit.quantize(&rotated, None, None, ws);
+
+    // The original wrap-around boundary sits between rotated steps (steps-half-1)
+    // and (steps-half): rotated step index `steps-half` corresponds to original
+    // step 0. The overlap shared by those two states pins the boundary.
+    let boundary_state = rstates[steps - half];
+    let overlap = boundary_state & t.overlap_mask();
+
+    // Constrained solve of the original sequence.
+    let (states, cost) = vit.quantize(seq, Some(overlap), Some(overlap), ws);
+    debug_assert!(t.is_valid_walk(&states, true));
+    TailBitingSolution { states, cost, overlap }
+}
+
+/// Exact tail-biting quantization: constrained Viterbi for every possible overlap.
+/// `O(2^(L-kV))` Viterbi calls — tractable only for small L; used by Table 2's
+/// "Optimal" column and by differential tests.
+pub fn quantize_tail_biting_exact(
+    vit: &Viterbi,
+    seq: &[f32],
+    ws: &mut ViterbiWorkspace,
+) -> TailBitingSolution {
+    let t = vit.trellis;
+    let mut best: Option<TailBitingSolution> = None;
+    for o in 0..t.overlaps() as u32 {
+        let (states, cost) = vit.quantize(seq, Some(o), Some(o), ws);
+        if best.as_ref().map_or(true, |b| cost < b.cost) {
+            best = Some(TailBitingSolution { states, cost, overlap: o });
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trellis::Trellis;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    fn random_codebook(trellis: &Trellis, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.gauss_vec(trellis.states() * trellis.v as usize)
+    }
+
+    #[test]
+    fn solution_is_tail_biting() {
+        prop_check("alg4 produces valid tail-biting walks", 20, |g| {
+            let l = g.usize_in(3, 8) as u32;
+            let k = g.usize_in(1, 2) as u32;
+            if k >= l {
+                return;
+            }
+            let trellis = Trellis::new(l, k, 1);
+            let values = g.gauss_vec(trellis.states());
+            let vit = Viterbi::new(trellis, &values);
+            let min_steps = (l as usize).div_ceil(k as usize).max(2);
+            let steps = g.usize_in(min_steps, min_steps + 20);
+            let seq = g.gauss_vec(steps);
+            let mut ws = ViterbiWorkspace::new();
+            let sol = quantize_tail_biting(&vit, &seq, &mut ws);
+            assert!(trellis.is_valid_walk(&sol.states, true));
+            assert_eq!(sol.states[0] & trellis.overlap_mask(), sol.overlap);
+        });
+    }
+
+    #[test]
+    fn approx_close_to_exact() {
+        // Table 2's claim at test scale: Alg. 4 is near-optimal on Gaussian input.
+        let trellis = Trellis::new(8, 2, 1);
+        let values = random_codebook(&trellis, 21);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(22);
+        let mut ws = ViterbiWorkspace::new();
+        let mut approx_total = 0.0;
+        let mut exact_total = 0.0;
+        for _ in 0..12 {
+            let seq = rng.gauss_vec(64);
+            approx_total += quantize_tail_biting(&vit, &seq, &mut ws).cost;
+            exact_total += quantize_tail_biting_exact(&vit, &seq, &mut ws).cost;
+        }
+        assert!(approx_total >= exact_total - 1e-6, "exact must lower-bound approx");
+        assert!(
+            approx_total <= exact_total * 1.05,
+            "approx {approx_total} too far from exact {exact_total}"
+        );
+    }
+
+    #[test]
+    fn exact_beats_or_matches_every_single_overlap() {
+        let trellis = Trellis::new(5, 1, 1);
+        let values = random_codebook(&trellis, 30);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(31);
+        let seq = rng.gauss_vec(12);
+        let mut ws = ViterbiWorkspace::new();
+        let exact = quantize_tail_biting_exact(&vit, &seq, &mut ws);
+        for o in 0..trellis.overlaps() as u32 {
+            let (_, cost) = vit.quantize(&seq, Some(o), Some(o), &mut ws);
+            assert!(exact.cost <= cost + 1e-6);
+        }
+    }
+
+    #[test]
+    fn free_solution_lower_bounds_tail_biting() {
+        let trellis = Trellis::new(6, 2, 1);
+        let values = random_codebook(&trellis, 40);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(41);
+        let seq = rng.gauss_vec(32);
+        let mut ws = ViterbiWorkspace::new();
+        let (_, free_cost) = vit.quantize(&seq, None, None, &mut ws);
+        let tb = quantize_tail_biting(&vit, &seq, &mut ws);
+        assert!(tb.cost >= free_cost - 1e-6);
+    }
+
+    #[test]
+    fn works_with_v2() {
+        let trellis = Trellis::new(6, 1, 2);
+        let values = random_codebook(&trellis, 50);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(51);
+        let seq = rng.gauss_vec(32); // 16 steps
+        let mut ws = ViterbiWorkspace::new();
+        let sol = quantize_tail_biting(&vit, &seq, &mut ws);
+        assert!(trellis.is_valid_walk(&sol.states, true));
+        assert_eq!(sol.states.len(), 16);
+    }
+}

@@ -1,0 +1,473 @@
+//! Viterbi quantization on the bitshift trellis (paper §2.3).
+//!
+//! Finds the walk whose decoded values minimize squared error against the input
+//! sequence. The textbook relaxation is `O(2^L · 2^kV)` per step; the bitshift
+//! structure admits a two-pass form that is `O(2^L)` per step:
+//!
+//! 1. predecessor sets are contiguous: preds(j) = { (j & lowmask)·2^kV + d }, so a
+//!    single sweep computes `minv[p] = min_d prev[p·2^kV + d]` for every overlap `p`;
+//! 2. then `cur[j] = minv[j & lowmask] + (C[j] − s_t)²` for every state `j`.
+//!
+//! Both passes stream memory in order. The naive form is kept (`quantize_naive`)
+//! for the design-ablation bench and as a differential-testing oracle.
+
+use super::Trellis;
+
+/// Reusable buffers: Viterbi over T=256, L=16 allocates ~0.8 MB of f32 state plus
+/// N·2^(L-kV) backpointer bytes; the quantization pipeline calls this hundreds of
+/// thousands of times, so buffers are recycled across calls.
+pub struct ViterbiWorkspace {
+    prev: Vec<f32>,
+    cur: Vec<f32>,
+    minv: Vec<f32>,
+    bp: Vec<u8>,
+}
+
+impl ViterbiWorkspace {
+    pub fn new() -> Self {
+        ViterbiWorkspace { prev: Vec::new(), cur: Vec::new(), minv: Vec::new(), bp: Vec::new() }
+    }
+
+    fn prepare(&mut self, states: usize, overlaps: usize, steps: usize) {
+        self.prev.clear();
+        self.prev.resize(states, 0.0);
+        self.cur.clear();
+        self.cur.resize(states, 0.0);
+        self.minv.clear();
+        self.minv.resize(overlaps, 0.0);
+        self.bp.clear();
+        self.bp.resize(overlaps * steps.saturating_sub(1), 0);
+    }
+}
+
+impl Default for ViterbiWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A trellis quantizer bound to a materialized codebook
+/// (`values[state*V + j]`, length `2^L * V`).
+pub struct Viterbi<'a> {
+    pub trellis: Trellis,
+    pub values: &'a [f32],
+}
+
+impl<'a> Viterbi<'a> {
+    pub fn new(trellis: Trellis, values: &'a [f32]) -> Self {
+        assert_eq!(
+            values.len(),
+            trellis.states() * trellis.v as usize,
+            "codebook length must be 2^L * V"
+        );
+        Viterbi { trellis, values }
+    }
+
+    /// Squared distance between state `j`'s value vector and the step-`t` slice of seq.
+    #[inline]
+    fn dist(&self, j: usize, step_vals: &[f32]) -> f32 {
+        let v = self.trellis.v as usize;
+        if v == 1 {
+            let d = self.values[j] - step_vals[0];
+            d * d
+        } else {
+            let base = j * v;
+            let mut acc = 0.0f32;
+            for i in 0..v {
+                let d = self.values[base + i] - step_vals[i];
+                acc += d * d;
+            }
+            acc
+        }
+    }
+
+    /// Quantize `seq` (length divisible by V) to the minimum-squared-error walk.
+    ///
+    /// `start_overlap` constrains the low `L-kV` bits of the first state;
+    /// `end_overlap` constrains the high `L-kV` bits of the last state. Both `None`
+    /// gives the unconstrained ("free") Viterbi solution.
+    ///
+    /// Returns the state path (one state per trellis step) and its total squared error.
+    pub fn quantize(
+        &self,
+        seq: &[f32],
+        start_overlap: Option<u32>,
+        end_overlap: Option<u32>,
+        ws: &mut ViterbiWorkspace,
+    ) -> (Vec<u32>, f64) {
+        let t = self.trellis;
+        let v = t.v as usize;
+        let steps = t.steps_for(seq.len());
+        assert!(steps >= 1);
+        let n_states = t.states();
+        let overlaps = t.overlaps();
+        let kv = t.step_bits();
+        let lomask = t.overlap_mask();
+        ws.prepare(n_states, overlaps, steps);
+
+        // Init: cost of starting in each state.
+        let s0 = &seq[0..v];
+        if let Some(o) = start_overlap {
+            debug_assert!(o <= lomask);
+            ws.prev.fill(f32::INFINITY);
+            // Allowed states: (j & lomask) == o, i.e. j = o + hi << (L-kV).
+            let mut j = o as usize;
+            while j < n_states {
+                ws.prev[j] = self.dist(j, s0);
+                j += overlaps;
+            }
+        } else {
+            for j in 0..n_states {
+                ws.prev[j] = self.dist(j, s0);
+            }
+        }
+
+        // Forward passes.
+        let fan = 1usize << kv;
+        for step in 1..steps {
+            let bp_row = &mut ws.bp[(step - 1) * overlaps..step * overlaps];
+            // Pass 1: per-overlap min over the contiguous predecessor block.
+            if fan == 4 {
+                // Specialized branch-light min-tree for the paper's k=2,V=1
+                // geometry (§Perf optimization: the generic loop's data-dependent
+                // branches mispredict ~50% on random costs).
+                for p in 0..overlaps {
+                    let b = &ws.prev[p * 4..p * 4 + 4];
+                    let (l01, a01) = if b[1] < b[0] { (b[1], 1u8) } else { (b[0], 0) };
+                    let (l23, a23) = if b[3] < b[2] { (b[3], 3u8) } else { (b[2], 2) };
+                    let (best, arg) = if l23 < l01 { (l23, a23) } else { (l01, a01) };
+                    ws.minv[p] = best;
+                    bp_row[p] = arg;
+                }
+            } else {
+                for p in 0..overlaps {
+                    let block = &ws.prev[p * fan..(p + 1) * fan];
+                    let mut best = block[0];
+                    let mut arg = 0u8;
+                    for (d, &c) in block.iter().enumerate().skip(1) {
+                        if c < best {
+                            best = c;
+                            arg = d as u8;
+                        }
+                    }
+                    ws.minv[p] = best;
+                    bp_row[p] = arg;
+                }
+            }
+            // Pass 2: relax into every state.
+            let sv = &seq[step * v..(step + 1) * v];
+            if v == 1 {
+                let s = sv[0];
+                for (j, cur) in ws.cur.iter_mut().enumerate() {
+                    let d = self.values[j] - s;
+                    *cur = ws.minv[j & lomask as usize] + d * d;
+                }
+            } else {
+                for j in 0..n_states {
+                    ws.cur[j] = ws.minv[j & lomask as usize] + self.dist(j, sv);
+                }
+            }
+            std::mem::swap(&mut ws.prev, &mut ws.cur);
+        }
+
+        // Select final state.
+        let (best_state, best_cost) = if let Some(o) = end_overlap {
+            // High L-kV bits of final state must equal o: j = lo | (o << kV).
+            let base = (o << kv) as usize;
+            let mut best = f32::INFINITY;
+            let mut arg = base;
+            for lo in 0..fan {
+                let j = base | lo;
+                if ws.prev[j] < best {
+                    best = ws.prev[j];
+                    arg = j;
+                }
+            }
+            (arg, best)
+        } else {
+            let mut best = f32::INFINITY;
+            let mut arg = 0usize;
+            for (j, &c) in ws.prev.iter().enumerate() {
+                if c < best {
+                    best = c;
+                    arg = j;
+                }
+            }
+            (arg, best)
+        };
+        assert!(
+            best_cost.is_finite(),
+            "no feasible walk (over-constrained trellis?)"
+        );
+
+        // Traceback.
+        let mut states = vec![0u32; steps];
+        states[steps - 1] = best_state as u32;
+        for step in (1..steps).rev() {
+            let j = states[step];
+            let p = (j & lomask) as usize;
+            let d = ws.bp[(step - 1) * overlaps + p] as u32;
+            states[step - 1] = ((p as u32) << kv) | d;
+        }
+        (states, best_cost as f64)
+    }
+
+    /// Textbook Viterbi: explicit relaxation over each state's 2^kV predecessors.
+    /// Same argmin as [`Self::quantize`]; kept as a differential oracle and for the
+    /// `ablations_design` bench.
+    pub fn quantize_naive(
+        &self,
+        seq: &[f32],
+        start_overlap: Option<u32>,
+        end_overlap: Option<u32>,
+    ) -> (Vec<u32>, f64) {
+        let t = self.trellis;
+        let v = t.v as usize;
+        let steps = t.steps_for(seq.len());
+        let n_states = t.states();
+        let kv = t.step_bits();
+        let lomask = t.overlap_mask();
+        let fan = 1usize << kv;
+
+        let mut prev = vec![0.0f32; n_states];
+        let mut cur = vec![0.0f32; n_states];
+        let mut bp = vec![0u32; n_states * steps.saturating_sub(1)];
+
+        let s0 = &seq[0..v];
+        for (j, pv) in prev.iter_mut().enumerate() {
+            *pv = if start_overlap.map_or(true, |o| (j as u32 & lomask) == o) {
+                self.dist(j, s0)
+            } else {
+                f32::INFINITY
+            };
+        }
+        for step in 1..steps {
+            let sv = &seq[step * v..(step + 1) * v];
+            for j in 0..n_states {
+                let p = j & lomask as usize;
+                let mut best = f32::INFINITY;
+                let mut argp = 0usize;
+                for d in 0..fan {
+                    let i = (p << kv) | d;
+                    if prev[i] < best {
+                        best = prev[i];
+                        argp = i;
+                    }
+                }
+                cur[j] = best + self.dist(j, sv);
+                bp[(step - 1) * n_states + j] = argp as u32;
+            }
+            std::mem::swap(&mut prev, &mut cur);
+        }
+        let mut best = f32::INFINITY;
+        let mut arg = 0usize;
+        for (j, &c) in prev.iter().enumerate() {
+            if end_overlap.map_or(true, |o| (j as u32 >> kv) == o) && c < best {
+                best = c;
+                arg = j;
+            }
+        }
+        assert!(best.is_finite(), "no feasible walk");
+        let mut states = vec![0u32; steps];
+        states[steps - 1] = arg as u32;
+        for step in (1..steps).rev() {
+            states[step - 1] = bp[(step - 1) * n_states + states[step] as usize];
+        }
+        (states, best as f64)
+    }
+
+    /// Decode a state path back to values.
+    pub fn decode(&self, states: &[u32]) -> Vec<f32> {
+        super::decode_states(&self.trellis, states, self.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+    use crate::util::stats::mse;
+
+    /// Exhaustive search over all walks (tiny trellises only).
+    fn brute_force(
+        trellis: &Trellis,
+        values: &[f32],
+        seq: &[f32],
+        start_overlap: Option<u32>,
+        end_overlap: Option<u32>,
+    ) -> f64 {
+        let steps = trellis.steps_for(seq.len());
+        let v = trellis.v as usize;
+        let fan = 1u32 << trellis.step_bits();
+        let mut best = f64::INFINITY;
+        for init in 0..trellis.states() as u32 {
+            if let Some(o) = start_overlap {
+                if init & trellis.overlap_mask() != o {
+                    continue;
+                }
+            }
+            // Enumerate all (steps-1) transition choices.
+            let total: u64 = (fan as u64).pow(steps as u32 - 1);
+            for code in 0..total {
+                let mut state = init;
+                let mut cost = 0.0f64;
+                for i in 0..v {
+                    cost += (values[init as usize * v + i] as f64 - seq[i] as f64).powi(2);
+                }
+                let mut c = code;
+                for step in 1..steps {
+                    state = trellis.next_state(state, (c % fan as u64) as u32);
+                    c /= fan as u64;
+                    for i in 0..v {
+                        cost += (values[state as usize * v + i] as f64
+                            - seq[step * v + i] as f64)
+                            .powi(2);
+                    }
+                }
+                if let Some(o) = end_overlap {
+                    if state >> trellis.step_bits() != o {
+                        continue;
+                    }
+                }
+                best = best.min(cost);
+            }
+        }
+        best
+    }
+
+    fn random_codebook(trellis: &Trellis, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.gauss_vec(trellis.states() * trellis.v as usize)
+    }
+
+    #[test]
+    fn matches_brute_force_small() {
+        let mut ws = ViterbiWorkspace::new();
+        for (l, k, v, t_len) in [(3u32, 1u32, 1u32, 4usize), (4, 2, 1, 4), (4, 1, 2, 6), (5, 2, 1, 3)] {
+            let trellis = Trellis::new(l, k, v);
+            let values = random_codebook(&trellis, 100 + l as u64);
+            let mut rng = Rng::new(l as u64);
+            let seq = rng.gauss_vec(t_len);
+            let vit = Viterbi::new(trellis, &values);
+            let (states, cost) = vit.quantize(&seq, None, None, &mut ws);
+            let bf = brute_force(&trellis, &values, &seq, None, None);
+            assert!(
+                (cost - bf).abs() < 1e-4 * (1.0 + bf),
+                "L={l} k={k} V={v}: viterbi={cost} brute={bf}"
+            );
+            assert!(trellis.is_valid_walk(&states, false));
+            // Cost must equal recomputed decode error.
+            let dec = vit.decode(&states);
+            let recomputed: f64 = dec
+                .iter()
+                .zip(&seq)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!((recomputed - cost).abs() < 1e-4 * (1.0 + cost));
+        }
+    }
+
+    #[test]
+    fn constrained_matches_brute_force() {
+        let mut ws = ViterbiWorkspace::new();
+        let trellis = Trellis::new(4, 1, 1);
+        let values = random_codebook(&trellis, 7);
+        let mut rng = Rng::new(3);
+        let seq = rng.gauss_vec(5);
+        let vit = Viterbi::new(trellis, &values);
+        for o in 0..trellis.overlaps() as u32 {
+            let (states, cost) = vit.quantize(&seq, Some(o), Some(o), &mut ws);
+            let bf = brute_force(&trellis, &values, &seq, Some(o), Some(o));
+            assert!((cost - bf).abs() < 1e-4 * (1.0 + bf), "overlap {o}");
+            assert_eq!(states[0] & trellis.overlap_mask(), o);
+            assert_eq!(states.last().unwrap() >> trellis.step_bits(), o);
+            assert!(trellis.is_valid_walk(&states, true));
+        }
+    }
+
+    #[test]
+    fn naive_and_fast_agree() {
+        prop_check("viterbi fast == naive", 25, |g| {
+            let l = g.usize_in(3, 8) as u32;
+            let k = g.usize_in(1, 2) as u32;
+            let v = if l > 4 && g.bool() { 2u32 } else { 1 };
+            if k * v >= l {
+                return;
+            }
+            let trellis = Trellis::new(l, k, v);
+            let values = g.gauss_vec(trellis.states() * v as usize);
+            // Dual overlap constraints are only feasible once the stream is at
+            // least one window long: steps * kV >= L.
+            let min_steps = (l as usize).div_ceil((k * v) as usize);
+            let steps = g.usize_in(min_steps.max(2), min_steps.max(2) + 10);
+            let seq = g.gauss_vec(steps * v as usize);
+            let vit = Viterbi::new(trellis, &values);
+            let mut ws = ViterbiWorkspace::new();
+            let o = if g.bool() {
+                Some(g.usize_in(0, trellis.overlaps() - 1) as u32)
+            } else {
+                None
+            };
+            let (sf, cf) = vit.quantize(&seq, o, o, &mut ws);
+            let (sn, cn) = vit.quantize_naive(&seq, o, o);
+            assert!((cf - cn).abs() < 1e-4 * (1.0 + cn), "fast={cf} naive={cn}");
+            // Paths may differ on exact ties; costs must match.
+            assert!(trellis.is_valid_walk(&sf, false));
+            assert!(trellis.is_valid_walk(&sn, false));
+        });
+    }
+
+    #[test]
+    fn quantizing_gaussian_reduces_error_with_l() {
+        // Larger L => more states => lower distortion (Table 10's mechanism).
+        let mut rng = Rng::new(42);
+        let seq = rng.gauss_vec(256);
+        let mut prev_mse = f64::INFINITY;
+        let mut ws = ViterbiWorkspace::new();
+        for l in [6u32, 8, 10] {
+            let trellis = Trellis::new(l, 2, 1);
+            let values = random_codebook(&trellis, 1000 + l as u64);
+            let vit = Viterbi::new(trellis, &values);
+            let (states, _) = vit.quantize(&seq, None, None, &mut ws);
+            let dec = vit.decode(&states);
+            let e = mse(&dec, &seq);
+            assert!(e < prev_mse, "L={l}: {e} !< {prev_mse}");
+            prev_mse = e;
+        }
+    }
+
+    #[test]
+    fn single_step_sequence() {
+        let trellis = Trellis::new(4, 2, 1);
+        let values = random_codebook(&trellis, 5);
+        let vit = Viterbi::new(trellis, &values);
+        let mut ws = ViterbiWorkspace::new();
+        let (states, cost) = vit.quantize(&[0.37], None, None, &mut ws);
+        assert_eq!(states.len(), 1);
+        // Must pick the globally nearest codeword.
+        let best = values
+            .iter()
+            .map(|&v| ((v - 0.37) as f64).powi(2))
+            .fold(f64::INFINITY, f64::min);
+        assert!((cost - best).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workspace_reuse_is_clean() {
+        // Two quantizations with the same workspace give identical results.
+        let trellis = Trellis::new(8, 2, 1);
+        let values = random_codebook(&trellis, 11);
+        let vit = Viterbi::new(trellis, &values);
+        let mut rng = Rng::new(12);
+        let seq = rng.gauss_vec(32);
+        let mut ws = ViterbiWorkspace::new();
+        let a = vit.quantize(&seq, None, None, &mut ws);
+        // Pollute with a different-shaped call.
+        let other = rng.gauss_vec(8);
+        let _ = vit.quantize(&other, Some(3), Some(3), &mut ws);
+        let b = vit.quantize(&seq, None, None, &mut ws);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+}

@@ -1,0 +1,160 @@
+//! IEEE 754 binary16 (half precision) conversion.
+//!
+//! The 3INST compute code (paper Alg. 2) builds pseudorandom Gaussians by XOR-ing
+//! random bits into the sign/exponent-low/mantissa fields of a magic FP16 constant,
+//! so we need exact binary16 semantics. The offline environment has no `half` crate;
+//! this is a from-scratch implementation, round-to-nearest-even on the f32->f16 path.
+//!
+//! Layout: bit 15 = sign, bits 14..10 = exponent (bias 15), bits 9..0 = mantissa.
+
+/// Convert binary16 bits to f32 (exact; covers subnormals, infinities, NaN).
+#[inline]
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = (bits >> 15) as u32;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let man = (bits & 0x3FF) as u32;
+    let f32_bits = if exp == 0 {
+        if man == 0 {
+            sign << 31 // signed zero
+        } else {
+            // Subnormal: value = man * 2^-24. If the highest set bit of man is bit j,
+            // the normalized value is 1.xxx * 2^(j-24), i.e. f32 exponent j + 103.
+            let j = 31 - man.leading_zeros();
+            let m = (man << (10 - j)) & 0x3FF; // normalized mantissa, implicit bit dropped
+            let f32_exp = j + 103;
+            (sign << 31) | (f32_exp << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        // Inf / NaN
+        (sign << 31) | (0xFF << 23) | (man << 13)
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(f32_bits)
+}
+
+/// Convert f32 to binary16 bits, round-to-nearest-even.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if man != 0 { 0x200 } else { 0 };
+    }
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // Normal half. 13 bits dropped from mantissa; round to nearest even.
+        let half_exp = ((e + 15) as u16) << 10;
+        let half_man = (man >> 13) as u16;
+        let rest = man & 0x1FFF;
+        let mut h = sign | half_exp | half_man;
+        if rest > 0x1000 || (rest == 0x1000 && (half_man & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent: correct (rounds up to inf)
+        }
+        return h;
+    }
+    if e >= -25 {
+        // Subnormal half: value = m * 2^(e) with implicit bit made explicit.
+        let m = man | 0x80_0000; // 24-bit significand
+        let shift = (-14 - e) as u32 + 13; // bits to drop
+        let half_man = (m >> shift) as u16;
+        let rest_mask = (1u32 << shift) - 1;
+        let rest = m & rest_mask;
+        let halfway = 1u32 << (shift - 1);
+        let mut h = sign | half_man;
+        if rest > halfway || (rest == halfway && (half_man & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    sign // underflow to signed zero
+}
+
+/// Round an f32 through binary16 precision (quantize-dequantize).
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0xBC00), -1.0);
+        assert_eq!(f16_to_f32(0x4000), 2.0);
+        assert_eq!(f16_to_f32(0x3800), 0.5);
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xFC00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(0x7E00).is_nan());
+        // Largest normal half: 65504.
+        assert_eq!(f16_to_f32(0x7BFF), 65504.0);
+        // Smallest positive subnormal: 2^-24.
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        // Smallest positive normal: 2^-14.
+        assert_eq!(f16_to_f32(0x0400), 2.0f32.powi(-14));
+    }
+
+    #[test]
+    fn magic_0922() {
+        // The 3INST magic constant. f16(0.922) = 0x3B60 (nearest-even).
+        let bits = f32_to_f16(0.922);
+        assert_eq!(bits, 0x3B60, "got {bits:#06x}");
+        let back = f16_to_f32(bits);
+        assert!((back - 0.922).abs() < 5e-4, "back={back}");
+    }
+
+    #[test]
+    fn roundtrip_all_f16_bit_patterns() {
+        // Every non-NaN half must roundtrip exactly through f32.
+        for bits in 0u16..=0xFFFF {
+            let f = f16_to_f32(bits);
+            if f.is_nan() {
+                continue;
+            }
+            let back = f32_to_f16(f);
+            assert_eq!(back, bits, "bits={bits:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn rounding_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and 1.0+2^-10 -> rounds to even (1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(x), 0x3C00);
+        // 1.0 + 3*2^-11 is halfway between odd and even mantissa -> rounds up to even.
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16(y), 0x3C02);
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f32_to_f16(1e-9), 0);
+        assert_eq!(f32_to_f16(-1e-9), 0x8000);
+        assert_eq!(f16_to_f32(f32_to_f16(65504.0)), 65504.0);
+        // 65520 is halfway to the next (unrepresentable) value -> inf.
+        assert_eq!(f16_to_f32(f32_to_f16(65520.0)), f32::INFINITY);
+    }
+
+    #[test]
+    fn monotone_on_positive_grid() {
+        let mut prev = -1.0f32;
+        for bits in 0u16..0x7C00 {
+            let f = f16_to_f32(bits);
+            assert!(f > prev, "bits={bits:#06x}");
+            prev = f;
+        }
+    }
+}

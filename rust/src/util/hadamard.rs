@@ -1,0 +1,301 @@
+//! Fast Walsh–Hadamard transform and the Random Hadamard Transform (RHT) used for
+//! incoherence processing (paper §2.1).
+//!
+//! `hadamard_inplace` applies the orthonormal H_n (scaled by 1/sqrt(n)) for
+//! n = m * 2^a where m ∈ {1, 12, 20}: powers of two use the butterfly FWHT, and the
+//! 12/20 factors use hard-coded base Hadamard matrices (Paley constructions — the
+//! paper sources these from Sloane's tables) combined by the Kronecker identity
+//! H_{m·2^a} = H_m ⊗ H_{2^a}.
+
+/// Is n a supported Hadamard size?
+pub fn supported(n: usize) -> bool {
+    base_factor(n).is_some()
+}
+
+/// Decompose n = m * 2^a with m in {1, 12, 20}; returns m.
+fn base_factor(n: usize) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    let mut v = n;
+    while v % 2 == 0 {
+        v /= 2;
+    }
+    match v {
+        1 | 3 | 5 => {
+            // m=3 -> needs H12 = 3*4 (so n must have >= 2 factors of two), m=5 -> H20.
+            let m = match v {
+                1 => 1,
+                3 => 12,
+                5 => 20,
+                _ => unreachable!(),
+            };
+            if n % m == 0 {
+                Some(m)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// First rows of a 12x12 Hadamard matrix (Paley I from quadratic residues mod 11).
+/// Row 0 is all ones; row i>0 is built by cycling the residue signature.
+fn h12() -> Vec<f32> {
+    // Quadratic residues mod 11: {1,3,4,5,9}.
+    let qr = [1usize, 3, 4, 5, 9];
+    let mut m = vec![1.0f32; 12 * 12];
+    // Paley: B is 11x11 circulant with b_ij = chi(j - i); border with +1 row/col,
+    // diagonal of B set to -1.
+    for i in 0..11 {
+        for j in 0..11 {
+            let v = if i == j {
+                -1.0
+            } else {
+                let d = (11 + j as isize - i as isize) as usize % 11;
+                if qr.contains(&d) {
+                    1.0
+                } else {
+                    -1.0
+                }
+            };
+            m[(i + 1) * 12 + (j + 1)] = v;
+        }
+    }
+    m
+}
+
+/// 20x20 Hadamard matrix via Paley I over GF(19).
+fn h20() -> Vec<f32> {
+    // Quadratic residues mod 19.
+    let mut qr = Vec::new();
+    for x in 1..19usize {
+        qr.push(x * x % 19);
+    }
+    qr.sort();
+    qr.dedup();
+    let mut m = vec![1.0f32; 20 * 20];
+    for i in 0..19 {
+        for j in 0..19 {
+            let v = if i == j {
+                -1.0
+            } else {
+                let d = (19 + j as isize - i as isize) as usize % 19;
+                if qr.contains(&d) {
+                    1.0
+                } else {
+                    -1.0
+                }
+            };
+            m[(i + 1) * 20 + (j + 1)] = v;
+        }
+    }
+    m
+}
+
+/// In-place orthonormal Hadamard transform of x (length must be supported).
+pub fn hadamard_inplace(x: &mut [f32]) {
+    let n = x.len();
+    let m = base_factor(n).unwrap_or_else(|| panic!("unsupported Hadamard size {n}"));
+    let p2 = n / m; // power-of-two part
+    // First: FWHT on each contiguous stride-1 segment of length p2 (H_m (x) H_p2 layout:
+    // index = i_m * p2 + i_p2).
+    for seg in x.chunks_mut(p2) {
+        fwht_pow2(seg);
+    }
+    if m > 1 {
+        let base = if m == 12 { h12() } else { h20() };
+        let scale = 1.0 / (m as f32).sqrt();
+        let mut tmp = vec![0.0f32; m];
+        for col in 0..p2 {
+            for (i, t) in tmp.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for j in 0..m {
+                    s += base[i * m + j] * x[j * p2 + col];
+                }
+                *t = s * scale;
+            }
+            for i in 0..m {
+                x[i * p2 + col] = tmp[i];
+            }
+        }
+    }
+}
+
+/// Orthonormal FWHT (power-of-two length), butterfly, O(n log n).
+fn fwht_pow2(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two() || n == 1, "length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Apply the signed orthonormal Hadamard: y = H · diag(sign) · x, in place.
+/// `sign` entries must be ±1. This is the RHT building block V_n S_n.
+pub fn rht_forward(x: &mut [f32], sign: &[f32]) {
+    assert_eq!(x.len(), sign.len());
+    for (v, &s) in x.iter_mut().zip(sign) {
+        *v *= s;
+    }
+    hadamard_inplace(x);
+}
+
+/// Inverse of [`rht_forward`]: x = diag(sign) · H^T · y = diag(sign) · H · y
+/// (H is symmetric orthonormal for the FWHT part; for H12/H20 we use H^T = H^-1
+/// via applying the transpose explicitly).
+pub fn rht_inverse(x: &mut [f32], sign: &[f32]) {
+    assert_eq!(x.len(), sign.len());
+    hadamard_inverse_inplace(x);
+    for (v, &s) in x.iter_mut().zip(sign) {
+        *v *= s;
+    }
+}
+
+/// Inverse orthonormal Hadamard transform. For the pure power-of-two FWHT, H is
+/// symmetric so inverse == forward; for the H12/H20 factors, apply the transpose.
+pub fn hadamard_inverse_inplace(x: &mut [f32]) {
+    let n = x.len();
+    let m = base_factor(n).unwrap_or_else(|| panic!("unsupported Hadamard size {n}"));
+    let p2 = n / m;
+    if m > 1 {
+        let base = if m == 12 { h12() } else { h20() };
+        let scale = 1.0 / (m as f32).sqrt();
+        let mut tmp = vec![0.0f32; m];
+        for col in 0..p2 {
+            for (i, t) in tmp.iter_mut().enumerate() {
+                let mut s = 0.0f32;
+                for j in 0..m {
+                    // transpose: base[j][i]
+                    s += base[j * m + i] * x[j * p2 + col];
+                }
+                *t = s * scale;
+            }
+            for i in 0..m {
+                x[i * p2 + col] = tmp[i];
+            }
+        }
+    }
+    for seg in x.chunks_mut(p2) {
+        fwht_pow2(seg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_orthonormal(n: usize) {
+        // ||Hx|| == ||x|| and H(H^-1 x) == x.
+        let mut rng = Rng::new(n as u64);
+        let x0 = rng.gauss_vec(n);
+        let mut x = x0.clone();
+        hadamard_inplace(&mut x);
+        let n0: f64 = x0.iter().map(|&v| (v as f64).powi(2)).sum();
+        let n1: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((n0 - n1).abs() / n0.max(1e-9) < 1e-4, "norm not preserved at n={n}");
+        hadamard_inverse_inplace(&mut x);
+        for (a, b) in x.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-4, "roundtrip failed at n={n}");
+        }
+    }
+
+    #[test]
+    fn pow2_sizes() {
+        for n in [1usize, 2, 4, 8, 64, 256, 1024] {
+            check_orthonormal(n);
+        }
+    }
+
+    #[test]
+    fn h12_h20_sizes() {
+        for n in [12usize, 24, 48, 20, 40, 80, 96] {
+            check_orthonormal(n);
+        }
+    }
+
+    #[test]
+    fn unsupported_sizes() {
+        assert!(!supported(0));
+        assert!(!supported(7));
+        assert!(!supported(36)); // 9 * 4 — odd part 9 unsupported
+        assert!(supported(12));
+        assert!(supported(20));
+        assert!(supported(4096));
+    }
+
+    #[test]
+    fn fwht_known_values() {
+        // H_2 [1, 0] = [1/sqrt2, 1/sqrt2]
+        let mut x = vec![1.0, 0.0];
+        hadamard_inplace(&mut x);
+        let s = 1.0 / 2f32.sqrt();
+        assert!((x[0] - s).abs() < 1e-6 && (x[1] - s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn h12_rows_orthogonal() {
+        let m = h12();
+        for i in 0..12 {
+            for j in 0..12 {
+                let dot: f32 = (0..12).map(|k| m[i * 12 + k] * m[j * 12 + k]).sum();
+                let expect = if i == j { 12.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "rows {i},{j}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn h20_rows_orthogonal() {
+        let m = h20();
+        for i in 0..20 {
+            for j in 0..20 {
+                let dot: f32 = (0..20).map(|k| m[i * 20 + k] * m[j * 20 + k]).sum();
+                let expect = if i == j { 20.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "rows {i},{j}: {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn rht_roundtrip() {
+        let mut rng = Rng::new(9);
+        let n = 128;
+        let sign: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+        let x0 = rng.gauss_vec(n);
+        let mut x = x0.clone();
+        rht_forward(&mut x, &sign);
+        rht_inverse(&mut x, &sign);
+        for (a, b) in x.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rht_flattens_spike() {
+        // Incoherence in action: a one-hot vector spreads to magnitude 1/sqrt(n).
+        let n = 256;
+        let mut rng = Rng::new(10);
+        let sign: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+        let mut x = vec![0.0f32; n];
+        x[17] = 1.0;
+        rht_forward(&mut x, &sign);
+        let maxabs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!((maxabs - 1.0 / (n as f32).sqrt()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,235 @@
+//! Dense linear algebra for the quantization pipeline: Cholesky, block-LDL
+//! factorization (the feedback matrix of BlockLDLQ), triangular solves, and SPD
+//! regularization of empirical Hessians.
+
+use crate::util::matrix::Matrix;
+
+/// Lower Cholesky factor L with H = L L^T. Returns None if H is not positive
+/// definite (within a small tolerance).
+pub fn cholesky(h: &Matrix) -> Option<Matrix> {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = h.at(i, j) as f64;
+            for k in 0..j {
+                s -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Block-LDL decomposition with block size `b` (must divide n):
+/// `H = L D L^T` where `L` is unit-lower-*block*-triangular (identity diagonal
+/// blocks) and `D` is block diagonal. Returns `(L, D)`.
+///
+/// This is the decomposition BlockLDLQ (paper Alg. 5) consumes: the feedback matrix
+/// is `A = L - I`. Computed from the scalar Cholesky `H = C C^T` via
+/// `L = C (blockdiag(C))^{-1}` and `D = blockdiag(C) blockdiag(C)^T`.
+pub fn block_ldl(h: &Matrix, b: usize) -> Option<(Matrix, Matrix)> {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    assert!(b > 0 && n % b == 0, "block size {b} must divide {n}");
+    let c = cholesky(h)?;
+    // Invert each diagonal b x b block of C (lower triangular -> forward substitution).
+    let nb = n / b;
+    let mut l = Matrix::zeros(n, n);
+    let mut d = Matrix::zeros(n, n);
+    for bi in 0..nb {
+        let o = bi * b;
+        // D block = C_bb C_bb^T
+        for i in 0..b {
+            for j in 0..b {
+                let mut s = 0.0f64;
+                for k in 0..b {
+                    s += c.at(o + i, o + k) as f64 * c.at(o + j, o + k) as f64;
+                }
+                *d.at_mut(o + i, o + j) = s as f32;
+            }
+        }
+        // Invert C_bb (lower-triangular) into inv.
+        let mut inv = Matrix::zeros(b, b);
+        for col in 0..b {
+            // Solve C_bb x = e_col
+            let mut x = vec![0.0f64; b];
+            for i in 0..b {
+                let mut s = if i == col { 1.0 } else { 0.0 };
+                for k in 0..i {
+                    s -= c.at(o + i, o + k) as f64 * x[k];
+                }
+                x[i] = s / c.at(o + i, o + i) as f64;
+            }
+            for i in 0..b {
+                *inv.at_mut(i, col) = x[i] as f32;
+            }
+        }
+        // L block column: rows bi..nb, L_{r,bi} = C_{r,bi} @ inv
+        for br in bi..nb
+        {
+            let ro = br * b;
+            for i in 0..b {
+                for j in 0..b {
+                    let mut s = 0.0f64;
+                    for k in 0..b {
+                        s += c.at(ro + i, o + k) as f64 * inv.at(k, j) as f64;
+                    }
+                    *l.at_mut(ro + i, o + j) = s as f32;
+                }
+            }
+        }
+    }
+    Some((l, d))
+}
+
+/// Symmetrize and add `lambda * mean(diag) * I` until Cholesky succeeds.
+/// Returns the regularized matrix (standard GPTQ/QuIP# Hessian conditioning).
+pub fn regularize_spd(h: &Matrix, base_lambda: f64) -> Matrix {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut m = h.clone();
+    // Symmetrize.
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (m.at(i, j) + m.at(j, i));
+            *m.at_mut(i, j) = v;
+            *m.at_mut(j, i) = v;
+        }
+    }
+    let mean_diag = (m.trace() / n as f64).max(1e-12);
+    let mut lambda = base_lambda;
+    loop {
+        let mut trial = m.clone();
+        let add = (lambda * mean_diag) as f32;
+        for i in 0..n {
+            *trial.at_mut(i, i) += add;
+        }
+        if cholesky(&trial).is_some() {
+            return trial;
+        }
+        lambda *= 10.0;
+        assert!(lambda < 1e6, "could not regularize Hessian to SPD");
+    }
+}
+
+/// Solve L x = rhs for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Matrix, rhs: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(rhs.len(), n);
+    let mut x = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = rhs[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * x[k];
+        }
+        x[i] = s / l.at(i, i) as f64;
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let a = Matrix::gaussian(n, n, 1.0, &mut rng);
+        let mut h = a.matmul(&a.transpose());
+        for i in 0..n {
+            *h.at_mut(i, i) += n as f32 * 0.1;
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let h = random_spd(16, 1);
+        let l = cholesky(&h).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for (a, b) in rec.data.iter().zip(&h.data) {
+            assert!((a - b).abs() < 1e-2 * h.fro_norm() as f32, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&m).is_none());
+    }
+
+    #[test]
+    fn block_ldl_reconstructs() {
+        for (n, b) in [(8, 2), (16, 4), (12, 3), (16, 16), (8, 1)] {
+            let h = random_spd(n, 7 + n as u64);
+            let (l, d) = block_ldl(&h, b).unwrap();
+            let rec = l.matmul(&d).matmul(&l.transpose());
+            let tol = 1e-2 * h.fro_norm() as f32;
+            for (a, bb) in rec.data.iter().zip(&h.data) {
+                assert!((a - bb).abs() < tol, "n={n} b={b}: {a} vs {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_ldl_unit_diagonal_blocks() {
+        let h = random_spd(12, 3);
+        let (l, _) = block_ldl(&h, 4).unwrap();
+        for bi in 0..3 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    let v = l.at(bi * 4 + i, bi * 4 + j);
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!((v - expect).abs() < 1e-4, "block {bi} ({i},{j}) = {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_ldl_strictly_lower() {
+        let h = random_spd(12, 4);
+        let (l, d) = block_ldl(&h, 4).unwrap();
+        // Everything above the block diagonal must be zero in L; D block-diagonal.
+        for i in 0..12 {
+            for j in 0..12 {
+                if j / 4 > i / 4 {
+                    assert_eq!(l.at(i, j), 0.0);
+                    assert_eq!(d.at(i, j), 0.0);
+                }
+                if j / 4 < i / 4 {
+                    assert_eq!(d.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn regularize_makes_spd() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        let r = regularize_spd(&m, 0.01);
+        assert!(cholesky(&r).is_some());
+    }
+
+    #[test]
+    fn solve_lower_works() {
+        let h = random_spd(8, 5);
+        let l = cholesky(&h).unwrap();
+        let mut rng = Rng::new(6);
+        let x_true = rng.gauss_vec(8);
+        let rhs = l.matvec(&x_true);
+        let x = solve_lower(&l, &rhs);
+        for (a, b) in x.iter().zip(&x_true) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! Dense row-major f32 matrices and the blocked GEMM/GEMV kernels that back the
+//! transformer substrate, BlockLDLQ, and the evaluation harness.
+//!
+//! Single-core CPU: the hot kernels are written so LLVM auto-vectorizes the inner
+//! loops (unit-stride FMA chains, fixed-width accumulator blocks). Measured numbers
+//! live in `EXPERIMENTS.md` §Perf.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// I.i.d. N(0, std^2) entries.
+    pub fn gaussian(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.gauss_f32() * std).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.at(i, i) as f64).sum()
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Extract a column-block [c0, c1) as a new matrix.
+    pub fn col_block(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = Matrix::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write a column-block starting at c0.
+    pub fn set_col_block(&mut self, c0: usize, block: &Matrix) {
+        assert_eq!(self.rows, block.rows);
+        assert!(c0 + block.cols <= self.cols);
+        for r in 0..self.rows {
+            let dst = r * self.cols + c0;
+            self.data[dst..dst + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    /// C = A @ B (allocating).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        gemm(self, b, &mut c);
+        c
+    }
+
+    /// y = A @ x (allocating).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.rows];
+        gemv(self, x, &mut y);
+        y
+    }
+}
+
+/// C = A @ B, blocked over K with 4-wide row accumulation; C must be zeroed or holds
+/// the accumulation base (C += A@B semantics on pre-filled C).
+pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "gemm inner dim");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    // i-k-j loop order: the j-inner loop is unit-stride over both B and C, which LLVM
+    // vectorizes. Block over k to keep the C row hot in L1/L2.
+    const KB: usize = 256;
+    for i in 0..m {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for kb in (0..k).step_by(KB) {
+            let kend = (kb + KB).min(k);
+            for kk in kb..kend {
+                let aik = a.data[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// y = A @ x. Four-row blocking so the loads of x amortize over four FMA chains.
+pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    let n = a.cols;
+    let mut r = 0;
+    while r + 4 <= a.rows {
+        let r0 = &a.data[r * n..(r + 1) * n];
+        let r1 = &a.data[(r + 1) * n..(r + 2) * n];
+        let r2 = &a.data[(r + 2) * n..(r + 3) * n];
+        let r3 = &a.data[(r + 3) * n..(r + 4) * n];
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for i in 0..n {
+            let xv = x[i];
+            s0 += r0[i] * xv;
+            s1 += r1[i] * xv;
+            s2 += r2[i] * xv;
+            s3 += r3[i] * xv;
+        }
+        y[r] = s0;
+        y[r + 1] = s1;
+        y[r + 2] = s2;
+        y[r + 3] = s3;
+        r += 4;
+    }
+    while r < a.rows {
+        let row = &a.data[r * n..(r + 1) * n];
+        y[r] = dot(row, x);
+        r += 1;
+    }
+}
+
+/// Dot product with 4 accumulators (breaks the FP dependence chain for vectorization).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 8..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 4, 5), (16, 16, 16), (33, 17, 9), (1, 7, 1)] {
+            let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+            let b = Matrix::gaussian(k, n, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            let expected = naive_matmul(&a, &b);
+            for (x, y) in c.data.iter().zip(&expected.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(2);
+        for (m, n) in [(5, 7), (64, 128), (17, 3), (4, 4)] {
+            let a = Matrix::gaussian(m, n, 1.0, &mut rng);
+            let x = rng.gauss_vec(n);
+            let y = a.matvec(&x);
+            let xm = Matrix::from_vec(n, 1, x.clone());
+            let ym = a.matmul(&xm);
+            for i in 0..m {
+                assert!((y[i] - ym.data[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::gaussian(37, 53, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::gaussian(8, 8, 1.0, &mut rng);
+        let i = Matrix::identity(8);
+        let ai = a.matmul(&i);
+        for (x, y) in ai.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn col_block_roundtrip() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::gaussian(6, 10, 1.0, &mut rng);
+        let blk = a.col_block(3, 7);
+        assert_eq!(blk.cols, 4);
+        let mut b = Matrix::zeros(6, 10);
+        b.set_col_block(3, &blk);
+        for r in 0..6 {
+            for c in 3..7 {
+                assert_eq!(b.at(r, c), a.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(6);
+        for n in [0usize, 1, 7, 8, 9, 31, 32, 100] {
+            let a = rng.gauss_vec(n);
+            let b = rng.gauss_vec(n);
+            let expected: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!((dot(&a, &b) as f64 - expected).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn trace_and_norm() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.trace(), 5.0);
+        assert!((m.fro_norm() - (30.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        // gemm on pre-filled C implements C += A@B.
+        let a = Matrix::from_vec(1, 1, vec![2.0]);
+        let b = Matrix::from_vec(1, 1, vec![3.0]);
+        let mut c = Matrix::from_vec(1, 1, vec![10.0]);
+        gemm(&a, &b, &mut c);
+        assert_eq!(c.data[0], 16.0);
+    }
+}

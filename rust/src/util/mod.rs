@@ -1,0 +1,29 @@
+//! Foundational substrates (offline environment: rand/serde/rayon/half/proptest are
+//! unavailable, so each role is implemented here — see DESIGN.md §3).
+
+pub mod f16;
+pub mod hadamard;
+pub mod json;
+pub mod linalg;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Wall-clock timer for the bench harness.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}

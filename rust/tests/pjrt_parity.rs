@@ -1,0 +1,159 @@
+//! The AOT bridge parity test: the Pallas-lowered HLO artifact executed through
+//! PJRT must produce the same numbers as the native Rust fused decoder on the
+//! same `QuantizedMatrix`. This is the proof that Layer 1/2 (Python, build time)
+//! and Layer 3 (Rust, run time) implement one semantics.
+
+use std::path::Path;
+
+use qtip::quant::{quantize_matrix_qtip, QtipConfig};
+use qtip::runtime::{PjrtRuntime, Registry};
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn quantize_for(rows: usize, cols: usize, code: &str, k: u32) -> qtip::quant::QuantizedMatrix {
+    let mut rng = Rng::new(rows as u64 ^ k as u64);
+    let w = Matrix::gaussian(rows, cols, 0.7, &mut rng);
+    let h = Matrix::identity(cols);
+    let cfg = QtipConfig {
+        l: 16,
+        k,
+        v: 1,
+        tx: 16,
+        ty: 16,
+        code: code.into(),
+        seed: 0xA0_7E,
+    };
+    quantize_matrix_qtip(&w, &h, &cfg).qm
+}
+
+#[test]
+fn pjrt_decode_matvec_matches_native() {
+    let dir = artifacts();
+    if !dir.join("aot_manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let reg = Registry::open(&dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+
+    for (rows, cols, code, k) in [
+        (128usize, 128usize, "3inst", 2u32),
+        (512, 128, "3inst", 2),
+        (128, 512, "3inst", 2),
+        (128, 128, "1mad", 2),
+        (128, 128, "3inst", 4),
+    ] {
+        let info = reg
+            .find_decode_matvec(rows, cols, code, k)
+            .unwrap_or_else(|| panic!("missing artifact {code} {rows}x{cols} k{k}"));
+        let exe = reg.load_decode_matvec(&rt, info).unwrap();
+        let qm = quantize_for(rows, cols, code, k);
+
+        let mut rng = Rng::new(7);
+        let xt = rng.gauss_vec(cols);
+        // Incoherent-space parity (the kernel's own contract).
+        let mut y_native = vec![0.0f32; rows];
+        qm.matvec_tilde(&xt, &mut y_native);
+        let y_pjrt = exe.matvec_tilde(&qm, &xt).unwrap();
+        let scale = y_native.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+        for (i, (a, b)) in y_pjrt.iter().zip(&y_native).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * scale,
+                "{code} {rows}x{cols} k{k} row {i}: pjrt {a} native {b}"
+            );
+        }
+
+        // Full original-space parity (RHT sandwich included).
+        let x = rng.gauss_vec(cols);
+        let y_full_native = qm.matvec(&x);
+        let y_full_pjrt = exe.matvec(&qm, &x).unwrap();
+        for (a, b) in y_full_pjrt.iter().zip(&y_full_native) {
+            assert!((a - b).abs() < 1e-3 * scale);
+        }
+        eprintln!("parity OK: {code} {rows}x{cols} k{k}");
+    }
+}
+
+#[test]
+fn pjrt_dense_matvec_baseline_works() {
+    let dir = artifacts();
+    if !dir.join("aot_manifest.json").exists() {
+        return;
+    }
+    let reg = Registry::open(&dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let info = reg.find("matvec_f32_128x128").expect("dense artifact");
+    let exe = rt.load_hlo(&info.path).unwrap();
+    let mut rng = Rng::new(3);
+    let w = Matrix::gaussian(128, 128, 1.0, &mut rng);
+    let x = rng.gauss_vec(128);
+    let expect = w.matvec(&x);
+    let wl = xla::Literal::vec1(&w.data).reshape(&[128, 128]).unwrap();
+    let xl = xla::Literal::vec1(&x);
+    let got = PjrtRuntime::run_to_f32(&exe, &[wl, xl]).unwrap();
+    for (a, b) in got.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn pjrt_quantized_mlp_composes() {
+    // The composed 3-projection MLP graph must execute and stay finite; its
+    // structure (3 decode-matvecs + silu fused in one module) is the L2 demo.
+    let dir = artifacts();
+    if !dir.join("aot_manifest.json").exists() {
+        return;
+    }
+    let reg = Registry::open(&dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let info = reg.find("quantized_mlp_3inst_128_k2").expect("mlp artifact");
+    let exe = rt.load_hlo(&info.path).unwrap();
+
+    let gate = quantize_for(512, 128, "3inst", 2);
+    let up = quantize_for(512, 128, "3inst", 2);
+    let down = quantize_for(128, 512, "3inst", 2);
+    let mut rng = Rng::new(9);
+    let x = rng.gauss_vec(128);
+
+    let lit = |qm: &qtip::quant::QuantizedMatrix| {
+        xla::Literal::vec1(&qm.packed)
+            .reshape(&[(qm.rows / 16) as i64, (qm.tile_words * qm.cols / 16) as i64])
+            .unwrap()
+    };
+    let y = PjrtRuntime::run_to_f32(
+        &exe,
+        &[
+            lit(&gate),
+            lit(&up),
+            lit(&down),
+            xla::Literal::vec1(&x),
+            xla::Literal::from(gate.scale),
+            xla::Literal::from(up.scale),
+            xla::Literal::from(down.scale),
+        ],
+    )
+    .unwrap();
+    assert_eq!(y.len(), 128);
+    assert!(y.iter().all(|v| v.is_finite()));
+
+    // Native reference of the same composition.
+    let mut g = vec![0.0f32; 512];
+    gate.matvec_tilde(&x, &mut g);
+    let mut u = vec![0.0f32; 512];
+    up.matvec_tilde(&x, &mut u);
+    let h: Vec<f32> = g
+        .iter()
+        .zip(&u)
+        .map(|(&gv, &uv)| gv / (1.0 + (-gv).exp()) * uv)
+        .collect();
+    let mut y_native = vec![0.0f32; 128];
+    down.matvec_tilde(&h, &mut y_native);
+    let scale = y_native.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    for (a, b) in y.iter().zip(&y_native) {
+        assert!((a - b).abs() < 1e-3 * scale, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Cross-cutting property tests (deliverable c): invariants that span modules,
+//! run with the in-repo prop harness (seeded, reproducible).
+
+use qtip::codes::{build_code, Code};
+use qtip::quant::{quantize_matrix_qtip, QtipConfig};
+use qtip::trellis::packing::{pack_states, pad_for_decode, unpack_states};
+use qtip::trellis::{quantize_tail_biting, Trellis, Viterbi, ViterbiWorkspace};
+use qtip::util::matrix::Matrix;
+use qtip::util::prop::prop_check;
+
+/// Quantization is 1-Lipschitz-ish in MSE: quantizing y=x+eps can't be more than
+/// ||eps|| worse than quantizing x (triangle inequality on the nearest-walk set).
+#[test]
+fn prop_viterbi_stability_under_perturbation() {
+    prop_check("viterbi stability", 12, |g| {
+        let l = g.usize_in(6, 10) as u32;
+        let trellis = Trellis::new(l, 2, 1);
+        let values = g.gauss_vec(trellis.states());
+        let vit = Viterbi::new(trellis, &values);
+        let mut ws = ViterbiWorkspace::new();
+        let n = 32;
+        let x = g.gauss_vec(n);
+        let eps: Vec<f32> = (0..n).map(|_| g.f32_in(-0.01, 0.01)).collect();
+        let y: Vec<f32> = x.iter().zip(&eps).map(|(a, b)| a + b).collect();
+        let (_, cx) = vit.quantize(&x, None, None, &mut ws);
+        let (_, cy) = vit.quantize(&y, None, None, &mut ws);
+        let eps_norm: f64 = eps.iter().map(|&e| (e as f64).powi(2)).sum::<f64>().sqrt();
+        let bound = (cx.sqrt() + eps_norm).powi(2) + 1e-4;
+        assert!(cy <= bound, "cy={cy} > bound={bound}");
+    });
+}
+
+/// Round-trip: pack -> unpack -> decode == direct decode of the walk, for every
+/// (L, k, V) geometry the pipeline supports.
+#[test]
+fn prop_pack_decode_roundtrip_geometries() {
+    prop_check("pack/decode roundtrip", 20, |g| {
+        let l = g.usize_in(4, 14) as u32;
+        let k = g.usize_in(1, 4) as u32;
+        let v = if k * 2 <= 8 && k * 2 < l && g.bool() { 2u32 } else { 1 };
+        if k * v >= l || k * v > 8 {
+            return;
+        }
+        let trellis = Trellis::new(l, k, v);
+        let values = g.gauss_vec(trellis.states() * v as usize);
+        let vit = Viterbi::new(trellis, &values);
+        let min_steps = (l as usize).div_ceil((k * v) as usize).max(2);
+        let steps = g.usize_in(min_steps, min_steps + 16);
+        let seq = g.gauss_vec(steps * v as usize);
+        let mut ws = ViterbiWorkspace::new();
+        let sol = quantize_tail_biting(&vit, &seq, &mut ws);
+        let packed = pack_states(&trellis, &sol.states);
+        assert_eq!(unpack_states(&trellis, &packed, steps), sol.states);
+        let padded = pad_for_decode(&trellis, &packed, steps);
+        for (t, &s) in sol.states.iter().enumerate() {
+            let w = qtip::trellis::packing::decode_window(
+                &padded,
+                t * (k * v) as usize,
+                l,
+            );
+            assert_eq!(w, s);
+        }
+    });
+}
+
+/// The quantized artifact's matvec is linear: Q(ax + by) == a·Q(x) + b·Q(y).
+#[test]
+fn prop_quantized_matvec_linearity() {
+    prop_check("qmatvec linear", 6, |g| {
+        let cfg = QtipConfig {
+            l: 10,
+            k: 2,
+            v: 1,
+            tx: 8,
+            ty: 8,
+            code: "3inst".into(),
+            seed: g.rng.next_u64(),
+        };
+        let mut m = Matrix::zeros(16, 16);
+        for v in m.data.iter_mut() {
+            *v = g.f32_in(-1.0, 1.0);
+        }
+        let h = Matrix::identity(16);
+        let qm = quantize_matrix_qtip(&m, &h, &cfg).qm;
+        let x = g.gauss_vec(16);
+        let y = g.gauss_vec(16);
+        let (a, b) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+        let combo: Vec<f32> = x.iter().zip(&y).map(|(&p, &q)| a * p + b * q).collect();
+        let lhs = qm.matvec(&combo);
+        let rx = qm.matvec(&x);
+        let ry = qm.matvec(&y);
+        for i in 0..16 {
+            let rhs = a * rx[i] + b * ry[i];
+            assert!((lhs[i] - rhs).abs() < 1e-2, "{} vs {}", lhs[i], rhs);
+        }
+    });
+}
+
+/// Every code's decode is a pure function of the state (no hidden state).
+#[test]
+fn prop_codes_are_pure() {
+    prop_check("codes pure", 10, |g| {
+        for name in ["1mad", "3inst", "hyb", "lut"] {
+            let v = if name == "hyb" { 2 } else { 1 };
+            let code = build_code(name, 12, v, 7);
+            let s = g.usize_in(0, 4095) as u32;
+            let mut a = vec![0.0f32; v as usize];
+            let mut b = vec![1.0f32; v as usize];
+            code.decode(s, &mut a);
+            code.decode(s, &mut b);
+            assert_eq!(a, b, "{name}");
+        }
+    });
+}
+
+/// Viterbi solution cost is monotone in L (more states can only help) when
+/// codebooks are nested (the LUT code with the same seed is a prefix).
+#[test]
+fn prop_more_bits_never_hurt() {
+    prop_check("k monotone", 6, |g| {
+        let trellis_lo = Trellis::new(10, 1, 1);
+        let trellis_hi = Trellis::new(10, 2, 1);
+        let values = g.gauss_vec(1 << 10);
+        let vit_lo = Viterbi::new(trellis_lo, &values);
+        let vit_hi = Viterbi::new(trellis_hi, &values);
+        let seq = g.gauss_vec(32);
+        let mut ws = ViterbiWorkspace::new();
+        // Same states, more edges: k=2's walk set strictly contains k=1's...
+        // (every (i -> i>>1 | c<<9) edge is also reachable with 2-bit shifts? No —
+        // different shift amounts. So compare both against the elementwise bound
+        // instead: higher fan-out must beat scalar nearest-neighbor rounding of
+        // half the codebook.)
+        let (_, c_lo) = vit_lo.quantize(&seq, None, None, &mut ws);
+        let (_, c_hi) = vit_hi.quantize(&seq, None, None, &mut ws);
+        // Sanity: both bounded below by the unconstrained nearest-value error.
+        let free: f64 = seq
+            .iter()
+            .map(|&s| {
+                values
+                    .iter()
+                    .map(|&v| ((v - s) as f64).powi(2))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum();
+        assert!(c_lo >= free - 1e-5);
+        assert!(c_hi >= free - 1e-5);
+        assert!(c_hi <= c_lo + 1e-5, "more transition bits should not hurt");
+    });
+}

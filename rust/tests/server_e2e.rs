@@ -1,0 +1,98 @@
+//! Serving-stack integration: quantized model under the continuous batcher,
+//! including mid-flight admission and stress over the KV pool.
+
+use std::sync::Arc;
+
+use qtip::coordinator::{
+    quantize_model_qtip, GenRequest, ServerConfig, ServerHandle,
+};
+use qtip::hessian::collect_hessians;
+use qtip::model::{ModelConfig, Transformer, WeightStore};
+use qtip::quant::QtipConfig;
+
+fn quantized_tiny() -> Arc<Transformer> {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 2;
+    cfg.max_seq = 96;
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 13));
+    let seqs = vec![
+        (0..64u16).collect::<Vec<_>>(),
+        (100..164u16).collect::<Vec<_>>(),
+    ];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 2 };
+    quantize_model_qtip(&mut model, &hs, &qcfg, 1, |_| {});
+    // NOTE: no ensure_caches() — the server path must work through the fused
+    // decode matvec alone.
+    Arc::new(model)
+}
+
+fn req(id: u64, n: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: format!("req-{id}"),
+        max_new_tokens: n,
+        temperature: 0.0,
+        top_k: 1,
+        seed: id,
+    }
+}
+
+#[test]
+fn serves_quantized_model_through_fused_decode() {
+    let server = ServerHandle::spawn(quantized_tiny(), ServerConfig::default());
+    let resp = server.submit(req(1, 12)).recv().unwrap();
+    assert_eq!(resp.tokens.len(), 12);
+    assert!(resp.decode_tok_per_sec > 0.0);
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 1);
+}
+
+#[test]
+fn mid_flight_admission_preserves_outputs() {
+    let model = quantized_tiny();
+    // Run request A solo for reference.
+    let solo = ServerHandle::spawn(model.clone(), ServerConfig::default());
+    let ra = solo.submit(req(1, 20)).recv().unwrap();
+    solo.shutdown();
+
+    // Now start A, then inject B and C while A decodes.
+    let server = ServerHandle::spawn(
+        model,
+        ServerConfig { max_batch: 4, kv_budget_bytes: 1 << 30 },
+    );
+    let rx_a = server.submit(req(1, 20));
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    let rx_b = server.submit(req(2, 8));
+    let rx_c = server.submit(req(3, 8));
+    let a = rx_a.recv().unwrap();
+    let b = rx_b.recv().unwrap();
+    let c = rx_c.recv().unwrap();
+    server.shutdown();
+    assert_eq!(a.tokens, ra.tokens, "mid-flight admission corrupted request A");
+    assert_eq!(b.tokens.len(), 8);
+    assert_eq!(c.tokens.len(), 8);
+}
+
+#[test]
+fn stress_many_requests_small_pool() {
+    let server = ServerHandle::spawn(
+        quantized_tiny(),
+        ServerConfig { max_batch: 3, kv_budget_bytes: 1 << 30 },
+    );
+    let rxs: Vec<_> = (0..16).map(|i| server.submit(req(i, 4 + (i % 5) as usize))).collect();
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.tokens.len(), 4 + (i % 5));
+        seen.insert(r.id);
+    }
+    assert_eq!(seen.len(), 16, "every request answered exactly once");
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 16);
+    assert!(stats.peak_batch <= 3);
+}
