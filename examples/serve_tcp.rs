@@ -1,5 +1,7 @@
 //! Network serving demo: quantize the trained nano model, expose it over the
-//! newline-JSON TCP protocol, and drive it with in-process clients.
+//! newline-JSON TCP protocol, and drive it with concurrent in-process clients —
+//! concurrent so the continuous batcher fuses their decode rounds and each
+//! packed weight tile is decoded once per round for the whole batch.
 //!
 //!     cargo run --release --example serve_tcp
 
@@ -37,16 +39,29 @@ fn main() -> anyhow::Result<()> {
     let fe = TcpFrontend::spawn(server, "127.0.0.1:0")?;
     println!("listening on {}", fe.addr);
 
-    // Drive it like an external client would.
-    for (i, prompt) in ["fn quantize(", "let trellis = ", "## QTIP"].iter().enumerate() {
-        let mut s = TcpStream::connect(fe.addr)?;
-        writeln!(
-            s,
-            r#"{{"prompt": "{prompt}", "max_new_tokens": 40, "temperature": 0.7, "seed": {i}}}"#
-        )?;
-        let mut line = String::new();
-        BufReader::new(s).read_line(&mut line)?;
-        println!("client {i} <- {}", line.trim());
+    // Drive it like concurrent external clients: submitting in parallel lets
+    // the batcher admit all three into the same fused decode rounds.
+    let addr = fe.addr;
+    let clients: Vec<_> = ["fn quantize(", "let trellis = ", "## QTIP"]
+        .iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            let prompt = prompt.to_string();
+            std::thread::spawn(move || -> anyhow::Result<String> {
+                let mut s = TcpStream::connect(addr)?;
+                writeln!(
+                    s,
+                    r#"{{"prompt": "{prompt}", "max_new_tokens": 40, "temperature": 0.7, "seed": {i}}}"#
+                )?;
+                let mut line = String::new();
+                BufReader::new(s).read_line(&mut line)?;
+                Ok(line.trim().to_string())
+            })
+        })
+        .collect();
+    for (i, c) in clients.into_iter().enumerate() {
+        let line = c.join().expect("client thread panicked")?;
+        println!("client {i} <- {line}");
     }
     fe.shutdown();
     println!("done.");

@@ -6,6 +6,13 @@
 //! computed codes >> cache-busting big-codebook VQ, and 2 > 3 > 4 bit ordering.
 //! Table 17's device sweep becomes a matrix-size sweep (the memory-bound ratio
 //! grows as the working set leaves cache).
+//!
+//! The second table is the serving-batch sweep (see `EXPERIMENTS.md` §Perf):
+//! the batch-fused `matvec_tilde_multi` decodes each trellis state once per
+//! round for all B activation columns, versus B independent `matvec_tilde`
+//! passes that re-decode the packed stream per sequence. Shape to hold: fused
+//! token throughput grows with B (decode amortizes) while per-sequence
+//! throughput stays flat, so fused beats B× per-sequence by B = 8.
 
 use qtip::bench::{f2, samples, Table};
 use qtip::quant::{CodeSpec, QuantizedMatrix};
@@ -160,4 +167,79 @@ fn main() {
         ]);
     }
     table.emit("table4_throughput.md");
+    batch_sweep(min_secs);
+}
+
+/// Serving-batch sweep: one fused decode pass over B activation columns vs B
+/// per-sequence passes (what the continuous batcher used to do per round).
+fn batch_sweep(min_secs: f64) {
+    let mut table = Table::new(
+        "Table 4 addendum — batch-fused decode matvec (QTIP 3INST 2-bit, d=1024; shape: fused tok/s grows with B, fused ≥ per-seq at B=8)",
+        &["B", "path", "rounds/s", "tok/s (cols/s)", "fused vs per-seq"],
+    );
+    let d = 1024usize;
+    let qm = QuantizedMatrix::synthetic(
+        d,
+        d,
+        Trellis::new(16, 2, 1),
+        CodeSpec::ThreeInst,
+        16,
+        16,
+        3,
+    );
+    let mut rng = Rng::new(11);
+
+    for b in [1usize, 2, 4, 8] {
+        let mut x = Matrix::zeros(b, d);
+        for r in 0..b {
+            let xr = rng.gauss_vec(d);
+            x.row_mut(r).copy_from_slice(&xr);
+        }
+        let mut y = Matrix::zeros(b, d);
+
+        // Per-sequence baseline: B independent fused matvecs — the packed
+        // weight stream is decoded B times per round.
+        let mut ys = vec![0.0f32; d];
+        qm.matvec_tilde(x.row(0), &mut ys); // warmup
+        let t = Timer::start();
+        let mut iters = 0usize;
+        while t.secs() < min_secs {
+            for r in 0..b {
+                ys.fill(0.0);
+                qm.matvec_tilde(x.row(r), &mut ys);
+            }
+            iters += 1;
+        }
+        let seq_round_rate = iters as f64 / t.secs();
+        let seq_tok_rate = seq_round_rate * b as f64;
+
+        // Fused: one pass decodes each state once for all B columns.
+        y.data.fill(0.0);
+        qm.matvec_tilde_multi(&x, &mut y); // warmup
+        let t = Timer::start();
+        let mut iters = 0usize;
+        while t.secs() < min_secs {
+            y.data.fill(0.0);
+            qm.matvec_tilde_multi(&x, &mut y);
+            iters += 1;
+        }
+        let fused_round_rate = iters as f64 / t.secs();
+        let fused_tok_rate = fused_round_rate * b as f64;
+
+        table.row(vec![
+            b.to_string(),
+            format!("per-seq ×{b} matvec_tilde"),
+            f2(seq_round_rate),
+            f2(seq_tok_rate),
+            "1.00".into(),
+        ]);
+        table.row(vec![
+            b.to_string(),
+            "fused matvec_tilde_multi".into(),
+            f2(fused_round_rate),
+            f2(fused_tok_rate),
+            f2(fused_tok_rate / seq_tok_rate),
+        ]);
+    }
+    table.emit("table4_batch_sweep.md");
 }

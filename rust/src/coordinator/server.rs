@@ -1,11 +1,19 @@
 //! The generation server: request queue → continuous batcher → token streaming.
 //!
-//! Table 4's serving context: batch-1 decoding is memory-bound, so the quantized
-//! model's fused decode-matvec is the hot path. The coordinator contributes the
-//! vLLM-style machinery around it: admission control against a KV-memory budget,
-//! a KV-cache pool (allocate on admit, recycle on completion), round-robin
-//! continuous batching (new requests join mid-flight), and per-request metrics
-//! (TTFT, decode tok/s).
+//! Table 4's serving context: decoding is memory-bound, so the quantized model's
+//! fused decode-matvec is the hot path. The coordinator contributes the
+//! vLLM-style machinery around it: admission control against a KV-memory budget
+//! (requests that can never fit are rejected with an error response), a KV-cache
+//! pool (allocate on admit, recycle on completion), continuous batching (new
+//! requests join mid-flight), and per-request metrics (TTFT, decode tok/s).
+//!
+//! Each round advances *every* active sequence by one token through a single
+//! [`Transformer::decode_step_batch`] call, so every packed weight tile is
+//! decoded once per round and applied to all B sequences — instead of being
+//! re-decoded B times by per-sequence `decode_step` calls. Prompt prefill also
+//! runs inside these fused rounds (one prompt token per round per sequence)
+//! rather than in the admission path, so a long prompt no longer head-of-line
+//! blocks sequences that are mid-decode.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -38,14 +46,41 @@ pub struct GenResponse {
     pub ttft: f64,
     pub total_secs: f64,
     pub decode_tok_per_sec: f64,
+    /// Set when the request was rejected instead of served (e.g. its KV cache
+    /// can never fit the server's memory budget). All other fields are zeroed.
+    pub error: Option<String>,
 }
+
+impl GenResponse {
+    fn rejected(id: u64, reason: String) -> GenResponse {
+        GenResponse {
+            id,
+            text: String::new(),
+            tokens: Vec::new(),
+            prompt_tokens: 0,
+            ttft: 0.0,
+            total_secs: 0.0,
+            decode_tok_per_sec: 0.0,
+            error: Some(reason),
+        }
+    }
+}
+
+/// Fallback token fed through the model when a prompt encodes to nothing, so
+/// sampling always sees logits over the real vocabulary (byte 0 acts as BOS).
+const BOS_FALLBACK: u16 = 0;
 
 struct Active {
     req: GenRequest,
     cache: KvCache,
+    /// Prompt tokens not yet prefilled; drained front-to-back, one per fused
+    /// round, so prefill interleaves with other sequences' decode steps.
+    pending_prompt: VecDeque<u16>,
+    prompt_len: usize,
     generated: Vec<u16>,
     rng: Rng,
-    next_token: u16,
+    /// Next sampled token awaiting emission (None while still prefilling).
+    next_token: Option<u16>,
     admitted_at: std::time::Instant,
     first_token_at: Option<std::time::Instant>,
 }
@@ -69,18 +104,33 @@ impl Default for ServerConfig {
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub completed: usize,
+    /// Requests rejected at admission (KV cache larger than the budget).
+    pub rejected: usize,
     pub total_generated_tokens: usize,
+    /// All tokens pushed through fused rounds, prefill included — the
+    /// numerator matching `total_decode_secs`, which times whole rounds.
+    pub total_step_tokens: usize,
     pub total_decode_secs: f64,
     pub peak_batch: usize,
     pub peak_kv_bytes: usize,
+    /// Decode rounds executed (one `decode_step_batch` call, or a single
+    /// `decode_step` when only one sequence stepped that round).
+    pub fused_rounds: usize,
+    /// Largest number of sequences advanced by a single fused round — ≥ 2
+    /// proves the batcher actually amortized a weight decode across sequences.
+    pub max_fused_batch: usize,
 }
 
 impl ServerStats {
+    /// Aggregate model token throughput. Rounds interleave prefill and decode
+    /// tokens since prefill moved into the fused rounds, so the honest rate is
+    /// tokens *stepped* per round-second — not generated tokens, which would
+    /// undercount whenever prompts dominate.
     pub fn throughput_tok_per_sec(&self) -> f64 {
         if self.total_decode_secs == 0.0 {
             return 0.0;
         }
-        self.total_generated_tokens as f64 / self.total_decode_secs
+        self.total_step_tokens as f64 / self.total_decode_secs
     }
 }
 
@@ -129,6 +179,10 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
     let mut cache_pool: Vec<KvCache> = Vec::new();
     let mut stats = ServerStats::default();
     let mut shutting_down: Option<Sender<ServerStats>> = None;
+    // Computed once: the admission check must not allocate full K/V buffers
+    // every round just to read their size.
+    let kv_bytes_per_seq = KvCache::size_bytes_for(&model.cfg);
+    let max_batch = cfg.max_batch.max(1);
 
     loop {
         // Drain the message queue (non-blocking while work exists; blocking idle).
@@ -150,35 +204,52 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             }
         }
 
-        // Admission: fill the batch while the KV budget allows.
-        let kv_bytes_per_seq = KvCache::new(&model.cfg).size_bytes();
-        while active.len() < cfg.max_batch
+        // Reject requests that can never be admitted: a single sequence's KV
+        // cache above the budget would otherwise sit in `waiting` forever while
+        // the loop busy-spins (and shutdown would never complete).
+        if kv_bytes_per_seq > cfg.kv_budget_bytes {
+            while let Some((req, tx)) = waiting.pop_front() {
+                stats.rejected += 1;
+                let _ = tx.send(GenResponse::rejected(
+                    req.id,
+                    format!(
+                        "KV cache per sequence ({kv_bytes_per_seq} B) exceeds the \
+                         server budget ({} B)",
+                        cfg.kv_budget_bytes
+                    ),
+                ));
+            }
+        }
+
+        // Admission: fill the batch while the KV budget allows. No prefill here —
+        // the prompt is queued and consumed inside the fused rounds below, so a
+        // new long prompt cannot head-of-line block sequences mid-decode.
+        while active.len() < max_batch
             && !waiting.is_empty()
             && (active.len() + 1) * kv_bytes_per_seq <= cfg.kv_budget_bytes
         {
             let (req, tx) = waiting.pop_front().unwrap();
             let mut cache = cache_pool.pop().unwrap_or_else(|| KvCache::new(&model.cfg));
             cache.clear();
-            // Prefill: run the prompt through the decode path.
-            let prompt_tokens = tok.encode(&req.prompt);
             let budget = model.cfg.max_seq.saturating_sub(req.max_new_tokens + 1);
-            let prompt_tokens: Vec<u16> =
-                prompt_tokens.into_iter().take(budget.max(1)).collect();
-            let admitted_at = std::time::Instant::now();
-            let mut logits = vec![0.0];
-            for &t in &prompt_tokens {
-                logits = model.decode_step(&mut cache, t);
+            let mut pending_prompt: VecDeque<u16> =
+                tok.encode(&req.prompt).into_iter().take(budget.max(1)).collect();
+            if pending_prompt.is_empty() {
+                // An empty prompt must still produce real logits before the
+                // first sample — never a fake 1-element "vocab".
+                pending_prompt.push_back(BOS_FALLBACK);
             }
-            let mut rng = Rng::new(req.seed);
-            let next = Transformer::sample(&logits, req.temperature, req.top_k, &mut rng);
+            let prompt_len = pending_prompt.len();
             active.push((
                 Active {
+                    rng: Rng::new(req.seed),
                     req,
                     cache,
+                    pending_prompt,
+                    prompt_len,
                     generated: Vec::new(),
-                    rng,
-                    next_token: next,
-                    admitted_at,
+                    next_token: None,
+                    admitted_at: std::time::Instant::now(),
                     first_token_at: None,
                 },
                 tx,
@@ -198,12 +269,22 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             continue;
         }
 
-        // One decode round: each active sequence advances one token (round-robin
-        // continuous batching — new admissions interleave between rounds).
+        // One fused round: every active sequence advances one token — prompt
+        // tokens while prefilling, sampled tokens while decoding — through a
+        // single decode_step_batch call, so each packed weight tile is decoded
+        // once for the whole batch (continuous batching: admissions above
+        // interleave between rounds).
         let round_start = std::time::Instant::now();
         let mut finished = Vec::new();
+        let mut step_idx: Vec<usize> = Vec::new();
+        let mut step_tokens: Vec<u16> = Vec::new();
         for (i, (a, _)) in active.iter_mut().enumerate() {
-            let t = a.next_token;
+            if let Some(t) = a.pending_prompt.pop_front() {
+                step_idx.push(i);
+                step_tokens.push(t);
+                continue;
+            }
+            let t = a.next_token.expect("decoding sequence always holds a sampled token");
             a.generated.push(t);
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(std::time::Instant::now());
@@ -214,9 +295,45 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                 finished.push(i);
                 continue;
             }
-            let logits = model.decode_step(&mut a.cache, t);
-            a.next_token =
-                Transformer::sample(&logits, a.req.temperature, a.req.top_k, &mut a.rng);
+            step_idx.push(i);
+            step_tokens.push(t);
+        }
+
+        if !step_idx.is_empty() {
+            let mut caches: Vec<&mut KvCache> = Vec::with_capacity(step_idx.len());
+            {
+                let mut want = step_idx.iter().peekable();
+                for (i, (a, _)) in active.iter_mut().enumerate() {
+                    if want.peek() == Some(&&i) {
+                        want.next();
+                        caches.push(&mut a.cache);
+                    }
+                }
+            }
+            // B = 1 keeps the tighter single-column kernel (no transpose, no
+            // per-batch accumulators); outputs are bit-identical either way.
+            let logits = if step_tokens.len() == 1 {
+                vec![model.decode_step(&mut *caches[0], step_tokens[0])]
+            } else {
+                model.decode_step_batch(&mut caches, &step_tokens)
+            };
+            stats.fused_rounds += 1;
+            stats.max_fused_batch = stats.max_fused_batch.max(step_tokens.len());
+            stats.total_step_tokens += step_tokens.len();
+            for (j, &i) in step_idx.iter().enumerate() {
+                let (a, _) = &mut active[i];
+                if !a.pending_prompt.is_empty() {
+                    // Mid-prefill: logits are discarded until the last prompt
+                    // token has been consumed.
+                    continue;
+                }
+                a.next_token = Some(Transformer::sample(
+                    &logits[j],
+                    a.req.temperature,
+                    a.req.top_k,
+                    &mut a.rng,
+                ));
+            }
         }
         stats.total_decode_secs += round_start.elapsed().as_secs_f64();
 
@@ -236,10 +353,11 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                 id: a.req.id,
                 text: tok.decode(&a.generated),
                 tokens: a.generated.clone(),
-                prompt_tokens: a.cache.len - a.generated.len() + 1,
+                prompt_tokens: a.prompt_len,
                 ttft,
                 total_secs: total,
                 decode_tok_per_sec: (a.generated.len() as f64 - 1.0).max(0.0) / decode_secs,
+                error: None,
             };
             cache_pool.push(a.cache);
             let _ = tx.send(resp);
@@ -289,14 +407,23 @@ mod tests {
     #[test]
     fn batched_equals_sequential() {
         // Correctness invariant of the batcher: per-request outputs must be
-        // identical to running each request alone (caches are independent).
+        // identical to running each request alone (caches are independent),
+        // even though all sequences share one fused decode pass per round.
         let model = tiny_model();
         let server = ServerHandle::spawn(model.clone(), ServerConfig::default());
         let reqs: Vec<GenRequest> =
             (0..6).map(|i| req(i, &format!("prompt {i}"), 6 + i as usize)).collect();
         let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
         let batched: Vec<GenResponse> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
-        server.shutdown();
+        let stats = server.shutdown();
+        // The fused kernel must actually have been used: at least one round
+        // advanced several sequences through a single decode_step_batch call.
+        assert!(
+            stats.max_fused_batch >= 2,
+            "6 concurrent requests never shared a fused round (max fused batch {})",
+            stats.max_fused_batch
+        );
+        assert!(stats.fused_rounds > 0);
 
         for (r, b) in reqs.iter().zip(&batched) {
             let solo_server = ServerHandle::spawn(model.clone(), ServerConfig::default());
@@ -304,6 +431,60 @@ mod tests {
             solo_server.shutdown();
             assert_eq!(solo.tokens, b.tokens, "request {} diverged under batching", r.id);
         }
+    }
+
+    #[test]
+    fn oversized_kv_request_is_rejected_not_spun_on() {
+        // Regression: a request whose KV cache exceeds the budget used to sit in
+        // `waiting` forever while serve_loop busy-spun and shutdown never
+        // completed. It must now be rejected with an error response.
+        let model = tiny_model();
+        let per_seq = KvCache::size_bytes_for(&model.cfg);
+        let server = ServerHandle::spawn(
+            model,
+            ServerConfig { max_batch: 4, kv_budget_bytes: per_seq - 1 },
+        );
+        let resp = server.submit(req(7, "hello", 8)).recv().unwrap();
+        assert!(resp.error.is_some(), "unservable request must carry an error");
+        assert!(resp.tokens.is_empty());
+        // Shutdown must complete (this used to hang).
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn empty_prompt_samples_from_real_logits() {
+        // Regression: an empty prompt used to leave logits = [0.0], so sampling
+        // ran over a 1-element "vocab" and the first token was always 0. The
+        // server now feeds a BOS fallback token, which makes an empty prompt
+        // behave exactly like a prompt containing only byte 0.
+        let model = tiny_model();
+        let server = ServerHandle::spawn(model, ServerConfig::default());
+        let empty = server.submit(req(1, "", 6)).recv().unwrap();
+        let bos = server.submit(req(2, "\0", 6)).recv().unwrap();
+        server.shutdown();
+        assert!(empty.error.is_none());
+        assert_eq!(empty.tokens.len(), 6);
+        assert_eq!(empty.tokens, bos.tokens, "empty prompt must equal explicit BOS prompt");
+        assert_eq!(empty.prompt_tokens, 1);
+    }
+
+    #[test]
+    fn prefill_runs_inside_fused_rounds() {
+        // A request with a long prompt must not be prefilled in the admission
+        // path: its prompt tokens are consumed one per fused round, so rounds
+        // keep running while it prefills (fused_rounds ≥ prompt_len + decode).
+        let server = ServerHandle::spawn(tiny_model(), ServerConfig::default());
+        let resp = server.submit(req(1, "0123456789", 4)).recv().unwrap();
+        let stats = server.shutdown();
+        assert_eq!(resp.tokens.len(), 4);
+        assert_eq!(resp.prompt_tokens, 10);
+        assert!(
+            stats.fused_rounds >= 10 + 3,
+            "expected ≥ 13 fused rounds (10 prefill + 3 decode), got {}",
+            stats.fused_rounds
+        );
     }
 
     #[test]

@@ -100,13 +100,21 @@ fn handle_conn(stream: TcpStream, server: &ServerHandle, ids: &AtomicU64) -> Res
                     seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
                 };
                 let r = server.submit(req).recv()?;
-                Json::obj(vec![
-                    ("id", Json::Num(r.id as f64)),
-                    ("text", Json::Str(r.text)),
-                    ("tokens", Json::Num(r.tokens.len() as f64)),
-                    ("ttft_ms", Json::Num(r.ttft * 1e3)),
-                    ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
-                ])
+                if let Some(err) = r.error {
+                    // Rejected at admission (e.g. KV cache above the budget).
+                    Json::obj(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        ("error", Json::Str(err)),
+                    ])
+                } else {
+                    Json::obj(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        ("text", Json::Str(r.text)),
+                        ("tokens", Json::Num(r.tokens.len() as f64)),
+                        ("ttft_ms", Json::Num(r.ttft * 1e3)),
+                        ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
+                    ])
+                }
             }
             Err(e) => Json::obj(vec![
                 ("id", Json::Num(id as f64)),
@@ -164,6 +172,27 @@ mod tests {
         let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
         let resp = roundtrip(fe.addr, "{not json");
         assert!(resp.get("error").is_some());
+        fe.shutdown();
+    }
+
+    #[test]
+    fn tcp_unservable_request_gets_error_line() {
+        // A server whose KV budget can't hold even one sequence must answer
+        // over the wire with an error object instead of hanging the connection.
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 64;
+        let model = Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 3)));
+        let server = Arc::new(ServerHandle::spawn(
+            model,
+            ServerConfig { max_batch: 2, kv_budget_bytes: 1 },
+        ));
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let resp = roundtrip(fe.addr, r#"{"prompt": "x", "max_new_tokens": 4}"#);
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("budget"));
         fe.shutdown();
     }
 

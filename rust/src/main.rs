@@ -183,6 +183,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 1),
     };
     let resp = server.submit(req).recv()?;
+    if let Some(err) = resp.error {
+        anyhow::bail!("request rejected: {err}");
+    }
     println!("--- generation ({:.1} tok/s) ---", resp.decode_tok_per_sec);
     println!("{}", resp.text);
     server.shutdown();
@@ -238,6 +241,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     for rx in rxs {
         let r = rx.recv()?;
+        if let Some(err) = r.error {
+            println!("[req {}] rejected: {err}", r.id);
+            continue;
+        }
         println!(
             "[req {}] ttft {:.1} ms, {:.1} tok/s: {:?}",
             r.id,

@@ -12,7 +12,7 @@
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightStore;
 use crate::quant::QuantizedMatrix;
-use crate::util::matrix::{gemm, Matrix};
+use crate::util::matrix::{gemm, gemv, Matrix};
 use crate::util::rng::Rng;
 
 /// A linear layer: dense or QTIP-quantized.
@@ -68,6 +68,23 @@ impl Linear {
         match self {
             Linear::Dense(w) => w.matvec(x),
             Linear::Quantized { qm, .. } => qm.matvec(x),
+        }
+    }
+
+    /// Y = X Ŵᵀ for a B×in batch of single-token activations: the fused batch
+    /// decode path. Quantized layers decode each packed weight once and apply
+    /// it to all B sequences; dense layers fall back to B independent GEMVs.
+    /// Row `b` of the result is bit-identical to `matvec(x.row(b))`.
+    pub fn matvec_multi(&self, x: &Matrix) -> Matrix {
+        match self {
+            Linear::Dense(w) => {
+                let mut out = Matrix::zeros(x.rows, w.rows);
+                for r in 0..x.rows {
+                    gemv(w, x.row(r), out.row_mut(r));
+                }
+                out
+            }
+            Linear::Quantized { qm, .. } => qm.matvec_multi(x),
         }
     }
 
@@ -140,6 +157,13 @@ impl KvCache {
             .chain(self.v.iter())
             .map(|m| m.data.len() * 4)
             .sum()
+    }
+
+    /// Bytes a cache built from `cfg` will hold, without allocating one — the
+    /// server's per-round admission check must not allocate full K/V buffers
+    /// just to read their size.
+    pub fn size_bytes_for(cfg: &ModelConfig) -> usize {
+        2 * cfg.n_layers * cfg.max_seq * cfg.d_model * 4
     }
 }
 
@@ -403,21 +427,138 @@ impl Transformer {
         self.head.matvec(&x)
     }
 
+    /// One decode round for a whole serving batch: advance every sequence by one
+    /// token, decoding each packed weight tile **once** for all B sequences.
+    ///
+    /// Sequences are independent — each attends over its own KV cache at its own
+    /// position (heterogeneous lengths are fine); only the weight decode is
+    /// shared. Per-sequence logits are bit-identical to calling [`decode_step`]
+    /// on each (cache, token) pair separately: the fused linear kernels keep the
+    /// per-row accumulation order, and everything else (norms, RoPE, attention,
+    /// residuals) is computed per sequence.
+    ///
+    /// Returns one logits vector per sequence, in input order.
+    pub fn decode_step_batch(
+        &self,
+        caches: &mut [&mut KvCache],
+        tokens: &[u16],
+    ) -> Vec<Vec<f32>> {
+        let b = tokens.len();
+        assert_eq!(caches.len(), b, "one cache per token");
+        if b == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.head_dim();
+        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        for c in caches.iter() {
+            assert!(c.len < c.capacity, "KV cache full");
+        }
+
+        let mut x = Matrix::zeros(b, d);
+        for (bi, &tok) in tokens.iter().enumerate() {
+            x.row_mut(bi).copy_from_slice(self.tok_emb.row(tok as usize));
+        }
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // --- Attention block (shared weight decode, per-sequence state) ---
+            let mut xn = x.clone();
+            for r in 0..b {
+                rmsnorm_row(xn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
+            }
+            let mut q = layer.attn.q.matvec_multi(&xn);
+            let mut k = layer.attn.k.matvec_multi(&xn);
+            let v = layer.attn.v.matvec_multi(&xn);
+            for bi in 0..b {
+                let pos = positions[bi];
+                for head in 0..h {
+                    rope_rotate(&mut q.row_mut(bi)[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
+                    rope_rotate(&mut k.row_mut(bi)[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
+                }
+                caches[bi].k[li].row_mut(pos).copy_from_slice(k.row(bi));
+                caches[bi].v[li].row_mut(pos).copy_from_slice(v.row(bi));
+            }
+
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut attn_out = Matrix::zeros(b, d);
+            for bi in 0..b {
+                let pos = positions[bi];
+                let cache = &*caches[bi];
+                let out = attn_out.row_mut(bi);
+                let mut scores = vec![0.0f32; pos + 1];
+                for head in 0..h {
+                    let hs = head * dh;
+                    let qh = &q.row(bi)[hs..hs + dh];
+                    for tk in 0..=pos {
+                        scores[tk] =
+                            crate::util::matrix::dot(qh, &cache.k[li].row(tk)[hs..hs + dh])
+                                * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    for tk in 0..=pos {
+                        let w = scores[tk];
+                        let vrow = &cache.v[li].row(tk)[hs..hs + dh];
+                        for i in 0..dh {
+                            out[hs + i] += w * vrow[i];
+                        }
+                    }
+                }
+            }
+            let proj = layer.attn.o.matvec_multi(&attn_out);
+            x.axpy(1.0, &proj);
+
+            // --- MLP block ---
+            let mut xn = x.clone();
+            for r in 0..b {
+                rmsnorm_row(xn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
+            }
+            let gate = layer.mlp.gate.matvec_multi(&xn);
+            let up = layer.mlp.up.matvec_multi(&xn);
+            let mut act = gate;
+            for (a, &u) in act.data.iter_mut().zip(&up.data) {
+                *a = silu(*a) * u;
+            }
+            let down = layer.mlp.down.matvec_multi(&act);
+            x.axpy(1.0, &down);
+        }
+
+        for (bi, cache) in caches.iter_mut().enumerate() {
+            cache.len = positions[bi] + 1;
+        }
+        for r in 0..b {
+            rmsnorm_row(x.row_mut(r), &self.out_norm, cfg.rms_eps);
+        }
+        let logits = self.head.matvec_multi(&x);
+        (0..b).map(|r| logits.row(r).to_vec()).collect()
+    }
+
     /// Sample a token from logits (temperature + top-k; greedy if temp == 0).
+    ///
+    /// NaN-tolerant by construction: comparisons use a total order with NaN
+    /// ranked below every finite logit, so one poisoned logit degrades to "that
+    /// token is never picked" instead of panicking the serving thread.
     pub fn sample(logits: &[f32], temp: f32, top_k: usize, rng: &mut Rng) -> u16 {
+        let key = |v: f32| if v.is_nan() { f32::NEG_INFINITY } else { v };
         if temp <= 0.0 {
-            return logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0 as u16;
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (i, &v) in logits.iter().enumerate() {
+                if key(v) > best_v {
+                    best = i;
+                    best_v = key(v);
+                }
+            }
+            return best as u16;
         }
         let k = top_k.max(1).min(logits.len());
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.sort_by(|&a, &b| key(logits[b]).total_cmp(&key(logits[a])));
         idx.truncate(k);
-        let mut probs: Vec<f32> = idx.iter().map(|&i| logits[i] / temp).collect();
+        // key() again: a NaN that survives into the top-k (top_k ≥ #finite
+        // logits) must weight as exp(-inf) = 0, not poison the whole softmax.
+        let mut probs: Vec<f32> = idx.iter().map(|&i| key(logits[i]) / temp).collect();
         softmax_inplace(&mut probs);
         let mut r = rng.uniform() as f32;
         for (j, &p) in probs.iter().enumerate() {
@@ -522,6 +663,87 @@ mod tests {
         let m = tiny_model(5);
         let cache = KvCache::new(&m.cfg);
         assert_eq!(cache.size_bytes(), 2 * 2 * 32 * 32 * 4);
+        // The allocation-free size must agree with the allocated one.
+        assert_eq!(KvCache::size_bytes_for(&m.cfg), cache.size_bytes());
+    }
+
+    #[test]
+    fn decode_step_batch_matches_decode_step() {
+        // Heterogeneous cache lengths: three sequences with different prefixes
+        // must produce logits *bit-identical* to per-sequence decode_step.
+        let m = tiny_model(6);
+        let streams: [&[u16]; 3] = [&[10, 200, 37, 99, 5], &[7, 7, 42], &[250]];
+
+        // Reference: per-sequence decode.
+        let mut ref_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+        for s in &streams {
+            let mut cache = KvCache::new(&m.cfg);
+            ref_logits.push(s.iter().map(|&t| m.decode_step(&mut cache, t)).collect());
+        }
+
+        // Fused: one decode_step_batch round per position, dropping sequences
+        // as they run out of tokens (so batch composition changes mid-flight).
+        let mut caches: Vec<KvCache> = (0..3).map(|_| KvCache::new(&m.cfg)).collect();
+        let max_len = streams.iter().map(|s| s.len()).max().unwrap();
+        for pos in 0..max_len {
+            let mut tokens = Vec::new();
+            let mut idxs = Vec::new();
+            for (i, s) in streams.iter().enumerate() {
+                if pos < s.len() {
+                    tokens.push(s[pos]);
+                    idxs.push(i);
+                }
+            }
+            let mut refs: Vec<&mut KvCache> = Vec::new();
+            for (i, c) in caches.iter_mut().enumerate() {
+                if idxs.contains(&i) {
+                    refs.push(c);
+                }
+            }
+            let logits = m.decode_step_batch(&mut refs, &tokens);
+            for (j, &i) in idxs.iter().enumerate() {
+                assert_eq!(
+                    logits[j], ref_logits[i][pos],
+                    "seq {i} pos {pos}: fused logits diverged from decode_step"
+                );
+            }
+        }
+        for (c, s) in caches.iter().zip(&streams) {
+            assert_eq!(c.len, s.len());
+        }
+    }
+
+    #[test]
+    fn decode_step_batch_empty_is_noop() {
+        let m = tiny_model(7);
+        let mut caches: Vec<&mut KvCache> = Vec::new();
+        assert!(m.decode_step_batch(&mut caches, &[]).is_empty());
+    }
+
+    #[test]
+    fn sample_survives_nan_logits() {
+        // Regression: a NaN logit used to panic via partial_cmp().unwrap(),
+        // killing the serving thread. NaN now ranks below every finite logit.
+        let mut logits = vec![0.0f32; 256];
+        logits[3] = f32::NAN;
+        logits[42] = 10.0;
+        let mut rng = Rng::new(1);
+        assert_eq!(Transformer::sample(&logits, 0.0, 1, &mut rng), 42);
+        for _ in 0..50 {
+            let t = Transformer::sample(&logits, 0.9, 4, &mut rng);
+            assert!((t as usize) < 256);
+            assert_ne!(t, 3, "NaN logit must never be sampled");
+        }
+        // NaN inside the top-k window must weight as zero, not win by default.
+        let pair = vec![1.0f32, f32::NAN];
+        for _ in 0..20 {
+            assert_eq!(Transformer::sample(&pair, 1.0, 2, &mut rng), 0);
+        }
+        // All-NaN logits: still no panic.
+        let all_nan = vec![f32::NAN; 8];
+        let t = Transformer::sample(&all_nan, 1.0, 4, &mut rng);
+        assert!((t as usize) < 8);
+        let _ = Transformer::sample(&all_nan, 0.0, 1, &mut rng);
     }
 
     #[test]

@@ -166,6 +166,54 @@ pub struct QuantizedMatrix {
     pub metrics: QuantMetrics,
 }
 
+/// Shared per-`CodeSpec` kernel dispatch: monomorphizes the given v1 (scalar)
+/// or v2 (pair) kernel with the matching decode closure. One definition keeps
+/// the single-column and batch-fused matvecs decoding identically — the
+/// documented bit-identity between the two paths depends on it.
+macro_rules! dispatch_code {
+    ($self:ident, $v1:ident, $v2:ident, $xt:expr, $y:expr) => {
+        match &$self.code {
+            CodeSpec::OneMad => $self.$v1($xt, $y, onemad::decode_scalar),
+            CodeSpec::ThreeInst => $self.$v1($xt, $y, threeinst::decode_scalar),
+            CodeSpec::Hyb { q, v, lut } => {
+                let q = *q;
+                if *v as usize == 1 {
+                    $self.$v1($xt, $y, move |s| {
+                        let x = hybrid::hash(s);
+                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                        let val = lut[idx];
+                        if x & (1 << 15) != 0 {
+                            -val
+                        } else {
+                            val
+                        }
+                    })
+                } else {
+                    $self.$v2($xt, $y, move |s| {
+                        let x = hybrid::hash(s);
+                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                        let a = lut[idx * 2];
+                        let mut b = lut[idx * 2 + 1];
+                        if x & (1 << 15) != 0 {
+                            b = -b;
+                        }
+                        (a, b)
+                    })
+                }
+            }
+            CodeSpec::Lut { v, table } => {
+                if *v as usize == 1 {
+                    $self.$v1($xt, $y, move |s| table[s as usize])
+                } else {
+                    $self.$v2($xt, $y, move |s| {
+                        (table[s as usize * 2], table[s as usize * 2 + 1])
+                    })
+                }
+            }
+        }
+    };
+}
+
 impl QuantizedMatrix {
     #[inline]
     pub fn tiles_r(&self) -> usize {
@@ -249,51 +297,7 @@ impl QuantizedMatrix {
     pub fn matvec_tilde(&self, xt: &[f32], y: &mut [f32]) {
         assert_eq!(xt.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        match &self.code {
-            CodeSpec::OneMad => {
-                self.matvec_tilde_v1(xt, y, onemad::decode_scalar);
-            }
-            CodeSpec::ThreeInst => {
-                self.matvec_tilde_v1(xt, y, threeinst::decode_scalar);
-            }
-            CodeSpec::Hyb { q, v, lut } => {
-                let q = *q;
-                let vv = *v as usize;
-                if vv == 1 {
-                    self.matvec_tilde_v1(xt, y, move |s| {
-                        let x = hybrid::hash(s);
-                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                        let val = lut[idx];
-                        if x & (1 << 15) != 0 {
-                            -val
-                        } else {
-                            val
-                        }
-                    });
-                } else {
-                    self.matvec_tilde_v2(xt, y, move |s| {
-                        let x = hybrid::hash(s);
-                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                        let a = lut[idx * 2];
-                        let mut b = lut[idx * 2 + 1];
-                        if x & (1 << 15) != 0 {
-                            b = -b;
-                        }
-                        (a, b)
-                    });
-                }
-            }
-            CodeSpec::Lut { v, table } => {
-                let vv = *v as usize;
-                if vv == 1 {
-                    self.matvec_tilde_v1(xt, y, move |s| table[s as usize]);
-                } else {
-                    self.matvec_tilde_v2(xt, y, move |s| {
-                        (table[s as usize * 2], table[s as usize * 2 + 1])
-                    });
-                }
-            }
-        }
+        dispatch_code!(self, matvec_tilde_v1, matvec_tilde_v2, xt, y)
     }
 
     #[inline]
@@ -336,6 +340,138 @@ impl QuantizedMatrix {
                         bit += k;
                     }
                     *yr += acc * self.scale;
+                }
+            }
+        }
+    }
+
+    /// Batch-fused full matvec: Y = Ŵ X for B activation rows, RHT sandwich
+    /// included. `x` is `B × cols` (one activation per row); returns `B × rows`.
+    ///
+    /// Row `b` of the result is bit-identical to `self.matvec(x.row(b))` — the
+    /// fusion only amortizes the packed-weight decode, never reorders the
+    /// per-sequence float accumulation.
+    pub fn matvec_multi(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let mut xt = x.clone();
+        for r in 0..xt.rows {
+            self.rht.forward_activations(xt.row_mut(r));
+        }
+        let mut y = Matrix::zeros(x.rows, self.rows);
+        self.matvec_tilde_multi(&xt, &mut y);
+        for r in 0..y.rows {
+            self.rht.restore_outputs(y.row_mut(r));
+        }
+        y
+    }
+
+    /// Batch-fused decode matvec in incoherent space: Y += Ŵ̃ X̃ for a `B × cols`
+    /// activation matrix `xt` into a `B × rows` accumulator `y`.
+    ///
+    /// The serving-batch amortization (Table 4 batch sweep): each trellis state
+    /// is decoded **once** per call and applied to all B activation columns, so
+    /// the packed weight stream is read once per decode round instead of once
+    /// per sequence. Monomorphized per code like the single-column kernels; the
+    /// per-(b, row) accumulation order matches `matvec_tilde` exactly so the
+    /// fused path stays bit-identical to B independent matvecs (§Perf
+    /// optimization #3 — see EXPERIMENTS.md).
+    pub fn matvec_tilde_multi(&self, xt: &Matrix, y: &mut Matrix) {
+        assert_eq!(xt.cols, self.cols);
+        assert_eq!(y.cols, self.rows);
+        assert_eq!(xt.rows, y.rows, "batch dims must agree");
+        dispatch_code!(self, matvec_tilde_multi_v1, matvec_tilde_multi_v2, xt, y)
+    }
+
+    #[inline]
+    fn matvec_tilde_multi_v1<F: Fn(u32) -> f32>(&self, xt: &Matrix, y: &mut Matrix, decode: F) {
+        let b = xt.rows;
+        let k = self.trellis.k as usize;
+        let l = self.trellis.l;
+        let (tx, ty) = (self.tx, self.ty);
+        let mask = (1u64 << l) - 1;
+        // Column-major activations (cols × B) so the per-decoded-weight inner
+        // loop over the batch is unit-stride.
+        let xcol = xt.transpose().data;
+        let mut acc = vec![0.0f32; b];
+        for bi in 0..self.tiles_r() {
+            for bj in 0..self.tiles_c() {
+                let words = &self.packed
+                    [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
+                let x0 = bj * ty;
+                // Same rolling 64-bit window as the single-column kernel; each
+                // decoded weight now feeds B accumulators instead of one.
+                let mut bit = 0usize;
+                for r in 0..tx {
+                    acc.fill(0.0);
+                    let mut w = bit >> 5;
+                    let mut sh = bit & 31;
+                    let mut buf = (words[w] as u64) | ((words[w + 1] as u64) << 32);
+                    buf >>= sh;
+                    let mut avail = 64 - sh;
+                    for c in 0..ty {
+                        if avail < l as usize {
+                            let abs = bit;
+                            w = abs >> 5;
+                            sh = abs & 31;
+                            buf = (words[w] as u64) | ((words[w + 1] as u64) << 32);
+                            buf >>= sh;
+                            avail = 64 - sh;
+                        }
+                        let state = (buf & mask) as u32;
+                        let wv = decode(state);
+                        let xs = &xcol[(x0 + c) * b..(x0 + c) * b + b];
+                        for (a, &xv) in acc.iter_mut().zip(xs) {
+                            *a += wv * xv;
+                        }
+                        buf >>= k;
+                        avail -= k;
+                        bit += k;
+                    }
+                    let row = bi * tx + r;
+                    for (bb, &a) in acc.iter().enumerate() {
+                        *y.at_mut(bb, row) += a * self.scale;
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn matvec_tilde_multi_v2<F: Fn(u32) -> (f32, f32)>(
+        &self,
+        xt: &Matrix,
+        y: &mut Matrix,
+        decode: F,
+    ) {
+        let b = xt.rows;
+        let kv = (self.trellis.k * 2) as usize;
+        let l = self.trellis.l;
+        let (tx, ty) = (self.tx, self.ty);
+        debug_assert_eq!(ty % 2, 0);
+        let xcol = xt.transpose().data;
+        let mut acc = vec![0.0f32; b];
+        for bi in 0..self.tiles_r() {
+            for bj in 0..self.tiles_c() {
+                let words = &self.packed
+                    [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
+                let x0 = bj * ty;
+                let mut bit = 0usize;
+                for r in 0..tx {
+                    acc.fill(0.0);
+                    for c in (0..ty).step_by(2) {
+                        let state = decode_window(words, bit, l);
+                        let (wa, wb) = decode(state);
+                        let xa = &xcol[(x0 + c) * b..(x0 + c) * b + b];
+                        let xb = &xcol[(x0 + c + 1) * b..(x0 + c + 1) * b + b];
+                        for ((a, &va), &vb) in acc.iter_mut().zip(xa).zip(xb) {
+                            *a += wa * va + wb * vb;
+                        }
+                        bit += kv;
+                    }
+                    let row = bi * tx + r;
+                    for (bb, &a) in acc.iter().enumerate() {
+                        *y.at_mut(bb, row) += a * self.scale;
+                    }
                 }
             }
         }
@@ -761,6 +897,67 @@ mod tests {
             let fused = res.qm.matvec(&x);
             for (a, b) in fused.iter().zip(&direct) {
                 assert!((a - b).abs() < 1e-3, "{code}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_multi_matches_reconstructed_gemm_all_codes() {
+        // The batch-fused kernel must agree with Ŵ X for every CodeSpec variant
+        // (both the v1 scalar and v2 paired decode paths), and each batch row
+        // must be *bit-identical* to the single-column fused matvec.
+        let mut rng = Rng::new(21);
+        let w = Matrix::gaussian(16, 16, 0.5, &mut rng);
+        let h = random_spd(16, 22);
+        let b = 3usize;
+        for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1), ("lut", 2)] {
+            let mut cfg = small_cfg(2);
+            cfg.code = code.into();
+            cfg.v = v;
+            let res = quantize_matrix_qtip(&w, &h, &cfg);
+            let w_rec = res.qm.reconstruct_w();
+            let mut x = Matrix::zeros(b, 16);
+            for r in 0..b {
+                let xr = rng.gauss_vec(16);
+                x.row_mut(r).copy_from_slice(&xr);
+            }
+            let fused = res.qm.matvec_multi(&x);
+            assert_eq!(fused.rows, b);
+            assert_eq!(fused.cols, 16);
+            for r in 0..b {
+                let direct = w_rec.matvec(x.row(r));
+                for (a, bb) in fused.row(r).iter().zip(&direct) {
+                    assert!((a - bb).abs() < 1e-3, "{code} v={v} row {r}: {a} vs {bb}");
+                }
+                let single = res.qm.matvec(x.row(r));
+                assert_eq!(
+                    fused.row(r),
+                    &single[..],
+                    "{code} v={v}: fused batch row {r} not bit-identical to matvec"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_tilde_multi_matches_singles_on_synthetic() {
+        // Synthetic packed bits exercise the rolling-window decode at full tile
+        // size (16×16, L=16) for both scalar-code kernels.
+        for code in [CodeSpec::OneMad, CodeSpec::ThreeInst] {
+            let qm = QuantizedMatrix::synthetic(32, 32, Trellis::new(16, 2, 1), code, 16, 16, 9);
+            let mut rng = Rng::new(31);
+            let b = 4usize;
+            let mut x = Matrix::zeros(b, 32);
+            for r in 0..b {
+                let xr = rng.gauss_vec(32);
+                x.row_mut(r).copy_from_slice(&xr);
+            }
+            let mut fused = Matrix::zeros(b, 32);
+            qm.matvec_tilde_multi(&x, &mut fused);
+            for r in 0..b {
+                let mut single = vec![0.0f32; 32];
+                qm.matvec_tilde(x.row(r), &mut single);
+                assert_eq!(fused.row(r), &single[..], "row {r} diverged");
             }
         }
     }

@@ -78,6 +78,51 @@ fn mid_flight_admission_preserves_outputs() {
 }
 
 #[test]
+fn fused_batch_is_token_identical_across_heterogeneous_lengths() {
+    // Requests with different prompt lengths and generation budgets decode in
+    // the same fused rounds (heterogeneous KV cache lengths per round). Every
+    // request must still be token-identical to running it alone, and the
+    // batcher must actually have shared fused rounds between sequences.
+    let model = quantized_tiny();
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: "x".repeat(1 + 5 * i as usize),
+            max_new_tokens: 5 + 3 * i as usize,
+            temperature: 0.0,
+            top_k: 1,
+            seed: i,
+        })
+        .collect();
+
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig { max_batch: 4, kv_budget_bytes: 1 << 30 },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let stats = server.shutdown();
+    assert!(
+        stats.max_fused_batch >= 2,
+        "heterogeneous requests never shared a fused round (max fused batch {})",
+        stats.max_fused_batch
+    );
+
+    for (r, b) in reqs.iter().zip(&batched) {
+        assert_eq!(b.tokens.len(), r.max_new_tokens);
+        assert_eq!(b.prompt_tokens, r.prompt.len());
+        let solo = ServerHandle::spawn(model.clone(), ServerConfig::default());
+        let alone = solo.submit(r.clone()).recv().unwrap();
+        solo.shutdown();
+        assert_eq!(
+            alone.tokens, b.tokens,
+            "request {} diverged between fused batch and solo decode",
+            r.id
+        );
+    }
+}
+
+#[test]
 fn stress_many_requests_small_pool() {
     let server = ServerHandle::spawn(
         quantized_tiny(),
