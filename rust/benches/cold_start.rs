@@ -1,0 +1,90 @@
+//! Cold-start latency: calibrate+quantize-from-scratch vs load-from-artifact,
+//! measured down to the first decoded token — the payoff of the
+//! quantize-once/serve-many workflow (`qtip quantize --save` →
+//! `qtip serve --artifact`). Emits `bench_results/cold_start.md`.
+
+use std::path::Path;
+
+use qtip::bench::{f2, f3, Table};
+use qtip::coordinator::quantize_model_qtip;
+use qtip::hessian::collect_hessians;
+use qtip::io::{load_quantized_model, save_quantized_model};
+use qtip::model::{
+    calibration_split, load_corpus, KvCache, ModelConfig, Transformer, WeightStore,
+};
+use qtip::quant::QtipConfig;
+use qtip::util::threadpool::default_workers;
+use qtip::util::Timer;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let name = "nano";
+    let store = WeightStore::load(&dir, name)
+        .unwrap_or_else(|_| WeightStore::random(&ModelConfig::by_name(name), 0x5EED));
+    let corpus = {
+        let holdout = dir.join("corpus_holdout.bin");
+        if holdout.exists() {
+            std::fs::read(&holdout).unwrap()
+        } else {
+            load_corpus(&[Path::new(env!("CARGO_MANIFEST_DIR"))], 1 << 20)
+        }
+    };
+
+    // Path A: the full pipeline a server without artifacts must run.
+    let t = Timer::start();
+    let mut model = Transformer::from_store(&store);
+    let seqs: Vec<Vec<u16>> = calibration_split(&corpus)
+        .chunks(128)
+        .take(24)
+        .map(|c| c.iter().map(|&b| b as u16).collect())
+        .collect();
+    let hs = collect_hessians(&model, &seqs);
+    let cfg = QtipConfig {
+        l: 12,
+        k: 2,
+        v: 1,
+        tx: 16,
+        ty: 16,
+        code: "3inst".into(),
+        seed: 0x5171_50,
+    };
+    let report = quantize_model_qtip(&mut model, &hs, &cfg, default_workers(), |_| {});
+    let quant_model_secs = t.secs();
+    let mut cache = KvCache::new(&model.cfg);
+    let _ = model.decode_step(&mut cache, 42);
+    let quant_first_tok = t.secs();
+
+    // Persist once (temp dir; the CLI writes into artifacts/).
+    let out = std::env::temp_dir().join(format!("qtip_cold_start_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    std::fs::create_dir_all(&out).unwrap();
+    save_quantized_model(&out, "bench", &model, &report).unwrap();
+
+    // Path B: cold-start from the saved artifact.
+    let t = Timer::start();
+    let (loaded, _rep, info) = load_quantized_model(&out, "bench").unwrap();
+    let load_model_secs = t.secs();
+    let mut cache = KvCache::new(&loaded.cfg);
+    let _ = loaded.decode_step(&mut cache, 42);
+    let load_first_tok = t.secs();
+
+    let mut table = Table::new(
+        "Cold start to first token: quantize-from-scratch vs artifact load (nano, 3INST L=12 k=2)",
+        &["path", "secs to model", "secs to first token", "speedup"],
+    );
+    table.row(vec![
+        "calibrate+quantize".into(),
+        f3(quant_model_secs),
+        f3(quant_first_tok),
+        "1.00".into(),
+    ]);
+    table.row(vec![
+        "artifact cold-start".into(),
+        f3(load_model_secs),
+        f3(load_first_tok),
+        f2(quant_first_tok / load_first_tok.max(1e-9)),
+    ]);
+    println!("artifact blob: {} bytes ({})", info.blob_bytes, info.quant_desc);
+    table.emit("cold_start.md");
+    let _ = std::fs::remove_dir_all(&out);
+}

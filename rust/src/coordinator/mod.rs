@@ -7,6 +7,8 @@ pub mod pipeline;
 pub mod server;
 pub mod tcp;
 
-pub use pipeline::{quantize_model_baseline, quantize_model_qtip, LayerReport, QuantizeReport};
+pub use pipeline::{
+    layer_seed, quantize_model_baseline, quantize_model_qtip, LayerReport, QuantizeReport,
+};
 pub use server::{GenRequest, GenResponse, ServerConfig, ServerHandle, ServerStats};
 pub use tcp::TcpFrontend;

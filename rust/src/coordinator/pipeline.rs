@@ -9,9 +9,20 @@ use crate::model::transformer::{Linear, Transformer};
 use crate::quant::{
     quantize_matrix_baseline, quantize_matrix_qtip, BaselineKind, QtipConfig, QuantMetrics,
 };
+use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 use crate::util::threadpool::parallel_for;
 use crate::util::Timer;
+
+/// Derive a per-layer quantization seed from the run's global seed.
+///
+/// Both pipelines (QTIP and the baselines) must mix the layer index through
+/// `mix64` before XOR-ing: a plain `seed ^ i` leaves layer 0 with the raw
+/// global seed and gives adjacent layers nearly-correlated RHT sign patterns,
+/// which defeats the independence the incoherence argument assumes.
+pub fn layer_seed(global: u64, layer_index: usize) -> u64 {
+    global ^ crate::util::rng::mix64(layer_index as u64 + 1)
+}
 
 /// Per-layer outcome.
 #[derive(Clone, Debug)]
@@ -22,6 +33,32 @@ pub struct LayerReport {
     pub bytes_before: usize,
     pub bytes_after: usize,
     pub metrics: QuantMetrics,
+}
+
+impl LayerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("bytes_before", Json::Num(self.bytes_before as f64)),
+            ("bytes_after", Json::Num(self.bytes_after as f64)),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> LayerReport {
+        LayerReport {
+            name: j.req_str("name").to_string(),
+            rows: j.req_usize("rows"),
+            cols: j.req_usize("cols"),
+            bytes_before: j.req_usize("bytes_before"),
+            bytes_after: j.req_usize("bytes_after"),
+            metrics: QuantMetrics::from_json(
+                j.get("metrics").expect("layer report missing 'metrics'"),
+            ),
+        }
+    }
 }
 
 /// Whole-model quantization outcome.
@@ -44,6 +81,32 @@ impl QuantizeReport {
 
     pub fn compression_ratio(&self) -> f64 {
         self.bytes_before as f64 / self.bytes_after.max(1) as f64
+    }
+
+    /// Manifest form: saved inside quantized artifacts (see `crate::io`) so a
+    /// cold-started server reports the same compression/metric summary as the
+    /// run that produced the artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layers", Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())),
+            ("seconds", Json::Num(self.seconds)),
+            ("bytes_before", Json::Num(self.bytes_before as f64)),
+            ("bytes_after", Json::Num(self.bytes_after as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> QuantizeReport {
+        let layers = j
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .map(|arr| arr.iter().map(LayerReport::from_json).collect())
+            .unwrap_or_default();
+        QuantizeReport {
+            layers,
+            seconds: j.req_f64("seconds"),
+            bytes_before: j.req_usize("bytes_before"),
+            bytes_after: j.req_usize("bytes_after"),
+        }
     }
 }
 
@@ -84,7 +147,7 @@ pub fn quantize_model_qtip(
         let (name, w, h) = &jobs[i];
         // Derive a per-layer seed so RHT signs differ across layers.
         let mut layer_cfg = cfg.clone();
-        layer_cfg.seed = cfg.seed ^ crate::util::rng::mix64(i as u64 + 1);
+        layer_cfg.seed = layer_seed(cfg.seed, i);
         let res = quantize_matrix_qtip(w, h, &layer_cfg);
         let before = w.data.len() * 4;
         *results[i].lock().unwrap() = Some((name.clone(), res, before));
@@ -144,7 +207,7 @@ pub fn quantize_model_baseline(
         (0..jobs.len()).map(|_| Mutex::new(None)).collect();
     parallel_for(jobs.len(), workers, |i| {
         let (name, w, h) = &jobs[i];
-        let res = quantize_matrix_baseline(w, h, kind, seed ^ i as u64);
+        let res = quantize_matrix_baseline(w, h, kind, layer_seed(seed, i));
         let w_hat = res.reconstruct_w();
         *results[i].lock().unwrap() =
             Some((name.clone(), w_hat, res.metrics, w.data.len() * 4));
@@ -231,6 +294,67 @@ mod tests {
         // Compare softmax-ish behaviour: logits should be highly correlated.
         let corr = crate::util::stats::pearson(&dense_logits.data, &q_logits.data);
         assert!(corr > 0.95, "4-bit quantization wrecked the model: corr {corr}");
+    }
+
+    #[test]
+    fn layer_seed_is_mixed_and_distinct() {
+        // Regression: the baseline pipeline used `seed ^ i`, so layer 0 ran on
+        // the raw global seed and adjacent layers differed by one bit.
+        let global = 0x5171_50u64;
+        assert_ne!(layer_seed(global, 0), global, "layer 0 must not reuse the global seed");
+        let seeds: Vec<u64> = (0..16).map(|i| layer_seed(global, i)).collect();
+        for i in 0..seeds.len() {
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "layers {i} and {j} share a seed");
+            }
+        }
+        // Adjacent seeds must differ in many bits, not one (mix64 avalanche).
+        for w in seeds.windows(2) {
+            let dist = (w[0] ^ w[1]).count_ones();
+            assert!(dist >= 16, "adjacent layer seeds nearly correlated ({dist} bits)");
+        }
+    }
+
+    #[test]
+    fn per_layer_rht_signs_differ() {
+        use crate::quant::RhtContext;
+        let global = 7u64;
+        let a = RhtContext::new(16, 16, layer_seed(global, 0));
+        let b = RhtContext::new(16, 16, layer_seed(global, 1));
+        let c = RhtContext::new(16, 16, layer_seed(global, 2));
+        assert_ne!(a.sign_cols, b.sign_cols, "layers 0/1 share RHT column signs");
+        assert_ne!(b.sign_cols, c.sign_cols, "layers 1/2 share RHT column signs");
+        assert_ne!(a.sign_rows, b.sign_rows, "layers 0/1 share RHT row signs");
+    }
+
+    #[test]
+    fn quantize_report_json_roundtrip() {
+        let report = QuantizeReport {
+            layers: vec![LayerReport {
+                name: "l0.q".into(),
+                rows: 128,
+                cols: 128,
+                bytes_before: 65536,
+                bytes_after: 4212,
+                metrics: QuantMetrics {
+                    relative_proxy: 0.015625,
+                    mse: 0.09375,
+                    bits_per_weight: 2.0,
+                    seconds: 0.25,
+                },
+            }],
+            seconds: 1.25,
+            bytes_before: 65536,
+            bytes_after: 4212,
+        };
+        let text = report.to_json().to_string();
+        let back = QuantizeReport::from_json(&Json::parse(&text).unwrap());
+        assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.layers[0].name, "l0.q");
+        assert_eq!(back.layers[0].bytes_after, 4212);
+        assert_eq!(back.layers[0].metrics.mse, 0.09375);
+        assert_eq!(back.bytes_before, report.bytes_before);
+        assert_eq!(back.compression_ratio(), report.compression_ratio());
     }
 
     #[test]

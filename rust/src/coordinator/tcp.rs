@@ -42,8 +42,9 @@ impl TcpFrontend {
                     Ok((stream, _)) => {
                         let srv = server.clone();
                         let ids = next_id.clone();
+                        let conn_stop = stop2.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &srv, &ids);
+                            let _ = handle_conn(stream, &srv, &ids, &conn_stop);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -73,57 +74,116 @@ impl Drop for TcpFrontend {
     }
 }
 
-fn handle_conn(stream: TcpStream, server: &ServerHandle, ids: &AtomicU64) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    server: &ServerHandle,
+    ids: &AtomicU64,
+    stop: &AtomicBool,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Bounded reads: a connection parked on an idle client must re-check the
+    // stop flag periodically, or frontend shutdown would hang in join() on
+    // every open socket and the server could never drain and report stats.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    // Accumulate raw bytes, not a String: read_line's UTF-8 guard discards
+    // already-consumed bytes when a timeout lands mid multi-byte character;
+    // read_until keeps everything appended across retries.
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
         }
-        let id = ids.fetch_add(1, Ordering::Relaxed);
-        let resp = match Json::parse(&line) {
-            Ok(j) => {
-                let req = GenRequest {
-                    id,
-                    prompt: j.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string(),
-                    max_new_tokens: j
-                        .get("max_new_tokens")
-                        .and_then(|v| v.as_usize())
-                        .unwrap_or(32),
-                    temperature: j
-                        .get("temperature")
-                        .and_then(|v| v.as_f64())
-                        .unwrap_or(0.7) as f32,
-                    top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
-                    seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
-                };
-                let r = server.submit(req).recv()?;
-                if let Some(err) = r.error {
-                    // Rejected at admission (e.g. KV cache above the budget).
-                    Json::obj(vec![
-                        ("id", Json::Num(r.id as f64)),
-                        ("error", Json::Str(err)),
-                    ])
-                } else {
-                    Json::obj(vec![
-                        ("id", Json::Num(r.id as f64)),
-                        ("text", Json::Str(r.text)),
-                        ("tokens", Json::Num(r.tokens.len() as f64)),
-                        ("ttft_ms", Json::Num(r.ttft * 1e3)),
-                        ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
-                    ])
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) => {
+                // Client closed. A timeout may have parked an unterminated
+                // final request in `line` — serve it before hanging up.
+                let text = String::from_utf8_lossy(&line);
+                let trimmed = text.trim();
+                if !trimmed.is_empty() {
+                    let resp = respond(trimmed, server, ids);
+                    writeln!(writer, "{resp}")?;
+                }
+                return Ok(());
+            }
+            Ok(_) => {
+                let eof_tail = line.last() != Some(&b'\n');
+                let text = String::from_utf8_lossy(&line);
+                let trimmed = text.trim();
+                if !trimmed.is_empty() {
+                    let resp = respond(trimmed, server, ids);
+                    writeln!(writer, "{resp}")?;
+                }
+                line.clear();
+                if eof_tail {
+                    return Ok(());
                 }
             }
-            Err(e) => Json::obj(vec![
-                ("id", Json::Num(id as f64)),
-                ("error", Json::Str(format!("bad request: {e}"))),
-            ]),
-        };
-        writeln!(writer, "{resp}")?;
+            // Timeout (named WouldBlock or TimedOut depending on platform):
+            // the partial line stays buffered; poll the stop flag again.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
     }
-    Ok(())
+}
+
+fn respond(line: &str, server: &ServerHandle, ids: &AtomicU64) -> Json {
+    let id = ids.fetch_add(1, Ordering::Relaxed);
+    match Json::parse(line) {
+        Ok(j) => {
+            let req = GenRequest {
+                id,
+                prompt: j.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string(),
+                max_new_tokens: j
+                    .get("max_new_tokens")
+                    .and_then(|v| v.as_usize())
+                    .unwrap_or(32),
+                temperature: j
+                    .get("temperature")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.7) as f32,
+                top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
+                seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
+            };
+            match server.submit(req).recv() {
+                Ok(r) => {
+                    if let Some(err) = r.error {
+                        // Rejected at admission (e.g. KV cache above the budget).
+                        Json::obj(vec![
+                            ("id", Json::Num(r.id as f64)),
+                            ("error", Json::Str(err)),
+                        ])
+                    } else {
+                        Json::obj(vec![
+                            ("id", Json::Num(r.id as f64)),
+                            ("text", Json::Str(r.text)),
+                            ("tokens", Json::Num(r.tokens.len() as f64)),
+                            ("ttft_ms", Json::Num(r.ttft * 1e3)),
+                            ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
+                        ])
+                    }
+                }
+                Err(_) => Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("error", Json::Str("server shut down before responding".into())),
+                ]),
+            }
+        }
+        Err(e) => Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("error", Json::Str(format!("bad request: {e}"))),
+        ]),
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +254,30 @@ mod tests {
         let resp = roundtrip(fe.addr, r#"{"prompt": "x", "max_new_tokens": 4}"#);
         assert!(resp.get("error").unwrap().as_str().unwrap().contains("budget"));
         fe.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_with_idle_connection_open() {
+        // Regression: shutdown joins every connection thread, and a thread
+        // blocked on an idle client's socket used to block that join forever.
+        // With bounded reads the frontend must close promptly even while a
+        // client holds its connection open.
+        let server = tiny_server();
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let idle = TcpStream::connect(fe.addr).unwrap();
+        // One served request proves the frontend was live before shutdown.
+        let resp = roundtrip(
+            fe.addr,
+            r#"{"prompt": "x", "max_new_tokens": 2, "temperature": 0}"#,
+        );
+        assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(2));
+        let t = std::time::Instant::now();
+        fe.shutdown();
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "shutdown hung on an idle connection"
+        );
+        drop(idle);
     }
 
     #[test]

@@ -1,0 +1,818 @@
+//! Quantized-artifact persistence: the "pay quantization once, serve many"
+//! subsystem.
+//!
+//! `qtip quantize --save <name>` writes a versioned two-file artifact into the
+//! artifacts directory:
+//!
+//! * `quant_<name>.json` — manifest: format version, model config, the
+//!   [`QuantizeReport`] of the run that produced it, and per-layer decode
+//!   metadata (trellis params, code spec, tile geometry, exact `f32` scale
+//!   bits, blob offsets);
+//! * `quant_<name>.bin`  — binary blob (little-endian): per-layer packed u32
+//!   trellis bitstreams, RHT sign bits, Hyb/Lut decode tables, and the dense
+//!   non-quantized tensors (embeddings, norms, head), guarded by an FNV-1a64
+//!   checksum recorded in the manifest.
+//!
+//! [`load_quantized_model`] reassembles a serving-ready [`Transformer`] whose
+//! `Linear::Quantized` layers are **bit-identical** to the freshly quantized
+//! model — every quantity the decode hot path touches (packed words, scale
+//! bits, sign bits, LUT entries) round-trips exactly, so `serve`/`generate`/
+//! `eval --artifact` cold-start without re-running calibration or
+//! BlockLDLQ+Viterbi. Workers in a future sharded deployment can load layers
+//! from the same blob independently: every section is offset-addressed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::QuantizeReport;
+use crate::model::transformer::{Attention, Layer, Linear, Mlp, Transformer};
+use crate::model::weights::{f32s_to_le_bytes, le_bytes_to_f32s, WeightStore};
+use crate::model::ModelConfig;
+use crate::quant::{CodeSpec, QuantMetrics, QuantizedMatrix, RhtContext};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
+use crate::util::matrix::Matrix;
+
+/// On-disk format version; bump on any incompatible layout change.
+pub const FORMAT_VERSION: usize = 1;
+/// Manifest `kind` discriminator (shares the artifacts dir with model weights
+/// and AOT kernels).
+pub const ARTIFACT_KIND: &str = "qtip-quantized-model";
+
+/// FNV-1a 64-bit checksum (offline stand-in for a real digest — stable,
+/// dependency-free, and plenty to catch truncation/corruption).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Manifest path for artifact `name` under `dir`.
+pub fn quant_manifest_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("quant_{name}.json"))
+}
+
+/// Summary of a saved quantized artifact (for `qtip info` and save/load logs).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub manifest_path: PathBuf,
+    pub blob_bytes: usize,
+    pub config: ModelConfig,
+    /// e.g. `"3inst L=12 k=2 V=1 tiles 16x16"`.
+    pub quant_desc: String,
+    pub quantized_layers: usize,
+}
+
+/// Append-only blob builder; returns byte offsets for the manifest.
+struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    fn put_u32s(&mut self, words: &[u32]) -> usize {
+        let off = self.buf.len();
+        for &w in words {
+            self.buf.extend_from_slice(&w.to_le_bytes());
+        }
+        off
+    }
+
+    fn put_f32s(&mut self, vals: &[f32]) -> usize {
+        let off = self.buf.len();
+        self.buf.extend_from_slice(&f32s_to_le_bytes(vals));
+        off
+    }
+}
+
+/// Bounds-checked blob sections (every offset comes from the manifest, which
+/// could be stale or hand-edited — never index past the blob).
+struct BlobReader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> BlobReader<'a> {
+    fn section(&self, off: usize, bytes: usize) -> Result<&'a [u8]> {
+        off.checked_add(bytes)
+            .and_then(|end| self.buf.get(off..end))
+            .ok_or_else(|| {
+                anyhow!(
+                    "blob section [{off}, +{bytes}) out of range ({} blob bytes): \
+                     truncated or mismatched artifact",
+                    self.buf.len()
+                )
+            })
+    }
+
+    fn u32s(&self, off: usize, n: usize) -> Result<Vec<u32>> {
+        let b = self.section(off, n * 4)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f32s(&self, off: usize, n: usize) -> Result<Vec<f32>> {
+        le_bytes_to_f32s(self.section(off, n * 4)?)
+    }
+}
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn code_spec_to_json(code: &CodeSpec, blob: &mut BlobWriter) -> Json {
+    match code {
+        CodeSpec::OneMad => Json::obj(vec![("name", Json::Str("1mad".into()))]),
+        CodeSpec::ThreeInst => Json::obj(vec![("name", Json::Str("3inst".into()))]),
+        CodeSpec::Hyb { q, v, lut } => {
+            let off = blob.put_f32s(lut);
+            Json::obj(vec![
+                ("name", Json::Str("hyb".into())),
+                ("q", num(*q as usize)),
+                ("v", num(*v as usize)),
+                ("lut_off", num(off)),
+                ("lut_len", num(lut.len())),
+            ])
+        }
+        CodeSpec::Lut { v, table } => {
+            let off = blob.put_f32s(table);
+            Json::obj(vec![
+                ("name", Json::Str("lut".into())),
+                ("v", num(*v as usize)),
+                ("table_off", num(off)),
+                ("table_len", num(table.len())),
+            ])
+        }
+    }
+}
+
+fn code_spec_from_json(j: &Json, blob: &BlobReader, trellis: &Trellis) -> Result<CodeSpec> {
+    let spec = match j.req_str("name") {
+        "1mad" => CodeSpec::OneMad,
+        "3inst" => CodeSpec::ThreeInst,
+        "hyb" => {
+            let q = j.req_usize("q") as u32;
+            let v = j.req_usize("v") as u32;
+            // Mirrors HybridCode::from_lut's invariants: a bad q would make
+            // the decode hot loop's `15 - q` shift underflow at serve time.
+            if !(1..=2).contains(&v) || q > 14 {
+                bail!("hyb code with unsupported q={q} / v={v}");
+            }
+            let len = j.req_usize("lut_len");
+            if len != (1usize << q) * v as usize {
+                bail!("hyb LUT length {len} != 2^{q} * {v}");
+            }
+            CodeSpec::Hyb { q, v, lut: blob.f32s(j.req_usize("lut_off"), len)? }
+        }
+        "lut" => {
+            let v = j.req_usize("v") as u32;
+            let len = j.req_usize("table_len");
+            if v == 0 || len != (1usize << trellis.l) * v as usize {
+                bail!("LUT table length {len} != 2^{} * {v}", trellis.l);
+            }
+            CodeSpec::Lut { v, table: blob.f32s(j.req_usize("table_off"), len)? }
+        }
+        other => bail!("unknown code '{other}' in quantized artifact"),
+    };
+    if spec.v() != trellis.v {
+        bail!("code dimension V={} disagrees with trellis V={}", spec.v(), trellis.v);
+    }
+    Ok(spec)
+}
+
+fn dense_entry(
+    entries: &mut Vec<Json>,
+    blob: &mut BlobWriter,
+    name: String,
+    rows: usize,
+    cols: usize,
+    data: &[f32],
+) {
+    assert_eq!(data.len(), rows * cols, "dense tensor '{name}' shape mismatch");
+    let off = blob.put_f32s(data);
+    entries.push(Json::obj(vec![
+        ("name", Json::Str(name)),
+        ("rows", num(rows)),
+        ("cols", num(cols)),
+        ("off", num(off)),
+    ]));
+}
+
+fn quant_desc(qm: &QuantizedMatrix) -> String {
+    format!(
+        "{} L={} k={} V={} tiles {}x{}",
+        qm.code.name(),
+        qm.trellis.l,
+        qm.trellis.k,
+        qm.trellis.v,
+        qm.tx,
+        qm.ty
+    )
+}
+
+/// Serialize a fully quantized model (+ its quantization report) under `name`.
+///
+/// Every decoder linear must be `Linear::Quantized`; embeddings, norms, and
+/// the head travel as dense f32 sections so the load path needs nothing but
+/// the artifact pair.
+pub fn save_quantized_model(
+    dir: &Path,
+    name: &str,
+    model: &Transformer,
+    report: &QuantizeReport,
+) -> Result<ArtifactInfo> {
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+    {
+        bail!("artifact name '{name}' must be non-empty [A-Za-z0-9_-]");
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut blob = BlobWriter { buf: Vec::new() };
+    let mut layer_entries = Vec::new();
+    let mut desc = String::new();
+    for (lname, lin) in model.linears() {
+        let qm = match lin {
+            Linear::Quantized { qm, .. } => qm,
+            Linear::Dense(_) => {
+                bail!("layer '{lname}' is still dense; quantize the model before saving")
+            }
+        };
+        if desc.is_empty() {
+            desc = quant_desc(qm);
+        }
+        let packed_off = blob.put_u32s(&qm.packed);
+        let sign_rows_off = blob.put_u32s(&RhtContext::sign_bits(&qm.rht.sign_rows));
+        let sign_cols_off = blob.put_u32s(&RhtContext::sign_bits(&qm.rht.sign_cols));
+        let code = code_spec_to_json(&qm.code, &mut blob);
+        layer_entries.push(Json::obj(vec![
+            ("name", Json::Str(lname.clone())),
+            ("rows", num(qm.rows)),
+            ("cols", num(qm.cols)),
+            ("tx", num(qm.tx)),
+            ("ty", num(qm.ty)),
+            (
+                "trellis",
+                Json::obj(vec![
+                    ("l", num(qm.trellis.l as usize)),
+                    ("k", num(qm.trellis.k as usize)),
+                    ("v", num(qm.trellis.v as usize)),
+                ]),
+            ),
+            // Exact bit pattern: the decode path multiplies by this f32, so a
+            // decimal round-trip would break bit-identity.
+            ("scale_bits", num(qm.scale.to_bits() as usize)),
+            ("tile_words", num(qm.tile_words)),
+            ("packed_off", num(packed_off)),
+            ("packed_words", num(qm.packed.len())),
+            ("sign_rows_off", num(sign_rows_off)),
+            ("sign_cols_off", num(sign_cols_off)),
+            ("metrics", qm.metrics.to_json()),
+            ("code", code),
+        ]));
+    }
+    if layer_entries.is_empty() {
+        bail!("model has no decoder linears to save");
+    }
+
+    let mut dense_entries = Vec::new();
+    dense_entry(
+        &mut dense_entries,
+        &mut blob,
+        "tok_emb".into(),
+        model.tok_emb.rows,
+        model.tok_emb.cols,
+        &model.tok_emb.data,
+    );
+    for (i, layer) in model.layers.iter().enumerate() {
+        dense_entry(
+            &mut dense_entries,
+            &mut blob,
+            format!("l{i}.attn_norm"),
+            1,
+            layer.attn_norm.len(),
+            &layer.attn_norm,
+        );
+        dense_entry(
+            &mut dense_entries,
+            &mut blob,
+            format!("l{i}.mlp_norm"),
+            1,
+            layer.mlp_norm.len(),
+            &layer.mlp_norm,
+        );
+    }
+    dense_entry(
+        &mut dense_entries,
+        &mut blob,
+        "out_norm".into(),
+        1,
+        model.out_norm.len(),
+        &model.out_norm,
+    );
+    match &model.head {
+        Linear::Dense(w) => {
+            dense_entry(&mut dense_entries, &mut blob, "head".into(), w.rows, w.cols, &w.data)
+        }
+        Linear::Quantized { .. } => {
+            bail!("quantized output head is not supported by the artifact format")
+        }
+    }
+
+    let checksum = fnv1a64(&blob.buf);
+    let quantized_layers = layer_entries.len();
+    let manifest = Json::obj(vec![
+        ("kind", Json::Str(ARTIFACT_KIND.into())),
+        ("format_version", num(FORMAT_VERSION)),
+        ("model_config", model.cfg.to_json()),
+        ("quant_desc", Json::Str(desc.clone())),
+        ("quantized_layers", num(quantized_layers)),
+        ("blob_file", Json::Str(format!("quant_{name}.bin"))),
+        ("blob_bytes", num(blob.buf.len())),
+        ("checksum_fnv1a64", Json::Str(format!("{checksum:016x}"))),
+        ("report", report.to_json()),
+        ("dense_tensors", Json::Arr(dense_entries)),
+        ("layers", Json::Arr(layer_entries)),
+    ]);
+    let manifest_path = quant_manifest_path(dir, name);
+    let blob_path = dir.join(format!("quant_{name}.bin"));
+    std::fs::write(&blob_path, &blob.buf)
+        .with_context(|| format!("writing {blob_path:?}"))?;
+    std::fs::write(&manifest_path, manifest.to_string())
+        .with_context(|| format!("writing {manifest_path:?}"))?;
+    Ok(ArtifactInfo {
+        name: name.to_string(),
+        manifest_path,
+        blob_bytes: blob.buf.len(),
+        config: model.cfg.clone(),
+        quant_desc: desc,
+        quantized_layers,
+    })
+}
+
+fn take_dense(map: &mut BTreeMap<String, Matrix>, name: &str) -> Result<Matrix> {
+    map.remove(name)
+        .with_context(|| format!("artifact missing dense tensor '{name}'"))
+}
+
+/// Load artifact `name`: verify version + checksum, then reassemble a
+/// serving-ready [`Transformer`] (quantized decoder linears, dense
+/// embeddings/norms/head) plus the [`QuantizeReport`] of the original run.
+pub fn load_quantized_model(
+    dir: &Path,
+    name: &str,
+) -> Result<(Transformer, QuantizeReport, ArtifactInfo)> {
+    let manifest_path = quant_manifest_path(dir, name);
+    let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+        format!(
+            "reading quantized-artifact manifest {manifest_path:?} \
+             (save one with `qtip quantize --save {name}`)"
+        )
+    })?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow!("manifest {manifest_path:?} parse: {e}"))?;
+    let kind = j.req_str("kind");
+    if kind != ARTIFACT_KIND {
+        bail!("{manifest_path:?} is a '{kind}' artifact, not '{ARTIFACT_KIND}'");
+    }
+    let version = j.req_usize("format_version");
+    if version != FORMAT_VERSION {
+        bail!(
+            "quantized artifact '{name}' uses format version {version}; this build reads \
+             version {FORMAT_VERSION} — re-save it with `qtip quantize --save {name}`"
+        );
+    }
+    let cfg = ModelConfig::from_json(j.get("model_config").context("manifest.model_config")?);
+    let blob_path = dir.join(j.req_str("blob_file"));
+    let blob = std::fs::read(&blob_path).with_context(|| format!("reading {blob_path:?}"))?;
+    let expect_bytes = j.req_usize("blob_bytes");
+    if blob.len() != expect_bytes {
+        bail!(
+            "quantized blob {blob_path:?} is {} bytes but the manifest expects \
+             {expect_bytes}: truncated or mismatched artifact",
+            blob.len()
+        );
+    }
+    let expect_sum = j.req_str("checksum_fnv1a64");
+    let got_sum = format!("{:016x}", fnv1a64(&blob));
+    if got_sum != expect_sum {
+        bail!(
+            "checksum mismatch for {blob_path:?}: blob {got_sum}, manifest {expect_sum} \
+             (corrupted artifact)"
+        );
+    }
+    let reader = BlobReader { buf: &blob };
+    // Membership guard before `expected_shape`: that helper panics on names
+    // outside the canonical set, and the manifest (unlike the blob) carries no
+    // checksum — a damaged tensor name must error, not abort.
+    let known_names: std::collections::BTreeSet<String> =
+        WeightStore::expected_names(&cfg).into_iter().collect();
+
+    // Dense tensors, shape-checked against the model config.
+    let mut dense: BTreeMap<String, Matrix> = BTreeMap::new();
+    for t in j
+        .get("dense_tensors")
+        .and_then(|d| d.as_arr())
+        .context("manifest.dense_tensors")?
+    {
+        let tname = t.req_str("name").to_string();
+        if !known_names.contains(&tname) {
+            bail!("unknown tensor '{tname}' in artifact for model '{}'", cfg.name);
+        }
+        let (rows, cols) = (t.req_usize("rows"), t.req_usize("cols"));
+        let (er, ec) = WeightStore::expected_shape(&cfg, &tname);
+        if (rows, cols) != (er, ec) {
+            bail!(
+                "dense tensor '{tname}' has shape {rows}x{cols}, model config expects {er}x{ec}"
+            );
+        }
+        let data = reader
+            .f32s(t.req_usize("off"), rows * cols)
+            .with_context(|| format!("dense tensor '{tname}'"))?;
+        dense.insert(tname, Matrix::from_vec(rows, cols, data));
+    }
+
+    // Quantized decoder linears.
+    let mut qms: BTreeMap<String, QuantizedMatrix> = BTreeMap::new();
+    for e in j.get("layers").and_then(|l| l.as_arr()).context("manifest.layers")? {
+        let lname = e.req_str("name").to_string();
+        if !known_names.contains(&lname) {
+            bail!("unknown layer '{lname}' in artifact for model '{}'", cfg.name);
+        }
+        let (rows, cols) = (e.req_usize("rows"), e.req_usize("cols"));
+        let (er, ec) = WeightStore::expected_shape(&cfg, &lname);
+        if (rows, cols) != (er, ec) {
+            bail!("layer '{lname}' has shape {rows}x{cols}, model config expects {er}x{ec}");
+        }
+        let (tx, ty) = (e.req_usize("tx"), e.req_usize("ty"));
+        if tx == 0 || ty == 0 || rows % tx != 0 || cols % ty != 0 {
+            bail!("layer '{lname}': tile {tx}x{ty} does not divide {rows}x{cols}");
+        }
+        let tj = e.get("trellis").context("layer.trellis")?;
+        let (l, k, v) = (tj.req_usize("l"), tj.req_usize("k"), tj.req_usize("v"));
+        // Pre-validate what Trellis::new would otherwise assert on: a damaged
+        // manifest must error, not abort the process.
+        if !(1..=24).contains(&l) || k == 0 || v == 0 || k * v >= l || k * v > 8 {
+            bail!("layer '{lname}': unsupported trellis (L={l}, k={k}, V={v})");
+        }
+        let trellis = Trellis::new(l as u32, k as u32, v as u32);
+        // tile_words must match the packing geometry exactly, or the decode
+        // hot loop's rolling-window reads walk past each tile at serve time.
+        if (tx * ty) % v != 0 {
+            bail!("layer '{lname}': tile {tx}x{ty} not divisible by V={v}");
+        }
+        let steps = (tx * ty) / v;
+        if steps * k * v < l {
+            bail!("layer '{lname}': tile too small for tail-biting at (L={l}, k={k}, V={v})");
+        }
+        let padded_bits = steps * k * v + (l - k * v);
+        let expect_tile_words = padded_bits.div_ceil(32) + 1;
+        let tile_words = e.req_usize("tile_words");
+        if tile_words != expect_tile_words {
+            bail!(
+                "layer '{lname}': tile_words {tile_words} != {expect_tile_words} required \
+                 by the (L, k, V, tile) geometry"
+            );
+        }
+        let packed_words = e.req_usize("packed_words");
+        if packed_words != (rows / tx) * (cols / ty) * tile_words {
+            bail!(
+                "layer '{lname}': packed stream is {packed_words} words, geometry needs {}",
+                (rows / tx) * (cols / ty) * tile_words
+            );
+        }
+        let packed = reader
+            .u32s(e.req_usize("packed_off"), packed_words)
+            .with_context(|| format!("layer '{lname}' packed stream"))?;
+        let sign_rows = RhtContext::signs_from_bits(
+            &reader.u32s(e.req_usize("sign_rows_off"), rows.div_ceil(32))?,
+            rows,
+        );
+        let sign_cols = RhtContext::signs_from_bits(
+            &reader.u32s(e.req_usize("sign_cols_off"), cols.div_ceil(32))?,
+            cols,
+        );
+        let code = code_spec_from_json(e.get("code").context("layer.code")?, &reader, &trellis)
+            .with_context(|| format!("layer '{lname}' code spec"))?;
+        let metrics = QuantMetrics::from_json(e.get("metrics").context("layer.metrics")?);
+        qms.insert(
+            lname,
+            QuantizedMatrix {
+                rows,
+                cols,
+                tx,
+                ty,
+                trellis,
+                code,
+                scale: f32::from_bits(e.req_usize("scale_bits") as u32),
+                rht: RhtContext { sign_rows, sign_cols },
+                tile_words,
+                packed,
+                metrics,
+            },
+        );
+    }
+
+    // Reassemble the transformer.
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let mut lin = |part: &str| -> Result<Linear> {
+            let key = format!("l{i}.{part}");
+            let qm = qms
+                .remove(&key)
+                .with_context(|| format!("artifact missing quantized layer '{key}'"))?;
+            Ok(Linear::Quantized { qm, cache: None })
+        };
+        let attn = Attention { q: lin("q")?, k: lin("k")?, v: lin("v")?, o: lin("o")? };
+        let mlp = Mlp { gate: lin("gate")?, up: lin("up")?, down: lin("down")? };
+        layers.push(Layer {
+            attn_norm: take_dense(&mut dense, &format!("l{i}.attn_norm"))?.data,
+            attn,
+            mlp_norm: take_dense(&mut dense, &format!("l{i}.mlp_norm"))?.data,
+            mlp,
+        });
+    }
+    if let Some(extra) = qms.keys().next() {
+        bail!(
+            "artifact carries layer '{extra}' beyond the model config's {} layers",
+            cfg.n_layers
+        );
+    }
+    let model = Transformer {
+        cfg: cfg.clone(),
+        tok_emb: take_dense(&mut dense, "tok_emb")?,
+        layers,
+        out_norm: take_dense(&mut dense, "out_norm")?.data,
+        head: Linear::Dense(take_dense(&mut dense, "head")?),
+    };
+    let report = QuantizeReport::from_json(j.get("report").context("manifest.report")?);
+    let info = ArtifactInfo {
+        name: name.to_string(),
+        manifest_path,
+        blob_bytes: blob.len(),
+        config: cfg,
+        quant_desc: j.req_str("quant_desc").to_string(),
+        quantized_layers: j.req_usize("quantized_layers"),
+    };
+    Ok((model, report, info))
+}
+
+/// Scan `dir` for saved quantized artifacts (manifest summaries only — blobs
+/// are not read). Unparsable manifests are skipped; `load_quantized_model`
+/// reports their errors precisely when asked for them by name.
+pub fn list_quantized_artifacts(dir: &Path) -> Vec<ArtifactInfo> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for path in paths {
+        let Some(fname) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(name) = fname.strip_prefix("quant_").and_then(|n| n.strip_suffix(".json"))
+        else {
+            continue;
+        };
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let Ok(j) = Json::parse(&text) else { continue };
+        if j.get("kind").and_then(|k| k.as_str()) != Some(ARTIFACT_KIND)
+            || j.get("format_version").and_then(|v| v.as_usize()) != Some(FORMAT_VERSION)
+        {
+            continue;
+        }
+        // Defensive field extraction: `qtip info` must list the healthy
+        // artifacts even when one manifest is damaged, never panic on it.
+        let Some(cfg_json) = j.get("model_config") else { continue };
+        let cfg_complete = ["vocab", "d_model", "n_layers", "n_heads", "d_ff", "max_seq"]
+            .iter()
+            .all(|k| cfg_json.get(k).and_then(|v| v.as_f64()).is_some())
+            && cfg_json.get("name").and_then(|v| v.as_str()).is_some();
+        if !cfg_complete {
+            continue;
+        }
+        let (Some(blob_bytes), Some(desc), Some(nlayers)) = (
+            j.get("blob_bytes").and_then(|v| v.as_usize()),
+            j.get("quant_desc").and_then(|v| v.as_str()),
+            j.get("quantized_layers").and_then(|v| v.as_usize()),
+        ) else {
+            continue;
+        };
+        out.push(ArtifactInfo {
+            name: name.to_string(),
+            manifest_path: path.clone(),
+            blob_bytes,
+            config: ModelConfig::from_json(cfg_json),
+            quant_desc: desc.to_string(),
+            quantized_layers: nlayers,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::quantize_model_qtip;
+    use crate::hessian::collect_hessians;
+    use crate::model::{KvCache, WeightStore};
+    use crate::quant::QtipConfig;
+
+    fn tiny_quantized(code: &str, v: u32) -> (Transformer, QuantizeReport) {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 32;
+        cfg.name = "tiny".into();
+        let mut model = Transformer::from_store(&WeightStore::random(&cfg, 11));
+        let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+        let hs = collect_hessians(&model, &seqs);
+        let qcfg = QtipConfig {
+            l: 10,
+            k: 2,
+            v,
+            tx: 8,
+            ty: 8,
+            code: code.into(),
+            seed: 42,
+        };
+        let report = quantize_model_qtip(&mut model, &hs, &qcfg, 1, |_| {});
+        (model, report)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qtip_io_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_decode_state() {
+        let dir = tmp_dir("roundtrip");
+        let (model, report) = tiny_quantized("3inst", 1);
+        let info = save_quantized_model(&dir, "rt", &model, &report).unwrap();
+        assert_eq!(info.quantized_layers, 7);
+        assert!(info.blob_bytes > 0);
+
+        let (loaded, lreport, linfo) = load_quantized_model(&dir, "rt").unwrap();
+        assert_eq!(linfo.quantized_layers, 7);
+        assert_eq!(lreport.layers.len(), report.layers.len());
+        assert_eq!(lreport.bytes_after, report.bytes_after);
+
+        // Every packed word, sign, and scale bit must round-trip exactly.
+        for ((n1, a), (n2, b)) in model.linears().iter().zip(loaded.linears().iter()) {
+            assert_eq!(n1, n2);
+            let (Linear::Quantized { qm: qa, .. }, Linear::Quantized { qm: qb, .. }) = (a, b)
+            else {
+                panic!("expected quantized layers");
+            };
+            assert_eq!(qa.packed, qb.packed, "{n1}: packed stream differs");
+            assert_eq!(qa.scale.to_bits(), qb.scale.to_bits(), "{n1}: scale bits differ");
+            assert_eq!(qa.rht.sign_rows, qb.rht.sign_rows, "{n1}: row signs differ");
+            assert_eq!(qa.rht.sign_cols, qb.rht.sign_cols, "{n1}: col signs differ");
+            assert_eq!(qa.tile_words, qb.tile_words);
+            assert_eq!(qa.trellis, qb.trellis);
+        }
+        // And a decode step end-to-end (KV path) must agree bit-for-bit.
+        let mut ca = KvCache::new(&model.cfg);
+        let mut cb = KvCache::new(&loaded.cfg);
+        for &t in &[3u16, 17, 99] {
+            let la = model.decode_step(&mut ca, t);
+            let lb = loaded.decode_step(&mut cb, t);
+            assert_eq!(la, lb, "loaded-artifact logits diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn listing_reports_saved_artifacts() {
+        let dir = tmp_dir("listing");
+        assert!(list_quantized_artifacts(&dir).is_empty());
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "alpha", &model, &report).unwrap();
+        save_quantized_model(&dir, "beta", &model, &report).unwrap();
+        let infos = list_quantized_artifacts(&dir);
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "alpha");
+        assert_eq!(infos[1].name, "beta");
+        assert!(infos[0].quant_desc.contains("3inst"));
+        assert_eq!(infos[0].config.name, "tiny");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_blob_fails_with_clear_error() {
+        let dir = tmp_dir("trunc");
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "t", &model, &report).unwrap();
+        let blob_path = dir.join("quant_t.bin");
+        let blob = std::fs::read(&blob_path).unwrap();
+        std::fs::write(&blob_path, &blob[..blob.len() / 2]).unwrap();
+        let err = load_quantized_model(&dir, "t").unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unhelpful truncation error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_blob_fails_checksum() {
+        let dir = tmp_dir("corrupt");
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "c", &model, &report).unwrap();
+        let blob_path = dir.join("quant_c.bin");
+        let mut blob = std::fs::read(&blob_path).unwrap();
+        blob[blob.len() / 3] ^= 0x40; // flip one bit, length unchanged
+        std::fs::write(&blob_path, &blob).unwrap();
+        let err = load_quantized_model(&dir, "c").unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "unhelpful corruption error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_mismatch_fails_with_clear_error() {
+        let dir = tmp_dir("version");
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "v", &model, &report).unwrap();
+        let mpath = quant_manifest_path(&dir, "v");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let bumped = text.replace("\"format_version\":1", "\"format_version\":99");
+        assert_ne!(bumped, text, "manifest rewrite failed to find the version field");
+        std::fs::write(&mpath, bumped).unwrap();
+        let err = load_quantized_model(&dir, "v").unwrap_err().to_string();
+        assert!(err.contains("format version 99"), "unhelpful version error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn damaged_trellis_params_error_not_abort() {
+        // The manifest carries no checksum, so field damage must surface as a
+        // Result error — not an assert abort inside Trellis::new.
+        let dir = tmp_dir("trellis");
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "tr", &model, &report).unwrap();
+        let mpath = quant_manifest_path(&dir, "tr");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let bad = text.replace("\"l\":10", "\"l\":30");
+        assert_ne!(bad, text, "manifest rewrite failed to find the trellis L field");
+        std::fs::write(&mpath, bad).unwrap();
+        let err = load_quantized_model(&dir, "tr").unwrap_err().to_string();
+        assert!(err.contains("unsupported trellis"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_artifact_mentions_how_to_save() {
+        let dir = tmp_dir("missing");
+        let err = load_quantized_model(&dir, "ghost").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("quantize --save ghost"), "unhelpful error: {chain}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refuses_to_save_dense_model() {
+        let dir = tmp_dir("dense");
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 32;
+        let model = Transformer::from_store(&WeightStore::random(&cfg, 1));
+        let report = QuantizeReport {
+            layers: Vec::new(),
+            seconds: 0.0,
+            bytes_before: 0,
+            bytes_after: 0,
+        };
+        let err = save_quantized_model(&dir, "d", &model, &report).unwrap_err().to_string();
+        assert!(err.contains("still dense"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_artifact_names() {
+        let dir = tmp_dir("names");
+        let (model, report) = tiny_quantized("3inst", 1);
+        for bad in ["", "a/b", "x y", "../up"] {
+            assert!(
+                save_quantized_model(&dir, bad, &model, &report).is_err(),
+                "name '{bad}' should be rejected"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,7 @@ pub mod baselines;
 pub mod quant;
 pub mod model;
 pub mod hessian;
+pub mod io;
 pub mod eval;
 pub mod runtime;
 pub mod coordinator;

@@ -1,24 +1,44 @@
 //! `qtip` — the coordinator CLI.
 //!
 //! Subcommands:
-//!   info                         environment + artifact status
-//!   quantize --model nano --k 2  quantize a model, report per-layer metrics
-//!   eval     --model nano --k 2  perplexity + zeroshot before/after quantization
+//!   info                         environment + artifact status, including
+//!                                saved quantized artifacts
+//!   quantize --model nano --k 2  quantize a model, report per-layer metrics;
+//!                                --save <name> persists the packed trellis
+//!                                artifact for cold-start serving
+//!   eval     --model nano --k 2  perplexity + zeroshot before/after
+//!                                quantization — measured only on the eval
+//!                                half of the corpus, disjoint from the
+//!                                calibration half; --artifact <name> reuses
+//!                                a saved quantized artifact
 //!   serve    --model nano        quantize then serve demo requests (batched);
-//!                                add --tcp 127.0.0.1:7171 for the network front-end
+//!                                --artifact <name> cold-starts from a saved
+//!                                artifact (skips calibration/quantization);
+//!                                --tcp 127.0.0.1:7171 for the network
+//!                                front-end (Ctrl-C drains, then prints stats)
 //!   generate --prompt "..."      one-shot generation from a quantized model
+//!                                (--artifact <name> supported)
+//!
+//! `serve` and `generate` refuse to run on random-init weights unless
+//! --allow-random is passed; `quantize`/`eval` keep the silent fallback so CI
+//! can exercise the pipeline without trained artifacts.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use qtip::cli::Args;
-use qtip::coordinator::{quantize_model_qtip, GenRequest, ServerConfig, ServerHandle};
+use qtip::coordinator::{
+    quantize_model_qtip, GenRequest, QuantizeReport, ServerConfig, ServerHandle, ServerStats,
+};
 use qtip::eval::{perplexity, zeroshot_suite};
 use qtip::hessian::collect_hessians;
-use qtip::model::{load_corpus, split_corpus, ModelConfig, Transformer, WeightStore};
+use qtip::model::{
+    calibration_split, eval_split, load_corpus, ModelConfig, Transformer, WeightStore,
+};
 use qtip::quant::QtipConfig;
 use qtip::util::threadpool::default_workers;
+use qtip::util::Timer;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::env::var("QTIP_ARTIFACTS")
@@ -26,18 +46,23 @@ fn artifacts_dir() -> std::path::PathBuf {
         .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
-fn load_model(name: &str) -> Result<Transformer> {
+fn load_model(name: &str, allow_random: bool) -> Result<Transformer> {
     let dir = artifacts_dir();
     match WeightStore::load(&dir, name) {
         Ok(ws) => {
             eprintln!("[qtip] loaded trained '{name}' from {dir:?}");
             Ok(Transformer::from_store(&ws))
         }
-        Err(e) => {
+        Err(e) if allow_random => {
             eprintln!("[qtip] no trained weights for '{name}' ({e}); using random init");
             let cfg = ModelConfig::by_name(name);
             Ok(Transformer::from_store(&WeightStore::random(&cfg, 0x5EED)))
         }
+        Err(e) => anyhow::bail!(
+            "no trained weights for '{name}' in {dir:?} ({e}); refusing to serve random-init \
+             garbage. Run `make artifacts` to train them, pass --artifact <name> to serve a \
+             saved quantized artifact, or pass --allow-random to override"
+        ),
     }
 }
 
@@ -49,7 +74,9 @@ fn calibration_sequences(model: &Transformer, n: usize) -> Vec<Vec<u16>> {
     } else {
         load_corpus(&[Path::new(env!("CARGO_MANIFEST_DIR"))], 1 << 20)
     };
-    let (train, _) = split_corpus(&corpus, 0.5);
+    // First half only: `cmd_eval` measures perplexity on the disjoint second
+    // half (`eval_split`), so calibration must never touch those bytes.
+    let train = calibration_split(&corpus);
     let seq = model.cfg.max_seq.min(128);
     train
         .chunks(seq)
@@ -80,6 +107,18 @@ fn cmd_info() -> Result<()> {
             if ok { "trained weights present" } else { "absent (random init fallback)" }
         );
     }
+    let quants = qtip::io::list_quantized_artifacts(&artifacts_dir());
+    if quants.is_empty() {
+        println!("  quantized artifacts: none (save one with `qtip quantize --save <name>`)");
+    } else {
+        println!("  quantized artifacts: {}", quants.len());
+        for q in &quants {
+            println!(
+                "    - {}: model {} | {} | {} layers quantized | {} blob bytes",
+                q.name, q.config.name, q.quant_desc, q.quantized_layers, q.blob_bytes
+            );
+        }
+    }
     match qtip::runtime::Registry::open(&artifacts_dir()) {
         Ok(reg) => {
             println!("  AOT artifacts: {}", reg.artifacts.len());
@@ -95,9 +134,9 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-fn quantize_inner(args: &Args) -> Result<(Transformer, qtip::coordinator::QuantizeReport)> {
+fn quantize_inner(args: &Args, allow_random: bool) -> Result<(Transformer, QuantizeReport)> {
     let model_name = args.get_or("model", "nano");
-    let mut model = load_model(model_name)?;
+    let mut model = load_model(model_name, allow_random)?;
     let n_calib = args.get_usize("calib-seqs", 24);
     eprintln!("[qtip] calibrating Hessians on {n_calib} sequences...");
     let seqs = calibration_sequences(&model, n_calib);
@@ -121,8 +160,28 @@ fn quantize_inner(args: &Args) -> Result<(Transformer, qtip::coordinator::Quanti
     Ok((model, report))
 }
 
+/// Acquire a quantized model: cold-start from a saved artifact when
+/// `--artifact <name>` is given (no calibration, no quantization), otherwise
+/// run the full quantization pipeline.
+fn quantized_model(args: &Args, allow_random: bool) -> Result<(Transformer, QuantizeReport)> {
+    if let Some(name) = args.get("artifact") {
+        let timer = Timer::start();
+        let (model, report, info) = qtip::io::load_quantized_model(&artifacts_dir(), name)?;
+        eprintln!(
+            "[qtip] cold-started from quantized artifact '{name}' ({}; {} blob bytes) in \
+             {:.3}s — calibration and quantization skipped",
+            info.quant_desc,
+            info.blob_bytes,
+            timer.secs()
+        );
+        Ok((model, report))
+    } else {
+        quantize_inner(args, allow_random)
+    }
+}
+
 fn cmd_quantize(args: &Args) -> Result<()> {
-    let (_, report) = quantize_inner(args)?;
+    let (model, report) = quantize_inner(args, true)?;
     println!(
         "quantized {} layers in {:.1}s: {} -> {} bytes ({:.2}x), mean rel. proxy {:.5}",
         report.layers.len(),
@@ -132,30 +191,60 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         report.compression_ratio(),
         report.mean_relative_proxy()
     );
+    if let Some(save_name) = args.get("save") {
+        let info = qtip::io::save_quantized_model(&artifacts_dir(), save_name, &model, &report)?;
+        println!(
+            "saved quantized artifact '{save_name}' -> {:?} ({} blob bytes, {} layers); \
+             cold-start it with `qtip serve --artifact {save_name}`",
+            info.manifest_path, info.blob_bytes, info.quantized_layers
+        );
+    }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let model_name = args.get_or("model", "nano");
     let max_tokens = args.get_usize("tokens", 2048);
-    let holdout = std::fs::read(artifacts_dir().join("corpus_holdout.bin"))
+    let corpus = std::fs::read(artifacts_dir().join("corpus_holdout.bin"))
         .context("corpus_holdout.bin (run `make artifacts`)")?;
+    // Perplexity/zeroshot run only on the second half of the corpus; Hessian
+    // calibration (inside quantize_inner) draws only from the first half, so
+    // the two byte ranges are disjoint by construction.
+    let eval_bytes = eval_split(&corpus);
 
-    let dense = load_model(model_name)?;
-    let rep = perplexity(&dense, &holdout, max_tokens);
-    let zs = zeroshot_suite(&dense, &holdout, 24, 7);
+    // Acquire the quantized model first: with --artifact, the fp32 baseline
+    // must come from the model the artifact was quantized from, not whatever
+    // --model defaults to — otherwise the comparison is cross-model garbage.
+    let (mut qmodel, report) = quantized_model(args, true)?;
+    let dense_name = qmodel.cfg.name.clone();
+    if let Some(explicit) = args.get("model") {
+        if args.get("artifact").is_some() && explicit != dense_name {
+            eprintln!(
+                "[qtip] note: --model {explicit} ignored for the fp32 baseline; the \
+                 artifact was quantized from model '{dense_name}'"
+            );
+        }
+    }
+    let dense = load_model(&dense_name, true)?;
+    let rep = perplexity(&dense, eval_bytes, max_tokens);
+    let zs = zeroshot_suite(&dense, eval_bytes, 24, 7);
     println!(
         "fp32      : ppl {:.3} (nll {:.4}, {} tok) | next-byte {:.3} copy {:.3} bracket {:.3}",
         rep.ppl, rep.nll, rep.tokens, zs.next_byte_acc, zs.copy_acc, zs.bracket_acc
     );
 
-    let (mut qmodel, report) = quantize_inner(args)?;
     qmodel.ensure_caches();
-    let qrep = perplexity(&qmodel, &holdout, max_tokens);
-    let qzs = zeroshot_suite(&qmodel, &holdout, 24, 7);
+    let qrep = perplexity(&qmodel, eval_bytes, max_tokens);
+    let qzs = zeroshot_suite(&qmodel, eval_bytes, 24, 7);
+    // Label with the bitrate the model was actually quantized at: with
+    // --artifact the CLI --k flag may not match the saved artifact's k.
+    let bits = report
+        .layers
+        .first()
+        .map(|l| l.metrics.bits_per_weight)
+        .unwrap_or_else(|| args.get_u32("k", 2) as f64);
     println!(
-        "qtip-{}bit : ppl {:.3} (nll {:.4}) | next-byte {:.3} copy {:.3} bracket {:.3} | {:.2}x smaller",
-        args.get_u32("k", 2),
+        "qtip-{:.0}bit : ppl {:.3} (nll {:.4}) | next-byte {:.3} copy {:.3} bracket {:.3} | {:.2}x smaller",
+        bits,
         qrep.ppl,
         qrep.nll,
         qzs.next_byte_acc,
@@ -168,9 +257,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let mut model = if args.has_flag("fp32") {
-        load_model(args.get_or("model", "nano"))?
+        load_model(args.get_or("model", "nano"), args.has_flag("allow-random"))?
     } else {
-        quantize_inner(args)?.0
+        quantized_model(args, args.has_flag("allow-random"))?.0
     };
     model.ensure_caches();
     let server = ServerHandle::spawn(Arc::new(model), ServerConfig::default());
@@ -192,40 +281,50 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_server_stats(stats: &ServerStats) {
+    println!(
+        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {})",
+        stats.completed,
+        stats.total_generated_tokens,
+        stats.throughput_tok_per_sec(),
+        stats.peak_batch
+    );
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (mut model, report) = quantize_inner(args)?;
+    let (mut model, report) = quantized_model(args, args.has_flag("allow-random"))?;
     model.ensure_caches();
-    // Network mode: expose the batcher over newline-JSON TCP and block.
+    let server_cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 4),
+        kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
+    };
+    // Network mode: expose the batcher over newline-JSON TCP until Ctrl-C,
+    // then close the frontend, drain in-flight requests, and report stats.
     if let Some(addr) = args.get("tcp") {
         println!(
             "serving quantized model ({:.2}x compression) over TCP...",
             report.compression_ratio()
         );
-        let server = std::sync::Arc::new(ServerHandle::spawn(
-            Arc::new(model),
-            ServerConfig {
-                max_batch: args.get_usize("max-batch", 4),
-                kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
-            },
-        ));
-        let fe = qtip::coordinator::TcpFrontend::spawn(server, addr)?;
-        println!("listening on {} (Ctrl-C to stop)", fe.addr);
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+        let server = Arc::new(ServerHandle::spawn(Arc::new(model), server_cfg));
+        let fe = qtip::coordinator::TcpFrontend::spawn(server.clone(), addr)?;
+        println!("listening on {} (Ctrl-C to drain and stop)", fe.addr);
+        let shutdown = qtip::util::shutdown::install();
+        while !shutdown.is_set() {
+            std::thread::sleep(std::time::Duration::from_millis(100));
         }
+        eprintln!("[qtip] shutdown requested; closing frontend and draining...");
+        fe.shutdown();
+        let server = Arc::try_unwrap(server)
+            .map_err(|_| anyhow::anyhow!("frontend still holds server references after join"))?;
+        print_server_stats(&server.shutdown());
+        return Ok(());
     }
     let n = args.get_usize("requests", 6);
     println!(
         "serving quantized model ({:.2}x compression); submitting {n} demo requests",
         report.compression_ratio(),
     );
-    let server = ServerHandle::spawn(
-        Arc::new(model),
-        ServerConfig {
-            max_batch: args.get_usize("max-batch", 4),
-            kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
-        },
-    );
+    let server = ServerHandle::spawn(Arc::new(model), server_cfg);
     let prompts = ["fn main", "pub struct", "import ", "## ", "let mut ", "def "];
     let rxs: Vec<_> = (0..n)
         .map(|i| {
@@ -253,14 +352,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             r.text.chars().take(40).collect::<String>()
         );
     }
-    let stats = server.shutdown();
-    println!(
-        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {})",
-        stats.completed,
-        stats.total_generated_tokens,
-        stats.throughput_tok_per_sec(),
-        stats.peak_batch
-    );
+    print_server_stats(&server.shutdown());
     Ok(())
 }
 
@@ -276,7 +368,9 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         other => {
             eprintln!(
-                "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> [--model nano] [--k 2] [--l 12] [--code 3inst] ..."
+                "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> \
+                 [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
+                 [--artifact NAME] [--allow-random] ..."
             );
             std::process::exit(2);
         }

@@ -8,6 +8,6 @@ pub mod transformer;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use tokenizer::{load_corpus, split_corpus, ByteTokenizer};
+pub use tokenizer::{calibration_split, eval_split, load_corpus, split_corpus, ByteTokenizer};
 pub use transformer::{KvCache, Linear, Transformer};
 pub use weights::WeightStore;

@@ -70,6 +70,19 @@ pub fn split_corpus(corpus: &[u8], holdout_frac: f64) -> (&[u8], &[u8]) {
     corpus.split_at(cut)
 }
 
+/// The calibration half of a corpus file: the **first** half. Hessian
+/// calibration must draw only from here so the perplexity numbers in
+/// `qtip eval` are measured on bytes the quantizer never saw.
+pub fn calibration_split(corpus: &[u8]) -> &[u8] {
+    split_corpus(corpus, 0.5).0
+}
+
+/// The evaluation half: the **second** half, byte-disjoint from
+/// [`calibration_split`] by construction.
+pub fn eval_split(corpus: &[u8]) -> &[u8] {
+    split_corpus(corpus, 0.5).1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +116,24 @@ mod tests {
         assert_eq!(train.len(), 192);
         assert_eq!(hold.len(), 64);
         assert_eq!([train, hold].concat(), data);
+    }
+
+    #[test]
+    fn calibration_and_eval_byte_ranges_never_overlap() {
+        // Regression: `qtip eval` used to measure perplexity over the full
+        // holdout file while calibration drew from its first half — a direct
+        // train/eval leak. The named splits must partition the corpus with no
+        // shared bytes.
+        let data: Vec<u8> = (0u16..1001).map(|i| (i % 251) as u8).collect();
+        let calib = calibration_split(&data);
+        let eval = eval_split(&data);
+        assert!(!calib.is_empty() && !eval.is_empty());
+        assert_eq!(calib.len() + eval.len(), data.len(), "splits must cover the corpus");
+        assert_eq!(calib, &data[..calib.len()]);
+        assert_eq!(eval, &data[calib.len()..]);
+        // Address-level disjointness: the calibration range ends at or before
+        // the eval range begins.
+        let calib_end = calib.as_ptr() as usize + calib.len();
+        assert!(calib_end <= eval.as_ptr() as usize, "byte ranges overlap");
     }
 }

@@ -246,6 +246,22 @@ impl Transformer {
         }
     }
 
+    /// Immutable view of all quantizable linear layers with canonical names
+    /// (same order as [`Self::linears_mut`]; the artifact writer walks this).
+    pub fn linears(&self) -> Vec<(String, &Linear)> {
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            out.push((format!("l{i}.q"), &layer.attn.q));
+            out.push((format!("l{i}.k"), &layer.attn.k));
+            out.push((format!("l{i}.v"), &layer.attn.v));
+            out.push((format!("l{i}.o"), &layer.attn.o));
+            out.push((format!("l{i}.gate"), &layer.mlp.gate));
+            out.push((format!("l{i}.up"), &layer.mlp.up));
+            out.push((format!("l{i}.down"), &layer.mlp.down));
+        }
+        out
+    }
+
     /// Iterate all quantizable linear layers with canonical names.
     pub fn linears_mut(&mut self) -> Vec<(String, &mut Linear)> {
         let mut out = Vec::new();

@@ -12,6 +12,27 @@ use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 use anyhow::{bail, Context, Result};
 
+/// Encode f32s as the little-endian byte blob shared by the model-weight and
+/// quantized-artifact (`crate::io`) formats.
+pub fn f32s_to_le_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_le_bytes`]; errors if the byte count isn't 4-aligned.
+pub fn le_bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("f32 blob not a multiple of 4 bytes ({} bytes)", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
 /// A named collection of tensors with its model config.
 #[derive(Clone, Debug)]
 pub struct WeightStore {
@@ -72,13 +93,8 @@ impl WeightStore {
         std::fs::File::open(&bin_path)
             .with_context(|| format!("opening {bin_path:?}"))?
             .read_to_end(&mut bytes)?;
-        if bytes.len() % 4 != 0 {
-            bail!("weight blob not a multiple of 4 bytes");
-        }
-        let floats: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
+        let floats =
+            le_bytes_to_f32s(&bytes).with_context(|| format!("weight blob {bin_path:?}"))?;
 
         let mut tensors = BTreeMap::new();
         for t in j.get("tensors").context("manifest.tensors")?.as_arr().unwrap() {
@@ -133,9 +149,7 @@ impl WeightStore {
                 ("shape", shape),
                 ("offset", Json::Num(offset as f64)),
             ]));
-            for &v in &t.data {
-                blob.extend_from_slice(&v.to_le_bytes());
-            }
+            blob.extend_from_slice(&f32s_to_le_bytes(&t.data));
             offset += t.data.len();
         }
         let manifest = Json::obj(vec![
@@ -203,6 +217,16 @@ mod tests {
             assert_eq!(back.get(&name).data, ws.get(&name).data, "{name}");
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn le_blob_roundtrip_is_bit_exact() {
+        let vals = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, 3.0e38, -7.25e-12];
+        let back = le_bytes_to_f32s(&f32s_to_le_bytes(&vals)).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(le_bytes_to_f32s(&[1, 2, 3]).is_err(), "misaligned blob must error");
     }
 
     #[test]

@@ -147,6 +147,28 @@ pub struct QuantMetrics {
     pub seconds: f64,
 }
 
+impl QuantMetrics {
+    /// Manifest form (quantized-artifact persistence; see `crate::io`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("relative_proxy", Json::Num(self.relative_proxy)),
+            ("mse", Json::Num(self.mse)),
+            ("bits_per_weight", Json::Num(self.bits_per_weight)),
+            ("seconds", Json::Num(self.seconds)),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> QuantMetrics {
+        QuantMetrics {
+            relative_proxy: j.req_f64("relative_proxy"),
+            mse: j.req_f64("mse"),
+            bits_per_weight: j.req_f64("bits_per_weight"),
+            seconds: j.req_f64("seconds"),
+        }
+    }
+}
+
 /// A quantized linear layer: self-contained decode artifact.
 #[derive(Clone, Debug)]
 pub struct QuantizedMatrix {
@@ -981,6 +1003,22 @@ mod tests {
         assert!(sc.metrics.mse < 0.2, "2-bit scalar LDLQ mse {}", sc.metrics.mse);
         // Reconstruction shape.
         assert_eq!(vq.reconstruct_w().rows, 8);
+    }
+
+    #[test]
+    fn quant_metrics_json_roundtrip() {
+        let m = QuantMetrics {
+            relative_proxy: 0.03125,
+            mse: 0.0625,
+            bits_per_weight: 2.0,
+            seconds: 1.5,
+        };
+        let text = m.to_json().to_string();
+        let back = QuantMetrics::from_json(&crate::util::json::Json::parse(&text).unwrap());
+        assert_eq!(back.relative_proxy, m.relative_proxy);
+        assert_eq!(back.mse, m.mse);
+        assert_eq!(back.bits_per_weight, m.bits_per_weight);
+        assert_eq!(back.seconds, m.seconds);
     }
 
     #[test]

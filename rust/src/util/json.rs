@@ -17,12 +17,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
@@ -90,6 +97,12 @@ impl Json {
         self.get(key)
             .and_then(|v| v.as_str())
             .unwrap_or_else(|| panic!("manifest missing string field '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> f64 {
+        self.get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("manifest missing numeric field '{key}'"))
     }
 }
 
@@ -377,6 +390,27 @@ mod tests {
     fn integer_display_has_no_fraction() {
         assert_eq!(Json::Num(16.0).to_string(), "16");
         assert_eq!(Json::Num(2.5).to_string(), "2.5");
+    }
+
+    #[test]
+    fn error_displays_position() {
+        let err = Json::parse("[1,]").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("json parse error at byte"), "{msg}");
+        // JsonError is a real std error (anyhow interop without thiserror).
+        let _: &dyn std::error::Error = &err;
+    }
+
+    #[test]
+    fn req_f64_reads_numbers() {
+        let j = Json::parse(r#"{"x": 2.5}"#).unwrap();
+        assert_eq!(j.req_f64("x"), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing numeric field")]
+    fn req_f64_panics_on_missing() {
+        Json::parse("{}").unwrap().req_f64("nope");
     }
 
     #[test]

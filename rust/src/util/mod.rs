@@ -8,6 +8,7 @@ pub mod linalg;
 pub mod matrix;
 pub mod prop;
 pub mod rng;
+pub mod shutdown;
 pub mod stats;
 pub mod threadpool;
 
