@@ -22,6 +22,7 @@ use qtip::model::{split_corpus, Transformer, WeightStore};
 use qtip::quant::QtipConfig;
 use qtip::runtime::{PjrtRuntime, Registry};
 use qtip::util::rng::Rng;
+use qtip::util::threadpool::ExecPool;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -73,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     let hessians = collect_hessians(&model, &calib);
     let mut qmodel = Transformer::from_store(&ws);
     let t = std::time::Instant::now();
-    let report = quantize_model_qtip(&mut qmodel, &hessians, &cfg, 1, |l| {
+    let report = quantize_model_qtip(&mut qmodel, &hessians, &cfg, &ExecPool::new(0), |l| {
         eprintln!("  quantized {} ({}x{}) proxy {:.5}", l.name, l.rows, l.cols, l.metrics.relative_proxy);
     });
     println!(
@@ -121,7 +122,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nserving 6 batched generation requests (quantized decode path)...");
     let server = ServerHandle::spawn(
         Arc::new(qmodel),
-        ServerConfig { max_batch: 3, kv_budget_bytes: 64 << 20 },
+        ServerConfig { max_batch: 3, kv_budget_bytes: 64 << 20, ..Default::default() },
     );
     let prompts = ["fn main() {", "pub struct ", "import numpy", "## Usage", "let mut x = ", "def train("];
     let rxs: Vec<_> = prompts

@@ -14,6 +14,7 @@ use qtip::coordinator::{quantize_model_qtip, ServerConfig, ServerHandle, TcpFron
 use qtip::hessian::collect_hessians;
 use qtip::model::{split_corpus, Transformer, WeightStore};
 use qtip::quant::QtipConfig;
+use qtip::util::threadpool::ExecPool;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -31,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let hs = collect_hessians(&model, &seqs);
     let cfg = QtipConfig { l: 12, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 7 };
-    let report = quantize_model_qtip(&mut model, &hs, &cfg, 1, |_| {});
+    let report = quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::new(0), |_| {});
     model.ensure_caches();
     println!("model quantized ({:.2}x); starting TCP front-end...", report.compression_ratio());
 

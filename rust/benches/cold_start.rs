@@ -13,7 +13,7 @@ use qtip::model::{
     calibration_split, load_corpus, KvCache, ModelConfig, Transformer, WeightStore,
 };
 use qtip::quant::QtipConfig;
-use qtip::util::threadpool::default_workers;
+use qtip::util::threadpool::ExecPool;
 use qtip::util::Timer;
 
 fn main() {
@@ -48,7 +48,7 @@ fn main() {
         code: "3inst".into(),
         seed: 0x5171_50,
     };
-    let report = quantize_model_qtip(&mut model, &hs, &cfg, default_workers(), |_| {});
+    let report = quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::new(0), |_| {});
     let quant_model_secs = t.secs();
     let mut cache = KvCache::new(&model.cfg);
     let _ = model.decode_step(&mut cache, 42);

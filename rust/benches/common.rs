@@ -8,6 +8,7 @@ use qtip::eval::perplexity;
 use qtip::hessian::{collect_hessians, HessianSet};
 use qtip::model::{split_corpus, Transformer, WeightStore};
 use qtip::quant::{BaselineKind, QtipConfig};
+use qtip::util::threadpool::ExecPool;
 
 pub fn artifacts_dir() -> std::path::PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -51,7 +52,8 @@ impl Workload {
         eval_tokens: usize,
     ) -> (f64, QuantizeReport) {
         let mut m = self.model();
-        let report = quantize_model_qtip(&mut m, hs, cfg, 1, |_| {});
+        let report =
+            quantize_model_qtip(&mut m, hs, cfg, &ExecPool::sequential(), |_| {});
         m.ensure_caches();
         let rep = perplexity(&m, &self.eval, eval_tokens);
         (rep.ppl, report)
@@ -65,7 +67,8 @@ impl Workload {
         eval_tokens: usize,
     ) -> (f64, QuantizeReport) {
         let mut m = self.model();
-        let report = quantize_model_baseline(&mut m, hs, kind, 0xBA5E, 1);
+        let report =
+            quantize_model_baseline(&mut m, hs, kind, 0xBA5E, &ExecPool::sequential());
         let rep = perplexity(&m, &self.eval, eval_tokens);
         (rep.ppl, report)
     }

@@ -19,6 +19,7 @@ use qtip::quant::{CodeSpec, QuantizedMatrix};
 use qtip::trellis::Trellis;
 use qtip::util::matrix::Matrix;
 use qtip::util::rng::Rng;
+use qtip::util::threadpool::ExecPool;
 use qtip::util::Timer;
 
 /// Time y = Wx matvecs; returns (matvecs/s, GB/s effective on the weight bytes).
@@ -168,6 +169,79 @@ fn main() {
     }
     table.emit("table4_throughput.md");
     batch_sweep(min_secs);
+    thread_sweep(min_secs);
+}
+
+/// Intra-op scaling sweep: fused decode throughput as a batch × workers grid.
+/// Shape to hold on a multi-core host: tok/s grows with worker count at every
+/// batch size (tile bands parallelize the decode), and the batch-fusion gain
+/// composes with the thread gain. On a single-core machine all worker counts
+/// collapse to the width-1 row (outputs are bit-identical regardless).
+fn thread_sweep(min_secs: f64) {
+    let mut table = Table::new(
+        "Table 4 addendum — tile-parallel decode scaling (QTIP 3INST 2-bit, d=1024; \
+         shape: tok/s grows with workers at every B; all cells bit-identical)",
+        &["B", "workers", "rounds/s", "tok/s (cols/s)", "vs 1 worker"],
+    );
+    let d = 1024usize;
+    let qm = QuantizedMatrix::synthetic(
+        d,
+        d,
+        Trellis::new(16, 2, 1),
+        CodeSpec::ThreeInst,
+        16,
+        16,
+        3,
+    );
+    let mut rng = Rng::new(13);
+
+    for b in [1usize, 8] {
+        let mut x = Matrix::zeros(b, d);
+        for r in 0..b {
+            let xr = rng.gauss_vec(d);
+            x.row_mut(r).copy_from_slice(&xr);
+        }
+        let mut base_rate = 0.0f64;
+        for workers in [1usize, 2, 4, 8] {
+            let pool = ExecPool::new(workers);
+            let mut y = Matrix::zeros(b, d);
+            let mut xcol = Vec::new();
+            let mut ys = vec![0.0f32; d];
+            // Warmup (and the B=1 single-column path exercised explicitly).
+            if b == 1 {
+                ys.fill(0.0);
+                qm.matvec_tilde_pool(x.row(0), &mut ys, &pool);
+            } else {
+                y.data.fill(0.0);
+                qm.matvec_tilde_multi_pool(&x, &mut y, &mut xcol, &pool);
+            }
+            let t = Timer::start();
+            let mut iters = 0usize;
+            while t.secs() < min_secs {
+                if b == 1 {
+                    ys.fill(0.0);
+                    qm.matvec_tilde_pool(x.row(0), &mut ys, &pool);
+                } else {
+                    y.data.fill(0.0);
+                    qm.matvec_tilde_multi_pool(&x, &mut y, &mut xcol, &pool);
+                }
+                iters += 1;
+            }
+            let round_rate = iters as f64 / t.secs();
+            let tok_rate = round_rate * b as f64;
+            if workers == 1 {
+                base_rate = tok_rate;
+            }
+            table.row(vec![
+                b.to_string(),
+                workers.to_string(),
+                f2(round_rate),
+                f2(tok_rate),
+                f2(tok_rate / base_rate),
+            ]);
+        }
+    }
+    table.emit("table4_thread_sweep.md");
 }
 
 /// Serving-batch sweep: one fused decode pass over B activation columns vs B

@@ -12,6 +12,7 @@ use qtip::bench::{f3, samples, Table};
 use qtip::coordinator::{quantize_model_baseline, quantize_model_qtip};
 use qtip::eval::zeroshot_suite;
 use qtip::quant::BaselineKind;
+use qtip::util::threadpool::ExecPool;
 
 fn main() {
     let Some(w) = require_workload("nano", 16) else { return };
@@ -36,7 +37,8 @@ fn main() {
     for code in ["1mad", "3inst"] {
         for k in [4u32, 2] {
             let mut m = w.model();
-            quantize_model_qtip(&mut m, &hs, &qtip_cfg(code, 12, k, 1), 1, |_| {});
+            let pool = ExecPool::sequential();
+            quantize_model_qtip(&mut m, &hs, &qtip_cfg(code, 12, k, 1), &pool, |_| {});
             m.ensure_caches();
             let z = zeroshot_suite(&m, &w.eval, cases, 7);
             table.row(vec![
@@ -52,7 +54,8 @@ fn main() {
     }
     for k in [4u32, 2] {
         let mut m = w.model();
-        quantize_model_baseline(&mut m, &hs, &BaselineKind::Scalar { k }, 1, 1);
+        let pool = ExecPool::sequential();
+        quantize_model_baseline(&mut m, &hs, &BaselineKind::Scalar { k }, 1, &pool);
         let z = zeroshot_suite(&m, &w.eval, cases, 7);
         table.row(vec![
             "Scalar LDLQ".into(),

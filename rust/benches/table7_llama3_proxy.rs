@@ -17,6 +17,7 @@ use qtip::coordinator::{quantize_model_baseline, quantize_model_qtip};
 use qtip::eval::perplexity;
 use qtip::quant::BaselineKind;
 use qtip::util::rng::Rng;
+use qtip::util::threadpool::ExecPool;
 
 /// Synthetic JSON-ish byte stream: structured, bracket-heavy, shifted from the
 /// source-code training distribution.
@@ -61,7 +62,8 @@ fn main() {
 
     for k in [4u32, 3, 2] {
         let mut mq = w.model();
-        quantize_model_qtip(&mut mq, &hs, &qtip_cfg("3inst", 12, k, 1), 1, |_| {});
+        let pool = ExecPool::sequential();
+        quantize_model_qtip(&mut mq, &hs, &qtip_cfg("3inst", 12, k, 1), &pool, |_| {});
         mq.ensure_caches();
         let mut mv = w.model();
         quantize_model_baseline(
@@ -69,7 +71,7 @@ fn main() {
             &hs,
             &BaselineKind::E8Rvq { k, entries: 1 << 16 },
             1,
-            1,
+            &pool,
         );
         for (eval_name, data) in [("in-dist", w.eval.as_slice()), ("shifted", shifted.as_slice())] {
             let pq = perplexity(&mq, data, eval_tokens).ppl;

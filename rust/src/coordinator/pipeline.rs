@@ -2,8 +2,6 @@
 //! fanned across workers, with progress reporting and per-layer metrics. This is
 //! what `qtip quantize` runs and what the perplexity benches call.
 
-use std::sync::Mutex;
-
 use crate::hessian::HessianSet;
 use crate::model::transformer::{Linear, Transformer};
 use crate::quant::{
@@ -11,7 +9,7 @@ use crate::quant::{
 };
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
-use crate::util::threadpool::parallel_for;
+use crate::util::threadpool::ExecPool;
 use crate::util::Timer;
 
 /// Derive a per-layer quantization seed from the run's global seed.
@@ -111,12 +109,14 @@ impl QuantizeReport {
 }
 
 /// Quantize every decoder linear of `model` in place with QTIP.
-/// `workers` bounds the job fan-out (the single-core CI machine uses 1).
+/// Per-layer jobs fan out across `pool` (sequential when its width is 1, as
+/// on the single-core CI machine). Results are independent of pool width:
+/// each job is a pure function of its (weight, Hessian, per-layer seed).
 pub fn quantize_model_qtip(
     model: &mut Transformer,
     hessians: &HessianSet,
     cfg: &QtipConfig,
-    workers: usize,
+    pool: &ExecPool,
     mut progress: impl FnMut(&LayerReport),
 ) -> QuantizeReport {
     let timer = Timer::start();
@@ -140,24 +140,22 @@ pub fn quantize_model_qtip(
             .collect()
     };
 
-    // Run jobs in parallel; results land in order-indexed slots.
-    let results: Vec<Mutex<Option<(String, crate::quant::QuantizeResult, usize)>>> =
-        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
-    parallel_for(jobs.len(), workers, |i| {
+    // Fan the per-layer jobs across the pool; `map` writes each result into
+    // its order-indexed slot directly (no Mutex per slot).
+    let results = pool.map(jobs.len(), |i| {
         let (name, w, h) = &jobs[i];
         // Derive a per-layer seed so RHT signs differ across layers.
         let mut layer_cfg = cfg.clone();
         layer_cfg.seed = layer_seed(cfg.seed, i);
         let res = quantize_matrix_qtip(w, h, &layer_cfg);
         let before = w.data.len() * 4;
-        *results[i].lock().unwrap() = Some((name.clone(), res, before));
+        (name.clone(), res, before)
     });
 
     // Install quantized layers + collect reports.
     let mut reports = Vec::new();
     let mut by_name = std::collections::BTreeMap::new();
-    for slot in results {
-        let (name, res, before) = slot.into_inner().unwrap().unwrap();
+    for (name, res, before) in results {
         let report = LayerReport {
             name: name.clone(),
             rows: res.qm.rows,
@@ -187,7 +185,7 @@ pub fn quantize_model_baseline(
     hessians: &HessianSet,
     kind: &BaselineKind,
     seed: u64,
-    workers: usize,
+    pool: &ExecPool,
 ) -> QuantizeReport {
     let timer = Timer::start();
     let jobs: Vec<(String, Matrix, Matrix)> = {
@@ -203,20 +201,16 @@ pub fn quantize_model_baseline(
             })
             .collect()
     };
-    let results: Vec<Mutex<Option<(String, Matrix, QuantMetrics, usize)>>> =
-        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
-    parallel_for(jobs.len(), workers, |i| {
+    let results = pool.map(jobs.len(), |i| {
         let (name, w, h) = &jobs[i];
         let res = quantize_matrix_baseline(w, h, kind, layer_seed(seed, i));
         let w_hat = res.reconstruct_w();
-        *results[i].lock().unwrap() =
-            Some((name.clone(), w_hat, res.metrics, w.data.len() * 4));
+        (name.clone(), w_hat, res.metrics, w.data.len() * 4)
     });
 
     let mut reports = Vec::new();
     let mut by_name = std::collections::BTreeMap::new();
-    for slot in results {
-        let (name, w_hat, metrics, before) = slot.into_inner().unwrap().unwrap();
+    for (name, w_hat, metrics, before) in results {
         // Baseline storage estimate: k bits/weight.
         let after = (w_hat.data.len() as f64 * metrics.bits_per_weight / 8.0) as usize;
         reports.push(LayerReport {
@@ -263,7 +257,8 @@ mod tests {
         let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
         let hs = collect_hessians(&model, &seqs);
         let mut n = 0;
-        let report = quantize_model_qtip(&mut model, &hs, &tiny_cfg(), 1, |_| n += 1);
+        let report =
+            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), &ExecPool::sequential(), |_| n += 1);
         assert_eq!(report.layers.len(), 7); // q,k,v,o,gate,up,down × 1 layer
         assert_eq!(n, 7);
         assert!(report.compression_ratio() > 8.0, "{}", report.compression_ratio());
@@ -288,7 +283,7 @@ mod tests {
         let hs = collect_hessians(&model, &seqs);
         let mut cfg = tiny_cfg();
         cfg.k = 4; // 4-bit: near-lossless regime
-        quantize_model_qtip(&mut model, &hs, &cfg, 1, |_| {});
+        quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::sequential(), |_| {});
         model.ensure_caches();
         let q_logits = model.forward_batch(&[10, 20, 30, 40]);
         // Compare softmax-ish behaviour: logits should be highly correlated.
@@ -358,6 +353,33 @@ mod tests {
     }
 
     #[test]
+    fn quantization_is_pool_width_invariant() {
+        // Per-layer jobs are pure functions of (weight, Hessian, layer seed):
+        // the packed artifacts must be byte-identical whether the pipeline
+        // fans out over 1 worker or 4.
+        let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+        let quantize = |pool: &ExecPool| {
+            let mut model = tiny();
+            let hs = collect_hessians(&model, &seqs);
+            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), pool, |_| {});
+            model
+        };
+        let a = quantize(&ExecPool::sequential());
+        let b = quantize(&ExecPool::new(4));
+        for ((name, la), (_, lb)) in a.linears().iter().zip(b.linears().iter()) {
+            let (
+                crate::model::transformer::Linear::Quantized { qm: qa, .. },
+                crate::model::transformer::Linear::Quantized { qm: qb, .. },
+            ) = (la, lb)
+            else {
+                panic!("expected quantized layers");
+            };
+            assert_eq!(qa.packed, qb.packed, "{name}: packed bits depend on pool width");
+            assert_eq!(qa.scale.to_bits(), qb.scale.to_bits(), "{name}: scale differs");
+        }
+    }
+
+    #[test]
     fn baseline_pipeline_installs_dense() {
         let mut model = tiny();
         let seqs = vec![vec![2u16, 4, 6, 8, 10, 12, 14, 16]];
@@ -367,7 +389,7 @@ mod tests {
             &hs,
             &BaselineKind::Scalar { k: 2 },
             1,
-            1,
+            &ExecPool::sequential(),
         );
         assert_eq!(report.layers.len(), 7);
         let logits = model.forward_batch(&[5, 6]);

@@ -19,9 +19,10 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::model::transformer::{KvCache, Transformer};
+use crate::model::transformer::{DecodeScratch, KvCache, Transformer};
 use crate::model::ByteTokenizer;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ExecPool;
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -92,11 +93,16 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// KV memory budget in bytes (admission control).
     pub kv_budget_bytes: usize,
+    /// Intra-op worker threads for the decode kernels (total width, including
+    /// the serving thread). `0` = auto: `QTIP_THREADS` env var, else available
+    /// parallelism. The serve loop owns the resulting [`ExecPool`]; every
+    /// matvec of every round runs tile-parallel across it.
+    pub threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 8, kv_budget_bytes: 256 << 20 }
+        ServerConfig { max_batch: 8, kv_budget_bytes: 256 << 20, threads: 0 }
     }
 }
 
@@ -119,6 +125,8 @@ pub struct ServerStats {
     /// Largest number of sequences advanced by a single fused round — ≥ 2
     /// proves the batcher actually amortized a weight decode across sequences.
     pub max_fused_batch: usize,
+    /// Execution-pool width the loop served with (1 = sequential).
+    pub workers: usize,
 }
 
 impl ServerStats {
@@ -179,6 +187,18 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
     let mut cache_pool: Vec<KvCache> = Vec::new();
     let mut stats = ServerStats::default();
     let mut shutting_down: Option<Sender<ServerStats>> = None;
+    // The loop owns the execution pool and the scratch arena: workers persist
+    // across rounds (spawned once, parked between jobs) and every activation
+    // buffer is reused — the model forward allocates nothing per round. (The
+    // one remaining per-round allocation is the B-pointer `caches` borrow
+    // list below, which borrowck forces us to rebuild each round.)
+    let pool = ExecPool::new(cfg.threads);
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    stats.workers = pool.width();
+    // Round bookkeeping buffers, reused across rounds.
+    let mut step_idx: Vec<usize> = Vec::new();
+    let mut step_tokens: Vec<u16> = Vec::new();
+    let mut finished: Vec<usize> = Vec::new();
     // Computed once: the admission check must not allocate full K/V buffers
     // every round just to read their size.
     let kv_bytes_per_seq = KvCache::size_bytes_for(&model.cfg);
@@ -275,9 +295,9 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         // once for the whole batch (continuous batching: admissions above
         // interleave between rounds).
         let round_start = std::time::Instant::now();
-        let mut finished = Vec::new();
-        let mut step_idx: Vec<usize> = Vec::new();
-        let mut step_tokens: Vec<u16> = Vec::new();
+        finished.clear();
+        step_idx.clear();
+        step_tokens.clear();
         for (i, (a, _)) in active.iter_mut().enumerate() {
             if let Some(t) = a.pending_prompt.pop_front() {
                 step_idx.push(i);
@@ -310,13 +330,13 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                     }
                 }
             }
-            // B = 1 keeps the tighter single-column kernel (no transpose, no
-            // per-batch accumulators); outputs are bit-identical either way.
-            let logits = if step_tokens.len() == 1 {
-                vec![model.decode_step(&mut *caches[0], step_tokens[0])]
-            } else {
-                model.decode_step_batch(&mut caches, &step_tokens)
-            };
+            // One allocation-free fused round: every temporary lives in the
+            // persistent scratch arena, every linear is striped across the
+            // pool, and a 1-sequence round takes the tighter single-column
+            // kernels inside decode_step_batch_with — outputs are
+            // bit-identical either way.
+            let logits =
+                model.decode_step_batch_with(&mut caches, &step_tokens, &mut scratch, &pool);
             stats.fused_rounds += 1;
             stats.max_fused_batch = stats.max_fused_batch.max(step_tokens.len());
             stats.total_step_tokens += step_tokens.len();
@@ -328,7 +348,7 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                     continue;
                 }
                 a.next_token = Some(Transformer::sample(
-                    &logits[j],
+                    logits.row(j),
                     a.req.temperature,
                     a.req.top_k,
                     &mut a.rng,
@@ -338,7 +358,7 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         stats.total_decode_secs += round_start.elapsed().as_secs_f64();
 
         // Retire finished sequences (largest index first).
-        for i in finished.into_iter().rev() {
+        for i in finished.drain(..).rev() {
             let (a, tx) = active.swap_remove(i);
             let now = std::time::Instant::now();
             let total = (now - a.admitted_at).as_secs_f64();
@@ -442,7 +462,7 @@ mod tests {
         let per_seq = KvCache::size_bytes_for(&model.cfg);
         let server = ServerHandle::spawn(
             model,
-            ServerConfig { max_batch: 4, kv_budget_bytes: per_seq - 1 },
+            ServerConfig { max_batch: 4, kv_budget_bytes: per_seq - 1, ..Default::default() },
         );
         let resp = server.submit(req(7, "hello", 8)).recv().unwrap();
         assert!(resp.error.is_some(), "unservable request must carry an error");
@@ -492,7 +512,7 @@ mod tests {
         let model = tiny_model();
         let server = ServerHandle::spawn(
             model,
-            ServerConfig { max_batch: 2, kv_budget_bytes: 1 << 30 },
+            ServerConfig { max_batch: 2, kv_budget_bytes: 1 << 30, ..Default::default() },
         );
         let rxs: Vec<_> = (0..5).map(|i| server.submit(req(i, "x", 4))).collect();
         for rx in rxs {
@@ -509,7 +529,7 @@ mod tests {
         let per_seq = KvCache::new(&model.cfg).size_bytes();
         let server = ServerHandle::spawn(
             model,
-            ServerConfig { max_batch: 8, kv_budget_bytes: per_seq * 2 },
+            ServerConfig { max_batch: 8, kv_budget_bytes: per_seq * 2, ..Default::default() },
         );
         let rxs: Vec<_> = (0..4).map(|i| server.submit(req(i, "y", 3))).collect();
         for rx in rxs {
@@ -545,5 +565,44 @@ mod tests {
         let resp = server.submit(req(1, &long, 4)).recv().unwrap();
         assert_eq!(resp.tokens.len(), 4);
         server.shutdown();
+    }
+
+    #[test]
+    fn serving_is_deterministic_across_pool_widths() {
+        // Thread-count invariance at the serving level: the same request mix
+        // must produce identical tokens whether the loop decodes on one
+        // worker or four — the tile-parallel kernels never reorder any
+        // per-sequence accumulation.
+        let model = tiny_model();
+        let run = |threads: usize| -> Vec<Vec<u16>> {
+            let server = ServerHandle::spawn(
+                model.clone(),
+                ServerConfig { max_batch: 4, threads, ..Default::default() },
+            );
+            let rxs: Vec<_> = (0..5)
+                .map(|i| {
+                    server.submit(GenRequest {
+                        id: i,
+                        prompt: format!("prompt {i}"),
+                        max_new_tokens: 6 + i as usize,
+                        temperature: 0.8,
+                        top_k: 16,
+                        seed: 99 + i,
+                    })
+                })
+                .collect();
+            let out = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+            let stats = server.shutdown();
+            assert_eq!(stats.workers, threads.max(1));
+            out
+        };
+        let seq = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                run(threads),
+                seq,
+                "serve_loop output changed under a {threads}-worker pool"
+            );
+        }
     }
 }

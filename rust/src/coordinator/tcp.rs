@@ -248,7 +248,7 @@ mod tests {
         let model = Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 3)));
         let server = Arc::new(ServerHandle::spawn(
             model,
-            ServerConfig { max_batch: 2, kv_budget_bytes: 1 },
+            ServerConfig { max_batch: 2, kv_budget_bytes: 1, ..Default::default() },
         ));
         let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
         let resp = roundtrip(fe.addr, r#"{"prompt": "x", "max_new_tokens": 4}"#);

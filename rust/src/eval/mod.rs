@@ -4,5 +4,5 @@
 pub mod perplexity;
 pub mod zeroshot;
 
-pub use perplexity::{perplexity, PerplexityReport};
-pub use zeroshot::{zeroshot_suite, ZeroshotReport};
+pub use perplexity::{perplexity, perplexity_pool, PerplexityReport};
+pub use zeroshot::{zeroshot_suite, zeroshot_suite_pool, ZeroshotReport};

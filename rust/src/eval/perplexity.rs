@@ -4,6 +4,7 @@
 
 use crate::model::transformer::Transformer;
 use crate::util::matrix::Matrix;
+use crate::util::threadpool::ExecPool;
 
 #[derive(Clone, Copy, Debug)]
 pub struct PerplexityReport {
@@ -29,6 +30,17 @@ fn nll_row(logits: &Matrix, r: usize, target: u16) -> f64 {
 /// Evaluate perplexity of `model` on `data` (byte tokens), using at most
 /// `max_tokens` tokens in non-overlapping `max_seq` windows.
 pub fn perplexity(model: &Transformer, data: &[u8], max_tokens: usize) -> PerplexityReport {
+    perplexity_pool(model, data, max_tokens, &ExecPool::sequential())
+}
+
+/// [`perplexity`] with the per-window forward GEMMs striped across `pool`
+/// (bit-identical at any worker count).
+pub fn perplexity_pool(
+    model: &Transformer,
+    data: &[u8],
+    max_tokens: usize,
+    pool: &ExecPool,
+) -> PerplexityReport {
     let timer = crate::util::Timer::start();
     let seq = model.cfg.max_seq;
     let mut nll = 0.0f64;
@@ -36,7 +48,7 @@ pub fn perplexity(model: &Transformer, data: &[u8], max_tokens: usize) -> Perple
     let mut off = 0usize;
     while off + seq + 1 <= data.len() && count < max_tokens {
         let tokens: Vec<u16> = data[off..off + seq + 1].iter().map(|&b| b as u16).collect();
-        let logits = model.forward_batch(&tokens[..seq]);
+        let logits = model.forward_batch_with(&tokens[..seq], pool);
         for t in 0..seq {
             nll += nll_row(&logits, t, tokens[t + 1]);
             count += 1;

@@ -12,6 +12,7 @@
 
 use crate::model::transformer::Transformer;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ExecPool;
 
 #[derive(Clone, Debug)]
 pub struct ZeroshotReport {
@@ -36,6 +37,16 @@ fn argmax(xs: &[f32]) -> usize {
 
 /// Top-1 next-byte accuracy over `n_windows` held-out windows.
 pub fn next_byte_accuracy(model: &Transformer, data: &[u8], n_windows: usize) -> f64 {
+    next_byte_accuracy_pool(model, data, n_windows, &ExecPool::sequential())
+}
+
+/// [`next_byte_accuracy`] with the window forwards striped across `pool`.
+pub fn next_byte_accuracy_pool(
+    model: &Transformer,
+    data: &[u8],
+    n_windows: usize,
+    pool: &ExecPool,
+) -> f64 {
     let seq = model.cfg.max_seq.min(64);
     let mut correct = 0usize;
     let mut total = 0usize;
@@ -45,7 +56,7 @@ pub fn next_byte_accuracy(model: &Transformer, data: &[u8], n_windows: usize) ->
             break;
         }
         let tokens: Vec<u16> = data[off..off + seq + 1].iter().map(|&b| b as u16).collect();
-        let logits = model.forward_batch(&tokens[..seq]);
+        let logits = model.forward_batch_with(&tokens[..seq], pool);
         // Score the second half only (give the model context).
         for t in seq / 2..seq {
             if argmax(logits.row(t)) == tokens[t + 1] as usize {
@@ -63,6 +74,16 @@ pub fn next_byte_accuracy(model: &Transformer, data: &[u8], n_windows: usize) ->
 
 /// Induction-head copy task: "<s> X <s> X[..j]" → predict X[j].
 pub fn copy_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
+    copy_accuracy_pool(model, n_cases, seed, &ExecPool::sequential())
+}
+
+/// [`copy_accuracy`] with the case forwards striped across `pool`.
+pub fn copy_accuracy_pool(
+    model: &Transformer,
+    n_cases: usize,
+    seed: u64,
+    pool: &ExecPool,
+) -> f64 {
     let mut rng = Rng::new(seed);
     let mut correct = 0usize;
     let alphabet: Vec<u8> = (b'a'..=b'z').collect();
@@ -75,7 +96,7 @@ pub fn copy_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
         prompt.extend(s.iter().map(|&b| b as u16));
         prompt.push(b'|' as u16);
         prompt.extend(s[..j].iter().map(|&b| b as u16));
-        let logits = model.forward_batch(&prompt);
+        let logits = model.forward_batch_with(&prompt, pool);
         let pred = argmax(logits.row(prompt.len() - 1));
         if pred == s[j] as usize {
             correct += 1;
@@ -86,6 +107,16 @@ pub fn copy_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
 
 /// Multiple-choice bracket matching: rank the correct closer above distractors.
 pub fn bracket_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
+    bracket_accuracy_pool(model, n_cases, seed, &ExecPool::sequential())
+}
+
+/// [`bracket_accuracy`] with the case forwards striped across `pool`.
+pub fn bracket_accuracy_pool(
+    model: &Transformer,
+    n_cases: usize,
+    seed: u64,
+    pool: &ExecPool,
+) -> f64 {
     let mut rng = Rng::new(seed);
     let pairs = [(b'(', b')'), (b'[', b']'), (b'{', b'}')];
     let mut correct = 0usize;
@@ -105,7 +136,7 @@ pub fn bracket_accuracy(model: &Transformer, n_cases: usize, seed: u64) -> f64 {
         }
         // Close one level so the pattern "open...close" is visible, then ask.
         let expected = *stack.last().unwrap();
-        let logits = model.forward_batch(&prompt);
+        let logits = model.forward_batch_with(&prompt, pool);
         let row = logits.row(prompt.len() - 1);
         let scores: Vec<f32> = pairs.iter().map(|p| row[p.1 as usize]).collect();
         let choice = pairs[argmax(&scores)].1;
@@ -123,10 +154,22 @@ pub fn zeroshot_suite(
     n_cases: usize,
     seed: u64,
 ) -> ZeroshotReport {
+    zeroshot_suite_pool(model, holdout, n_cases, seed, &ExecPool::sequential())
+}
+
+/// [`zeroshot_suite`] with every task's forwards striped across `pool` —
+/// results are bit-identical at any worker count.
+pub fn zeroshot_suite_pool(
+    model: &Transformer,
+    holdout: &[u8],
+    n_cases: usize,
+    seed: u64,
+    pool: &ExecPool,
+) -> ZeroshotReport {
     ZeroshotReport {
-        next_byte_acc: next_byte_accuracy(model, holdout, n_cases),
-        copy_acc: copy_accuracy(model, n_cases, seed),
-        bracket_acc: bracket_accuracy(model, n_cases, seed ^ 0xB0),
+        next_byte_acc: next_byte_accuracy_pool(model, holdout, n_cases, pool),
+        copy_acc: copy_accuracy_pool(model, n_cases, seed, pool),
+        bracket_acc: bracket_accuracy_pool(model, n_cases, seed ^ 0xB0, pool),
     }
 }
 

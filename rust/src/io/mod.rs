@@ -34,6 +34,7 @@ use crate::quant::{CodeSpec, QuantMetrics, QuantizedMatrix, RhtContext};
 use crate::trellis::Trellis;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
+use crate::util::threadpool::ExecPool;
 
 /// On-disk format version; bump on any incompatible layout change.
 pub const FORMAT_VERSION: usize = 1;
@@ -366,6 +367,18 @@ pub fn load_quantized_model(
     dir: &Path,
     name: &str,
 ) -> Result<(Transformer, QuantizeReport, ArtifactInfo)> {
+    load_quantized_model_pool(dir, name, &ExecPool::sequential())
+}
+
+/// [`load_quantized_model`] with the per-layer blob reassembly (bounds
+/// checks, section reads, sign/LUT expansion) fanned out across `pool`:
+/// every blob section is offset-addressed, so layers load independently and
+/// a cold-started server's load time scales with `--threads`.
+pub fn load_quantized_model_pool(
+    dir: &Path,
+    name: &str,
+    pool: &ExecPool,
+) -> Result<(Transformer, QuantizeReport, ArtifactInfo)> {
     let manifest_path = quant_manifest_path(dir, name);
     let text = std::fs::read_to_string(&manifest_path).with_context(|| {
         format!(
@@ -436,88 +449,118 @@ pub fn load_quantized_model(
         dense.insert(tname, Matrix::from_vec(rows, cols, data));
     }
 
-    // Quantized decoder linears.
+    // Quantized decoder linears: reassembly is independent per layer (every
+    // blob section is offset-addressed), so the jobs fan out across the pool.
+    let layer_entries = j.get("layers").and_then(|l| l.as_arr()).context("manifest.layers")?;
+    let loaded: Vec<Result<(String, QuantizedMatrix)>> =
+        pool.map(layer_entries.len(), |idx| {
+            let e = &layer_entries[idx];
+            load_quantized_layer(e, &reader, &known_names, &cfg)
+        });
     let mut qms: BTreeMap<String, QuantizedMatrix> = BTreeMap::new();
-    for e in j.get("layers").and_then(|l| l.as_arr()).context("manifest.layers")? {
-        let lname = e.req_str("name").to_string();
-        if !known_names.contains(&lname) {
-            bail!("unknown layer '{lname}' in artifact for model '{}'", cfg.name);
-        }
-        let (rows, cols) = (e.req_usize("rows"), e.req_usize("cols"));
-        let (er, ec) = WeightStore::expected_shape(&cfg, &lname);
-        if (rows, cols) != (er, ec) {
-            bail!("layer '{lname}' has shape {rows}x{cols}, model config expects {er}x{ec}");
-        }
-        let (tx, ty) = (e.req_usize("tx"), e.req_usize("ty"));
-        if tx == 0 || ty == 0 || rows % tx != 0 || cols % ty != 0 {
-            bail!("layer '{lname}': tile {tx}x{ty} does not divide {rows}x{cols}");
-        }
-        let tj = e.get("trellis").context("layer.trellis")?;
-        let (l, k, v) = (tj.req_usize("l"), tj.req_usize("k"), tj.req_usize("v"));
-        // Pre-validate what Trellis::new would otherwise assert on: a damaged
-        // manifest must error, not abort the process.
-        if !(1..=24).contains(&l) || k == 0 || v == 0 || k * v >= l || k * v > 8 {
-            bail!("layer '{lname}': unsupported trellis (L={l}, k={k}, V={v})");
-        }
-        let trellis = Trellis::new(l as u32, k as u32, v as u32);
-        // tile_words must match the packing geometry exactly, or the decode
-        // hot loop's rolling-window reads walk past each tile at serve time.
-        if (tx * ty) % v != 0 {
-            bail!("layer '{lname}': tile {tx}x{ty} not divisible by V={v}");
-        }
-        let steps = (tx * ty) / v;
-        if steps * k * v < l {
-            bail!("layer '{lname}': tile too small for tail-biting at (L={l}, k={k}, V={v})");
-        }
-        let padded_bits = steps * k * v + (l - k * v);
-        let expect_tile_words = padded_bits.div_ceil(32) + 1;
-        let tile_words = e.req_usize("tile_words");
-        if tile_words != expect_tile_words {
-            bail!(
-                "layer '{lname}': tile_words {tile_words} != {expect_tile_words} required \
-                 by the (L, k, V, tile) geometry"
-            );
-        }
-        let packed_words = e.req_usize("packed_words");
-        if packed_words != (rows / tx) * (cols / ty) * tile_words {
-            bail!(
-                "layer '{lname}': packed stream is {packed_words} words, geometry needs {}",
-                (rows / tx) * (cols / ty) * tile_words
-            );
-        }
-        let packed = reader
-            .u32s(e.req_usize("packed_off"), packed_words)
-            .with_context(|| format!("layer '{lname}' packed stream"))?;
-        let sign_rows = RhtContext::signs_from_bits(
-            &reader.u32s(e.req_usize("sign_rows_off"), rows.div_ceil(32))?,
-            rows,
-        );
-        let sign_cols = RhtContext::signs_from_bits(
-            &reader.u32s(e.req_usize("sign_cols_off"), cols.div_ceil(32))?,
-            cols,
-        );
-        let code = code_spec_from_json(e.get("code").context("layer.code")?, &reader, &trellis)
-            .with_context(|| format!("layer '{lname}' code spec"))?;
-        let metrics = QuantMetrics::from_json(e.get("metrics").context("layer.metrics")?);
-        qms.insert(
-            lname,
-            QuantizedMatrix {
-                rows,
-                cols,
-                tx,
-                ty,
-                trellis,
-                code,
-                scale: f32::from_bits(e.req_usize("scale_bits") as u32),
-                rht: RhtContext { sign_rows, sign_cols },
-                tile_words,
-                packed,
-                metrics,
-            },
-        );
+    for r in loaded {
+        let (lname, qm) = r?;
+        qms.insert(lname, qm);
     }
 
-    // Reassemble the transformer.
+    reassemble_model(j, cfg, dense, qms, manifest_path, blob.len(), name)
+}
+
+/// Rebuild one quantized decoder linear from its manifest entry + blob.
+fn load_quantized_layer(
+    e: &Json,
+    reader: &BlobReader<'_>,
+    known_names: &std::collections::BTreeSet<String>,
+    cfg: &ModelConfig,
+) -> Result<(String, QuantizedMatrix)> {
+    let lname = e.req_str("name").to_string();
+    if !known_names.contains(&lname) {
+        bail!("unknown layer '{lname}' in artifact for model '{}'", cfg.name);
+    }
+    let (rows, cols) = (e.req_usize("rows"), e.req_usize("cols"));
+    let (er, ec) = WeightStore::expected_shape(cfg, &lname);
+    if (rows, cols) != (er, ec) {
+        bail!("layer '{lname}' has shape {rows}x{cols}, model config expects {er}x{ec}");
+    }
+    let (tx, ty) = (e.req_usize("tx"), e.req_usize("ty"));
+    if tx == 0 || ty == 0 || rows % tx != 0 || cols % ty != 0 {
+        bail!("layer '{lname}': tile {tx}x{ty} does not divide {rows}x{cols}");
+    }
+    let tj = e.get("trellis").context("layer.trellis")?;
+    let (l, k, v) = (tj.req_usize("l"), tj.req_usize("k"), tj.req_usize("v"));
+    // Pre-validate what Trellis::new would otherwise assert on: a damaged
+    // manifest must error, not abort the process.
+    if !(1..=24).contains(&l) || k == 0 || v == 0 || k * v >= l || k * v > 8 {
+        bail!("layer '{lname}': unsupported trellis (L={l}, k={k}, V={v})");
+    }
+    let trellis = Trellis::new(l as u32, k as u32, v as u32);
+    // tile_words must match the packing geometry exactly, or the decode
+    // hot loop's rolling-window reads walk past each tile at serve time.
+    if (tx * ty) % v != 0 {
+        bail!("layer '{lname}': tile {tx}x{ty} not divisible by V={v}");
+    }
+    let steps = (tx * ty) / v;
+    if steps * k * v < l {
+        bail!("layer '{lname}': tile too small for tail-biting at (L={l}, k={k}, V={v})");
+    }
+    let padded_bits = steps * k * v + (l - k * v);
+    let expect_tile_words = padded_bits.div_ceil(32) + 1;
+    let tile_words = e.req_usize("tile_words");
+    if tile_words != expect_tile_words {
+        bail!(
+            "layer '{lname}': tile_words {tile_words} != {expect_tile_words} required \
+             by the (L, k, V, tile) geometry"
+        );
+    }
+    let packed_words = e.req_usize("packed_words");
+    if packed_words != (rows / tx) * (cols / ty) * tile_words {
+        bail!(
+            "layer '{lname}': packed stream is {packed_words} words, geometry needs {}",
+            (rows / tx) * (cols / ty) * tile_words
+        );
+    }
+    let packed = reader
+        .u32s(e.req_usize("packed_off"), packed_words)
+        .with_context(|| format!("layer '{lname}' packed stream"))?;
+    let sign_rows = RhtContext::signs_from_bits(
+        &reader.u32s(e.req_usize("sign_rows_off"), rows.div_ceil(32))?,
+        rows,
+    );
+    let sign_cols = RhtContext::signs_from_bits(
+        &reader.u32s(e.req_usize("sign_cols_off"), cols.div_ceil(32))?,
+        cols,
+    );
+    let code = code_spec_from_json(e.get("code").context("layer.code")?, reader, &trellis)
+        .with_context(|| format!("layer '{lname}' code spec"))?;
+    let metrics = QuantMetrics::from_json(e.get("metrics").context("layer.metrics")?);
+    Ok((
+        lname,
+        QuantizedMatrix {
+            rows,
+            cols,
+            tx,
+            ty,
+            trellis,
+            code,
+            scale: f32::from_bits(e.req_usize("scale_bits") as u32),
+            rht: RhtContext { sign_rows, sign_cols },
+            tile_words,
+            packed,
+            metrics,
+        },
+    ))
+}
+
+/// Final assembly of a loaded artifact into a serving-ready [`Transformer`].
+fn reassemble_model(
+    j: Json,
+    cfg: ModelConfig,
+    mut dense: BTreeMap<String, Matrix>,
+    mut qms: BTreeMap<String, QuantizedMatrix>,
+    manifest_path: PathBuf,
+    blob_bytes: usize,
+    name: &str,
+) -> Result<(Transformer, QuantizeReport, ArtifactInfo)> {
     let mut layers = Vec::with_capacity(cfg.n_layers);
     for i in 0..cfg.n_layers {
         let mut lin = |part: &str| -> Result<Linear> {
@@ -553,7 +596,7 @@ pub fn load_quantized_model(
     let info = ArtifactInfo {
         name: name.to_string(),
         manifest_path,
-        blob_bytes: blob.len(),
+        blob_bytes,
         config: cfg,
         quant_desc: j.req_str("quant_desc").to_string(),
         quantized_layers: j.req_usize("quantized_layers"),
@@ -641,7 +684,13 @@ mod tests {
             code: code.into(),
             seed: 42,
         };
-        let report = quantize_model_qtip(&mut model, &hs, &qcfg, 1, |_| {});
+        let report = quantize_model_qtip(
+            &mut model,
+            &hs,
+            &qcfg,
+            &crate::util::threadpool::ExecPool::sequential(),
+            |_| {},
+        );
         (model, report)
     }
 
@@ -694,6 +743,27 @@ mod tests {
             let la = model.decode_step(&mut ca, t);
             let lb = loaded.decode_step(&mut cb, t);
             assert_eq!(la, lb, "loaded-artifact logits diverged");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pooled_load_matches_sequential_load() {
+        // Per-layer reassembly fans out across the pool; the loaded artifact
+        // must be byte-identical to a sequential load at any width.
+        let dir = tmp_dir("pooled");
+        let (model, report) = tiny_quantized("lut", 2);
+        save_quantized_model(&dir, "p", &model, &report).unwrap();
+        let (a, _, _) = load_quantized_model(&dir, "p").unwrap();
+        let pool = crate::util::threadpool::ExecPool::new(4);
+        let (b, _, _) = load_quantized_model_pool(&dir, "p", &pool).unwrap();
+        for ((n1, la), (_, lb)) in a.linears().iter().zip(b.linears().iter()) {
+            let (Linear::Quantized { qm: qa, .. }, Linear::Quantized { qm: qb, .. }) = (la, lb)
+            else {
+                panic!("expected quantized layers");
+            };
+            assert_eq!(qa.packed, qb.packed, "{n1}: pooled load diverged");
+            assert_eq!(qa.scale.to_bits(), qb.scale.to_bits(), "{n1}: scale differs");
         }
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -31,14 +31,20 @@ use qtip::cli::Args;
 use qtip::coordinator::{
     quantize_model_qtip, GenRequest, QuantizeReport, ServerConfig, ServerHandle, ServerStats,
 };
-use qtip::eval::{perplexity, zeroshot_suite};
+use qtip::eval::{perplexity_pool, zeroshot_suite_pool};
 use qtip::hessian::collect_hessians;
 use qtip::model::{
     calibration_split, eval_split, load_corpus, ModelConfig, Transformer, WeightStore,
 };
 use qtip::quant::QtipConfig;
-use qtip::util::threadpool::default_workers;
+use qtip::util::threadpool::{resolve_workers, ExecPool};
 use qtip::util::Timer;
+
+/// Build the process-wide execution pool from `--threads N` (0 = auto;
+/// precedence: --threads > QTIP_THREADS env > available parallelism).
+fn make_pool(args: &Args) -> ExecPool {
+    ExecPool::new(args.get_usize("threads", 0))
+}
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::env::var("QTIP_ARTIFACTS")
@@ -97,7 +103,7 @@ fn qtip_cfg_from_args(args: &Args) -> QtipConfig {
     }
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     println!("qtip — Quantization with Trellises and Incoherence Processing");
     println!("artifacts dir: {:?}", artifacts_dir());
     for name in ["micro", "nano", "small"] {
@@ -130,7 +136,16 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("  AOT artifacts: unavailable ({e})"),
     }
-    println!("  workers: {}", default_workers());
+    let width = resolve_workers(args.get_usize("threads", 0));
+    println!(
+        "  workers: {width} resolved ({} worker threads + the submitting thread when a \
+         pool is built; override with --threads N or QTIP_THREADS, 0 = auto)",
+        width - 1
+    );
+    println!(
+        "  intra-op: decode matvecs, GEMMs, per-layer quantize jobs, and artifact \
+         loads all stripe across this pool"
+    );
     Ok(())
 }
 
@@ -142,11 +157,12 @@ fn quantize_inner(args: &Args, allow_random: bool) -> Result<(Transformer, Quant
     let seqs = calibration_sequences(&model, n_calib);
     let hessians = collect_hessians(&model, &seqs);
     let cfg = qtip_cfg_from_args(args);
+    let pool = make_pool(args);
     eprintln!(
-        "[qtip] quantizing with code={} L={} k={} V={} T={}x{}",
-        cfg.code, cfg.l, cfg.k, cfg.v, cfg.tx, cfg.ty
+        "[qtip] quantizing with code={} L={} k={} V={} T={}x{} on {} workers",
+        cfg.code, cfg.l, cfg.k, cfg.v, cfg.tx, cfg.ty, pool.width()
     );
-    let report = quantize_model_qtip(&mut model, &hessians, &cfg, default_workers(), |layer| {
+    let report = quantize_model_qtip(&mut model, &hessians, &cfg, &pool, |layer| {
         eprintln!(
             "  {}: {}x{} proxy {:.5} mse {:.5} ({:.1}s)",
             layer.name,
@@ -166,7 +182,9 @@ fn quantize_inner(args: &Args, allow_random: bool) -> Result<(Transformer, Quant
 fn quantized_model(args: &Args, allow_random: bool) -> Result<(Transformer, QuantizeReport)> {
     if let Some(name) = args.get("artifact") {
         let timer = Timer::start();
-        let (model, report, info) = qtip::io::load_quantized_model(&artifacts_dir(), name)?;
+        let pool = make_pool(args);
+        let (model, report, info) =
+            qtip::io::load_quantized_model_pool(&artifacts_dir(), name, &pool)?;
         eprintln!(
             "[qtip] cold-started from quantized artifact '{name}' ({}; {} blob bytes) in \
              {:.3}s — calibration and quantization skipped",
@@ -224,17 +242,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
             );
         }
     }
+    let pool = make_pool(args);
     let dense = load_model(&dense_name, true)?;
-    let rep = perplexity(&dense, eval_bytes, max_tokens);
-    let zs = zeroshot_suite(&dense, eval_bytes, 24, 7);
+    let rep = perplexity_pool(&dense, eval_bytes, max_tokens, &pool);
+    let zs = zeroshot_suite_pool(&dense, eval_bytes, 24, 7, &pool);
     println!(
         "fp32      : ppl {:.3} (nll {:.4}, {} tok) | next-byte {:.3} copy {:.3} bracket {:.3}",
         rep.ppl, rep.nll, rep.tokens, zs.next_byte_acc, zs.copy_acc, zs.bracket_acc
     );
 
     qmodel.ensure_caches();
-    let qrep = perplexity(&qmodel, eval_bytes, max_tokens);
-    let qzs = zeroshot_suite(&qmodel, eval_bytes, 24, 7);
+    let qrep = perplexity_pool(&qmodel, eval_bytes, max_tokens, &pool);
+    let qzs = zeroshot_suite_pool(&qmodel, eval_bytes, 24, 7, &pool);
     // Label with the bitrate the model was actually quantized at: with
     // --artifact the CLI --k flag may not match the saved artifact's k.
     let bits = report
@@ -262,7 +281,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
         quantized_model(args, args.has_flag("allow-random"))?.0
     };
     model.ensure_caches();
-    let server = ServerHandle::spawn(Arc::new(model), ServerConfig::default());
+    let server_cfg =
+        ServerConfig { threads: args.get_usize("threads", 0), ..Default::default() };
+    let server = ServerHandle::spawn(Arc::new(model), server_cfg);
     let req = GenRequest {
         id: 0,
         prompt: args.get_or("prompt", "fn main() {").to_string(),
@@ -283,11 +304,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn print_server_stats(stats: &ServerStats) {
     println!(
-        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {})",
+        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {}, {} workers)",
         stats.completed,
         stats.total_generated_tokens,
         stats.throughput_tok_per_sec(),
-        stats.peak_batch
+        stats.peak_batch,
+        stats.workers
     );
 }
 
@@ -297,6 +319,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server_cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 4),
         kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
+        threads: args.get_usize("threads", 0),
     };
     // Network mode: expose the batcher over newline-JSON TCP until Ctrl-C,
     // then close the frontend, drain in-flight requests, and report stats.
@@ -361,7 +384,7 @@ fn main() -> Result<()> {
     let cmd = if argv.is_empty() { "info".to_string() } else { argv.remove(0) };
     let args = Args::parse(argv);
     match cmd.as_str() {
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "generate" => cmd_generate(&args),
@@ -370,7 +393,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> \
                  [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
-                 [--artifact NAME] [--allow-random] ..."
+                 [--artifact NAME] [--threads N] [--allow-random] ..."
             );
             std::process::exit(2);
         }

@@ -9,5 +9,5 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use tokenizer::{calibration_split, eval_split, load_corpus, split_corpus, ByteTokenizer};
-pub use transformer::{KvCache, Linear, Transformer};
+pub use transformer::{DecodeScratch, KvCache, Linear, Transformer};
 pub use weights::WeightStore;

@@ -12,8 +12,9 @@
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightStore;
 use crate::quant::QuantizedMatrix;
-use crate::util::matrix::{gemm, gemv, Matrix};
+use crate::util::matrix::{gemv, gemv_multi_pool, gemv_pool, Matrix};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ExecPool;
 
 /// A linear layer: dense or QTIP-quantized.
 pub enum Linear {
@@ -71,6 +72,38 @@ impl Linear {
         }
     }
 
+    /// Allocation-free `y = W x` with the decode/GEMV striped across `pool`;
+    /// `xt` stages the RHT'd activation copy for quantized layers.
+    /// Bit-identical to [`Self::matvec`] at any worker count.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32], xt: &mut Vec<f32>, pool: &ExecPool) {
+        match self {
+            Linear::Dense(w) => gemv_pool(w, x, y, pool),
+            Linear::Quantized { qm, .. } => qm.matvec_into(x, y, xt, pool),
+        }
+    }
+
+    /// Allocation-free batch-fused `Y = X Ŵᵀ` (one activation row per
+    /// sequence); `y` is reshaped in place, `bxt`/`xcol` stage the RHT'd batch
+    /// and its transpose for quantized layers. Row `b` is bit-identical to
+    /// `matvec(x.row(b))` at any worker count.
+    pub fn matvec_multi_into(
+        &self,
+        x: &Matrix,
+        y: &mut Matrix,
+        bxt: &mut Matrix,
+        xcol: &mut Vec<f32>,
+        pool: &ExecPool,
+    ) {
+        match self {
+            Linear::Dense(w) => {
+                y.reshape_scratch(x.rows, w.rows);
+                // One dispatch for the whole batch — not one per row.
+                gemv_multi_pool(w, x, y, pool);
+            }
+            Linear::Quantized { qm, .. } => qm.matvec_multi_into(x, y, bxt, xcol, pool),
+        }
+    }
+
     /// Y = X Ŵᵀ for a B×in batch of single-token activations: the fused batch
     /// decode path. Quantized layers decode each packed weight once and apply
     /// it to all B sequences; dense layers fall back to B independent GEMVs.
@@ -90,6 +123,16 @@ impl Linear {
 
     /// Y = X Wᵀ for a T×in batch (dense path; quantized layers need the cache).
     pub fn forward_batch(&self, x: &Matrix) -> Matrix {
+        self.forward_batch_pool(x, &ExecPool::sequential())
+    }
+
+    /// [`Self::forward_batch`] with the work striped across `pool`
+    /// (bit-identical at any width — each output row accumulates on one
+    /// worker in sequential order). Formulated as a batched GEMV
+    /// (`out.row(t) = W @ x.row(t)`) so no `Wᵀ` is materialized per call —
+    /// the seed's `gemm(x, w.transpose())` re-transposed every weight matrix
+    /// on every eval window.
+    pub fn forward_batch_pool(&self, x: &Matrix, pool: &ExecPool) -> Matrix {
         let w = match self {
             Linear::Dense(w) => w,
             Linear::Quantized { cache, .. } => cache
@@ -97,8 +140,7 @@ impl Linear {
                 .expect("call ensure_cache() before batch forward on quantized layers"),
         };
         let mut out = Matrix::zeros(x.rows, w.rows);
-        let wt = w.transpose();
-        gemm(x, &wt, &mut out);
+        gemv_multi_pool(w, x, &mut out, pool);
         out
     }
 }
@@ -164,6 +206,82 @@ impl KvCache {
     /// just to read their size.
     pub fn size_bytes_for(cfg: &ModelConfig) -> usize {
         2 * cfg.n_layers * cfg.max_seq * cfg.d_model * 4
+    }
+}
+
+/// Persistent scratch arena for the serving forward pass.
+///
+/// The seed's `decode_step` allocated ~10 fresh vectors per token per layer
+/// (`x.clone()`, q/k/v, attention scores, MLP activations, …) plus a full
+/// activation transpose per fused linear — all garbage one round later. The
+/// arena owns every buffer the decode paths touch; in the steady state the
+/// serving forward pass performs **zero** heap allocations (buffers grow to
+/// the high-water batch size once, then are reused). One arena serves both the
+/// single-token and batch paths; it is owned by whoever owns the
+/// [`crate::util::threadpool::ExecPool`] (the serve loop, a bench, a test).
+pub struct DecodeScratch {
+    // Single-token path (lengths: d_model unless noted).
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>, // d_ff; SwiGLU activation is computed into it in place
+    up: Vec<f32>,   // d_ff
+    down: Vec<f32>,
+    scores: Vec<f32>, // max_seq
+    logits: Vec<f32>, // vocab
+    // Shared: RHT'd activation copy for quantized matvecs (max(d, d_ff)).
+    xt: Vec<f32>,
+    // Batch path (B × ·, reshaped in place as the live batch changes).
+    bx: Matrix,
+    bxn: Matrix,
+    bq: Matrix,
+    bk: Matrix,
+    bv: Matrix,
+    battn: Matrix,
+    bproj: Matrix,
+    bgate: Matrix,
+    bup: Matrix,
+    bdown: Matrix,
+    blogits: Matrix,
+    bxt: Matrix,      // RHT'd batch copy for quantized multi kernels
+    xcol: Vec<f32>,   // column-major activations (cols × B)
+}
+
+impl DecodeScratch {
+    pub fn new(cfg: &ModelConfig) -> DecodeScratch {
+        let d = cfg.d_model;
+        DecodeScratch {
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn_out: vec![0.0; d],
+            proj: vec![0.0; d],
+            gate: vec![0.0; cfg.d_ff],
+            up: vec![0.0; cfg.d_ff],
+            down: vec![0.0; d],
+            scores: vec![0.0; cfg.max_seq],
+            logits: vec![0.0; cfg.vocab],
+            xt: Vec::with_capacity(d.max(cfg.d_ff)),
+            bx: Matrix::zeros(0, 0),
+            bxn: Matrix::zeros(0, 0),
+            bq: Matrix::zeros(0, 0),
+            bk: Matrix::zeros(0, 0),
+            bv: Matrix::zeros(0, 0),
+            battn: Matrix::zeros(0, 0),
+            bproj: Matrix::zeros(0, 0),
+            bgate: Matrix::zeros(0, 0),
+            bup: Matrix::zeros(0, 0),
+            bdown: Matrix::zeros(0, 0),
+            blogits: Matrix::zeros(0, 0),
+            bxt: Matrix::zeros(0, 0),
+            xcol: Vec::new(),
+        }
     }
 }
 
@@ -301,6 +419,13 @@ impl Transformer {
 
     /// Full-sequence forward returning logits (T × vocab). Causal attention.
     pub fn forward_batch(&self, tokens: &[u16]) -> Matrix {
+        self.forward_batch_with(tokens, &ExecPool::sequential())
+    }
+
+    /// [`Self::forward_batch`] with every layer GEMM striped across `pool`
+    /// (bit-identical at any worker count). The eval/calibration batch path's
+    /// share of the multi-core budget.
+    pub fn forward_batch_with(&self, tokens: &[u16], pool: &ExecPool) -> Matrix {
         let t_len = tokens.len();
         let cfg = &self.cfg;
         assert!(t_len <= cfg.max_seq, "sequence longer than max_seq");
@@ -320,9 +445,9 @@ impl Transformer {
             for r in 0..t_len {
                 rmsnorm_row(xn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
             }
-            let mut q = layer.attn.q.forward_batch(&xn);
-            let mut k = layer.attn.k.forward_batch(&xn);
-            let v = layer.attn.v.forward_batch(&xn);
+            let mut q = layer.attn.q.forward_batch_pool(&xn, pool);
+            let mut k = layer.attn.k.forward_batch_pool(&xn, pool);
+            let v = layer.attn.v.forward_batch_pool(&xn, pool);
             // RoPE per position per head.
             for t in 0..t_len {
                 for head in 0..h {
@@ -353,7 +478,7 @@ impl Transformer {
                     }
                 }
             }
-            let proj = layer.attn.o.forward_batch(&attn_out);
+            let proj = layer.attn.o.forward_batch_pool(&attn_out, pool);
             x.axpy(1.0, &proj);
 
             // --- MLP block ---
@@ -361,48 +486,84 @@ impl Transformer {
             for r in 0..t_len {
                 rmsnorm_row(xn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
             }
-            let gate = layer.mlp.gate.forward_batch(&xn);
-            let up = layer.mlp.up.forward_batch(&xn);
+            let gate = layer.mlp.gate.forward_batch_pool(&xn, pool);
+            let up = layer.mlp.up.forward_batch_pool(&xn, pool);
             let mut act = gate;
             for (a, &u) in act.data.iter_mut().zip(&up.data) {
                 *a = silu(*a) * u;
             }
-            let down = layer.mlp.down.forward_batch(&act);
+            let down = layer.mlp.down.forward_batch_pool(&act, pool);
             x.axpy(1.0, &down);
         }
 
         for r in 0..t_len {
             rmsnorm_row(x.row_mut(r), &self.out_norm, self.cfg.rms_eps);
         }
-        self.head.forward_batch(&x)
+        self.head.forward_batch_pool(&x, pool)
     }
 
     /// Single-token decode step with KV cache; returns the logits vector.
+    ///
+    /// Convenience wrapper over [`Self::decode_step_with`] that pays a fresh
+    /// scratch arena and a sequential pool per call — serving paths hold both
+    /// persistently instead.
     pub fn decode_step(&self, cache: &mut KvCache, token: u16) -> Vec<f32> {
+        let mut scratch = DecodeScratch::new(&self.cfg);
+        let pool = ExecPool::sequential();
+        self.decode_step_with(cache, token, &mut scratch, &pool).to_vec()
+    }
+
+    /// Allocation-free single-token decode: every temporary lives in `scratch`
+    /// and every linear runs tile-parallel across `pool`. Returns the logits
+    /// slice (borrowed from `scratch`). Bit-identical to the historical
+    /// allocating `decode_step` at any worker count.
+    pub fn decode_step_with<'s>(
+        &self,
+        cache: &mut KvCache,
+        token: u16,
+        scratch: &'s mut DecodeScratch,
+        pool: &ExecPool,
+    ) -> &'s [f32] {
+        self.decode_step_core(cache, token, scratch, pool);
+        self.head.matvec_into(&scratch.x, &mut scratch.logits, &mut scratch.xt, pool);
+        &scratch.logits
+    }
+
+    /// Shared body of the single-token paths: advances the cache and leaves
+    /// the out-normed final hidden state in `scratch.x` (the caller applies
+    /// the head into its own logits target).
+    fn decode_step_core(
+        &self,
+        cache: &mut KvCache,
+        token: u16,
+        scratch: &mut DecodeScratch,
+        pool: &ExecPool,
+    ) {
         let cfg = &self.cfg;
         let pos = cache.len;
         assert!(pos < cache.capacity, "KV cache full");
-        let d = cfg.d_model;
         let h = cfg.n_heads;
         let dh = cfg.head_dim();
 
-        let mut x = self.tok_emb.row(token as usize).to_vec();
+        let DecodeScratch { x, xn, q, k, v, attn_out, proj, gate, up, down, scores, xt, .. } =
+            scratch;
+        x.copy_from_slice(self.tok_emb.row(token as usize));
         for (li, layer) in self.layers.iter().enumerate() {
-            let mut xn = x.clone();
-            rmsnorm_row(&mut xn, &layer.attn_norm, cfg.rms_eps);
-            let mut q = layer.attn.q.matvec(&xn);
-            let mut k = layer.attn.k.matvec(&xn);
-            let v = layer.attn.v.matvec(&xn);
+            xn.copy_from_slice(x);
+            rmsnorm_row(xn, &layer.attn_norm, cfg.rms_eps);
+            layer.attn.q.matvec_into(xn, q, xt, pool);
+            layer.attn.k.matvec_into(xn, k, xt, pool);
+            layer.attn.v.matvec_into(xn, v, xt, pool);
             for head in 0..h {
                 rope_rotate(&mut q[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
                 rope_rotate(&mut k[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
             }
-            cache.k[li].row_mut(pos).copy_from_slice(&k);
-            cache.v[li].row_mut(pos).copy_from_slice(&v);
+            cache.k[li].row_mut(pos).copy_from_slice(k);
+            cache.v[li].row_mut(pos).copy_from_slice(v);
 
             let scale = 1.0 / (dh as f32).sqrt();
-            let mut attn_out = vec![0.0f32; d];
-            let mut scores = vec![0.0f32; pos + 1];
+            attn_out.fill(0.0);
+            let scores = &mut scores[..pos + 1];
             for head in 0..h {
                 let hs = head * dh;
                 let qh = &q[hs..hs + dh];
@@ -410,7 +571,7 @@ impl Transformer {
                     scores[tk] =
                         crate::util::matrix::dot(qh, &cache.k[li].row(tk)[hs..hs + dh]) * scale;
                 }
-                softmax_inplace(&mut scores);
+                softmax_inplace(scores);
                 for tk in 0..=pos {
                     let w = scores[tk];
                     let vrow = &cache.v[li].row(tk)[hs..hs + dh];
@@ -419,28 +580,25 @@ impl Transformer {
                     }
                 }
             }
-            let proj = layer.attn.o.matvec(&attn_out);
-            for (xv, &p) in x.iter_mut().zip(&proj) {
+            layer.attn.o.matvec_into(attn_out, proj, xt, pool);
+            for (xv, &p) in x.iter_mut().zip(proj.iter()) {
                 *xv += p;
             }
 
-            let mut xn = x.clone();
-            rmsnorm_row(&mut xn, &layer.mlp_norm, cfg.rms_eps);
-            let gate = layer.mlp.gate.matvec(&xn);
-            let up = layer.mlp.up.matvec(&xn);
-            let act: Vec<f32> = gate
-                .iter()
-                .zip(&up)
-                .map(|(&g, &u)| silu(g) * u)
-                .collect();
-            let down = layer.mlp.down.matvec(&act);
-            for (xv, &dn) in x.iter_mut().zip(&down) {
+            xn.copy_from_slice(x);
+            rmsnorm_row(xn, &layer.mlp_norm, cfg.rms_eps);
+            layer.mlp.gate.matvec_into(xn, gate, xt, pool);
+            layer.mlp.up.matvec_into(xn, up, xt, pool);
+            for (g, &u) in gate.iter_mut().zip(up.iter()) {
+                *g = silu(*g) * u;
+            }
+            layer.mlp.down.matvec_into(gate, down, xt, pool);
+            for (xv, &dn) in x.iter_mut().zip(down.iter()) {
                 *xv += dn;
             }
         }
         cache.len = pos + 1;
-        rmsnorm_row(&mut x, &self.out_norm, cfg.rms_eps);
-        self.head.matvec(&x)
+        rmsnorm_row(x, &self.out_norm, cfg.rms_eps);
     }
 
     /// One decode round for a whole serving batch: advance every sequence by one
@@ -459,60 +617,99 @@ impl Transformer {
         caches: &mut [&mut KvCache],
         tokens: &[u16],
     ) -> Vec<Vec<f32>> {
-        let b = tokens.len();
-        assert_eq!(caches.len(), b, "one cache per token");
-        if b == 0 {
+        if tokens.is_empty() {
+            assert!(caches.is_empty(), "one cache per token");
             return Vec::new();
         }
+        let mut scratch = DecodeScratch::new(&self.cfg);
+        let pool = ExecPool::sequential();
+        let logits = self.decode_step_batch_with(caches, tokens, &mut scratch, &pool);
+        (0..tokens.len()).map(|r| logits.row(r).to_vec()).collect()
+    }
+
+    /// Allocation-free fused decode round: one row of returned logits per
+    /// sequence, every temporary staged in `scratch`, every linear striped
+    /// across `pool`. A 1-sequence round takes the tighter single-column
+    /// kernels (no activation transpose); outputs are bit-identical either
+    /// way, and bit-identical to per-sequence [`Self::decode_step`] calls.
+    pub fn decode_step_batch_with<'s>(
+        &self,
+        caches: &mut [&mut KvCache],
+        tokens: &[u16],
+        scratch: &'s mut DecodeScratch,
+        pool: &ExecPool,
+    ) -> &'s Matrix {
+        let b = tokens.len();
+        assert_eq!(caches.len(), b, "one cache per token");
         let cfg = &self.cfg;
-        let d = cfg.d_model;
+        if b == 0 {
+            scratch.blogits.reshape_scratch(0, cfg.vocab);
+            return &scratch.blogits;
+        }
+        if b == 1 {
+            self.decode_step_core(&mut *caches[0], tokens[0], scratch, pool);
+            scratch.blogits.reshape_scratch(1, cfg.vocab);
+            self.head.matvec_into(
+                &scratch.x,
+                scratch.blogits.row_mut(0),
+                &mut scratch.xt,
+                pool,
+            );
+            return &scratch.blogits;
+        }
         let h = cfg.n_heads;
         let dh = cfg.head_dim();
-        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
         for c in caches.iter() {
             assert!(c.len < c.capacity, "KV cache full");
         }
 
-        let mut x = Matrix::zeros(b, d);
+        let DecodeScratch {
+            scores, xcol, bx, bxn, bq, bk, bv, battn, bproj, bgate, bup, bdown, blogits, bxt, ..
+        } = &mut *scratch;
+        bx.reshape_scratch(b, cfg.d_model);
         for (bi, &tok) in tokens.iter().enumerate() {
-            x.row_mut(bi).copy_from_slice(self.tok_emb.row(tok as usize));
+            bx.row_mut(bi).copy_from_slice(self.tok_emb.row(tok as usize));
         }
+        let x = bx;
 
         for (li, layer) in self.layers.iter().enumerate() {
             // --- Attention block (shared weight decode, per-sequence state) ---
-            let mut xn = x.clone();
+            bxn.reshape_scratch(b, cfg.d_model);
+            bxn.data.copy_from_slice(&x.data);
             for r in 0..b {
-                rmsnorm_row(xn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
+                rmsnorm_row(bxn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
             }
-            let mut q = layer.attn.q.matvec_multi(&xn);
-            let mut k = layer.attn.k.matvec_multi(&xn);
-            let v = layer.attn.v.matvec_multi(&xn);
+            layer.attn.q.matvec_multi_into(bxn, bq, bxt, xcol, pool);
+            layer.attn.k.matvec_multi_into(bxn, bk, bxt, xcol, pool);
+            layer.attn.v.matvec_multi_into(bxn, bv, bxt, xcol, pool);
             for bi in 0..b {
-                let pos = positions[bi];
+                let pos = caches[bi].len;
+                let theta = cfg.rope_theta;
                 for head in 0..h {
-                    rope_rotate(&mut q.row_mut(bi)[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
-                    rope_rotate(&mut k.row_mut(bi)[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
+                    rope_rotate(&mut bq.row_mut(bi)[head * dh..(head + 1) * dh], pos, theta);
+                    rope_rotate(&mut bk.row_mut(bi)[head * dh..(head + 1) * dh], pos, theta);
                 }
-                caches[bi].k[li].row_mut(pos).copy_from_slice(k.row(bi));
-                caches[bi].v[li].row_mut(pos).copy_from_slice(v.row(bi));
+                caches[bi].k[li].row_mut(pos).copy_from_slice(bk.row(bi));
+                caches[bi].v[li].row_mut(pos).copy_from_slice(bv.row(bi));
             }
 
             let scale = 1.0 / (dh as f32).sqrt();
-            let mut attn_out = Matrix::zeros(b, d);
+            battn.reshape_scratch(b, cfg.d_model);
+            battn.data.fill(0.0);
             for bi in 0..b {
-                let pos = positions[bi];
+                let pos = caches[bi].len;
                 let cache = &*caches[bi];
-                let out = attn_out.row_mut(bi);
-                let mut scores = vec![0.0f32; pos + 1];
+                let out = battn.row_mut(bi);
+                let scores = &mut scores[..pos + 1];
                 for head in 0..h {
                     let hs = head * dh;
-                    let qh = &q.row(bi)[hs..hs + dh];
+                    let qh = &bq.row(bi)[hs..hs + dh];
                     for tk in 0..=pos {
                         scores[tk] =
                             crate::util::matrix::dot(qh, &cache.k[li].row(tk)[hs..hs + dh])
                                 * scale;
                     }
-                    softmax_inplace(&mut scores);
+                    softmax_inplace(scores);
                     for tk in 0..=pos {
                         let w = scores[tk];
                         let vrow = &cache.v[li].row(tk)[hs..hs + dh];
@@ -522,32 +719,31 @@ impl Transformer {
                     }
                 }
             }
-            let proj = layer.attn.o.matvec_multi(&attn_out);
-            x.axpy(1.0, &proj);
+            layer.attn.o.matvec_multi_into(battn, bproj, bxt, xcol, pool);
+            x.axpy(1.0, bproj);
 
             // --- MLP block ---
-            let mut xn = x.clone();
+            bxn.data.copy_from_slice(&x.data);
             for r in 0..b {
-                rmsnorm_row(xn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
+                rmsnorm_row(bxn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
             }
-            let gate = layer.mlp.gate.matvec_multi(&xn);
-            let up = layer.mlp.up.matvec_multi(&xn);
-            let mut act = gate;
-            for (a, &u) in act.data.iter_mut().zip(&up.data) {
+            layer.mlp.gate.matvec_multi_into(bxn, bgate, bxt, xcol, pool);
+            layer.mlp.up.matvec_multi_into(bxn, bup, bxt, xcol, pool);
+            for (a, &u) in bgate.data.iter_mut().zip(&bup.data) {
                 *a = silu(*a) * u;
             }
-            let down = layer.mlp.down.matvec_multi(&act);
-            x.axpy(1.0, &down);
+            layer.mlp.down.matvec_multi_into(bgate, bdown, bxt, xcol, pool);
+            x.axpy(1.0, bdown);
         }
 
-        for (bi, cache) in caches.iter_mut().enumerate() {
-            cache.len = positions[bi] + 1;
+        for cache in caches.iter_mut() {
+            cache.len += 1;
         }
         for r in 0..b {
             rmsnorm_row(x.row_mut(r), &self.out_norm, cfg.rms_eps);
         }
-        let logits = self.head.matvec_multi(&x);
-        (0..b).map(|r| logits.row(r).to_vec()).collect()
+        self.head.matvec_multi_into(x, blogits, bxt, xcol, pool);
+        &scratch.blogits
     }
 
     /// Sample a token from logits (temperature + top-k; greedy if temp == 0).
@@ -760,6 +956,44 @@ mod tests {
         let t = Transformer::sample(&all_nan, 1.0, 4, &mut rng);
         assert!((t as usize) < 8);
         let _ = Transformer::sample(&all_nan, 0.0, 1, &mut rng);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_mixed_calls() {
+        // One persistent arena serving interleaved single-token and batch
+        // rounds (the serve-loop pattern) must reproduce the allocating
+        // wrappers bit-for-bit, including after the batch width changes.
+        let m = tiny_model(8);
+        let mut scratch = DecodeScratch::new(&m.cfg);
+        let pool = ExecPool::new(2);
+
+        // Reference: allocating wrappers.
+        let mut c1 = KvCache::new(&m.cfg);
+        let r1: Vec<Vec<f32>> =
+            [5u16, 9, 200].iter().map(|&t| m.decode_step(&mut c1, t)).collect();
+        let mut c2 = KvCache::new(&m.cfg);
+        let r2: Vec<Vec<f32>> = [17u16, 3].iter().map(|&t| m.decode_step(&mut c2, t)).collect();
+
+        // Same streams through one scratch: batch round (B=2), then single
+        // rounds (B=1 path), then batch again.
+        let mut a = KvCache::new(&m.cfg);
+        let mut b = KvCache::new(&m.cfg);
+        {
+            let mut refs: Vec<&mut KvCache> = vec![&mut a, &mut b];
+            let logits = m.decode_step_batch_with(&mut refs, &[5, 17], &mut scratch, &pool);
+            assert_eq!(logits.row(0), &r1[0][..]);
+            assert_eq!(logits.row(1), &r2[0][..]);
+        }
+        let logits = m.decode_step_with(&mut a, 9, &mut scratch, &pool);
+        assert_eq!(logits, &r1[1][..]);
+        {
+            let mut refs: Vec<&mut KvCache> = vec![&mut a, &mut b];
+            let logits = m.decode_step_batch_with(&mut refs, &[200, 3], &mut scratch, &pool);
+            assert_eq!(logits.row(0), &r1[2][..]);
+            assert_eq!(logits.row(1), &r2[1][..]);
+        }
+        assert_eq!(a.len, 3);
+        assert_eq!(b.len, 2);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::trellis::packing::{decode_window, pack_states, pad_for_decode};
 use crate::trellis::{quantize_tail_biting, Trellis, Viterbi, ViterbiWorkspace};
 use crate::util::linalg::regularize_spd;
 use crate::util::matrix::Matrix;
+use crate::util::threadpool::ExecPool;
 use crate::util::Timer;
 
 /// Configuration of a QTIP quantization run.
@@ -191,16 +192,19 @@ pub struct QuantizedMatrix {
 /// Shared per-`CodeSpec` kernel dispatch: monomorphizes the given v1 (scalar)
 /// or v2 (pair) kernel with the matching decode closure. One definition keeps
 /// the single-column and batch-fused matvecs decoding identically — the
-/// documented bit-identity between the two paths depends on it.
+/// documented bit-identity between the two paths depends on it. The kernels
+/// take a tile-row band `[bi0, bi1)` so the sequential entry points (full
+/// band) and the tile-parallel pool paths (one band per worker claim) run the
+/// exact same code.
 macro_rules! dispatch_code {
-    ($self:ident, $v1:ident, $v2:ident, $xt:expr, $y:expr) => {
+    ($self:ident, $v1:ident, $v2:ident, $($arg:expr),+) => {
         match &$self.code {
-            CodeSpec::OneMad => $self.$v1($xt, $y, onemad::decode_scalar),
-            CodeSpec::ThreeInst => $self.$v1($xt, $y, threeinst::decode_scalar),
+            CodeSpec::OneMad => $self.$v1($($arg),+, onemad::decode_scalar),
+            CodeSpec::ThreeInst => $self.$v1($($arg),+, threeinst::decode_scalar),
             CodeSpec::Hyb { q, v, lut } => {
                 let q = *q;
                 if *v as usize == 1 {
-                    $self.$v1($xt, $y, move |s| {
+                    $self.$v1($($arg),+, move |s| {
                         let x = hybrid::hash(s);
                         let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
                         let val = lut[idx];
@@ -211,7 +215,7 @@ macro_rules! dispatch_code {
                         }
                     })
                 } else {
-                    $self.$v2($xt, $y, move |s| {
+                    $self.$v2($($arg),+, move |s| {
                         let x = hybrid::hash(s);
                         let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
                         let a = lut[idx * 2];
@@ -225,9 +229,9 @@ macro_rules! dispatch_code {
             }
             CodeSpec::Lut { v, table } => {
                 if *v as usize == 1 {
-                    $self.$v1($xt, $y, move |s| table[s as usize])
+                    $self.$v1($($arg),+, move |s| table[s as usize])
                 } else {
-                    $self.$v2($xt, $y, move |s| {
+                    $self.$v2($($arg),+, move |s| {
                         (table[s as usize * 2], table[s as usize * 2 + 1])
                     })
                 }
@@ -235,6 +239,42 @@ macro_rules! dispatch_code {
         }
     };
 }
+
+/// Raw write handle for the batch accumulator (`B × rows`, row-major): the
+/// tile-parallel multi kernels write disjoint column ranges of `y` (band
+/// `[bi0, bi1)` owns rows `[bi0·tx, bi1·tx)` of Ŵ, i.e. columns of `y`),
+/// which are not contiguous in memory, so bands share the matrix through a
+/// pointer instead of slice splits.
+#[derive(Clone, Copy)]
+struct YCells {
+    ptr: *mut f32,
+    /// Row length of the accumulator = output dim of the layer.
+    stride: usize,
+}
+
+// SAFETY: every writer touches a distinct (b, row) address — bands own
+// disjoint `row` ranges and each band index is claimed exactly once.
+unsafe impl Send for YCells {}
+unsafe impl Sync for YCells {}
+
+impl YCells {
+    fn of(y: &mut Matrix) -> YCells {
+        YCells { ptr: y.data.as_mut_ptr(), stride: y.cols }
+    }
+
+    /// `y[b][row] += v`. Caller must hold the band owning `row`.
+    #[inline]
+    unsafe fn add(&self, b: usize, row: usize, v: f32) {
+        *self.ptr.add(b * self.stride + row) += v;
+    }
+}
+
+/// Batch-column chunk width of the multi kernels: accumulators live in a
+/// fixed stack array (no per-call `vec!` churn); batches wider than this are
+/// processed in independent column chunks, which re-reads the packed stream
+/// once per chunk but never changes any per-(sequence, row) accumulation
+/// order — outputs stay bit-identical at every batch size.
+const BCHUNK: usize = 16;
 
 impl QuantizedMatrix {
     #[inline]
@@ -319,21 +359,48 @@ impl QuantizedMatrix {
     pub fn matvec_tilde(&self, xt: &[f32], y: &mut [f32]) {
         assert_eq!(xt.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        dispatch_code!(self, matvec_tilde_v1, matvec_tilde_v2, xt, y)
+        self.tilde_band(0, self.tiles_r(), xt, y);
+    }
+
+    /// Tile-parallel `matvec_tilde`: disjoint row-tile bands of `y` are striped
+    /// across the pool's workers. Within each output row the accumulation order
+    /// over column tiles is unchanged (the band kernel *is* the sequential
+    /// kernel), so the result is bit-identical to [`Self::matvec_tilde`] at any
+    /// worker count.
+    pub fn matvec_tilde_pool(&self, xt: &[f32], y: &mut [f32], pool: &ExecPool) {
+        assert_eq!(xt.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        if pool.width() <= 1 || self.tiles_r() <= 1 {
+            return self.tilde_band(0, self.tiles_r(), xt, y);
+        }
+        pool.run_chunks(y, self.tx, |bi, band| self.tilde_band(bi, bi + 1, xt, band));
+    }
+
+    /// Single-column kernel over tile-row band `[bi0, bi1)`; `y` holds exactly
+    /// the output rows `[bi0·tx, bi1·tx)`.
+    fn tilde_band(&self, bi0: usize, bi1: usize, xt: &[f32], y: &mut [f32]) {
+        dispatch_code!(self, matvec_tilde_v1, matvec_tilde_v2, bi0, bi1, xt, y)
     }
 
     #[inline]
-    fn matvec_tilde_v1<F: Fn(u32) -> f32>(&self, xt: &[f32], y: &mut [f32], decode: F) {
+    fn matvec_tilde_v1<F: Fn(u32) -> f32>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xt: &[f32],
+        y: &mut [f32],
+        decode: F,
+    ) {
         let k = self.trellis.k as usize;
         let l = self.trellis.l;
         let (tx, ty) = (self.tx, self.ty);
         let mask = (1u64 << l) - 1;
-        for bi in 0..self.tiles_r() {
+        for bi in bi0..bi1 {
             for bj in 0..self.tiles_c() {
                 let words = &self.packed
                     [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
                 let xs = &xt[bj * ty..(bj + 1) * ty];
-                let ys = &mut y[bi * tx..(bi + 1) * tx];
+                let ys = &mut y[(bi - bi0) * tx..(bi - bi0 + 1) * tx];
                 // Rolling 64-bit window buffer: one u32 load per 32 bits of
                 // stream instead of an unaligned 64-bit assembly per weight
                 // (§Perf optimization #1 — see EXPERIMENTS.md).
@@ -387,6 +454,46 @@ impl QuantizedMatrix {
         y
     }
 
+    /// Allocation-free full matvec: `y = Ŵ x` including the RHT sandwich, with
+    /// the decode striped across `pool` and the activation copy staged in the
+    /// caller's scratch buffer. Bit-identical to [`Self::matvec`].
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32], xt: &mut Vec<f32>, pool: &ExecPool) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        xt.clear();
+        xt.extend_from_slice(x);
+        self.rht.forward_activations(xt);
+        y.fill(0.0);
+        self.matvec_tilde_pool(xt, y, pool);
+        self.rht.restore_outputs(y);
+    }
+
+    /// Allocation-free batch-fused matvec: `Y = Ŵ X` with the RHT sandwich,
+    /// reusing caller scratch for the RHT'd activations (`bxt`) and their
+    /// column-major transpose (`xcol`). `y` is reshaped to `B × rows` in place.
+    /// Row `b` is bit-identical to `matvec(x.row(b))` at any worker count.
+    pub fn matvec_multi_into(
+        &self,
+        x: &Matrix,
+        y: &mut Matrix,
+        bxt: &mut Matrix,
+        xcol: &mut Vec<f32>,
+        pool: &ExecPool,
+    ) {
+        assert_eq!(x.cols, self.cols);
+        bxt.reshape_scratch(x.rows, x.cols);
+        bxt.data.copy_from_slice(&x.data);
+        for r in 0..bxt.rows {
+            self.rht.forward_activations(bxt.row_mut(r));
+        }
+        y.reshape_scratch(x.rows, self.rows);
+        y.data.fill(0.0);
+        self.matvec_tilde_multi_pool(bxt, y, xcol, pool);
+        for r in 0..y.rows {
+            self.rht.restore_outputs(y.row_mut(r));
+        }
+    }
+
     /// Batch-fused decode matvec in incoherent space: Y += Ŵ̃ X̃ for a `B × cols`
     /// activation matrix `xt` into a `B × rows` accumulator `y`.
     ///
@@ -401,57 +508,103 @@ impl QuantizedMatrix {
         assert_eq!(xt.cols, self.cols);
         assert_eq!(y.cols, self.rows);
         assert_eq!(xt.rows, y.rows, "batch dims must agree");
-        dispatch_code!(self, matvec_tilde_multi_v1, matvec_tilde_multi_v2, xt, y)
+        let mut xcol = Vec::new();
+        xt.transpose_into(&mut xcol);
+        let cells = YCells::of(y);
+        self.multi_band(0, self.tiles_r(), &xcol, xt.rows, cells);
+    }
+
+    /// Tile-parallel batch-fused decode: row-tile bands of the accumulator are
+    /// striped across `pool`, the transposed activations are staged in the
+    /// caller's `xcol` scratch (replacing the per-call `transpose()`
+    /// allocation). Bit-identical to [`Self::matvec_tilde_multi`] at any
+    /// worker count — the band kernel is the sequential kernel.
+    pub fn matvec_tilde_multi_pool(
+        &self,
+        xt: &Matrix,
+        y: &mut Matrix,
+        xcol: &mut Vec<f32>,
+        pool: &ExecPool,
+    ) {
+        assert_eq!(xt.cols, self.cols);
+        assert_eq!(y.cols, self.rows);
+        assert_eq!(xt.rows, y.rows, "batch dims must agree");
+        xt.transpose_into(xcol);
+        let cells = YCells::of(y);
+        let b = xt.rows;
+        let tiles_r = self.tiles_r();
+        if pool.width() <= 1 || tiles_r <= 1 {
+            return self.multi_band(0, tiles_r, xcol, b, cells);
+        }
+        let xcol: &[f32] = xcol;
+        pool.run(tiles_r, |bi| self.multi_band(bi, bi + 1, xcol, b, cells));
+    }
+
+    /// Batch kernel over tile-row band `[bi0, bi1)` — owns output rows
+    /// `[bi0·tx, bi1·tx)` of every batch column of `y`.
+    fn multi_band(&self, bi0: usize, bi1: usize, xcol: &[f32], nb: usize, y: YCells) {
+        dispatch_code!(self, matvec_tilde_multi_v1, matvec_tilde_multi_v2, bi0, bi1, xcol, nb, y)
     }
 
     #[inline]
-    fn matvec_tilde_multi_v1<F: Fn(u32) -> f32>(&self, xt: &Matrix, y: &mut Matrix, decode: F) {
-        let b = xt.rows;
+    fn matvec_tilde_multi_v1<F: Fn(u32) -> f32>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xcol: &[f32],
+        nb: usize,
+        y: YCells,
+        decode: F,
+    ) {
         let k = self.trellis.k as usize;
         let l = self.trellis.l;
         let (tx, ty) = (self.tx, self.ty);
         let mask = (1u64 << l) - 1;
         // Column-major activations (cols × B) so the per-decoded-weight inner
-        // loop over the batch is unit-stride.
-        let xcol = xt.transpose().data;
-        let mut acc = vec![0.0f32; b];
-        for bi in 0..self.tiles_r() {
-            for bj in 0..self.tiles_c() {
-                let words = &self.packed
-                    [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
-                let x0 = bj * ty;
-                // Same rolling 64-bit window as the single-column kernel; each
-                // decoded weight now feeds B accumulators instead of one.
-                let mut bit = 0usize;
-                for r in 0..tx {
-                    acc.fill(0.0);
-                    let mut w = bit >> 5;
-                    let mut sh = bit & 31;
-                    let mut buf = (words[w] as u64) | ((words[w + 1] as u64) << 32);
-                    buf >>= sh;
-                    let mut avail = 64 - sh;
-                    for c in 0..ty {
-                        if avail < l as usize {
-                            let abs = bit;
-                            w = abs >> 5;
-                            sh = abs & 31;
-                            buf = (words[w] as u64) | ((words[w + 1] as u64) << 32);
-                            buf >>= sh;
-                            avail = 64 - sh;
+        // loop over the batch is unit-stride; accumulators live on the stack.
+        for b0 in (0..nb).step_by(BCHUNK) {
+            let bc = (nb - b0).min(BCHUNK);
+            let mut acc = [0.0f32; BCHUNK];
+            for bi in bi0..bi1 {
+                for bj in 0..self.tiles_c() {
+                    let words = &self.packed
+                        [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
+                    let x0 = bj * ty;
+                    // Same rolling 64-bit window as the single-column kernel;
+                    // each decoded weight now feeds `bc` accumulators.
+                    let mut bit = 0usize;
+                    for r in 0..tx {
+                        acc[..bc].fill(0.0);
+                        let mut w = bit >> 5;
+                        let mut sh = bit & 31;
+                        let mut buf = (words[w] as u64) | ((words[w + 1] as u64) << 32);
+                        buf >>= sh;
+                        let mut avail = 64 - sh;
+                        for c in 0..ty {
+                            if avail < l as usize {
+                                let abs = bit;
+                                w = abs >> 5;
+                                sh = abs & 31;
+                                buf = (words[w] as u64) | ((words[w + 1] as u64) << 32);
+                                buf >>= sh;
+                                avail = 64 - sh;
+                            }
+                            let state = (buf & mask) as u32;
+                            let wv = decode(state);
+                            let base = (x0 + c) * nb + b0;
+                            let xs = &xcol[base..base + bc];
+                            for (a, &xv) in acc[..bc].iter_mut().zip(xs) {
+                                *a += wv * xv;
+                            }
+                            buf >>= k;
+                            avail -= k;
+                            bit += k;
                         }
-                        let state = (buf & mask) as u32;
-                        let wv = decode(state);
-                        let xs = &xcol[(x0 + c) * b..(x0 + c) * b + b];
-                        for (a, &xv) in acc.iter_mut().zip(xs) {
-                            *a += wv * xv;
+                        let row = bi * tx + r;
+                        for (bb, &a) in acc[..bc].iter().enumerate() {
+                            // SAFETY: this band owns rows [bi0*tx, bi1*tx).
+                            unsafe { y.add(b0 + bb, row, a * self.scale) };
                         }
-                        buf >>= k;
-                        avail -= k;
-                        bit += k;
-                    }
-                    let row = bi * tx + r;
-                    for (bb, &a) in acc.iter().enumerate() {
-                        *y.at_mut(bb, row) += a * self.scale;
                     }
                 }
             }
@@ -461,38 +614,45 @@ impl QuantizedMatrix {
     #[inline]
     fn matvec_tilde_multi_v2<F: Fn(u32) -> (f32, f32)>(
         &self,
-        xt: &Matrix,
-        y: &mut Matrix,
+        bi0: usize,
+        bi1: usize,
+        xcol: &[f32],
+        nb: usize,
+        y: YCells,
         decode: F,
     ) {
-        let b = xt.rows;
         let kv = (self.trellis.k * 2) as usize;
         let l = self.trellis.l;
         let (tx, ty) = (self.tx, self.ty);
         debug_assert_eq!(ty % 2, 0);
-        let xcol = xt.transpose().data;
-        let mut acc = vec![0.0f32; b];
-        for bi in 0..self.tiles_r() {
-            for bj in 0..self.tiles_c() {
-                let words = &self.packed
-                    [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
-                let x0 = bj * ty;
-                let mut bit = 0usize;
-                for r in 0..tx {
-                    acc.fill(0.0);
-                    for c in (0..ty).step_by(2) {
-                        let state = decode_window(words, bit, l);
-                        let (wa, wb) = decode(state);
-                        let xa = &xcol[(x0 + c) * b..(x0 + c) * b + b];
-                        let xb = &xcol[(x0 + c + 1) * b..(x0 + c + 1) * b + b];
-                        for ((a, &va), &vb) in acc.iter_mut().zip(xa).zip(xb) {
-                            *a += wa * va + wb * vb;
+        for b0 in (0..nb).step_by(BCHUNK) {
+            let bc = (nb - b0).min(BCHUNK);
+            let mut acc = [0.0f32; BCHUNK];
+            for bi in bi0..bi1 {
+                for bj in 0..self.tiles_c() {
+                    let words = &self.packed
+                        [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
+                    let x0 = bj * ty;
+                    let mut bit = 0usize;
+                    for r in 0..tx {
+                        acc[..bc].fill(0.0);
+                        for c in (0..ty).step_by(2) {
+                            let state = decode_window(words, bit, l);
+                            let (wa, wb) = decode(state);
+                            let ba = (x0 + c) * nb + b0;
+                            let bb = (x0 + c + 1) * nb + b0;
+                            let xa = &xcol[ba..ba + bc];
+                            let xb = &xcol[bb..bb + bc];
+                            for ((a, &va), &vb) in acc[..bc].iter_mut().zip(xa).zip(xb) {
+                                *a += wa * va + wb * vb;
+                            }
+                            bit += kv;
                         }
-                        bit += kv;
-                    }
-                    let row = bi * tx + r;
-                    for (bb, &a) in acc.iter().enumerate() {
-                        *y.at_mut(bb, row) += a * self.scale;
+                        let row = bi * tx + r;
+                        for (bb, &a) in acc[..bc].iter().enumerate() {
+                            // SAFETY: this band owns rows [bi0*tx, bi1*tx).
+                            unsafe { y.add(b0 + bb, row, a * self.scale) };
+                        }
                     }
                 }
             }
@@ -500,17 +660,24 @@ impl QuantizedMatrix {
     }
 
     #[inline]
-    fn matvec_tilde_v2<F: Fn(u32) -> (f32, f32)>(&self, xt: &[f32], y: &mut [f32], decode: F) {
+    fn matvec_tilde_v2<F: Fn(u32) -> (f32, f32)>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xt: &[f32],
+        y: &mut [f32],
+        decode: F,
+    ) {
         let kv = (self.trellis.k * 2) as usize;
         let l = self.trellis.l;
         let (tx, ty) = (self.tx, self.ty);
         debug_assert_eq!(ty % 2, 0);
-        for bi in 0..self.tiles_r() {
+        for bi in bi0..bi1 {
             for bj in 0..self.tiles_c() {
                 let words = &self.packed
                     [self.tile_offset(bi, bj)..self.tile_offset(bi, bj) + self.tile_words];
                 let xs = &xt[bj * ty..(bj + 1) * ty];
-                let ys = &mut y[bi * tx..(bi + 1) * tx];
+                let ys = &mut y[(bi - bi0) * tx..(bi - bi0 + 1) * tx];
                 let mut bit = 0usize;
                 for yr in ys.iter_mut() {
                     let mut acc = 0.0f32;
@@ -980,6 +1147,60 @@ mod tests {
                 let mut single = vec![0.0f32; 32];
                 qm.matvec_tilde(x.row(r), &mut single);
                 assert_eq!(fused.row(r), &single[..], "row {r} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_into_matches_matvec_all_codes() {
+        // The allocation-free RHT-sandwich paths (scratch staging + pool
+        // striping) must be bit-identical to the allocating ones for every
+        // CodeSpec variant and pool width.
+        let mut rng = Rng::new(41);
+        let w = Matrix::gaussian(16, 16, 0.5, &mut rng);
+        let h = random_spd(16, 42);
+        for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 2)] {
+            let mut cfg = small_cfg(2);
+            cfg.code = code.into();
+            cfg.v = v;
+            let qm = quantize_matrix_qtip(&w, &h, &cfg).qm;
+            let x = rng.gauss_vec(16);
+            let reference = qm.matvec(&x);
+            for width in [1usize, 2, 4] {
+                let pool = ExecPool::new(width);
+                let mut y = vec![0.0f32; 16];
+                let mut xt = Vec::new();
+                qm.matvec_into(&x, &mut y, &mut xt, &pool);
+                assert_eq!(y, reference, "{code} width {width}: matvec_into diverged");
+            }
+            // Batch form, including a batch wider than one accumulator chunk.
+            for b in [3usize, BCHUNK + 2] {
+                let mut xm = Matrix::zeros(b, 16);
+                for r in 0..b {
+                    let xr = rng.gauss_vec(16);
+                    xm.row_mut(r).copy_from_slice(&xr);
+                }
+                let reference = qm.matvec_multi(&xm);
+                // Batch-chunked accumulation must stay bit-identical to the
+                // single-column kernel even past one chunk width.
+                for r in 0..b {
+                    assert_eq!(
+                        reference.row(r),
+                        &qm.matvec(xm.row(r))[..],
+                        "{code} b {b}: fused row {r} != single matvec"
+                    );
+                }
+                for width in [1usize, 2, 4] {
+                    let pool = ExecPool::new(width);
+                    let mut y = Matrix::zeros(0, 0);
+                    let mut bxt = Matrix::zeros(0, 0);
+                    let mut xcol = Vec::new();
+                    qm.matvec_multi_into(&xm, &mut y, &mut bxt, &mut xcol, &pool);
+                    assert_eq!(
+                        y.data, reference.data,
+                        "{code} width {width} b {b}: matvec_multi_into diverged"
+                    );
+                }
             }
         }
     }

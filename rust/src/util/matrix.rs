@@ -6,6 +6,7 @@
 //! live in `EXPERIMENTS.md` §Perf.
 
 use crate::util::rng::Rng;
+use crate::util::threadpool::SendPtr;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -62,19 +63,38 @@ impl Matrix {
     }
 
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
+        let mut data = Vec::new();
+        self.transpose_into(&mut data);
+        Matrix { rows: self.cols, cols: self.rows, data }
+    }
+
+    /// Transpose into a reusable flat buffer (`cols × rows`, row-major): the
+    /// allocation-free form the decode scratch arena uses, where `transpose()`
+    /// would churn a fresh `Matrix` per call.
+    pub fn transpose_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.rows * self.cols, 0.0);
         // Blocked transpose for cache friendliness on large matrices.
         const B: usize = 32;
         for rb in (0..self.rows).step_by(B) {
             for cb in (0..self.cols).step_by(B) {
                 for r in rb..(rb + B).min(self.rows) {
                     for c in cb..(cb + B).min(self.cols) {
-                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                        out[c * self.rows + r] = self.data[r * self.cols + c];
                     }
                 }
             }
         }
-        t
+    }
+
+    /// Resize in place to `rows × cols`, reusing the backing allocation
+    /// (contents unspecified afterwards). Scratch-arena helper: steady-state
+    /// serving reshapes batch buffers without reallocating once the high-water
+    /// capacity is reached.
+    pub fn reshape_scratch(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
     }
 
     /// Frobenius norm.
@@ -144,12 +164,35 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows, "gemm inner dim");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    gemm_rows(a, b, 0, a.rows, &mut c.data);
+}
+
+/// Tile-parallel GEMM: output rows are striped across the pool in bands.
+/// Each C row accumulates independently in the same order as [`gemm`], so the
+/// result is bit-identical at any worker count.
+pub fn gemm_pool(a: &Matrix, b: &Matrix, c: &mut Matrix, pool: &crate::util::threadpool::ExecPool) {
+    assert_eq!(a.cols, b.rows, "gemm inner dim");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    const BAND: usize = 16;
+    if pool.width() <= 1 || a.rows <= BAND || b.cols == 0 {
+        return gemm_rows(a, b, 0, a.rows, &mut c.data);
+    }
+    let n = b.cols;
+    pool.run_chunks(&mut c.data, BAND * n, |band, crows| {
+        let i0 = band * BAND;
+        gemm_rows(a, b, i0, i0 + crows.len() / n, crows);
+    });
+}
+
+/// GEMM over output rows [i0, i1); `crows` holds exactly those C rows.
+fn gemm_rows(a: &Matrix, b: &Matrix, i0: usize, i1: usize, crows: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
     // i-k-j loop order: the j-inner loop is unit-stride over both B and C, which LLVM
     // vectorizes. Block over k to keep the C row hot in L1/L2.
     const KB: usize = 256;
-    for i in 0..m {
-        let crow = &mut c.data[i * n..(i + 1) * n];
+    for i in i0..i1 {
+        let crow = &mut crows[(i - i0) * n..(i - i0 + 1) * n];
         for kb in (0..k).step_by(KB) {
             let kend = (kb + KB).min(k);
             for kk in kb..kend {
@@ -170,30 +213,88 @@ pub fn gemm(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 pub fn gemv(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols, x.len());
     assert_eq!(a.rows, y.len());
+    gemv_rows(a, 0, a.rows, x, y);
+}
+
+/// Tile-parallel GEMV: output rows striped across the pool in bands whose size
+/// is a multiple of the 4-row blocking, so every row falls in the same
+/// accumulation group as the sequential kernel — bit-identical at any width.
+pub fn gemv_pool(a: &Matrix, x: &[f32], y: &mut [f32], pool: &crate::util::threadpool::ExecPool) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    const BAND: usize = 64;
+    if pool.width() <= 1 || a.rows <= BAND {
+        return gemv_rows(a, 0, a.rows, x, y);
+    }
+    pool.run_chunks(y, BAND, |band, yb| {
+        let r0 = band * BAND;
+        gemv_rows(a, r0, r0 + yb.len(), x, yb);
+    });
+}
+
+/// Batched per-row GEMV (`y[b] = A @ x.row(b)` for every batch row) with a
+/// **single** pool dispatch: jobs are (batch row × row band) pairs, so a B=8
+/// round pays one submit/drain instead of eight. Each output row accumulates
+/// exactly as in [`gemv`] — bit-identical at any worker count.
+pub fn gemv_multi_pool(
+    a: &Matrix,
+    x: &Matrix,
+    y: &mut Matrix,
+    pool: &crate::util::threadpool::ExecPool,
+) {
+    assert_eq!(a.cols, x.cols);
+    assert_eq!(y.rows, x.rows);
+    assert_eq!(y.cols, a.rows);
+    const BAND: usize = 64;
+    if pool.width() <= 1 || x.rows * a.rows <= BAND {
+        for r in 0..x.rows {
+            gemv_rows(a, 0, a.rows, x.row(r), y.row_mut(r));
+        }
+        return;
+    }
+    let bands = a.rows.div_ceil(BAND);
+    let stride = y.cols;
+    let base = SendPtr(y.data.as_mut_ptr());
+    pool.run(x.rows * bands, move |job| {
+        let br = job / bands;
+        let r0 = (job % bands) * BAND;
+        let r1 = (r0 + BAND).min(a.rows);
+        // SAFETY: job indices map 1:1 onto disjoint `y[br][r0..r1]` ranges,
+        // each claimed exactly once; `y` outlives the dispatch.
+        let dst =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(br * stride + r0), r1 - r0) };
+        gemv_rows(a, r0, r1, x.row(br), dst);
+    });
+}
+
+/// GEMV over rows [r0, r1) of A; `y` holds exactly those output rows. `r0`
+/// must be a multiple of 4 so the blocking matches the full-matrix grouping.
+fn gemv_rows(a: &Matrix, r0: usize, r1: usize, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(r0 % 4, 0, "band start must preserve the 4-row grouping");
     let n = a.cols;
-    let mut r = 0;
-    while r + 4 <= a.rows {
-        let r0 = &a.data[r * n..(r + 1) * n];
-        let r1 = &a.data[(r + 1) * n..(r + 2) * n];
-        let r2 = &a.data[(r + 2) * n..(r + 3) * n];
-        let r3 = &a.data[(r + 3) * n..(r + 4) * n];
+    let mut r = r0;
+    while r + 4 <= r1 {
+        let w0 = &a.data[r * n..(r + 1) * n];
+        let w1 = &a.data[(r + 1) * n..(r + 2) * n];
+        let w2 = &a.data[(r + 2) * n..(r + 3) * n];
+        let w3 = &a.data[(r + 3) * n..(r + 4) * n];
         let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
         for i in 0..n {
             let xv = x[i];
-            s0 += r0[i] * xv;
-            s1 += r1[i] * xv;
-            s2 += r2[i] * xv;
-            s3 += r3[i] * xv;
+            s0 += w0[i] * xv;
+            s1 += w1[i] * xv;
+            s2 += w2[i] * xv;
+            s3 += w3[i] * xv;
         }
-        y[r] = s0;
-        y[r + 1] = s1;
-        y[r + 2] = s2;
-        y[r + 3] = s3;
+        y[r - r0] = s0;
+        y[r - r0 + 1] = s1;
+        y[r - r0 + 2] = s2;
+        y[r - r0 + 3] = s3;
         r += 4;
     }
-    while r < a.rows {
+    while r < r1 {
         let row = &a.data[r * n..(r + 1) * n];
-        y[r] = dot(row, x);
+        y[r - r0] = dot(row, x);
         r += 1;
     }
 }
@@ -324,6 +425,57 @@ mod tests {
         let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(m.trace(), 5.0);
         assert!((m.fro_norm() - (30.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pooled_kernels_bit_identical_to_sequential() {
+        use crate::util::threadpool::ExecPool;
+        let mut rng = Rng::new(9);
+        // Sizes straddling the band widths, including non-multiples of 4.
+        for (m, k, n) in [(7, 16, 5), (64, 32, 16), (130, 20, 33), (257, 8, 3)] {
+            let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+            let b = Matrix::gaussian(k, n, 1.0, &mut rng);
+            let x = rng.gauss_vec(k);
+            let mut y_seq = vec![0.0f32; m];
+            gemv(&a, &x, &mut y_seq);
+            let mut c_seq = Matrix::zeros(m, n);
+            gemm(&a, &b, &mut c_seq);
+            for width in [1usize, 2, 4] {
+                let pool = ExecPool::new(width);
+                let mut y_par = vec![0.0f32; m];
+                gemv_pool(&a, &x, &mut y_par, &pool);
+                assert_eq!(y_seq, y_par, "gemv {m}x{k} width {width}");
+                let mut c_par = Matrix::zeros(m, n);
+                gemm_pool(&a, &b, &mut c_par, &pool);
+                assert_eq!(c_seq.data, c_par.data, "gemm {m}x{k}x{n} width {width}");
+            }
+            // Batched single-dispatch GEMV: every row must equal plain gemv.
+            let bsz = 3usize;
+            let mut xs = Matrix::zeros(bsz, k);
+            for r in 0..bsz {
+                let xr = rng.gauss_vec(k);
+                xs.row_mut(r).copy_from_slice(&xr);
+            }
+            for width in [1usize, 4] {
+                let pool = ExecPool::new(width);
+                let mut ym = Matrix::zeros(bsz, m);
+                gemv_multi_pool(&a, &xs, &mut ym, &pool);
+                for r in 0..bsz {
+                    let mut yr = vec![0.0f32; m];
+                    gemv(&a, xs.row(r), &mut yr);
+                    assert_eq!(ym.row(r), &yr[..], "gemv_multi {m}x{k} row {r} width {width}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let mut rng = Rng::new(10);
+        let a = Matrix::gaussian(37, 53, 1.0, &mut rng);
+        let mut buf = vec![7.0f32; 3]; // stale contents + wrong size
+        a.transpose_into(&mut buf);
+        assert_eq!(buf, a.transpose().data);
     }
 
     #[test]

@@ -1,10 +1,25 @@
-//! Scoped data-parallel helpers (rayon substitute).
+//! Persistent work-stealing execution pool (rayon substitute).
 //!
-//! The quantization pipeline fans per-layer and per-sequence jobs across worker
-//! threads via `parallel_for_chunks`. On the single-core CI machine this degrades
-//! gracefully to sequential execution; the coordinator logic is identical either way.
+//! The seed shipped scoped spawn-per-call helpers: every `parallel_for` paid a
+//! full `thread::scope` spawn/join round-trip, which priced parallelism out of
+//! the serving hot path (a decode matvec runs in microseconds). [`ExecPool`]
+//! replaces them with long-lived workers parked on a condvar: submitting a job
+//! is one mutex lock + `notify_all`, cheap enough to invoke per matvec. The
+//! same pool is shared by the quantization pipeline (per-layer jobs), the
+//! artifact load path (per-layer blob reassembly), and the tile-parallel
+//! decode kernels (per-tile-row bands), so `--threads` governs every parallel
+//! path in the binary.
+//!
+//! Scheduling is work-stealing over an atomic index counter: workers (and the
+//! submitting thread, which participates) claim indices with `fetch_add`, so
+//! uneven per-index cost load-balances automatically. On the single-core CI
+//! machine a width-1 pool spawns no threads and degrades to plain sequential
+//! execution; all callers are written so results are identical either way.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::mem::{ManuallyDrop, MaybeUninit};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of workers to use: `QTIP_THREADS` env var, else available parallelism.
 pub fn default_workers() -> usize {
@@ -16,67 +31,278 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Run `f(index)` for every index in 0..n, work-stealing over `workers` threads.
-/// `f` must be Sync; per-index outputs should be written through interior
-/// mutability or collected via [`parallel_map`].
-pub fn parallel_for<F>(n: usize, workers: usize, f: F)
-where
-    F: Fn(usize) + Sync,
-{
-    let workers = workers.max(1).min(n.max(1));
-    if workers <= 1 || n <= 1 {
-        for i in 0..n {
-            f(i);
-        }
-        return;
+/// Resolve a requested worker count: an explicit `n > 0` (e.g. a `--threads`
+/// CLI flag) wins; `0` means auto (`QTIP_THREADS` env var, else available
+/// parallelism). This is the single precedence rule for the whole binary.
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        default_workers()
     }
-    let counter = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = counter.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                f(i);
-            });
-        }
-    });
 }
 
-/// Parallel map preserving order.
-pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
-where
-    T: Send + Default + Clone,
-    F: Fn(usize) -> T + Sync,
-{
-    let mut out = vec![T::default(); n];
+/// A snapshot of one submitted job, shared between the submitter and workers.
+///
+/// `data`/`call` type-erase a `&F` living on the submitter's stack. Safety
+/// contract: [`ExecPool::run`] does not return until `remaining == 0`, so the
+/// pointer is valid whenever an index is claimed; once the index counter is
+/// exhausted a stale `Job` copy can never dereference it again.
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    n: usize,
+    next: Arc<AtomicUsize>,
+    remaining: Arc<AtomicUsize>,
+    panicked: Arc<AtomicBool>,
+}
+
+impl Clone for Job {
+    fn clone(&self) -> Job {
+        Job {
+            data: self.data,
+            call: self.call,
+            n: self.n,
+            next: Arc::clone(&self.next),
+            remaining: Arc::clone(&self.remaining),
+            panicked: Arc::clone(&self.panicked),
+        }
+    }
+}
+
+// SAFETY: `data` points at an `F: Sync` borrowed for the duration of `run`
+// (see `Job` docs); the raw pointer itself is only dereferenced through
+// `call`, which requires a claimed index.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+struct State {
+    /// Bumped per submission; workers use it to distinguish fresh jobs.
+    epoch: u64,
+    /// Latest job. Intentionally never cleared: a worker waking late for an
+    /// already-drained job finds the counter exhausted and claims nothing.
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here until stragglers drain `remaining`.
+    done_cv: Condvar,
+    /// Guards against re-entrant / concurrent `run` calls: the pool executes
+    /// one job at a time, and a nested submission degrades to inline
+    /// sequential execution instead of corrupting the active job.
+    busy: AtomicBool,
+}
+
+/// A persistent pool of `width - 1` worker threads plus the submitting thread.
+///
+/// `width == 1` spawns nothing and runs jobs inline — sequential execution is
+/// the degenerate pool, not a separate code path.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    width: usize,
+}
+
+impl ExecPool {
+    /// Build a pool of total width `threads` (including the caller). `0`
+    /// resolves via [`resolve_workers`] (env var, else hardware parallelism).
+    pub fn new(threads: usize) -> ExecPool {
+        let width = resolve_workers(threads).max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            busy: AtomicBool::new(false),
+        });
+        let handles = (0..width - 1)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("qtip-exec-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ExecPool { shared, handles, width }
+    }
+
+    /// Width-1 pool: no spawned threads, `run` executes inline. Used as the
+    /// implicit pool behind the convenience (non-`_with`) model APIs.
+    pub fn sequential() -> ExecPool {
+        ExecPool::new(1)
+    }
+
+    /// Total execution width, including the submitting thread.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of spawned worker threads (`width - 1`).
+    pub fn spawned_workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool. Blocks until all
+    /// indices complete; panics (after the job drains) if any invocation
+    /// panicked. Each index is claimed exactly once; claim order is
+    /// nondeterministic, so `f` must not depend on cross-index ordering.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        // Inline paths: degenerate pool, single item, or the pool is already
+        // executing a job (re-entrant or concurrent submission).
+        if self.width <= 1 || n == 1 || self.shared.busy.swap(true, Ordering::Acquire) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let job = Job {
+            data: &f as *const F as *const (),
+            call: call_shim::<F>,
+            n,
+            next: Arc::new(AtomicUsize::new(0)),
+            remaining: Arc::new(AtomicUsize::new(n)),
+            panicked: Arc::new(AtomicBool::new(false)),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job.clone());
+        }
+        self.shared.work_cv.notify_all();
+        // The submitter is a worker too — no thread idles while holding work.
+        execute(&job, &self.shared);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while job.remaining.load(Ordering::Acquire) != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+        self.shared.busy.store(false, Ordering::Release);
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("ExecPool job panicked on a worker thread");
+        }
+    }
+
+    /// Partition `data` into consecutive `chunk`-sized blocks and run
+    /// `f(block_index, block)` across the pool. The disjoint `&mut` blocks are
+    /// materialized from a shared base pointer — no per-slot locking.
+    pub fn run_chunks<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
     {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        parallel_for(n, workers, |i| {
-            **slots[i].lock().unwrap() = f(i);
+        assert!(chunk > 0);
+        let len = data.len();
+        let base = SendPtr(data.as_mut_ptr());
+        self.run(len.div_ceil(chunk), move |i| {
+            let start = i * chunk;
+            let end = (start + chunk).min(len);
+            // SAFETY: blocks [start, end) are disjoint across indices, each
+            // index is claimed exactly once, and `data` outlives `run`.
+            let block =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(i, block);
         });
     }
-    out
+
+    /// Parallel map preserving order. Results are written straight into their
+    /// disjoint output slots (no Mutex per slot, no `T: Default + Clone`
+    /// pre-fill — the seed's `parallel_map` needed both).
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+        out.resize_with(n, MaybeUninit::uninit);
+        self.run_chunks(&mut out, 1, |i, slot| {
+            slot[0].write(f(i));
+        });
+        // SAFETY: `run` returns only after every index executed (a worker
+        // panic propagates above and leaks the buffer instead of reading it),
+        // so all n slots are initialized. Vec<MaybeUninit<T>> and Vec<T>
+        // share layout.
+        let mut out = ManuallyDrop::new(out);
+        unsafe { Vec::from_raw_parts(out.as_mut_ptr() as *mut T, out.len(), out.capacity()) }
+    }
 }
 
-/// Process mutable chunks of a slice in parallel: `f(chunk_index, chunk)`.
-pub fn parallel_for_chunks<T, F>(data: &mut [T], chunk: usize, workers: usize, f: F)
-where
-    T: Send,
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    assert!(chunk > 0);
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
-    let n = chunks.len();
-    let slots: Vec<std::sync::Mutex<(usize, &mut [T])>> =
-        chunks.into_iter().map(std::sync::Mutex::new).collect();
-    parallel_for(n, workers, |i| {
-        let mut guard = slots[i].lock().unwrap();
-        let (idx, ref mut s) = *guard;
-        f(idx, s);
-    });
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so closures writing provably disjoint ranges can be
+/// `Sync`. Shared by [`ExecPool::run_chunks`] and the pool-striped kernels
+/// (`util::matrix`); every user must guarantee its claimed ranges are
+/// disjoint and that the pointee outlives the dispatch.
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+/// Claim-and-run loop shared by workers and the submitting thread.
+fn execute(job: &Job, shared: &Shared) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        // A panic must still decrement `remaining`, or the submitter (and any
+        // borrowed data the job closure captures) would deadlock forever.
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) })).is_ok();
+        if !ok {
+            job.panicked.store(true, Ordering::Release);
+        }
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _st = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.clone().expect("epoch advanced without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        execute(&job, &shared);
+    }
 }
 
 #[cfg(test)]
@@ -85,9 +311,10 @@ mod tests {
     use std::sync::atomic::AtomicU64;
 
     #[test]
-    fn parallel_for_covers_all_indices() {
+    fn run_covers_all_indices() {
+        let pool = ExecPool::new(4);
         let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
-        parallel_for(100, 4, |i| {
+        pool.run(100, |i| {
             hits[i].fetch_add(1, Ordering::SeqCst);
         });
         for (i, h) in hits.iter().enumerate() {
@@ -96,33 +323,51 @@ mod tests {
     }
 
     #[test]
-    fn parallel_for_zero_and_one() {
-        parallel_for(0, 4, |_| panic!("should not run"));
+    fn run_zero_and_one() {
+        let pool = ExecPool::new(4);
+        pool.run(0, |_| panic!("should not run"));
         let ran = AtomicUsize::new(0);
-        parallel_for(1, 4, |_| {
+        pool.run(1, |_| {
             ran.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ran.load(Ordering::SeqCst), 1);
     }
 
     #[test]
-    fn parallel_map_preserves_order() {
-        let out = parallel_map(50, 4, |i| i * i);
+    fn pool_is_reusable_across_many_jobs() {
+        // The whole point vs the scoped helpers: one pool, many cheap submits.
+        let pool = ExecPool::new(3);
+        let sum = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(17, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::SeqCst), 200 * (16 * 17 / 2));
+    }
+
+    #[test]
+    fn map_preserves_order_without_default() {
+        // The result type is neither Default nor Clone: the seed's
+        // Mutex-per-slot parallel_map could not have produced it.
+        struct NoDefault(usize);
+        let pool = ExecPool::new(4);
+        let out = pool.map(50, |i| NoDefault(i * i));
         for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, i * i);
+            assert_eq!(v.0, i * i);
         }
     }
 
     #[test]
-    fn parallel_chunks_sum() {
+    fn run_chunks_sum() {
+        let pool = ExecPool::new(4);
         let mut data = vec![1u64; 1000];
-        parallel_for_chunks(&mut data, 64, 4, |idx, chunk| {
+        pool.run_chunks(&mut data, 64, |idx, chunk| {
             for v in chunk.iter_mut() {
                 *v += idx as u64;
             }
         });
         let total: u64 = data.iter().sum();
-        // chunk i has min(64, rem) elements incremented by i
         let mut expect = 1000u64;
         let mut off = 0usize;
         let mut idx = 0u64;
@@ -136,16 +381,51 @@ mod tests {
     }
 
     #[test]
-    fn workers_env_default() {
-        assert!(default_workers() >= 1);
+    fn sequential_pool_spawns_nothing() {
+        let pool = ExecPool::sequential();
+        assert_eq!(pool.width(), 1);
+        assert_eq!(pool.spawned_workers(), 0);
+        let out = pool.map(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
     }
 
     #[test]
-    fn parallel_sum_atomic() {
+    fn nested_run_degrades_to_inline() {
+        // run() inside run() must not corrupt the outer job — it executes the
+        // inner indices inline on whichever thread submitted them.
+        let pool = ExecPool::new(4);
         let sum = AtomicU64::new(0);
-        parallel_for(1000, 8, |i| {
-            sum.fetch_add(i as u64, Ordering::Relaxed);
+        pool.run(8, |_| {
+            pool.run(5, |j| {
+                sum.fetch_add(j as u64, Ordering::Relaxed);
+            });
         });
-        assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+        assert_eq!(sum.load(Ordering::SeqCst), 8 * (4 * 5 / 2));
+    }
+
+    #[test]
+    fn worker_panic_propagates_not_deadlocks() {
+        let pool = ExecPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic inside a job must surface to the submitter");
+        // And the pool must still be usable afterwards.
+        let ran = AtomicUsize::new(0);
+        pool.run(16, |_| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn workers_env_default() {
+        assert!(default_workers() >= 1);
+        assert_eq!(resolve_workers(3), 3);
+        assert!(resolve_workers(0) >= 1);
     }
 }

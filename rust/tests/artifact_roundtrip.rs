@@ -12,6 +12,7 @@ use qtip::model::{KvCache, Linear, ModelConfig, Transformer, WeightStore};
 use qtip::quant::QtipConfig;
 use qtip::util::matrix::Matrix;
 use qtip::util::rng::Rng;
+use qtip::util::threadpool::ExecPool;
 
 fn tiny_quantized(code: &str, v: u32, seed: u64) -> Transformer {
     let mut cfg = ModelConfig::nano();
@@ -36,7 +37,7 @@ fn tiny_quantized(code: &str, v: u32, seed: u64) -> Transformer {
         code: code.into(),
         seed,
     };
-    quantize_model_qtip(&mut model, &hs, &qcfg, 1, |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
     model
 }
 

@@ -1,0 +1,184 @@
+//! Thread-count invariance of the tile-parallel decode stack.
+//!
+//! The `ExecPool` kernels stripe disjoint row-tile bands across workers but
+//! never reorder any per-row accumulation, so every parallel path must be
+//! **bit-identical** to its sequential counterpart — across all 4 `CodeSpec`
+//! variants and pool widths 1, 2, 4. A serving determinism test under a
+//! multi-worker pool lives in `coordinator::server::tests`.
+
+use qtip::coordinator::quantize_model_qtip;
+use qtip::hessian::collect_hessians;
+use qtip::model::transformer::DecodeScratch;
+use qtip::model::{KvCache, ModelConfig, Transformer, WeightStore};
+use qtip::quant::{CodeSpec, QtipConfig, QuantizedMatrix};
+use qtip::trellis::Trellis;
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+use qtip::util::threadpool::ExecPool;
+
+const WIDTHS: [usize; 3] = [1, 2, 4];
+
+fn synthetic_specs() -> Vec<(&'static str, Trellis, CodeSpec)> {
+    let hyb = qtip::codes::HybridCode::train(12, 2, 9, 5);
+    let lut = qtip::codes::PureLutCode::new(12, 1, 6);
+    vec![
+        ("1mad", Trellis::new(12, 2, 1), CodeSpec::OneMad),
+        ("3inst", Trellis::new(12, 2, 1), CodeSpec::ThreeInst),
+        ("hyb", Trellis::new(12, 2, 2), CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() }),
+        ("lut", Trellis::new(12, 2, 1), CodeSpec::Lut { v: 1, table: lut.table.clone() }),
+    ]
+}
+
+#[test]
+fn matvec_tilde_pool_is_bit_identical_across_widths() {
+    // 4 tile rows × 2 tile cols so bands genuinely split across workers.
+    for (name, trellis, code) in synthetic_specs() {
+        let qm = QuantizedMatrix::synthetic(64, 32, trellis, code, 16, 16, 7);
+        let mut rng = Rng::new(17);
+        let x = rng.gauss_vec(32);
+        let mut seq = vec![0.0f32; 64];
+        qm.matvec_tilde(&x, &mut seq);
+        for width in WIDTHS {
+            let pool = ExecPool::new(width);
+            let mut par = vec![0.0f32; 64];
+            qm.matvec_tilde_pool(&x, &mut par, &pool);
+            assert_eq!(seq, par, "{name}: matvec_tilde diverged at width {width}");
+        }
+    }
+}
+
+#[test]
+fn matvec_tilde_multi_pool_is_bit_identical_across_widths() {
+    for (name, trellis, code) in synthetic_specs() {
+        let qm = QuantizedMatrix::synthetic(64, 32, trellis, code, 16, 16, 9);
+        let mut rng = Rng::new(23);
+        let b = 5usize;
+        let mut x = Matrix::zeros(b, 32);
+        for r in 0..b {
+            let xr = rng.gauss_vec(32);
+            x.row_mut(r).copy_from_slice(&xr);
+        }
+        let mut seq = Matrix::zeros(b, 64);
+        qm.matvec_tilde_multi(&x, &mut seq);
+        for width in WIDTHS {
+            let pool = ExecPool::new(width);
+            let mut par = Matrix::zeros(b, 64);
+            let mut xcol = Vec::new();
+            qm.matvec_tilde_multi_pool(&x, &mut par, &mut xcol, &pool);
+            assert_eq!(seq.data, par.data, "{name}: multi kernel diverged at width {width}");
+        }
+        // And every fused row must still equal the single-column kernel.
+        for r in 0..b {
+            let mut single = vec![0.0f32; 64];
+            qm.matvec_tilde(x.row(r), &mut single);
+            assert_eq!(seq.row(r), &single[..], "{name}: fused row {r} != single");
+        }
+    }
+}
+
+fn tiny_quantized(code: &str, v: u32) -> Transformer {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 2;
+    cfg.max_seq = 32;
+    cfg.name = "tiny".into();
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 31));
+    let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v, tx: 8, ty: 8, code: code.into(), seed: 77 };
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    model
+}
+
+#[test]
+fn decode_logits_bit_identical_across_widths_all_codes() {
+    // End-to-end: full quantized decode steps through the scratch arena must
+    // produce logits bit-identical to the sequential `decode_step`, for every
+    // CodeSpec variant and every pool width.
+    let tokens = [10u16, 200, 37, 99];
+    for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1)] {
+        let model = tiny_quantized(code, v);
+        let mut ref_cache = KvCache::new(&model.cfg);
+        let reference: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| model.decode_step(&mut ref_cache, t)).collect();
+        for width in WIDTHS {
+            let pool = ExecPool::new(width);
+            let mut scratch = DecodeScratch::new(&model.cfg);
+            let mut cache = KvCache::new(&model.cfg);
+            for (pos, &t) in tokens.iter().enumerate() {
+                let logits = model.decode_step_with(&mut cache, t, &mut scratch, &pool);
+                assert_eq!(
+                    logits,
+                    &reference[pos][..],
+                    "{code}: decode_step_with diverged at width {width}, pos {pos}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_decode_bit_identical_across_widths() {
+    // Fused batch rounds under a multi-worker pool vs per-sequence sequential
+    // decode — heterogeneous prefixes, every width.
+    let model = tiny_quantized("3inst", 1);
+    let streams: [&[u16]; 3] = [&[10, 200, 37, 99, 5], &[7, 7, 42], &[250]];
+    let mut reference: Vec<Vec<Vec<f32>>> = Vec::new();
+    for s in &streams {
+        let mut cache = KvCache::new(&model.cfg);
+        reference.push(s.iter().map(|&t| model.decode_step(&mut cache, t)).collect());
+    }
+    for width in WIDTHS {
+        let pool = ExecPool::new(width);
+        let mut scratch = DecodeScratch::new(&model.cfg);
+        let mut caches: Vec<KvCache> = (0..3).map(|_| KvCache::new(&model.cfg)).collect();
+        let max_len = streams.iter().map(|s| s.len()).max().unwrap();
+        for pos in 0..max_len {
+            let mut tokens = Vec::new();
+            let mut idxs = Vec::new();
+            for (i, s) in streams.iter().enumerate() {
+                if pos < s.len() {
+                    tokens.push(s[pos]);
+                    idxs.push(i);
+                }
+            }
+            let mut refs: Vec<&mut KvCache> = Vec::new();
+            for (i, c) in caches.iter_mut().enumerate() {
+                if idxs.contains(&i) {
+                    refs.push(c);
+                }
+            }
+            let logits = model.decode_step_batch_with(&mut refs, &tokens, &mut scratch, &pool);
+            for (j, &i) in idxs.iter().enumerate() {
+                assert_eq!(
+                    logits.row(j),
+                    &reference[i][pos][..],
+                    "width {width}: seq {i} pos {pos} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_batch_bit_identical_across_widths() {
+    let cfg = {
+        let mut c = ModelConfig::nano();
+        c.d_model = 32;
+        c.n_heads = 2;
+        c.d_ff = 64;
+        c.n_layers = 2;
+        c.max_seq = 32;
+        c
+    };
+    let model = Transformer::from_store(&WeightStore::random(&cfg, 41));
+    let tokens = [1u16, 9, 77, 200, 3];
+    let seq = model.forward_batch(&tokens);
+    for width in WIDTHS {
+        let pool = ExecPool::new(width);
+        let par = model.forward_batch_with(&tokens, &pool);
+        assert_eq!(seq.data, par.data, "forward_batch diverged at width {width}");
+    }
+}

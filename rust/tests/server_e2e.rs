@@ -9,6 +9,7 @@ use qtip::coordinator::{
 use qtip::hessian::collect_hessians;
 use qtip::model::{ModelConfig, Transformer, WeightStore};
 use qtip::quant::QtipConfig;
+use qtip::util::threadpool::ExecPool;
 
 fn quantized_tiny() -> Arc<Transformer> {
     let mut cfg = ModelConfig::nano();
@@ -24,7 +25,7 @@ fn quantized_tiny() -> Arc<Transformer> {
     ];
     let hs = collect_hessians(&model, &seqs);
     let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 2 };
-    quantize_model_qtip(&mut model, &hs, &qcfg, 1, |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
     // NOTE: no ensure_caches() — the server path must work through the fused
     // decode matvec alone.
     Arc::new(model)
@@ -62,7 +63,7 @@ fn mid_flight_admission_preserves_outputs() {
     // Now start A, then inject B and C while A decodes.
     let server = ServerHandle::spawn(
         model,
-        ServerConfig { max_batch: 4, kv_budget_bytes: 1 << 30 },
+        ServerConfig { max_batch: 4, kv_budget_bytes: 1 << 30, ..Default::default() },
     );
     let rx_a = server.submit(req(1, 20));
     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -97,7 +98,7 @@ fn fused_batch_is_token_identical_across_heterogeneous_lengths() {
 
     let server = ServerHandle::spawn(
         model.clone(),
-        ServerConfig { max_batch: 4, kv_budget_bytes: 1 << 30 },
+        ServerConfig { max_batch: 4, kv_budget_bytes: 1 << 30, ..Default::default() },
     );
     let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
     let batched: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
@@ -126,7 +127,7 @@ fn fused_batch_is_token_identical_across_heterogeneous_lengths() {
 fn stress_many_requests_small_pool() {
     let server = ServerHandle::spawn(
         quantized_tiny(),
-        ServerConfig { max_batch: 3, kv_budget_bytes: 1 << 30 },
+        ServerConfig { max_batch: 3, kv_budget_bytes: 1 << 30, ..Default::default() },
     );
     let rxs: Vec<_> = (0..16).map(|i| server.submit(req(i, 4 + (i % 5) as usize))).collect();
     let mut seen = std::collections::BTreeSet::new();
