@@ -1,12 +1,16 @@
-//! §Perf microbenchmarks: per-layer hot-path rates feeding EXPERIMENTS.md §Perf.
+//! §Perf microbenchmarks: per-layer hot-path rates feeding EXPERIMENTS.md §Perf
+//! and the machine-readable perf trajectory (`BENCH_microbench.json` with
+//! `--json` / `QTIP_BENCH_JSON=1`).
 //!  * code decode rate (weights/s) per code — the ALU cost the paper counts;
 //!  * fused decode-matvec rate vs dense GEMV (bandwidth view);
+//!  * scalar vs lane-blocked decode-matvec per code (§Perf optimization #2),
+//!    single-thread — the lane speedup the acceptance gate tracks;
 //!  * Viterbi quantization rate (state·steps/s) — encode-side throughput;
 //!  * sgemm GF/s and RHT transforms/s (substrate rooflines).
 
-use qtip::bench::{f2, samples, Table};
-use qtip::codes::{build_code, Code};
-use qtip::quant::{CodeSpec, QuantizedMatrix};
+use qtip::bench::{f2, samples, BenchJson, Table};
+use qtip::codes::{build_code, Code, HybridCode, PureLutCode};
+use qtip::quant::{CodeSpec, KernelKind, QuantizedMatrix};
 use qtip::trellis::{Trellis, Viterbi, ViterbiWorkspace};
 use qtip::util::hadamard::hadamard_inplace;
 use qtip::util::matrix::Matrix;
@@ -16,6 +20,7 @@ use qtip::util::Timer;
 fn main() {
     let scale = samples(1) as f64;
     let mut table = Table::new("§Perf microbenchmarks", &["kernel", "metric", "value"]);
+    let mut json = BenchJson::new("microbench");
 
     // Decode rates.
     for name in ["1mad", "3inst", "hyb", "lut"] {
@@ -36,11 +41,13 @@ fn main() {
             "Mweights/s".into(),
             f2(rate),
         ]);
+        json.row(&[("code", name.to_string())], "decode_mweights_per_sec", rate);
     }
 
     // Fused decode-matvec vs dense GEMV at d=2048.
     let d = 2048;
-    let qm = QuantizedMatrix::synthetic(d, d, Trellis::new(16, 2, 1), CodeSpec::ThreeInst, 16, 16, 2);
+    let qm =
+        QuantizedMatrix::synthetic(d, d, Trellis::new(16, 2, 1), CodeSpec::ThreeInst, 16, 16, 2);
     let mut rng = Rng::new(3);
     let x = rng.gauss_vec(d);
     let mut y = vec![0.0f32; d];
@@ -52,11 +59,18 @@ fn main() {
         iters += 1;
     }
     let per = t.secs() / iters as f64;
+    let fused_rate = (d * d) as f64 / per / 1e6;
     table.row(vec![
         "fused decode-matvec 3inst 2048²".into(),
         "Mweights/s".into(),
-        f2((d * d) as f64 / per / 1e6),
+        f2(fused_rate),
     ]);
+    let fused_params = [
+        ("code", "3inst".to_string()),
+        ("d", d.to_string()),
+        ("kernel", qm.kernel.name().to_string()),
+    ];
+    json.row(&fused_params, "fused_mweights_per_sec", fused_rate);
 
     let w = Matrix::gaussian(d, d, 0.1, &mut rng);
     let t = Timer::start();
@@ -66,11 +80,11 @@ fn main() {
         iters += 1;
     }
     let per = t.secs() / iters as f64;
-    table.row(vec![
-        "dense GEMV 2048²".into(),
-        "GF/s".into(),
-        f2(2.0 * (d * d) as f64 / per / 1e9),
-    ]);
+    let gemv_gf = 2.0 * (d * d) as f64 / per / 1e9;
+    table.row(vec!["dense GEMV 2048²".into(), "GF/s".into(), f2(gemv_gf)]);
+    json.row(&[("d", d.to_string())], "gemv_gflops", gemv_gf);
+
+    kernel_comparison(scale, &mut table, &mut json);
 
     // GEMM roofline.
     let a = Matrix::gaussian(256, 256, 1.0, &mut rng);
@@ -82,11 +96,9 @@ fn main() {
         iters += 1;
     }
     let per = t.secs() / iters as f64;
-    table.row(vec![
-        "sgemm 256³".into(),
-        "GF/s".into(),
-        f2(2.0 * 256f64.powi(3) / per / 1e9),
-    ]);
+    let gemm_gf = 2.0 * 256f64.powi(3) / per / 1e9;
+    table.row(vec!["sgemm 256³".into(), "GF/s".into(), f2(gemm_gf)]);
+    json.row(&[("n", "256".to_string())], "sgemm_gflops", gemm_gf);
 
     // Viterbi encode rate.
     for l in [12u32, 16] {
@@ -114,6 +126,7 @@ fn main() {
             "Kweights/s".into(),
             f2(256.0 / per / 1e3),
         ]);
+        json.row(&[("l", l.to_string())], "viterbi_kweights_per_sec", 256.0 / per / 1e3);
     }
 
     // RHT.
@@ -125,11 +138,70 @@ fn main() {
         iters += 1;
     }
     let per = t.secs() / iters as f64;
-    table.row(vec![
-        "FWHT n=4096".into(),
-        "Mel/s".into(),
-        f2(4096.0 / per / 1e6),
-    ]);
+    let fwht_rate = 4096.0 / per / 1e6;
+    table.row(vec!["FWHT n=4096".into(), "Mel/s".into(), f2(fwht_rate)]);
+    json.row(&[("n", "4096".to_string())], "fwht_mel_per_sec", fwht_rate);
 
     table.emit("perf_microbench.md");
+    json.emit();
+}
+
+/// §Perf optimization #2: scalar vs lane-blocked fused decode-matvec,
+/// single-thread, per CodeSpec variant. The acceptance gate tracks the 1MAD
+/// and 3INST `lanes_speedup` rows (≥ 1.5× on the CI host); `ns_per_weight`
+/// is the trajectory metric successive PRs compare.
+fn kernel_comparison(scale: f64, table: &mut Table, json: &mut BenchJson) {
+    let d = 1024usize;
+    let hyb = HybridCode::train(16, 2, 9, 5);
+    let lut = PureLutCode::new(12, 1, 6);
+    let specs: Vec<(&str, Trellis, CodeSpec)> = vec![
+        ("1mad", Trellis::new(16, 2, 1), CodeSpec::OneMad),
+        ("3inst", Trellis::new(16, 2, 1), CodeSpec::ThreeInst),
+        ("hyb", Trellis::new(16, 2, 2), CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() }),
+        ("lut", Trellis::new(12, 2, 1), CodeSpec::Lut { v: 1, table: lut.table.clone() }),
+    ];
+    let mut rng = Rng::new(41);
+    let x = rng.gauss_vec(d);
+    let mut y = vec![0.0f32; d];
+    for (name, trellis, code) in specs {
+        let mut qm = QuantizedMatrix::synthetic(d, d, trellis, code, 16, 16, 9);
+        let mut rates = [0.0f64; 2];
+        for (slot, kern) in [KernelKind::Scalar, KernelKind::Lanes].into_iter().enumerate() {
+            qm.kernel = kern;
+            y.fill(0.0);
+            qm.matvec_tilde(&x, &mut y); // warmup
+            let t = Timer::start();
+            let mut iters = 0usize;
+            while t.secs() < 0.3 * scale {
+                y.fill(0.0);
+                qm.matvec_tilde(&x, &mut y);
+                iters += 1;
+            }
+            std::hint::black_box(&y);
+            let per = t.secs() / iters as f64;
+            let ns_per_weight = per * 1e9 / (d * d) as f64;
+            rates[slot] = (d * d) as f64 / per;
+            table.row(vec![
+                format!("decode-matvec {name} {} 1024²", kern.name()),
+                "ns/weight".into(),
+                f2(ns_per_weight),
+            ]);
+            json.row(
+                &[
+                    ("code", name.to_string()),
+                    ("kernel", kern.name().to_string()),
+                    ("d", d.to_string()),
+                ],
+                "ns_per_weight",
+                ns_per_weight,
+            );
+        }
+        let speedup = rates[1] / rates[0];
+        table.row(vec![
+            format!("decode-matvec {name} lanes vs scalar"),
+            "speedup".into(),
+            f2(speedup),
+        ]);
+        json.row(&[("code", name.to_string()), ("d", d.to_string())], "lanes_speedup", speedup);
+    }
 }

@@ -14,7 +14,7 @@
 //! token throughput grows with B (decode amortizes) while per-sequence
 //! throughput stays flat, so fused beats B× per-sequence by B = 8.
 
-use qtip::bench::{f2, samples, Table};
+use qtip::bench::{f2, samples, BenchJson, Table};
 use qtip::quant::{CodeSpec, QuantizedMatrix};
 use qtip::trellis::Trellis;
 use qtip::util::matrix::Matrix;
@@ -84,6 +84,7 @@ impl BigCodebookVq {
 
 fn main() {
     let min_secs = 0.3 * samples(1) as f64;
+    let mut json = BenchJson::new("table4");
     let mut table = Table::new(
         "Table 4 / 17 — batch-1 decode-matvec throughput (shape: compressed ≥ fp32, computed codes ≥ big-codebook VQ, 2>3>4 bit)",
         &["d (square)", "Method", "bits", "matvec/s", "eff GB/s", "vs fp32"],
@@ -103,6 +104,12 @@ fn main() {
             f2(fp_bw),
             "1.00".into(),
         ]);
+        let params = [
+            ("d", d.to_string()),
+            ("method", "fp32_gemv".to_string()),
+            ("bits", "32".to_string()),
+        ];
+        json.row(&params, "matvec_per_sec", fp_rate);
 
         // AQLM-shape big-codebook VQ at ~2 bits.
         let vq = BigCodebookVq::new(d, d, 7);
@@ -116,6 +123,12 @@ fn main() {
             f2(vq_bw),
             f2(vq_rate / fp_rate),
         ]);
+        let params = [
+            ("d", d.to_string()),
+            ("method", "vq_big_codebook".to_string()),
+            ("bits", "2".to_string()),
+        ];
+        json.row(&params, "matvec_per_sec", vq_rate);
 
         // QTIP computed codes at 2/3/4 bits.
         for k in [2u32, 3, 4] {
@@ -141,6 +154,12 @@ fn main() {
                 f2(bw),
                 f2(rate / fp_rate),
             ]);
+            let params = [
+                ("d", d.to_string()),
+                ("method", "qtip_3inst".to_string()),
+                ("bits", k.to_string()),
+            ];
+            json.row(&params, "matvec_per_sec", rate);
         }
 
         // QTIP HYB (2-bit, V=2, Q=9 — 2KiB LUT stays L1-resident).
@@ -166,10 +185,17 @@ fn main() {
             f2(bw),
             f2(rate / fp_rate),
         ]);
+        let params = [
+            ("d", d.to_string()),
+            ("method", "qtip_hyb".to_string()),
+            ("bits", "2".to_string()),
+        ];
+        json.row(&params, "matvec_per_sec", rate);
     }
     table.emit("table4_throughput.md");
-    batch_sweep(min_secs);
-    thread_sweep(min_secs);
+    batch_sweep(min_secs, &mut json);
+    thread_sweep(min_secs, &mut json);
+    json.emit();
 }
 
 /// Intra-op scaling sweep: fused decode throughput as a batch × workers grid.
@@ -177,7 +203,7 @@ fn main() {
 /// batch size (tile bands parallelize the decode), and the batch-fusion gain
 /// composes with the thread gain. On a single-core machine all worker counts
 /// collapse to the width-1 row (outputs are bit-identical regardless).
-fn thread_sweep(min_secs: f64) {
+fn thread_sweep(min_secs: f64, json: &mut BenchJson) {
     let mut table = Table::new(
         "Table 4 addendum — tile-parallel decode scaling (QTIP 3INST 2-bit, d=1024; \
          shape: tok/s grows with workers at every B; all cells bit-identical)",
@@ -239,6 +265,12 @@ fn thread_sweep(min_secs: f64) {
                 f2(tok_rate),
                 f2(tok_rate / base_rate),
             ]);
+            let params = [
+                ("sweep", "threads".to_string()),
+                ("b", b.to_string()),
+                ("workers", workers.to_string()),
+            ];
+            json.row(&params, "tok_per_sec", tok_rate);
         }
     }
     table.emit("table4_thread_sweep.md");
@@ -246,7 +278,7 @@ fn thread_sweep(min_secs: f64) {
 
 /// Serving-batch sweep: one fused decode pass over B activation columns vs B
 /// per-sequence passes (what the continuous batcher used to do per round).
-fn batch_sweep(min_secs: f64) {
+fn batch_sweep(min_secs: f64, json: &mut BenchJson) {
     let mut table = Table::new(
         "Table 4 addendum — batch-fused decode matvec (QTIP 3INST 2-bit, d=1024; shape: fused tok/s grows with B, fused ≥ per-seq at B=8)",
         &["B", "path", "rounds/s", "tok/s (cols/s)", "fused vs per-seq"],
@@ -314,6 +346,12 @@ fn batch_sweep(min_secs: f64) {
             f2(fused_tok_rate),
             f2(fused_tok_rate / seq_tok_rate),
         ]);
+        let params =
+            [("sweep", "batch".to_string()), ("b", b.to_string()), ("path", "per_seq".to_string())];
+        json.row(&params, "tok_per_sec", seq_tok_rate);
+        let params =
+            [("sweep", "batch".to_string()), ("b", b.to_string()), ("path", "fused".to_string())];
+        json.row(&params, "tok_per_sec", fused_tok_rate);
     }
     table.emit("table4_batch_sweep.md");
 }

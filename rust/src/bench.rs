@@ -1,7 +1,12 @@
 //! Benchmark harness (criterion substitute): wall-clock measurement with warmup
-//! and repetitions, plus paper-style table rendering shared by every
-//! `rust/benches/*` target and `EXPERIMENTS.md`.
+//! and repetitions, paper-style table rendering shared by every
+//! `rust/benches/*` target and `EXPERIMENTS.md`, and the machine-readable
+//! perf-trajectory writer ([`BenchJson`] → `BENCH_<name>.json` at the repo
+//! root) so successive PRs can be compared mechanically.
 
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
 use crate::util::Timer;
 
 /// Time `f` with warmup; returns (mean_secs, std_secs) over `reps` runs.
@@ -121,6 +126,106 @@ pub fn samples(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Perf-trajectory schema version (`BENCH_*.json`); bump on layout changes.
+pub const BENCH_JSON_SCHEMA_VERSION: usize = 1;
+
+/// Whether machine-readable bench emission is on: `--json` anywhere in argv
+/// (benches are `harness = false` binaries, so flags pass straight through
+/// `cargo bench --bench X -- --json`) or `QTIP_BENCH_JSON=1`.
+pub fn json_enabled() -> bool {
+    std::env::args().any(|a| a == "--json")
+        || std::env::var("QTIP_BENCH_JSON").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Short git revision stamped into the perf trajectory (best-effort:
+/// "unknown" when git or the repo is unavailable).
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn repo_root() -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).to_path_buf()
+}
+
+/// The perf trajectory: one machine-readable record per bench run, written as
+/// `BENCH_<name>.json` at the repo root when [`json_enabled`]. Schema (v1):
+///
+/// ```json
+/// {"bench": "microbench", "schema_version": 1, "git_rev": "abc123",
+///  "config": {"samples": 1, "kernel": "lanes", "threads": 2},
+///  "rows": [{"params": {"code": "3inst", "kernel": "scalar"},
+///            "metric": "ns_per_weight", "value": 1.9}, ...]}
+/// ```
+///
+/// `params` values are strings (mechanical diffing beats clever typing);
+/// `value` is the single scalar measurement named by `metric`.
+pub struct BenchJson {
+    bench: String,
+    config: BTreeMap<String, Json>,
+    rows: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> BenchJson {
+        let mut config = BTreeMap::new();
+        config.insert("samples".to_string(), Json::Num(samples(1) as f64));
+        config.insert(
+            "kernel".to_string(),
+            Json::Str(crate::quant::kernel::selected_resolved().name().to_string()),
+        );
+        config.insert(
+            "threads".to_string(),
+            Json::Num(crate::util::threadpool::default_workers() as f64),
+        );
+        BenchJson { bench: bench.to_string(), config, rows: Vec::new() }
+    }
+
+    /// Record one measurement row.
+    pub fn row(&mut self, params: &[(&str, String)], metric: &str, value: f64) {
+        let p: BTreeMap<String, Json> =
+            params.iter().map(|(k, v)| (k.to_string(), Json::Str(v.clone()))).collect();
+        self.rows.push(Json::obj(vec![
+            ("params", Json::Obj(p)),
+            ("metric", Json::Str(metric.to_string())),
+            ("value", Json::Num(value)),
+        ]));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str(self.bench.clone())),
+            ("schema_version", Json::Num(BENCH_JSON_SCHEMA_VERSION as f64)),
+            ("git_rev", Json::Str(git_rev())),
+            ("config", Json::Obj(self.config.clone())),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root when JSON emission is
+    /// enabled ([`json_enabled`]); silently a no-op otherwise so benches can
+    /// call it unconditionally.
+    pub fn emit(&self) {
+        if !json_enabled() {
+            return;
+        }
+        let path = repo_root().join(format!("BENCH_{}.json", self.bench));
+        match std::fs::write(&path, self.to_json().to_string()) {
+            Ok(()) => println!("[bench-json] wrote {path:?} ({} rows)", self.rows.len()),
+            Err(e) => eprintln!("[bench-json] failed to write {path:?}: {e}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +258,28 @@ mod tests {
     #[test]
     fn samples_env_default() {
         assert_eq!(samples(7), 7);
+    }
+
+    #[test]
+    fn bench_json_schema_roundtrips() {
+        // The CI schema checker (scripts/check_bench_json.py) and this test
+        // pin the same contract: top-level bench/schema_version/git_rev/
+        // config/rows, rows of {params, metric, value}.
+        let mut bj = BenchJson::new("unit");
+        let params = [("code", "3inst".to_string()), ("kernel", "lanes".to_string())];
+        bj.row(&params, "tok_per_sec", 42.5);
+        bj.row(&[("d", "1024".to_string())], "ns_per_weight", 1.25);
+        let text = bj.to_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.req_str("bench"), "unit");
+        assert_eq!(j.req_usize("schema_version"), BENCH_JSON_SCHEMA_VERSION);
+        assert!(!j.req_str("git_rev").is_empty());
+        assert!(j.get("config").and_then(|c| c.get("samples")).is_some());
+        let rows = j.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        let code = rows[0].get("params").and_then(|p| p.get("code"));
+        assert_eq!(code.and_then(|c| c.as_str()), Some("3inst"));
+        assert_eq!(rows[0].req_str("metric"), "tok_per_sec");
+        assert_eq!(rows[0].req_f64("value"), 42.5);
     }
 }

@@ -21,6 +21,19 @@ pub fn hash(x: u32) -> u32 {
     x.wrapping_mul(x).wrapping_add(x)
 }
 
+/// Lane-array hash: elementwise [`hash`] over `N` states in a fixed-width
+/// array (`N` = `quant::LANES`), the shape the lane-blocked matvec kernels
+/// feed before their per-lane LUT gathers. Plain safe Rust so LLVM
+/// auto-vectorizes the square-and-add across lanes; bit-identical per lane.
+#[inline(always)]
+pub fn hash_lanes<const N: usize>(states: [u32; N]) -> [u32; N] {
+    let mut out = [0u32; N];
+    for (o, s) in out.iter_mut().zip(states) {
+        *o = hash(s);
+    }
+    out
+}
+
 /// Hybrid computed-lookup code.
 #[derive(Clone, Debug)]
 pub struct HybridCode {
@@ -116,6 +129,17 @@ mod tests {
         assert_eq!(hash(1), 2);
         assert_eq!(hash(7), 56);
         assert_eq!(hash(1000), 1_001_000);
+    }
+
+    #[test]
+    fn lane_hash_matches_scalar() {
+        for base in [0u32, 3, 65531, u32::MAX - 7] {
+            let states: [u32; 8] = std::array::from_fn(|j| base.wrapping_add(j as u32));
+            let lanes = hash_lanes(states);
+            for (j, &s) in states.iter().enumerate() {
+                assert_eq!(lanes[j], hash(s), "lane {j}");
+            }
+        }
     }
 
     #[test]

@@ -27,6 +27,20 @@ pub fn decode_scalar(state: u32) -> f32 {
     (s as f32 - MEAN) * (1.0 / STD)
 }
 
+/// Lane-array decode: elementwise [`decode_scalar`] over `N` states in a
+/// fixed-width array, the shape the lane-blocked matvec kernels feed (`N` =
+/// `quant::LANES`). Plain safe Rust over fixed arrays so LLVM auto-vectorizes
+/// the LCG and byte-sum across lanes; each lane runs the exact scalar op
+/// sequence, so outputs are bit-identical to `decode_scalar` per lane.
+#[inline(always)]
+pub fn decode_lanes<const N: usize>(states: [u32; N]) -> [f32; N] {
+    let mut out = [0.0f32; N];
+    for (o, s) in out.iter_mut().zip(states) {
+        *o = decode_scalar(s);
+    }
+    out
+}
+
 /// The 1MAD code (V=1).
 #[derive(Clone, Copy, Debug)]
 pub struct OneMadCode {
@@ -76,6 +90,19 @@ mod tests {
         assert_eq!(s, 386);
         let expect1 = (s as f32 - 510.0) / 147.8005413;
         assert!((decode_scalar(1) - expect1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lane_decode_matches_scalar() {
+        // The lane evaluator must be bit-identical to the scalar decode in
+        // every lane — the lane-blocked matvec kernels' identity rests on it.
+        for base in [0u32, 1, 917, 0xFFF0, u32::MAX - 7] {
+            let states: [u32; 8] = std::array::from_fn(|j| base.wrapping_add(j as u32));
+            let lanes = decode_lanes(states);
+            for (j, &s) in states.iter().enumerate() {
+                assert_eq!(lanes[j].to_bits(), decode_scalar(s).to_bits(), "lane {j}");
+            }
+        }
     }
 
     #[test]

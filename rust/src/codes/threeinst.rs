@@ -43,6 +43,20 @@ pub fn decode_scalar(state: u32) -> f32 {
     (m1 + m2) * (1.0 / STD)
 }
 
+/// Lane-array decode: elementwise [`decode_scalar`] over `N` states in a
+/// fixed-width array, the shape the lane-blocked matvec kernels feed (`N` =
+/// `quant::LANES`). Plain safe Rust over fixed arrays so LLVM auto-vectorizes
+/// the LCG, mask/XOR, and f16 rebias across lanes; each lane runs the exact
+/// scalar op sequence, so outputs are bit-identical to `decode_scalar`.
+#[inline(always)]
+pub fn decode_lanes<const N: usize>(states: [u32; N]) -> [f32; N] {
+    let mut out = [0.0f32; N];
+    for (o, s) in out.iter_mut().zip(states) {
+        *o = decode_scalar(s);
+    }
+    out
+}
+
 /// The 3INST code (V=1).
 #[derive(Clone, Copy, Debug)]
 pub struct ThreeInstCode {
@@ -97,6 +111,17 @@ mod tests {
                 f16_to_f32(bits),
                 "bits {bits:#06x}"
             );
+        }
+    }
+
+    #[test]
+    fn lane_decode_matches_scalar() {
+        for base in [0u32, 1, 12345, 0xFFF8, u32::MAX - 7] {
+            let states: [u32; 8] = std::array::from_fn(|j| base.wrapping_add(j as u32));
+            let lanes = decode_lanes(states);
+            for (j, &s) in states.iter().enumerate() {
+                assert_eq!(lanes[j].to_bits(), decode_scalar(s).to_bits(), "lane {j}");
+            }
         }
     }
 

@@ -127,6 +127,9 @@ pub struct ServerStats {
     pub max_fused_batch: usize,
     /// Execution-pool width the loop served with (1 = sequential).
     pub workers: usize,
+    /// Decode-kernel family of the served model's quantized layers
+    /// (`"scalar"` | `"lanes"`; `"dense"` when no layer is quantized).
+    pub kernel: String,
 }
 
 impl ServerStats {
@@ -195,6 +198,10 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
     let pool = ExecPool::new(cfg.threads);
     let mut scratch = DecodeScratch::new(&model.cfg);
     stats.workers = pool.width();
+    stats.kernel = model
+        .decode_kernel()
+        .map(|k| k.name().to_string())
+        .unwrap_or_else(|| "dense".to_string());
     // Round bookkeeping buffers, reused across rounds.
     let mut step_idx: Vec<usize> = Vec::new();
     let mut step_tokens: Vec<u16> = Vec::new();
@@ -422,6 +429,9 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.total_generated_tokens, 8);
+        // tiny_model is fully dense, so the stats must say so rather than
+        // claim a decode-kernel family that never ran.
+        assert_eq!(stats.kernel, "dense");
     }
 
     #[test]

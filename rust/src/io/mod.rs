@@ -547,6 +547,10 @@ fn load_quantized_layer(
             tile_words,
             packed,
             metrics,
+            // Runtime choice, not artifact state: the manifest stays
+            // kernel-agnostic and the load-time selection
+            // (`--kernel` > `QTIP_KERNEL` > auto) decides the decode family.
+            kernel: crate::quant::kernel::selected_resolved(),
         },
     ))
 }

@@ -22,6 +22,11 @@
 //! `serve` and `generate` refuse to run on random-init weights unless
 //! --allow-random is passed; `quantize`/`eval` keep the silent fallback so CI
 //! can exercise the pipeline without trained artifacts.
+//!
+//! All quantizing/serving subcommands take `--kernel auto|scalar|lanes` to pin
+//! the decode-matvec kernel family (precedence `--kernel` > `QTIP_KERNEL` >
+//! auto); `info` prints the resolved selection. Scalar and lane kernels are
+//! bit-identical — the flag trades speed, never output.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -36,7 +41,7 @@ use qtip::hessian::collect_hessians;
 use qtip::model::{
     calibration_split, eval_split, load_corpus, ModelConfig, Transformer, WeightStore,
 };
-use qtip::quant::QtipConfig;
+use qtip::quant::{kernel, KernelKind, QtipConfig};
 use qtip::util::threadpool::{resolve_workers, ExecPool};
 use qtip::util::Timer;
 
@@ -141,6 +146,13 @@ fn cmd_info(args: &Args) -> Result<()> {
         "  workers: {width} resolved ({} worker threads + the submitting thread when a \
          pool is built; override with --threads N or QTIP_THREADS, 0 = auto)",
         width - 1
+    );
+    let kern = kernel::selected();
+    println!(
+        "  decode kernel: {} (resolves to '{}'; precedence --kernel > QTIP_KERNEL > auto; \
+         scalar and lane kernels are bit-identical)",
+        kern.name(),
+        kern.resolve().name()
     );
     println!(
         "  intra-op: decode matvecs, GEMMs, per-layer quantize jobs, and artifact \
@@ -304,12 +316,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn print_server_stats(stats: &ServerStats) {
     println!(
-        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {}, {} workers)",
+        "served {} requests, {} tokens, aggregate {:.1} tok/s (peak batch {}, {} workers, \
+         {} kernel)",
         stats.completed,
         stats.total_generated_tokens,
         stats.throughput_tok_per_sec(),
         stats.peak_batch,
-        stats.workers
+        stats.workers,
+        stats.kernel
     );
 }
 
@@ -383,6 +397,13 @@ fn main() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if argv.is_empty() { "info".to_string() } else { argv.remove(0) };
     let args = Args::parse(argv);
+    // Decode-kernel selection applies to every subcommand that builds a
+    // QuantizedMatrix (quantize/serve/generate/eval — and info reports it).
+    // Precedence: --kernel > QTIP_KERNEL env > auto.
+    if let Some(spec) = args.get("kernel") {
+        let kind = KernelKind::parse(spec).map_err(anyhow::Error::msg)?;
+        kernel::set_process_kernel(kind);
+    }
     match cmd.as_str() {
         "info" => cmd_info(&args),
         "quantize" => cmd_quantize(&args),
@@ -393,7 +414,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> \
                  [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
-                 [--artifact NAME] [--threads N] [--allow-random] ..."
+                 [--artifact NAME] [--threads N] [--kernel auto|scalar|lanes] \
+                 [--allow-random] ..."
             );
             std::process::exit(2);
         }

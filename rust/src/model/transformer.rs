@@ -11,7 +11,7 @@
 
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightStore;
-use crate::quant::QuantizedMatrix;
+use crate::quant::{KernelKind, QuantizedMatrix};
 use crate::util::matrix::{gemv, gemv_multi_pool, gemv_pool, Matrix};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ExecPool;
@@ -414,6 +414,29 @@ impl Transformer {
     pub fn ensure_caches(&mut self) {
         for (_, lin) in self.linears_mut() {
             lin.ensure_cache();
+        }
+    }
+
+    /// Decode-kernel family of the quantized layers (`None` when the model is
+    /// fully dense). All layers share one selection, so the first quantized
+    /// linear is representative; `ServerStats::kernel` reports this.
+    pub fn decode_kernel(&self) -> Option<KernelKind> {
+        self.linears().iter().find_map(|(_, lin)| match lin {
+            Linear::Quantized { qm, .. } => Some(qm.kernel),
+            Linear::Dense(_) => None,
+        })
+    }
+
+    /// Pin every quantized layer onto `kernel` (`Auto` resolves to the
+    /// default family). Outputs are bit-identical across families, so this
+    /// only changes *how* the hot path decodes — serving tests use it to pin
+    /// scalar vs lane kernels on the same loaded artifact.
+    pub fn set_decode_kernel(&mut self, kernel: KernelKind) {
+        let k = kernel.resolve();
+        for (_, lin) in self.linears_mut() {
+            if let Linear::Quantized { qm, .. } = lin {
+                qm.kernel = k;
+            }
         }
     }
 

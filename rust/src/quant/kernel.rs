@@ -1,0 +1,183 @@
+//! Runtime decode-kernel selection for the fused trellis-decode matvecs.
+//!
+//! Two kernel families implement the hot path (`QuantizedMatrix::matvec_tilde`
+//! and friends):
+//!
+//! * **`Scalar`** — the reference implementation: one rolling-window bit
+//!   extraction, one scalar code evaluation, one scalar FMA per weight
+//!   (§Perf optimization #1, see `EXPERIMENTS.md`).
+//! * **`Lanes`** — the lane-blocked implementation (§Perf optimization #2):
+//!   [`LANES`] output rows advance in lockstep, states are gathered into a
+//!   `[u32; LANES]` block and decoded by lane-array code evaluators that LLVM
+//!   auto-vectorizes. Bit-identical to `Scalar` by construction — lanes are
+//!   distinct output rows, so no row's float accumulation order changes.
+//!
+//! The kernel is chosen **per matrix at quantize/load time** and stored on the
+//! [`QuantizedMatrix`](crate::quant::QuantizedMatrix); precedence is
+//! `--kernel` CLI flag ([`set_process_kernel`]) > `QTIP_KERNEL` env var >
+//! `Auto` (which resolves to `Lanes`). `qtip info` prints the selection.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Output rows decoded in lockstep by the lane-blocked kernels. Eight f32
+/// lanes = one AVX2 register (two SSE2 registers on the baseline target);
+/// shapes whose row count is not a multiple of `LANES` fall back to a padded
+/// remainder block, so any tile geometry is supported.
+pub const LANES: usize = 8;
+
+/// Which decode-matvec kernel family a [`QuantizedMatrix`] dispatches to.
+///
+/// [`QuantizedMatrix`]: crate::quant::QuantizedMatrix
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Defer to the build's default (currently [`KernelKind::Lanes`]).
+    Auto,
+    /// Scalar reference kernels (one weight at a time).
+    Scalar,
+    /// Lane-blocked kernels ([`LANES`] rows in lockstep).
+    Lanes,
+}
+
+impl KernelKind {
+    /// Parse a CLI/env spelling: `auto` | `scalar` | `lanes`.
+    pub fn parse(s: &str) -> Result<KernelKind, String> {
+        match s.trim() {
+            "auto" => Ok(KernelKind::Auto),
+            "scalar" => Ok(KernelKind::Scalar),
+            "lanes" => Ok(KernelKind::Lanes),
+            other => Err(format!(
+                "unknown kernel '{other}' (expected auto | scalar | lanes)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Lanes => "lanes",
+        }
+    }
+
+    /// Resolve `Auto` to the concrete kernel the hot path will run. Both
+    /// families are bit-identical, so `Auto` simply picks the fast one.
+    pub fn resolve(self) -> KernelKind {
+        match self {
+            KernelKind::Auto => KernelKind::Lanes,
+            k => k,
+        }
+    }
+}
+
+/// Process-wide CLI override: 0 = unset, else the 1-based [`encode`] of the
+/// kind — `decode(encode(k)) == Some(k)` by construction (roundtrip-tested).
+static PROCESS_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(k: KernelKind) -> u8 {
+    match k {
+        KernelKind::Auto => 1,
+        KernelKind::Scalar => 2,
+        KernelKind::Lanes => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<KernelKind> {
+    match v {
+        1 => Some(KernelKind::Auto),
+        2 => Some(KernelKind::Scalar),
+        3 => Some(KernelKind::Lanes),
+        _ => None,
+    }
+}
+
+/// Install the `--kernel` CLI override for this process (highest precedence).
+pub fn set_process_kernel(k: KernelKind) {
+    PROCESS_OVERRIDE.store(encode(k), Ordering::Relaxed);
+}
+
+/// The active `--kernel` CLI override, if any.
+pub fn process_kernel() -> Option<KernelKind> {
+    decode(PROCESS_OVERRIDE.load(Ordering::Relaxed))
+}
+
+/// Pure precedence rule: CLI override > env var > `Auto`. An unparsable env
+/// value is ignored (falls through to `Auto`) rather than aborting a serve.
+pub fn select(cli: Option<KernelKind>, env: Option<&str>) -> KernelKind {
+    if let Some(k) = cli {
+        return k;
+    }
+    if let Some(k) = env.and_then(|v| KernelKind::parse(v).ok()) {
+        return k;
+    }
+    KernelKind::Auto
+}
+
+/// The process-wide kernel selection (`--kernel` > `QTIP_KERNEL` > `Auto`).
+pub fn selected() -> KernelKind {
+    select(process_kernel(), std::env::var("QTIP_KERNEL").ok().as_deref())
+}
+
+/// [`selected`], resolved to the concrete kernel stored on new matrices.
+pub fn selected_resolved() -> KernelKind {
+    selected().resolve()
+}
+
+/// Tile rows per parallel band so every band (except a short tail) covers
+/// whole lane blocks: the smallest tile-row count whose row total reaches
+/// [`LANES`]. The tile-parallel pool paths stripe bands of
+/// `lane_band_tiles(tx) * tx` rows instead of single tile rows.
+pub fn lane_band_tiles(tx: usize) -> usize {
+    LANES.div_ceil(tx.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [KernelKind::Auto, KernelKind::Scalar, KernelKind::Lanes] {
+            assert_eq!(KernelKind::parse(k.name()), Ok(k));
+        }
+        assert!(KernelKind::parse("simd").is_err());
+        assert_eq!(KernelKind::parse(" lanes "), Ok(KernelKind::Lanes));
+    }
+
+    #[test]
+    fn precedence_cli_over_env_over_auto() {
+        assert_eq!(
+            select(Some(KernelKind::Scalar), Some("lanes")),
+            KernelKind::Scalar
+        );
+        assert_eq!(select(None, Some("scalar")), KernelKind::Scalar);
+        assert_eq!(select(None, Some("garbage")), KernelKind::Auto);
+        assert_eq!(select(None, None), KernelKind::Auto);
+    }
+
+    #[test]
+    fn override_encoding_roundtrips() {
+        for k in [KernelKind::Auto, KernelKind::Scalar, KernelKind::Lanes] {
+            assert_eq!(decode(encode(k)), Some(k));
+        }
+        assert_eq!(decode(0), None, "0 must stay reserved for 'unset'");
+    }
+
+    #[test]
+    fn auto_resolves_to_lanes() {
+        assert_eq!(KernelKind::Auto.resolve(), KernelKind::Lanes);
+        assert_eq!(KernelKind::Scalar.resolve(), KernelKind::Scalar);
+        assert_eq!(KernelKind::Lanes.resolve(), KernelKind::Lanes);
+    }
+
+    #[test]
+    fn band_tiles_cover_a_lane_block() {
+        assert_eq!(lane_band_tiles(16), 1);
+        assert_eq!(lane_band_tiles(8), 1);
+        assert_eq!(lane_band_tiles(4), 2);
+        assert_eq!(lane_band_tiles(3), 3);
+        assert_eq!(lane_band_tiles(1), 8);
+        for tx in 1..=32 {
+            assert!(lane_band_tiles(tx) * tx >= LANES);
+        }
+    }
+}

@@ -9,10 +9,12 @@
 //! experimental control.
 
 pub mod incoherence;
+pub mod kernel;
 pub mod ldlq;
 pub mod proxy;
 
 pub use incoherence::RhtContext;
+pub use kernel::{KernelKind, LANES};
 pub use ldlq::{block_ldlq, BlockRounder, ScalarRounder};
 
 use crate::baselines::{E8Rvq, LloydMax};
@@ -187,6 +189,11 @@ pub struct QuantizedMatrix {
     /// `(rows/tx) × (cols/ty)` tiles, row-major, `tile_words` u32 each.
     pub packed: Vec<u32>,
     pub metrics: QuantMetrics,
+    /// Decode-kernel family the matvec hot path dispatches to (resolved —
+    /// never `Auto`). Chosen per matrix at quantize/load time from
+    /// `--kernel` > `QTIP_KERNEL` > auto; both families are bit-identical,
+    /// so flipping it never changes outputs (`tests/kernel_parity.rs`).
+    pub kernel: KernelKind,
 }
 
 /// Shared per-`CodeSpec` kernel dispatch: monomorphizes the given v1 (scalar)
@@ -240,6 +247,77 @@ macro_rules! dispatch_code {
     };
 }
 
+/// Lane-blocked counterpart of [`dispatch_code!`]: monomorphizes the given
+/// lane v1/v2 kernel with a `[u32; LANES] -> [f32; LANES]` (or paired) code
+/// evaluator — `onemad::decode_lanes`, `threeinst::decode_lanes`, the
+/// `hybrid::hash_lanes` + LUT gather, or plain LUT gathers. Every lane runs
+/// the exact scalar op sequence of the matching [`dispatch_code!`] arm, which
+/// is what makes the lane kernels bit-identical to the scalar reference.
+macro_rules! dispatch_code_lanes {
+    ($self:ident, $v1:ident, $v2:ident, $($arg:expr),+) => {
+        match &$self.code {
+            CodeSpec::OneMad => $self.$v1($($arg),+, onemad::decode_lanes::<LANES>),
+            CodeSpec::ThreeInst => $self.$v1($($arg),+, threeinst::decode_lanes::<LANES>),
+            CodeSpec::Hyb { q, v, lut } => {
+                let q = *q;
+                if *v as usize == 1 {
+                    $self.$v1($($arg),+, move |s: [u32; LANES]| {
+                        let h = hybrid::hash_lanes(s);
+                        let mut out = [0.0f32; LANES];
+                        for (o, &x) in out.iter_mut().zip(h.iter()) {
+                            let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                            let val = lut[idx];
+                            *o = if x & (1 << 15) != 0 { -val } else { val };
+                        }
+                        out
+                    })
+                } else {
+                    $self.$v2($($arg),+, move |s: [u32; LANES]| {
+                        let h = hybrid::hash_lanes(s);
+                        let mut a = [0.0f32; LANES];
+                        let mut b = [0.0f32; LANES];
+                        for ((av, bv), &x) in
+                            a.iter_mut().zip(b.iter_mut()).zip(h.iter())
+                        {
+                            let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                            *av = lut[idx * 2];
+                            let mut second = lut[idx * 2 + 1];
+                            if x & (1 << 15) != 0 {
+                                second = -second;
+                            }
+                            *bv = second;
+                        }
+                        (a, b)
+                    })
+                }
+            }
+            CodeSpec::Lut { v, table } => {
+                if *v as usize == 1 {
+                    $self.$v1($($arg),+, move |s: [u32; LANES]| {
+                        let mut out = [0.0f32; LANES];
+                        for (o, &st) in out.iter_mut().zip(s.iter()) {
+                            *o = table[st as usize];
+                        }
+                        out
+                    })
+                } else {
+                    $self.$v2($($arg),+, move |s: [u32; LANES]| {
+                        let mut a = [0.0f32; LANES];
+                        let mut b = [0.0f32; LANES];
+                        for ((av, bv), &st) in
+                            a.iter_mut().zip(b.iter_mut()).zip(s.iter())
+                        {
+                            *av = table[st as usize * 2];
+                            *bv = table[st as usize * 2 + 1];
+                        }
+                        (a, b)
+                    })
+                }
+            }
+        }
+    };
+}
+
 /// Raw write handle for the batch accumulator (`B × rows`, row-major): the
 /// tile-parallel multi kernels write disjoint column ranges of `y` (band
 /// `[bi0, bi1)` owns rows `[bi0·tx, bi1·tx)` of Ŵ, i.e. columns of `y`),
@@ -275,6 +353,13 @@ impl YCells {
 /// once per chunk but never changes any per-(sequence, row) accumulation
 /// order — outputs stay bit-identical at every batch size.
 const BCHUNK: usize = 16;
+
+thread_local! {
+    /// Per-thread RHT'd-activation scratch behind the convenience
+    /// [`QuantizedMatrix::matvec`] wrapper: reused across calls so the
+    /// non-pool entry point performs no per-call activation allocation.
+    static MATVEC_XT: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
 
 impl QuantizedMatrix {
     #[inline]
@@ -342,13 +427,18 @@ impl QuantizedMatrix {
     }
 
     /// Full quantized matvec: y = Ŵ x including the RHT sandwich.
+    ///
+    /// Convenience wrapper over the scratch-based [`Self::matvec_into`] path
+    /// (width-1 shared pool, per-thread activation scratch), so the non-pool
+    /// entry point no longer pays a per-call `x.to_vec()` — there is exactly
+    /// one RHT-sandwich implementation, and this one allocates only the
+    /// returned `y`.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
-        let mut xt = x.to_vec();
-        self.rht.forward_activations(&mut xt);
         let mut y = vec![0.0f32; self.rows];
-        self.matvec_tilde(&xt, &mut y);
-        self.rht.restore_outputs(&mut y);
+        MATVEC_XT.with(|xt| {
+            self.matvec_into(x, &mut y, &mut xt.borrow_mut(), ExecPool::shared_sequential());
+        });
         y
     }
 
@@ -363,23 +453,45 @@ impl QuantizedMatrix {
     }
 
     /// Tile-parallel `matvec_tilde`: disjoint row-tile bands of `y` are striped
-    /// across the pool's workers. Within each output row the accumulation order
+    /// across the pool's workers, with bands sized to whole lane blocks
+    /// ([`kernel::lane_band_tiles`]) so the lane-blocked kernels never split a
+    /// block across workers. Within each output row the accumulation order
     /// over column tiles is unchanged (the band kernel *is* the sequential
     /// kernel), so the result is bit-identical to [`Self::matvec_tilde`] at any
     /// worker count.
     pub fn matvec_tilde_pool(&self, xt: &[f32], y: &mut [f32], pool: &ExecPool) {
         assert_eq!(xt.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        if pool.width() <= 1 || self.tiles_r() <= 1 {
-            return self.tilde_band(0, self.tiles_r(), xt, y);
+        let tiles_r = self.tiles_r();
+        let band_tiles = kernel::lane_band_tiles(self.tx);
+        if pool.width() <= 1 || tiles_r <= band_tiles {
+            return self.tilde_band(0, tiles_r, xt, y);
         }
-        pool.run_chunks(y, self.tx, |bi, band| self.tilde_band(bi, bi + 1, xt, band));
+        pool.run_chunks(y, self.tx * band_tiles, |i, band| {
+            let bi0 = i * band_tiles;
+            self.tilde_band(bi0, (bi0 + band_tiles).min(tiles_r), xt, band)
+        });
     }
 
     /// Single-column kernel over tile-row band `[bi0, bi1)`; `y` holds exactly
-    /// the output rows `[bi0·tx, bi1·tx)`.
+    /// the output rows `[bi0·tx, bi1·tx)`. Dispatches on [`Self::kernel`]:
+    /// the scalar reference family or the lane-blocked family — bit-identical
+    /// by construction.
     fn tilde_band(&self, bi0: usize, bi1: usize, xt: &[f32], y: &mut [f32]) {
-        dispatch_code!(self, matvec_tilde_v1, matvec_tilde_v2, bi0, bi1, xt, y)
+        match self.kernel {
+            KernelKind::Scalar => {
+                dispatch_code!(self, matvec_tilde_v1, matvec_tilde_v2, bi0, bi1, xt, y)
+            }
+            _ => dispatch_code_lanes!(
+                self,
+                matvec_tilde_lanes_v1,
+                matvec_tilde_lanes_v2,
+                bi0,
+                bi1,
+                xt,
+                y
+            ),
+        }
     }
 
     #[inline]
@@ -515,10 +627,12 @@ impl QuantizedMatrix {
     }
 
     /// Tile-parallel batch-fused decode: row-tile bands of the accumulator are
-    /// striped across `pool`, the transposed activations are staged in the
-    /// caller's `xcol` scratch (replacing the per-call `transpose()`
-    /// allocation). Bit-identical to [`Self::matvec_tilde_multi`] at any
-    /// worker count — the band kernel is the sequential kernel.
+    /// striped across `pool` in whole-lane-block bands
+    /// ([`kernel::lane_band_tiles`], via [`ExecPool::run_bands`]), the
+    /// transposed activations are staged in the caller's `xcol` scratch
+    /// (replacing the per-call `transpose()` allocation). Bit-identical to
+    /// [`Self::matvec_tilde_multi`] at any worker count — the band kernel is
+    /// the sequential kernel.
     pub fn matvec_tilde_multi_pool(
         &self,
         xt: &Matrix,
@@ -533,17 +647,42 @@ impl QuantizedMatrix {
         let cells = YCells::of(y);
         let b = xt.rows;
         let tiles_r = self.tiles_r();
-        if pool.width() <= 1 || tiles_r <= 1 {
+        let band_tiles = kernel::lane_band_tiles(self.tx);
+        if pool.width() <= 1 || tiles_r <= band_tiles {
             return self.multi_band(0, tiles_r, xcol, b, cells);
         }
         let xcol: &[f32] = xcol;
-        pool.run(tiles_r, |bi| self.multi_band(bi, bi + 1, xcol, b, cells));
+        pool.run_bands(tiles_r, band_tiles, |bi0, bi1| {
+            self.multi_band(bi0, bi1, xcol, b, cells)
+        });
     }
 
     /// Batch kernel over tile-row band `[bi0, bi1)` — owns output rows
-    /// `[bi0·tx, bi1·tx)` of every batch column of `y`.
+    /// `[bi0·tx, bi1·tx)` of every batch column of `y`. Dispatches on
+    /// [`Self::kernel`] like [`Self::tilde_band`].
     fn multi_band(&self, bi0: usize, bi1: usize, xcol: &[f32], nb: usize, y: YCells) {
-        dispatch_code!(self, matvec_tilde_multi_v1, matvec_tilde_multi_v2, bi0, bi1, xcol, nb, y)
+        match self.kernel {
+            KernelKind::Scalar => dispatch_code!(
+                self,
+                matvec_tilde_multi_v1,
+                matvec_tilde_multi_v2,
+                bi0,
+                bi1,
+                xcol,
+                nb,
+                y
+            ),
+            _ => dispatch_code_lanes!(
+                self,
+                matvec_tilde_multi_lanes_v1,
+                matvec_tilde_multi_lanes_v2,
+                bi0,
+                bi1,
+                xcol,
+                nb,
+                y
+            ),
+        }
     }
 
     #[inline]
@@ -692,6 +831,247 @@ impl QuantizedMatrix {
             }
         }
     }
+
+    /// Per-lane packed-stream slices and base bit cursors for the lane block
+    /// starting at band-local row `r0` (`block` live rows; lanes past the
+    /// block repeat its last row so remainder blocks run the same lockstep
+    /// code — their outputs are simply discarded). `row_bits` is the stream
+    /// distance between consecutive tile rows (`ty·k` bits for every V).
+    #[inline]
+    fn lane_cursors(
+        &self,
+        bi0: usize,
+        bj: usize,
+        r0: usize,
+        block: usize,
+        row_bits: usize,
+    ) -> ([&[u32]; LANES], [usize; LANES]) {
+        let mut words: [&[u32]; LANES] = [&[]; LANES];
+        let mut base = [0usize; LANES];
+        for (j, (w, b)) in words.iter_mut().zip(base.iter_mut()).enumerate() {
+            let row = r0 + j.min(block - 1);
+            let off = self.tile_offset(bi0 + row / self.tx, bj);
+            *w = &self.packed[off..off + self.tile_words];
+            *b = (row % self.tx) * row_bits;
+        }
+        (words, base)
+    }
+
+    /// Lane-blocked single-column kernel over tile-row band `[bi0, bi1)`
+    /// (§Perf optimization #2 — see EXPERIMENTS.md): [`LANES`] output rows
+    /// advance in lockstep, each lane walking its own packed stream slice
+    /// with its own bit cursor (cursors advance by `k` per weight for every
+    /// lane, so they stay in lockstep by construction). The per-step
+    /// `[u32; LANES]` state block is decoded by a lane-array evaluator that
+    /// LLVM auto-vectorizes, and the per-lane FMAs against the shared `x`
+    /// value vectorize with it. Each lane is a distinct output row, so every
+    /// row's float accumulation order is exactly [`Self::matvec_tilde_v1`]'s
+    /// — outputs are bit-identical to the scalar reference kernel.
+    #[inline]
+    fn matvec_tilde_lanes_v1<F: Fn([u32; LANES]) -> [f32; LANES]>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xt: &[f32],
+        y: &mut [f32],
+        decode: F,
+    ) {
+        let k = self.trellis.k as usize;
+        let l = self.trellis.l;
+        let (tx, ty) = (self.tx, self.ty);
+        let nrows = (bi1 - bi0) * tx;
+        for bj in 0..self.tiles_c() {
+            let xs = &xt[bj * ty..(bj + 1) * ty];
+            let mut r0 = 0usize;
+            while r0 < nrows {
+                let block = LANES.min(nrows - r0);
+                let (words, base) = self.lane_cursors(bi0, bj, r0, block, ty * k);
+                let mut acc = [0.0f32; LANES];
+                for (c, &xv) in xs.iter().enumerate() {
+                    let bit = c * k;
+                    let mut states = [0u32; LANES];
+                    for (s, (w, b)) in states.iter_mut().zip(words.iter().zip(base.iter())) {
+                        *s = decode_window(w, b + bit, l);
+                    }
+                    let wv = decode(states);
+                    for (a, &v) in acc.iter_mut().zip(wv.iter()) {
+                        *a += v * xv;
+                    }
+                }
+                for (yr, &a) in y[r0..r0 + block].iter_mut().zip(acc.iter()) {
+                    *yr += a * self.scale;
+                }
+                r0 += block;
+            }
+        }
+    }
+
+    /// Lane-blocked pair-decode kernel (V=2 codes): like
+    /// [`Self::matvec_tilde_lanes_v1`], but each lockstep step decodes one
+    /// state per lane into a weight *pair* applied to two `x` values — the
+    /// exact op sequence of [`Self::matvec_tilde_v2`] per lane.
+    #[inline]
+    fn matvec_tilde_lanes_v2<F: Fn([u32; LANES]) -> ([f32; LANES], [f32; LANES])>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xt: &[f32],
+        y: &mut [f32],
+        decode: F,
+    ) {
+        let kv = (self.trellis.k * 2) as usize;
+        let l = self.trellis.l;
+        let (tx, ty) = (self.tx, self.ty);
+        debug_assert_eq!(ty % 2, 0);
+        let nrows = (bi1 - bi0) * tx;
+        let row_bits = (ty / 2) * kv;
+        for bj in 0..self.tiles_c() {
+            let xs = &xt[bj * ty..(bj + 1) * ty];
+            let mut r0 = 0usize;
+            while r0 < nrows {
+                let block = LANES.min(nrows - r0);
+                let (words, base) = self.lane_cursors(bi0, bj, r0, block, row_bits);
+                let mut acc = [0.0f32; LANES];
+                for c in (0..ty).step_by(2) {
+                    let bit = (c / 2) * kv;
+                    let mut states = [0u32; LANES];
+                    for (s, (w, b)) in states.iter_mut().zip(words.iter().zip(base.iter())) {
+                        *s = decode_window(w, b + bit, l);
+                    }
+                    let (wa, wb) = decode(states);
+                    let (xa, xb) = (xs[c], xs[c + 1]);
+                    for ((a, &va), &vb) in acc.iter_mut().zip(wa.iter()).zip(wb.iter()) {
+                        *a += va * xa + vb * xb;
+                    }
+                }
+                for (yr, &a) in y[r0..r0 + block].iter_mut().zip(acc.iter()) {
+                    *yr += a * self.scale;
+                }
+                r0 += block;
+            }
+        }
+    }
+
+    /// Lane-blocked batch kernel: [`LANES`] rows in lockstep *and* the
+    /// [`BCHUNK`]-wide batch inner loop of [`Self::matvec_tilde_multi_v1`] —
+    /// each decoded `[f32; LANES]` weight block feeds `LANES × bc` stack
+    /// accumulators, so both the lane FMAs and the unit-stride batch FMAs
+    /// auto-vectorize. Per-(sequence, row) accumulation order matches the
+    /// scalar batch kernel exactly.
+    #[inline]
+    fn matvec_tilde_multi_lanes_v1<F: Fn([u32; LANES]) -> [f32; LANES]>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xcol: &[f32],
+        nb: usize,
+        y: YCells,
+        decode: F,
+    ) {
+        let k = self.trellis.k as usize;
+        let l = self.trellis.l;
+        let (tx, ty) = (self.tx, self.ty);
+        let nrows = (bi1 - bi0) * tx;
+        for b0 in (0..nb).step_by(BCHUNK) {
+            let bc = (nb - b0).min(BCHUNK);
+            let mut acc = [[0.0f32; BCHUNK]; LANES];
+            for bj in 0..self.tiles_c() {
+                let x0 = bj * ty;
+                let mut r0 = 0usize;
+                while r0 < nrows {
+                    let block = LANES.min(nrows - r0);
+                    let (words, base) = self.lane_cursors(bi0, bj, r0, block, ty * k);
+                    for a in acc.iter_mut() {
+                        a[..bc].fill(0.0);
+                    }
+                    for c in 0..ty {
+                        let bit = c * k;
+                        let mut states = [0u32; LANES];
+                        for (s, (w, b)) in states.iter_mut().zip(words.iter().zip(base.iter())) {
+                            *s = decode_window(w, b + bit, l);
+                        }
+                        let wv = decode(states);
+                        let xb = (x0 + c) * nb + b0;
+                        let xs = &xcol[xb..xb + bc];
+                        for (a, &w) in acc.iter_mut().zip(wv.iter()) {
+                            for (av, &xv) in a[..bc].iter_mut().zip(xs) {
+                                *av += w * xv;
+                            }
+                        }
+                    }
+                    for (j, a) in acc.iter().enumerate().take(block) {
+                        let row = bi0 * tx + r0 + j;
+                        for (bb, &v) in a[..bc].iter().enumerate() {
+                            // SAFETY: this band owns rows [bi0*tx, bi1*tx).
+                            unsafe { y.add(b0 + bb, row, v * self.scale) };
+                        }
+                    }
+                    r0 += block;
+                }
+            }
+        }
+    }
+
+    /// Lane-blocked batch pair-decode kernel (V=2 codes): the
+    /// [`Self::matvec_tilde_multi_v2`] op sequence per lane, lane-blocked
+    /// over rows and [`BCHUNK`]-vectorized over batch columns.
+    #[inline]
+    fn matvec_tilde_multi_lanes_v2<F: Fn([u32; LANES]) -> ([f32; LANES], [f32; LANES])>(
+        &self,
+        bi0: usize,
+        bi1: usize,
+        xcol: &[f32],
+        nb: usize,
+        y: YCells,
+        decode: F,
+    ) {
+        let kv = (self.trellis.k * 2) as usize;
+        let l = self.trellis.l;
+        let (tx, ty) = (self.tx, self.ty);
+        debug_assert_eq!(ty % 2, 0);
+        let nrows = (bi1 - bi0) * tx;
+        let row_bits = (ty / 2) * kv;
+        for b0 in (0..nb).step_by(BCHUNK) {
+            let bc = (nb - b0).min(BCHUNK);
+            let mut acc = [[0.0f32; BCHUNK]; LANES];
+            for bj in 0..self.tiles_c() {
+                let x0 = bj * ty;
+                let mut r0 = 0usize;
+                while r0 < nrows {
+                    let block = LANES.min(nrows - r0);
+                    let (words, base) = self.lane_cursors(bi0, bj, r0, block, row_bits);
+                    for a in acc.iter_mut() {
+                        a[..bc].fill(0.0);
+                    }
+                    for c in (0..ty).step_by(2) {
+                        let bit = (c / 2) * kv;
+                        let mut states = [0u32; LANES];
+                        for (s, (w, b)) in states.iter_mut().zip(words.iter().zip(base.iter())) {
+                            *s = decode_window(w, b + bit, l);
+                        }
+                        let (wa, wb) = decode(states);
+                        let xa0 = (x0 + c) * nb + b0;
+                        let xb0 = (x0 + c + 1) * nb + b0;
+                        let xa = &xcol[xa0..xa0 + bc];
+                        let xb = &xcol[xb0..xb0 + bc];
+                        for ((a, &va), &vb) in acc.iter_mut().zip(wa.iter()).zip(wb.iter()) {
+                            for ((av, &x1), &x2) in a[..bc].iter_mut().zip(xa).zip(xb) {
+                                *av += va * x1 + vb * x2;
+                            }
+                        }
+                    }
+                    for (j, a) in acc.iter().enumerate().take(block) {
+                        let row = bi0 * tx + r0 + j;
+                        for (bb, &v) in a[..bc].iter().enumerate() {
+                            // SAFETY: this band owns rows [bi0*tx, bi1*tx).
+                            unsafe { y.add(b0 + bb, row, v * self.scale) };
+                        }
+                    }
+                    r0 += block;
+                }
+            }
+        }
+    }
 }
 
 impl QuantizedMatrix {
@@ -744,6 +1124,7 @@ impl QuantizedMatrix {
             tile_words,
             packed,
             metrics: QuantMetrics::default(),
+            kernel: kernel::selected_resolved(),
         }
     }
 }
@@ -892,6 +1273,7 @@ pub fn quantize_matrix_qtip(w: &Matrix, h: &Matrix, cfg: &QtipConfig) -> Quantiz
         tile_words,
         packed: rounder.packed,
         metrics,
+        kernel: kernel::selected_resolved(),
     };
     QuantizeResult { qm, w_hat_tilde: w_hat_n, metrics }
 }
@@ -1202,6 +1584,25 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn lane_kernels_match_scalar_smoke() {
+        // Full lane-boundary coverage lives in tests/kernel_parity.rs; this
+        // pins the in-module dispatch: flipping `kernel` never changes bits.
+        for code in [CodeSpec::OneMad, CodeSpec::ThreeInst] {
+            let mut qm =
+                QuantizedMatrix::synthetic(32, 32, Trellis::new(16, 2, 1), code, 16, 16, 77);
+            let mut rng = Rng::new(78);
+            let x = rng.gauss_vec(32);
+            qm.kernel = KernelKind::Scalar;
+            let mut ys = vec![0.0f32; 32];
+            qm.matvec_tilde(&x, &mut ys);
+            qm.kernel = KernelKind::Lanes;
+            let mut yl = vec![0.0f32; 32];
+            qm.matvec_tilde(&x, &mut yl);
+            assert_eq!(ys, yl, "{} lane kernel diverged", qm.code.name());
         }
     }
 

@@ -79,13 +79,26 @@ pub fn unpack_states(trellis: &Trellis, words: &[u32], steps: usize) -> Vec<u32>
     states
 }
 
-/// Append the first `L−kV` bits after the end of the stream and pad with one extra
-/// word, so every window read is a single unaligned 64-bit load (`decode_window`).
+/// Append the first `L−kV` bits after the end of the stream, then one explicit
+/// all-zero **guard word**, so every window read is a single unaligned 64-bit
+/// load (`decode_window`).
+///
+/// Guard-word invariant (the decode kernels' bounds contract): the padded
+/// stream holds `padded_bits = steps·kV + (L−kV)` content bits in its first
+/// `ceil(padded_bits/32)` words, plus one zero guard word. The last window any
+/// kernel reads starts at bit `(steps−1)·kV` and ends exactly at
+/// `padded_bits`, so its high-word index satisfies
+/// `w + 1 ≤ ceil(padded_bits/32) = len − 1` — every unconditional
+/// `words[w + 1]` load in `decode_window`, the rolling-window v1 kernels, and
+/// the lane-blocked kernels is therefore in-bounds at every valid offset.
+/// `tests::guard_word_covers_end_of_stream_reads` pins this at the exact
+/// end-of-stream offsets.
 pub fn pad_for_decode(trellis: &Trellis, words: &[u32], steps: usize) -> Vec<u32> {
     let kv = trellis.step_bits() as usize;
     let l = trellis.l as usize;
     let total_bits = steps * kv;
     let padded_bits = total_bits + (l - kv);
+    // Content words + one explicit guard word (see the invariant above).
     let mut out = vec![0u32; padded_bits.div_ceil(32) + 1];
     out[..words.len()].copy_from_slice(words);
     for i in 0..(l - kv) {
@@ -95,14 +108,16 @@ pub fn pad_for_decode(trellis: &Trellis, words: &[u32], steps: usize) -> Vec<u32
 }
 
 /// Hot-path window extraction from a padded stream: state `t` = `decode_window(padded,
-/// t*kV, L)`. One 64-bit load, shift, mask.
+/// t*kV, L)`. One 64-bit load, shift, mask. The unconditional `padded[w + 1]`
+/// load relies on the guard word appended by [`pad_for_decode`]; callers must
+/// only pass padded streams and in-stream offsets.
 #[inline(always)]
 pub fn decode_window(padded: &[u32], bit_offset: usize, l: u32) -> u32 {
     let w = bit_offset >> 5;
     let sh = bit_offset & 31;
-    debug_assert!(w + 1 < padded.len() || (w + 1 == padded.len() && sh == 0));
+    debug_assert!(w + 1 < padded.len(), "window read past the guard word");
     let lo = padded[w] as u64;
-    let hi = *padded.get(w + 1).unwrap_or(&0) as u64;
+    let hi = padded[w + 1] as u64;
     let pair = lo | (hi << 32);
     ((pair >> sh) & ((1u64 << l) - 1)) as u32
 }
@@ -191,6 +206,35 @@ mod tests {
                 assert_eq!(w, s, "step {t}");
             }
         });
+    }
+
+    #[test]
+    fn guard_word_covers_end_of_stream_reads() {
+        // The exact offsets the hot kernels hit at the end of a padded stream:
+        // for every step — the final one at bit (steps−1)·kV in particular —
+        // the unconditional high-word load `padded[w + 1]` must be in-bounds,
+        // and the explicit guard word must exist and stay zero.
+        for (l, k, steps) in [(12u32, 2u32, 200usize), (10, 1, 97), (10, 3, 64), (16, 2, 40)] {
+            let trellis = Trellis::new(l, k, 1);
+            let states = tb_walk(&trellis, ((l as u64) << 8) | steps as u64, steps);
+            let packed = pack_states(&trellis, &states);
+            let padded = pad_for_decode(&trellis, &packed, steps);
+            let padded_bits = steps * k as usize + (l - k) as usize;
+            assert_eq!(
+                padded.len(),
+                padded_bits.div_ceil(32) + 1,
+                "L={l} k={k}: guard word missing"
+            );
+            assert_eq!(*padded.last().unwrap(), 0, "L={l} k={k}: guard word not zero");
+            for (t, &s) in states.iter().enumerate() {
+                let bit = t * k as usize;
+                assert!(
+                    (bit >> 5) + 1 < padded.len(),
+                    "L={l} k={k} step {t}: high-word load out of bounds"
+                );
+                assert_eq!(decode_window(&padded, bit, l), s, "L={l} k={k} step {t}");
+            }
+        }
     }
 
     #[test]

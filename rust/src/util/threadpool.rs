@@ -19,7 +19,7 @@
 use std::mem::{ManuallyDrop, MaybeUninit};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of workers to use: `QTIP_THREADS` env var, else available parallelism.
 pub fn default_workers() -> usize {
@@ -140,6 +140,15 @@ impl ExecPool {
         ExecPool::new(1)
     }
 
+    /// Process-wide width-1 pool (no spawned threads; jobs run inline on the
+    /// caller). Lets non-pool convenience entry points — e.g.
+    /// `QuantizedMatrix::matvec` — route through the scratch-based pool
+    /// kernels without constructing a pool per call.
+    pub fn shared_sequential() -> &'static ExecPool {
+        static SEQ: OnceLock<ExecPool> = OnceLock::new();
+        SEQ.get_or_init(ExecPool::sequential)
+    }
+
     /// Total execution width, including the submitting thread.
     pub fn width(&self) -> usize {
         self.width
@@ -213,6 +222,22 @@ impl ExecPool {
             let block =
                 unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
             f(i, block);
+        });
+    }
+
+    /// Partition `0..n_units` into consecutive bands of `per_band` units and
+    /// run `f(start, end)` for each band across the pool (the final band may
+    /// be short). Band granularity is the caller's alignment lever: the
+    /// lane-blocked decode kernels pass `quant::kernel::lane_band_tiles` so
+    /// every parallel band covers whole lane blocks.
+    pub fn run_bands<F>(&self, n_units: usize, per_band: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        assert!(per_band > 0);
+        self.run(n_units.div_ceil(per_band), |i| {
+            let start = i * per_band;
+            f(start, (start + per_band).min(n_units));
         });
     }
 
@@ -378,6 +403,37 @@ mod tests {
             idx += 1;
         }
         assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn run_bands_covers_all_units_without_overlap() {
+        let pool = ExecPool::new(4);
+        for (n, per_band) in [(13usize, 2usize), (16, 8), (7, 16), (1, 1), (0, 3)] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_bands(n, per_band, |start, end| {
+                assert!(start < end || n == 0);
+                assert!(end <= n);
+                assert_eq!(start % per_band, 0, "bands must start on a band boundary");
+                for h in &hits[start..end] {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "n={n} per_band={per_band} unit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_sequential_is_width_one() {
+        let pool = ExecPool::shared_sequential();
+        assert_eq!(pool.width(), 1);
+        assert_eq!(pool.spawned_workers(), 0);
+        let sum = AtomicUsize::new(0);
+        pool.run(9, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 36);
     }
 
     #[test]

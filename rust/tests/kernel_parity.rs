@@ -1,0 +1,236 @@
+//! Lane-kernel parity: the lane-blocked decode kernels (§Perf optimization
+//! #2) must be **bit-identical** to the scalar reference kernels for every
+//! `CodeSpec` variant, every entry point (single-column, batch-fused,
+//! pooled), and every pool width — including lane-boundary shapes where
+//! `tiles_r · tx` is not a multiple of `LANES`, which exercise the padded
+//! remainder blocks. A cold-started artifact served under `scalar` and under
+//! the default (`auto` → `lanes`) must emit identical tokens.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use qtip::coordinator::{quantize_model_qtip, GenRequest, ServerConfig, ServerHandle};
+use qtip::hessian::collect_hessians;
+use qtip::model::{ModelConfig, Transformer, WeightStore};
+use qtip::quant::{
+    kernel, quantize_matrix_qtip, CodeSpec, KernelKind, LANES, QtipConfig, QuantizedMatrix,
+};
+use qtip::trellis::Trellis;
+use qtip::util::matrix::Matrix;
+use qtip::util::rng::Rng;
+use qtip::util::threadpool::ExecPool;
+
+const WIDTHS: [usize; 3] = [1, 2, 4];
+
+/// All 4 CodeSpec variants on an L=12 trellis (both v1 and v2 decode paths).
+fn synthetic_specs() -> Vec<(&'static str, Trellis, CodeSpec)> {
+    let hyb = qtip::codes::HybridCode::train(12, 2, 9, 5);
+    let lut = qtip::codes::PureLutCode::new(12, 1, 6);
+    vec![
+        ("1mad", Trellis::new(12, 2, 1), CodeSpec::OneMad),
+        ("3inst", Trellis::new(12, 2, 1), CodeSpec::ThreeInst),
+        ("hyb", Trellis::new(12, 2, 2), CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() }),
+        ("lut", Trellis::new(12, 2, 1), CodeSpec::Lut { v: 1, table: lut.table.clone() }),
+    ]
+}
+
+fn batch(rng: &mut Rng, b: usize, cols: usize) -> Matrix {
+    let mut x = Matrix::zeros(b, cols);
+    for r in 0..b {
+        let xr = rng.gauss_vec(cols);
+        x.row_mut(r).copy_from_slice(&xr);
+    }
+    x
+}
+
+#[test]
+fn lane_kernels_bit_identical_on_lane_boundary_shapes() {
+    // tx = 4 so row counts 4, 12, 20 are all non-multiples of LANES (8):
+    // full lane blocks, a half block, and a block-and-a-half of remainder.
+    let (tx, ty, cols) = (4usize, 8usize, 32usize);
+    for rows in [4usize, 12, 20] {
+        assert_ne!(rows % LANES, 0, "shape must exercise the remainder block");
+        for (name, trellis, code) in synthetic_specs() {
+            let mut qm =
+                QuantizedMatrix::synthetic(rows, cols, trellis, code, tx, ty, rows as u64);
+            let mut rng = Rng::new(rows as u64 + 100);
+            let x = rng.gauss_vec(cols);
+
+            qm.kernel = KernelKind::Scalar;
+            let mut y_scalar = vec![0.0f32; rows];
+            qm.matvec_tilde(&x, &mut y_scalar);
+            qm.kernel = KernelKind::Lanes;
+            let mut y_lanes = vec![0.0f32; rows];
+            qm.matvec_tilde(&x, &mut y_lanes);
+            assert_eq!(y_scalar, y_lanes, "{name} rows={rows}: single-column diverged");
+
+            // Batch-fused: one chunk and wider-than-BCHUNK batches.
+            for b in [3usize, 18] {
+                let xm = batch(&mut rng, b, cols);
+                qm.kernel = KernelKind::Scalar;
+                let mut m_scalar = Matrix::zeros(b, rows);
+                qm.matvec_tilde_multi(&xm, &mut m_scalar);
+                qm.kernel = KernelKind::Lanes;
+                let mut m_lanes = Matrix::zeros(b, rows);
+                qm.matvec_tilde_multi(&xm, &mut m_lanes);
+                assert_eq!(
+                    m_scalar.data, m_lanes.data,
+                    "{name} rows={rows} b={b}: batch-fused diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_kernels_bit_identical_under_pool_striping() {
+    // Pooled entry points: lane-block-aligned bands across every width must
+    // match the sequential scalar kernel bit-for-bit, on a shape whose band
+    // count is not a multiple of the worker count.
+    let (rows, cols, tx, ty) = (20usize, 32usize, 4usize, 8usize);
+    for (name, trellis, code) in synthetic_specs() {
+        let mut qm = QuantizedMatrix::synthetic(rows, cols, trellis, code, tx, ty, 5);
+        let mut rng = Rng::new(51);
+        let x = rng.gauss_vec(cols);
+        let xm = batch(&mut rng, 5, cols);
+
+        qm.kernel = KernelKind::Scalar;
+        let mut y_ref = vec![0.0f32; rows];
+        qm.matvec_tilde(&x, &mut y_ref);
+        let mut m_ref = Matrix::zeros(5, rows);
+        qm.matvec_tilde_multi(&xm, &mut m_ref);
+
+        qm.kernel = KernelKind::Lanes;
+        for width in WIDTHS {
+            let pool = ExecPool::new(width);
+            let mut y = vec![0.0f32; rows];
+            qm.matvec_tilde_pool(&x, &mut y, &pool);
+            assert_eq!(y_ref, y, "{name} width={width}: pooled single-column diverged");
+            let mut m = Matrix::zeros(5, rows);
+            let mut xcol = Vec::new();
+            qm.matvec_tilde_multi_pool(&xm, &mut m, &mut xcol, &pool);
+            assert_eq!(m_ref.data, m.data, "{name} width={width}: pooled batch diverged");
+        }
+    }
+}
+
+#[test]
+fn quantized_rht_sandwich_is_kernel_invariant() {
+    // Through the real quantization pipeline (RHT + BlockLDLQ + packing) on a
+    // lane-boundary shape: the full `matvec` sandwich must not care which
+    // kernel family decodes.
+    let mut rng = Rng::new(61);
+    let w = Matrix::gaussian(12, 16, 0.5, &mut rng);
+    // A light SPD proxy Hessian.
+    let mut h = Matrix::zeros(16, 16);
+    let a = Matrix::gaussian(16, 32, 1.0, &mut rng);
+    for i in 0..16 {
+        for j in 0..16 {
+            let mut s = 0.0;
+            for k in 0..32 {
+                s += a.at(i, k) * a.at(j, k);
+            }
+            *h.at_mut(i, j) = s / 32.0;
+        }
+    }
+    for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1)] {
+        let cfg = QtipConfig {
+            l: 10,
+            k: 2,
+            v,
+            tx: 4,
+            ty: 8,
+            code: code.into(),
+            seed: 63,
+        };
+        let mut qm = quantize_matrix_qtip(&w, &h, &cfg).qm;
+        let x = rng.gauss_vec(16);
+        qm.kernel = KernelKind::Scalar;
+        let y_scalar = qm.matvec(&x);
+        qm.kernel = KernelKind::Lanes;
+        let y_lanes = qm.matvec(&x);
+        assert_eq!(y_scalar, y_lanes, "{code}: RHT-sandwich matvec diverged");
+    }
+}
+
+fn tiny_quantized_model() -> (Transformer, qtip::coordinator::QuantizeReport) {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 1;
+    cfg.max_seq = 64;
+    cfg.name = "tiny".into();
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 19));
+    let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 23 };
+    let report = quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    (model, report)
+}
+
+fn serve_tokens(model: Transformer, expect_kernel: &str) -> Vec<Vec<u16>> {
+    let server = ServerHandle::spawn(Arc::new(model), ServerConfig::default());
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            server.submit(GenRequest {
+                id: i,
+                prompt: format!("prompt {i}"),
+                max_new_tokens: 8,
+                temperature: 0.8,
+                top_k: 16,
+                seed: 300 + i,
+            })
+        })
+        .collect();
+    let out: Vec<Vec<u16>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+    let stats = server.shutdown();
+    assert_eq!(stats.kernel, expect_kernel, "ServerStats must report the pinned kernel");
+    out
+}
+
+#[test]
+fn artifact_serve_is_kernel_invariant() {
+    // The QTIP_KERNEL=scalar vs auto serving contract, exercised through the
+    // full save → cold-start-load → serve path: identical artifacts pinned to
+    // the scalar and lane families must stream identical tokens.
+    let dir: PathBuf = std::env::temp_dir()
+        .join(format!("qtip_kernel_parity_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let (model, report) = tiny_quantized_model();
+    qtip::io::save_quantized_model(&dir, "kp", &model, &report).unwrap();
+    drop(model);
+
+    let (mut scalar_model, _, _) = qtip::io::load_quantized_model(&dir, "kp").unwrap();
+    scalar_model.ensure_caches();
+    scalar_model.set_decode_kernel(KernelKind::Scalar);
+    assert_eq!(scalar_model.decode_kernel(), Some(KernelKind::Scalar));
+
+    let (mut lanes_model, _, _) = qtip::io::load_quantized_model(&dir, "kp").unwrap();
+    lanes_model.ensure_caches();
+    // `Auto` resolves to the lane family — the serving default.
+    lanes_model.set_decode_kernel(KernelKind::Auto);
+    assert_eq!(lanes_model.decode_kernel(), Some(KernelKind::Lanes));
+
+    let scalar_tokens = serve_tokens(scalar_model, "scalar");
+    let lanes_tokens = serve_tokens(lanes_model, "lanes");
+    assert_eq!(scalar_tokens, lanes_tokens, "served tokens changed with the kernel family");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn selection_and_banding_contract() {
+    // The precedence rule and lane-band alignment the CLI and pool paths rely
+    // on (unit tests in quant::kernel cover the full matrix; this pins the
+    // public API from an integration consumer's viewpoint).
+    assert_eq!(kernel::select(Some(KernelKind::Scalar), Some("lanes")), KernelKind::Scalar);
+    assert_eq!(kernel::select(None, Some("scalar")), KernelKind::Scalar);
+    assert_eq!(kernel::select(None, None), KernelKind::Auto);
+    assert_eq!(KernelKind::Auto.resolve(), KernelKind::Lanes);
+    for tx in [1usize, 4, 8, 16, 32] {
+        assert!(kernel::lane_band_tiles(tx) * tx >= LANES);
+    }
+}

@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Schema check for the perf-trajectory files (BENCH_*.json at the repo root).
+
+Usage: check_bench_json.py [--min-lanes-speedup X] BENCH_microbench.json [...]
+
+Pins the same contract as `bench::BenchJson` (rust/src/bench.rs) and its
+`bench_json_schema_roundtrips` unit test: top-level bench / schema_version /
+git_rev / config / rows, with rows of {params: {str: str}, metric: str,
+value: number}. Exits non-zero (with a pointed message) on any violation so
+CI catches schema drift before a downstream comparison tool does.
+
+With `--min-lanes-speedup X`, additionally enforces the lane-kernel
+acceptance gate on any file carrying `lanes_speedup` rows: the measured
+speedup for the pure-computed codes (1mad, 3inst) must be >= X.
+"""
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+# Codes whose lanes_speedup rows the --min-lanes-speedup gate applies to:
+# the pure-computed codes vectorize fully; HYB/LUT are gather-bound and
+# only schema-checked.
+GATED_CODES = ("1mad", "3inst")
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench_json: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_speedup_gate(path: str, doc: dict, min_speedup: float) -> None:
+    rows = [r for r in doc["rows"] if r["metric"] == "lanes_speedup"]
+    if not rows:
+        return
+    gated = 0
+    for row in rows:
+        code = row["params"].get("code", "?")
+        if code not in GATED_CODES:
+            continue
+        gated += 1
+        if row["value"] < min_speedup:
+            fail(
+                f"{path}: lanes_speedup for '{code}' is {row['value']:.2f}, "
+                f"below the {min_speedup:.2f}x acceptance gate"
+            )
+    if gated != len(GATED_CODES):
+        fail(f"{path}: expected lanes_speedup rows for {GATED_CODES}, found {gated}")
+    print(f"{path}: lanes_speedup gate ok (>= {min_speedup:.2f}x for {GATED_CODES})")
+
+
+def check(path: str) -> dict:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: unreadable or invalid JSON: {e}")
+
+    for key, typ in [
+        ("bench", str),
+        ("git_rev", str),
+        ("schema_version", (int, float)),
+        ("config", dict),
+        ("rows", list),
+    ]:
+        if key not in doc:
+            fail(f"{path}: missing top-level key '{key}'")
+        if not isinstance(doc[key], typ):
+            fail(f"{path}: '{key}' has type {type(doc[key]).__name__}")
+    if int(doc["schema_version"]) != SCHEMA_VERSION:
+        fail(f"{path}: schema_version {doc['schema_version']} != {SCHEMA_VERSION}")
+    if not doc["rows"]:
+        fail(f"{path}: no measurement rows")
+    for i, row in enumerate(doc["rows"]):
+        if not isinstance(row, dict):
+            fail(f"{path} row {i}: not an object")
+        params = row.get("params")
+        if not isinstance(params, dict) or not all(
+            isinstance(k, str) and isinstance(v, str) for k, v in params.items()
+        ):
+            fail(f"{path} row {i}: params must be a string->string object")
+        if not isinstance(row.get("metric"), str) or not row["metric"]:
+            fail(f"{path} row {i}: metric must be a non-empty string")
+        if not isinstance(row.get("value"), (int, float)) or isinstance(row["value"], bool):
+            fail(f"{path} row {i}: value must be a number")
+    print(
+        f"{path}: ok — bench '{doc['bench']}', rev {doc['git_rev']}, "
+        f"{len(doc['rows'])} rows"
+    )
+    return doc
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    min_speedup = None
+    if args and args[0] == "--min-lanes-speedup":
+        if len(args) < 2:
+            fail("--min-lanes-speedup needs a value")
+        min_speedup = float(args[1])
+        args = args[2:]
+    if not args:
+        fail("usage: check_bench_json.py [--min-lanes-speedup X] BENCH_<name>.json [...]")
+    for p in args:
+        document = check(p)
+        if min_speedup is not None:
+            check_speedup_gate(p, document, min_speedup)
