@@ -1,0 +1,149 @@
+//! **Serving-scaling benchmark**: static (sequence-granular) round batching
+//! vs the paged continuous batcher, under the *same* KV byte budget, on a
+//! Zipf-ish mixed-length workload (a few long prompts, a long tail of short
+//! ones — the shape real traffic has).
+//!
+//! Shape to hold: the paged scheduler admits strictly more concurrent
+//! sequences (its admission unit is a block, not a full `max_seq` cache), so
+//! aggregate tok/s rises with the extra fused-batch width while per-request
+//! outputs stay bit-identical. The second table sweeps the arena geometry
+//! (`--kv-block`): smaller blocks waste less tail capacity but pay more
+//! block-table bookkeeping.
+//!
+//! Emits `BENCH_serving.json` (schema v1) with `tok_per_sec`,
+//! `peak_concurrency`, and `evictions` rows per scheduler for the perf
+//! trajectory; `scripts/check_bench_json.py --require-paging-gain` enforces
+//! the strictly-more-concurrency acceptance gate in CI.
+
+use std::sync::Arc;
+
+use qtip::bench::{f2, samples, BenchJson, Table};
+use qtip::coordinator::{
+    quantize_model_qtip, GenRequest, ServerConfig, ServerHandle, ServerStats,
+};
+use qtip::hessian::collect_hessians;
+use qtip::model::{KvCache, KvLayout, ModelConfig, Transformer, WeightStore};
+use qtip::quant::QtipConfig;
+use qtip::util::threadpool::ExecPool;
+use qtip::util::Timer;
+
+fn bench_model() -> Arc<Transformer> {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 256;
+    cfg.n_layers = 2;
+    cfg.max_seq = 128;
+    cfg.name = "serving-bench".into();
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 0xBEEF));
+    let seqs = vec![(0..96u16).collect::<Vec<_>>(), (50..146u16).collect::<Vec<_>>()];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 7 };
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    Arc::new(model)
+}
+
+/// Zipf-ish mixed-length workload: request r of rank k (cycling 1..=8) gets a
+/// prompt of ~`60/k` tokens and a generation budget of ~`48/k` tokens — a few
+/// heavy requests, a long tail of light ones.
+fn workload(n: usize) -> Vec<GenRequest> {
+    (0..n)
+        .map(|i| {
+            let rank = (i % 8) + 1;
+            GenRequest {
+                id: i as u64,
+                prompt: "x".repeat((60 / rank).max(1)),
+                max_new_tokens: (48 / rank).max(4),
+                temperature: 0.0,
+                top_k: 1,
+                seed: i as u64,
+            }
+        })
+        .collect()
+}
+
+/// Run the whole workload through one server; returns (wall secs, stats).
+fn run_workload(
+    model: &Arc<Transformer>,
+    layout: KvLayout,
+    kv_block: usize,
+    budget: usize,
+    reqs: &[GenRequest],
+) -> (f64, ServerStats) {
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 16,
+            kv_budget_bytes: budget,
+            kv_layout: layout,
+            kv_block,
+            ..Default::default()
+        },
+    );
+    let t = Timer::start();
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let r = rx.recv().expect("request served");
+        assert!(r.error.is_none(), "bench request rejected: {:?}", r.error);
+        total_tokens += r.tokens.len();
+    }
+    let secs = t.secs();
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, reqs.len());
+    assert!(total_tokens > 0);
+    (secs, stats)
+}
+
+fn main() {
+    let model = bench_model();
+    let reps = samples(2);
+    let n_requests = 24 * reps.max(1);
+    let reqs = workload(n_requests);
+    // Budget: two full contiguous caches — tight enough that sequence-
+    // granular admission serializes the workload into pairs while the paged
+    // arena runs a wide batch from the same bytes.
+    let budget = 2 * KvCache::size_bytes_for(&model.cfg);
+
+    let mut json = BenchJson::new("serving");
+    let mut t1 = Table::new(
+        "Serving: static (contig) vs continuous (paged) batching, same KV budget",
+        &["scheduler", "wall s", "tok/s", "peak concurrency", "evictions", "kv high-water B"],
+    );
+    for (name, layout) in [("contig", KvLayout::Contig), ("paged", KvLayout::Paged)] {
+        let (secs, stats) = run_workload(&model, layout, 0, budget, &reqs);
+        t1.row(vec![
+            name.into(),
+            f2(secs),
+            f2(stats.throughput_tok_per_sec()),
+            format!("{}", stats.peak_active),
+            format!("{}", stats.evictions),
+            format!("{}", stats.peak_kv_bytes),
+        ]);
+        let params = [("scheduler", name.to_string())];
+        json.row(&params, "tok_per_sec", stats.throughput_tok_per_sec());
+        json.row(&params, "peak_concurrency", stats.peak_active as f64);
+        json.row(&params, "evictions", stats.evictions as f64);
+    }
+    t1.emit("serving_scheduler.md");
+
+    let mut t2 = Table::new(
+        "Paged arena geometry sweep (--kv-block)",
+        &["block positions", "blocks", "tok/s", "peak concurrency", "evictions"],
+    );
+    for block in [8usize, 32, 128] {
+        let (_, stats) = run_workload(&model, KvLayout::Paged, block, budget, &reqs);
+        t2.row(vec![
+            format!("{block}"),
+            format!("{}", stats.kv_blocks_total),
+            f2(stats.throughput_tok_per_sec()),
+            format!("{}", stats.peak_active),
+            format!("{}", stats.evictions),
+        ]);
+        let params = [("kv_block", block.to_string())];
+        json.row(&params, "tok_per_sec", stats.throughput_tok_per_sec());
+        json.row(&params, "peak_concurrency", stats.peak_active as f64);
+    }
+    t2.emit("serving_geometry.md");
+    json.emit();
+}

@@ -10,5 +10,5 @@ pub mod tcp;
 pub use pipeline::{
     layer_seed, quantize_model_baseline, quantize_model_qtip, LayerReport, QuantizeReport,
 };
-pub use server::{GenRequest, GenResponse, ServerConfig, ServerHandle, ServerStats};
+pub use server::{GenRequest, GenResponse, ServerConfig, ServerHandle, ServerStats, StreamEvent};
 pub use tcp::TcpFrontend;

@@ -1,25 +1,40 @@
 //! The generation server: request queue → continuous batcher → token streaming.
 //!
-//! Table 4's serving context: decoding is memory-bound, so the quantized model's
-//! fused decode-matvec is the hot path. The coordinator contributes the
-//! vLLM-style machinery around it: admission control against a KV-memory budget
-//! (requests that can never fit are rejected with an error response), a KV-cache
-//! pool (allocate on admit, recycle on completion), continuous batching (new
-//! requests join mid-flight), and per-request metrics (TTFT, decode tok/s).
+//! Table 4's serving context: decoding is memory-bound, so the quantized
+//! model's fused decode-matvec is the hot path — and with weights
+//! trellis-compressed to 2–4 bits, the **KV cache** becomes the dominant
+//! serving allocation. The coordinator therefore schedules KV memory at block
+//! granularity (vLLM-style):
+//!
+//! * **Paged scheduler** (default, [`KvLayout::Paged`]) — one shared
+//!   [`KvArena`]; a request is admitted as soon as enough free blocks exist
+//!   for its *prompt* (token-granular admission), sequences lease further
+//!   blocks one position ahead of decode, blocks are reclaimed the moment a
+//!   sequence finishes (or its client disconnects), and under pressure the
+//!   youngest sequence is preempted-by-eviction: its blocks are freed and the
+//!   request is re-queued at the front (restarted deterministically — same
+//!   seed, same tokens).
+//! * **Contiguous scheduler** ([`KvLayout::Contig`]) — the reference path:
+//!   sequence-granular admission against full `max_seq × d_model` caches,
+//!   kept selectable (like the scalar decode kernels) as the baseline the
+//!   paged path is parity-tested and benchmarked against.
 //!
 //! Each round advances *every* active sequence by one token through a single
-//! [`Transformer::decode_step_batch`] call, so every packed weight tile is
-//! decoded once per round and applied to all B sequences — instead of being
-//! re-decoded B times by per-sequence `decode_step` calls. Prompt prefill also
-//! runs inside these fused rounds (one prompt token per round per sequence)
-//! rather than in the admission path, so a long prompt no longer head-of-line
-//! blocks sequences that are mid-decode.
+//! fused [`Transformer::decode_step_batch_with`] /
+//! [`Transformer::decode_step_batch_paged`] call, so every packed weight tile
+//! is decoded once per round and applied to all B sequences. Prompt prefill
+//! runs inside these fused rounds (one prompt token per round per sequence),
+//! so a long prompt never head-of-line blocks sequences mid-decode. Clients
+//! may subscribe to incremental tokens ([`ServerHandle::submit_stream`]) and
+//! cancel in-flight work ([`ServerHandle::cancel`]); a dropped stream
+//! receiver cancels implicitly and frees the sequence's blocks immediately.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::model::transformer::{DecodeScratch, KvCache, Transformer};
+use crate::model::kv::{resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq};
+use crate::model::transformer::{DecodeScratch, Transformer};
 use crate::model::ByteTokenizer;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ExecPool;
@@ -47,7 +62,7 @@ pub struct GenResponse {
     pub ttft: f64,
     pub total_secs: f64,
     pub decode_tok_per_sec: f64,
-    /// Set when the request was rejected instead of served (e.g. its KV cache
+    /// Set when the request was rejected instead of served (e.g. its KV needs
     /// can never fit the server's memory budget). All other fields are zeroed.
     pub error: Option<String>,
 }
@@ -67,13 +82,118 @@ impl GenResponse {
     }
 }
 
+/// Incremental output of a streaming request ([`ServerHandle::submit_stream`]).
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One generated token, emitted the round it is produced. `index` is the
+    /// 0-based position in the generated stream (contiguous; eviction and
+    /// re-admission never re-send already-delivered indices). `text` is the
+    /// incremental UTF-8 completion of the byte stream: it may be empty while
+    /// a multi-byte sequence is still pending and may carry bytes from
+    /// earlier tokens once the sequence completes, so concatenating `text`
+    /// fields always yields valid UTF-8 that prefixes the final response
+    /// text (single bytes are never lossy-decoded in isolation).
+    Token { id: u64, index: usize, token: u16, text: String },
+    /// Terminal event: the complete response (also carries rejections).
+    Done(GenResponse),
+}
+
+/// Decode as much of `pending` as ends on a UTF-8 boundary: definitively
+/// invalid bytes become U+FFFD, but an incomplete trailing sequence is held
+/// back (`consumed < pending.len()`) until later bytes complete it. Returns
+/// (bytes consumed, text). The streaming path uses this so multi-byte
+/// characters split across tokens reach clients intact instead of as one
+/// replacement character per byte.
+fn utf8_flush(pending: &[u8]) -> (usize, String) {
+    let mut out = String::new();
+    let mut consumed = 0;
+    while consumed < pending.len() {
+        match std::str::from_utf8(&pending[consumed..]) {
+            Ok(s) => {
+                out.push_str(s);
+                consumed = pending.len();
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                out.push_str(
+                    std::str::from_utf8(&pending[consumed..consumed + valid]).unwrap(),
+                );
+                consumed += valid;
+                match e.error_len() {
+                    Some(n) => {
+                        out.push('\u{FFFD}');
+                        consumed += n;
+                    }
+                    // Incomplete tail: hold it back for the next token.
+                    None => break,
+                }
+            }
+        }
+    }
+    (consumed, out)
+}
+
 /// Fallback token fed through the model when a prompt encodes to nothing, so
 /// sampling always sees logits over the real vocabulary (byte 0 acts as BOS).
 const BOS_FALLBACK: u16 = 0;
 
+/// Where a request's output goes.
+enum Sink {
+    Unary(Sender<GenResponse>),
+    Stream(Sender<StreamEvent>),
+}
+
+impl Sink {
+    fn send_done(&self, resp: GenResponse) {
+        match self {
+            Sink::Unary(tx) => {
+                let _ = tx.send(resp);
+            }
+            Sink::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(resp));
+            }
+        }
+    }
+}
+
+/// A queued request (possibly re-queued by preemption; `emitted` counts the
+/// streamed tokens already delivered so a restart does not re-send them, and
+/// the timing fields carry the *original* admission across restarts so
+/// TTFT/total metrics cover the whole request lifetime).
+struct Pending {
+    req: GenRequest,
+    sink: Sink,
+    emitted: usize,
+    /// Bytes of the generated stream already flushed as stream text (lags
+    /// `emitted` tokens while a multi-byte UTF-8 sequence is incomplete).
+    text_emitted: usize,
+    admitted_at: Option<std::time::Instant>,
+    first_token_at: Option<std::time::Instant>,
+}
+
+impl Pending {
+    fn new(req: GenRequest, sink: Sink) -> Pending {
+        Pending {
+            req,
+            sink,
+            emitted: 0,
+            text_emitted: 0,
+            admitted_at: None,
+            first_token_at: None,
+        }
+    }
+}
+
+/// A sequence's KV residency, matching the server's layout.
+enum SeqKv {
+    Contig(KvCache),
+    Paged(KvSeq),
+}
+
 struct Active {
     req: GenRequest,
-    cache: KvCache,
+    sink: Sink,
+    kv: SeqKv,
     /// Prompt tokens not yet prefilled; drained front-to-back, one per fused
     /// round, so prefill interleaves with other sequences' decode steps.
     pending_prompt: VecDeque<u16>,
@@ -84,6 +204,40 @@ struct Active {
     next_token: Option<u16>,
     admitted_at: std::time::Instant,
     first_token_at: Option<std::time::Instant>,
+    /// Generated tokens already delivered to a streaming client (survives
+    /// eviction + re-admission).
+    stream_sent: usize,
+    /// Generated *bytes* already flushed as stream text — lags `stream_sent`
+    /// while a multi-byte UTF-8 sequence awaits completion.
+    text_flushed: usize,
+    /// Streaming client vanished: retire silently and free KV immediately.
+    dropped: bool,
+}
+
+impl Active {
+    fn kv_len(&self) -> usize {
+        match &self.kv {
+            SeqKv::Contig(c) => c.len,
+            SeqKv::Paged(s) => s.len,
+        }
+    }
+
+    fn kv_cap(&self, max_seq: usize) -> usize {
+        match &self.kv {
+            SeqKv::Contig(c) => c.capacity,
+            SeqKv::Paged(_) => max_seq,
+        }
+    }
+
+    /// Whether this sequence advances the KV state this round (prefill or a
+    /// non-final decode step). Mirrors the emission loop's `done` check
+    /// exactly, so the paged capacity phase leases blocks only for sequences
+    /// that will actually write a position.
+    fn will_step(&self, max_seq: usize) -> bool {
+        !self.pending_prompt.is_empty()
+            || (self.generated.len() + 1 < self.req.max_new_tokens
+                && self.kv_len() + 1 < self.kv_cap(max_seq))
+    }
 }
 
 /// Server configuration.
@@ -91,18 +245,30 @@ struct Active {
 pub struct ServerConfig {
     /// Max concurrently-decoding sequences.
     pub max_batch: usize,
-    /// KV memory budget in bytes (admission control).
+    /// KV memory budget in bytes. Paged layout: sized into whole arena
+    /// blocks. Contiguous layout: sequence-granular admission control.
     pub kv_budget_bytes: usize,
     /// Intra-op worker threads for the decode kernels (total width, including
     /// the serving thread). `0` = auto: `QTIP_THREADS` env var, else available
     /// parallelism. The serve loop owns the resulting [`ExecPool`]; every
     /// matvec of every round runs tile-parallel across it.
     pub threads: usize,
+    /// KV layout / scheduler selection (`Auto` resolves to `Paged`).
+    pub kv_layout: KvLayout,
+    /// Positions per KV block for the paged layout (`0` = auto:
+    /// `QTIP_KV_BLOCK` env var, else 32). Ignored by the contiguous layout.
+    pub kv_block: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 8, kv_budget_bytes: 256 << 20, threads: 0 }
+        ServerConfig {
+            max_batch: 8,
+            kv_budget_bytes: 256 << 20,
+            threads: 0,
+            kv_layout: KvLayout::Auto,
+            kv_block: 0,
+        }
     }
 }
 
@@ -110,17 +276,37 @@ impl Default for ServerConfig {
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub completed: usize,
-    /// Requests rejected at admission (KV cache larger than the budget).
+    /// Requests rejected at admission (KV needs larger than the budget).
     pub rejected: usize,
+    /// Requests cancelled mid-flight (explicit cancel or client disconnect);
+    /// their KV blocks were reclaimed immediately.
+    pub cancelled: usize,
     pub total_generated_tokens: usize,
     /// All tokens pushed through fused rounds, prefill included — the
     /// numerator matching `total_decode_secs`, which times whole rounds.
     pub total_step_tokens: usize,
     pub total_decode_secs: f64,
+    /// Legacy alias of [`Self::peak_active`] (both are set from the same
+    /// expression at the same admission site); kept for older tooling/tests.
     pub peak_batch: usize,
+    /// Most sequences simultaneously resident (prefilling or decoding).
+    pub peak_active: usize,
+    /// Deepest the waiting queue ever got.
+    pub queue_high_water: usize,
+    /// Sequences preempted-by-eviction under block pressure (re-queued and
+    /// restarted; their output is unaffected).
+    pub evictions: usize,
     pub peak_kv_bytes: usize,
-    /// Decode rounds executed (one `decode_step_batch` call, or a single
-    /// `decode_step` when only one sequence stepped that round).
+    /// Paged arena geometry: total blocks and the most ever leased at once
+    /// (0 when serving the contiguous layout).
+    pub kv_blocks_total: usize,
+    pub kv_blocks_high_water: usize,
+    /// Positions per KV block (0 when serving the contiguous layout).
+    pub kv_block_positions: usize,
+    /// Resolved KV layout the loop served with (`"paged"` | `"contig"`).
+    pub kv_layout: String,
+    /// Decode rounds executed (one fused batch call, or a single-sequence
+    /// round through the same path).
     pub fused_rounds: usize,
     /// Largest number of sequences advanced by a single fused round — ≥ 2
     /// proves the batcher actually amortized a weight decode across sequences.
@@ -146,7 +332,8 @@ impl ServerStats {
 }
 
 enum Msg {
-    Submit(GenRequest, Sender<GenResponse>),
+    Submit(GenRequest, Sink),
+    Cancel(u64),
     Shutdown(Sender<ServerStats>),
 }
 
@@ -167,8 +354,25 @@ impl ServerHandle {
     /// Submit a request; the response arrives on the returned receiver.
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
-        self.tx.send(Msg::Submit(req, tx)).expect("server gone");
+        self.tx.send(Msg::Submit(req, Sink::Unary(tx))).expect("server gone");
         rx
+    }
+
+    /// Submit a request and receive tokens incrementally as they are
+    /// produced, terminated by [`StreamEvent::Done`]. Dropping the receiver
+    /// cancels the request: the scheduler notices the dead stream at its next
+    /// token and frees the sequence's KV blocks immediately.
+    pub fn submit_stream(&self, req: GenRequest) -> Receiver<StreamEvent> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Submit(req, Sink::Stream(tx))).expect("server gone");
+        rx
+    }
+
+    /// Cancel a queued or in-flight request by id (e.g. on client
+    /// disconnect). The scheduler drops it at the next round boundary and
+    /// reclaims its KV blocks; no response is sent.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Msg::Cancel(id));
     }
 
     /// Graceful shutdown: drains in-flight work, returns aggregate stats.
@@ -183,18 +387,48 @@ impl ServerHandle {
     }
 }
 
+/// The KV backend the loop schedules over.
+enum KvBackend {
+    Contig { free: Vec<KvCache>, per_seq_bytes: usize },
+    Paged { arena: KvArena, block_bytes: usize },
+}
+
+/// Return a retired/evicted/cancelled sequence's KV residency to its backend.
+fn release_seq(kv: SeqKv, backend: &mut KvBackend) {
+    match (kv, backend) {
+        (SeqKv::Contig(c), KvBackend::Contig { free, .. }) => free.push(c),
+        (SeqKv::Paged(mut s), KvBackend::Paged { arena, .. }) => arena.release(&mut s),
+        _ => unreachable!("sequence KV does not match the server's layout"),
+    }
+}
+
+/// Prompt-token budget shared by admission and rejection: the prompt is
+/// truncated so prompt + generation fits `max_seq`, and an empty prompt
+/// counts as one BOS token.
+fn effective_prompt_len(req: &GenRequest, max_seq: usize) -> usize {
+    let budget = max_seq.saturating_sub(req.max_new_tokens + 1).max(1);
+    req.prompt.len().min(budget).max(1)
+}
+
+/// KV positions a request can consume over its whole lifetime (prefill plus
+/// decode steps; the final sampled token is never fed back, and generation
+/// stops one position short of `max_seq`).
+fn need_positions(prompt_len: usize, max_new: usize, max_seq: usize) -> usize {
+    (prompt_len + max_new.saturating_sub(1)).min(max_seq.saturating_sub(1).max(1)).max(1)
+}
+
 fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
     let tok = ByteTokenizer;
-    let mut waiting: VecDeque<(GenRequest, Sender<GenResponse>)> = VecDeque::new();
-    let mut active: Vec<(Active, Sender<GenResponse>)> = Vec::new();
-    let mut cache_pool: Vec<KvCache> = Vec::new();
+    let mut waiting: VecDeque<Pending> = VecDeque::new();
+    // Admission-ordered: index 0 is the oldest sequence (eviction picks from
+    // the back, so the oldest always runs to completion — the progress
+    // guarantee that makes preemption deadlock-free).
+    let mut active: Vec<Active> = Vec::new();
     let mut stats = ServerStats::default();
     let mut shutting_down: Option<Sender<ServerStats>> = None;
     // The loop owns the execution pool and the scratch arena: workers persist
     // across rounds (spawned once, parked between jobs) and every activation
-    // buffer is reused — the model forward allocates nothing per round. (The
-    // one remaining per-round allocation is the B-pointer `caches` borrow
-    // list below, which borrowck forces us to rebuild each round.)
+    // buffer is reused — the model forward allocates nothing per round.
     let pool = ExecPool::new(cfg.threads);
     let mut scratch = DecodeScratch::new(&model.cfg);
     stats.workers = pool.width();
@@ -202,14 +436,35 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         .decode_kernel()
         .map(|k| k.name().to_string())
         .unwrap_or_else(|| "dense".to_string());
+    let max_batch = cfg.max_batch.max(1);
+    let max_seq = model.cfg.max_seq;
+
+    let layout = cfg.kv_layout.resolve();
+    stats.kv_layout = layout.name().to_string();
+    let mut backend = match layout {
+        KvLayout::Contig => KvBackend::Contig {
+            free: Vec::new(),
+            per_seq_bytes: KvCache::size_bytes_for(&model.cfg),
+        },
+        _ => {
+            let block = resolve_kv_block(cfg.kv_block, 0);
+            let block_bytes = KvArena::block_bytes(&model.cfg, block);
+            // Whole blocks under the budget, but never more than max_batch
+            // full-length sequences could touch — the arena is eagerly
+            // allocated, so an oversized budget must not balloon it.
+            let by_budget = cfg.kv_budget_bytes / block_bytes;
+            let by_batch = max_batch * KvArena::blocks_for_positions(max_seq, block);
+            let n_blocks = by_budget.min(by_batch);
+            stats.kv_block_positions = block;
+            stats.kv_blocks_total = n_blocks;
+            KvBackend::Paged { arena: KvArena::new(&model.cfg, block, n_blocks), block_bytes }
+        }
+    };
+
     // Round bookkeeping buffers, reused across rounds.
     let mut step_idx: Vec<usize> = Vec::new();
     let mut step_tokens: Vec<u16> = Vec::new();
     let mut finished: Vec<usize> = Vec::new();
-    // Computed once: the admission check must not allocate full K/V buffers
-    // every round just to read their size.
-    let kv_bytes_per_seq = KvCache::size_bytes_for(&model.cfg);
-    let max_batch = cfg.max_batch.max(1);
 
     loop {
         // Drain the message queue (non-blocking while work exists; blocking idle).
@@ -226,63 +481,124 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                 }
             };
             match msg {
-                Msg::Submit(req, tx) => waiting.push_back((req, tx)),
+                Msg::Submit(req, sink) => {
+                    // Can-this-ever-fit is invariant once the backend exists,
+                    // so the verdict is rendered exactly once, here — not by
+                    // re-scanning the whole queue every round. (A request that
+                    // can never fit must be rejected, not queued forever: the
+                    // loop would busy-spin and shutdown would never drain.)
+                    let reject = match &backend {
+                        KvBackend::Contig { per_seq_bytes, .. }
+                            if *per_seq_bytes > cfg.kv_budget_bytes =>
+                        {
+                            Some(format!(
+                                "KV cache per sequence ({per_seq_bytes} B) exceeds the \
+                                 server budget ({} B)",
+                                cfg.kv_budget_bytes
+                            ))
+                        }
+                        KvBackend::Paged { arena, .. } => {
+                            let plen = effective_prompt_len(&req, max_seq);
+                            let need = need_positions(plen, req.max_new_tokens, max_seq);
+                            let bp = arena.block_positions();
+                            let blocks = KvArena::blocks_for_positions(need, bp);
+                            let total = arena.blocks_total();
+                            (blocks > total).then(|| {
+                                format!(
+                                    "request needs {blocks} KV blocks ({need} positions × \
+                                     {bp}-position blocks) but the whole arena holds {total} \
+                                     under the {} B budget",
+                                    cfg.kv_budget_bytes
+                                )
+                            })
+                        }
+                        _ => None,
+                    };
+                    match reject {
+                        Some(reason) => {
+                            stats.rejected += 1;
+                            sink.send_done(GenResponse::rejected(req.id, reason));
+                        }
+                        None => waiting.push_back(Pending::new(req, sink)),
+                    }
+                }
+                Msg::Cancel(id) => {
+                    if let Some(pos) = waiting.iter().position(|p| p.req.id == id) {
+                        let _ = waiting.remove(pos);
+                        stats.cancelled += 1;
+                    } else if let Some(pos) = active.iter().position(|a| a.req.id == id) {
+                        let a = active.remove(pos);
+                        release_seq(a.kv, &mut backend);
+                        stats.cancelled += 1;
+                    }
+                }
                 Msg::Shutdown(tx) => shutting_down = Some(tx),
             }
         }
+        stats.queue_high_water = stats.queue_high_water.max(waiting.len());
 
-        // Reject requests that can never be admitted: a single sequence's KV
-        // cache above the budget would otherwise sit in `waiting` forever while
-        // the loop busy-spins (and shutdown would never complete).
-        if kv_bytes_per_seq > cfg.kv_budget_bytes {
-            while let Some((req, tx)) = waiting.pop_front() {
-                stats.rejected += 1;
-                let _ = tx.send(GenResponse::rejected(
-                    req.id,
-                    format!(
-                        "KV cache per sequence ({kv_bytes_per_seq} B) exceeds the \
-                         server budget ({} B)",
-                        cfg.kv_budget_bytes
-                    ),
-                ));
+        // Admission. Paged: token-granular — a request joins as soon as the
+        // free list covers its *prompt* (leased here so concurrent admissions
+        // never double-count a block); decode blocks are leased on demand.
+        // Contiguous: sequence-granular — a whole max_seq cache must fit.
+        loop {
+            if active.len() >= max_batch || waiting.is_empty() {
+                break;
             }
-        }
-
-        // Admission: fill the batch while the KV budget allows. No prefill here —
-        // the prompt is queued and consumed inside the fused rounds below, so a
-        // new long prompt cannot head-of-line block sequences mid-decode.
-        while active.len() < max_batch
-            && !waiting.is_empty()
-            && (active.len() + 1) * kv_bytes_per_seq <= cfg.kv_budget_bytes
-        {
-            let (req, tx) = waiting.pop_front().unwrap();
-            let mut cache = cache_pool.pop().unwrap_or_else(|| KvCache::new(&model.cfg));
-            cache.clear();
-            let budget = model.cfg.max_seq.saturating_sub(req.max_new_tokens + 1);
+            let kv = match &mut backend {
+                KvBackend::Contig { free, per_seq_bytes } => {
+                    if (active.len() + 1) * *per_seq_bytes > cfg.kv_budget_bytes {
+                        break;
+                    }
+                    let mut cache = free.pop().unwrap_or_else(|| KvCache::new(&model.cfg));
+                    cache.clear();
+                    stats.peak_kv_bytes =
+                        stats.peak_kv_bytes.max((active.len() + 1) * *per_seq_bytes);
+                    SeqKv::Contig(cache)
+                }
+                KvBackend::Paged { arena, .. } => {
+                    let plen = effective_prompt_len(&waiting.front().unwrap().req, max_seq);
+                    if arena.blocks_free() < arena.blocks_for(plen) {
+                        break;
+                    }
+                    let mut seq = KvSeq::new();
+                    let ok = arena.ensure(&mut seq, plen);
+                    debug_assert!(ok, "admission checked the free list");
+                    SeqKv::Paged(seq)
+                }
+            };
+            let p = waiting.pop_front().unwrap();
+            // One source of truth for truncation: the same effective_prompt_len
+            // that sized the admission lease and the rejection verdict.
+            let plen = effective_prompt_len(&p.req, max_seq);
             let mut pending_prompt: VecDeque<u16> =
-                tok.encode(&req.prompt).into_iter().take(budget.max(1)).collect();
+                tok.encode(&p.req.prompt).into_iter().take(plen).collect();
             if pending_prompt.is_empty() {
                 // An empty prompt must still produce real logits before the
                 // first sample — never a fake 1-element "vocab".
                 pending_prompt.push_back(BOS_FALLBACK);
             }
+            debug_assert_eq!(pending_prompt.len(), plen, "lease sizing diverged from prompt");
             let prompt_len = pending_prompt.len();
-            active.push((
-                Active {
-                    rng: Rng::new(req.seed),
-                    req,
-                    cache,
-                    pending_prompt,
-                    prompt_len,
-                    generated: Vec::new(),
-                    next_token: None,
-                    admitted_at: std::time::Instant::now(),
-                    first_token_at: None,
-                },
-                tx,
-            ));
+            active.push(Active {
+                rng: Rng::new(p.req.seed),
+                stream_sent: p.emitted,
+                text_flushed: p.text_emitted,
+                // A preempted request keeps its original clock so TTFT and
+                // total_secs span the whole lifetime, not just the restart.
+                admitted_at: p.admitted_at.unwrap_or_else(std::time::Instant::now),
+                first_token_at: p.first_token_at,
+                req: p.req,
+                sink: p.sink,
+                kv,
+                pending_prompt,
+                prompt_len,
+                generated: Vec::new(),
+                next_token: None,
+                dropped: false,
+            });
             stats.peak_batch = stats.peak_batch.max(active.len());
-            stats.peak_kv_bytes = stats.peak_kv_bytes.max(active.len() * kv_bytes_per_seq);
+            stats.peak_active = stats.peak_active.max(active.len());
         }
 
         if active.is_empty() {
@@ -296,16 +612,83 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             continue;
         }
 
+        // Paged capacity phase: every sequence that will write a position
+        // this round must hold a block for it. Under pressure the youngest
+        // sequence is evicted (blocks freed, request re-queued at the front);
+        // the oldest is never evicted for a younger one, so it always
+        // completes and the arena always drains.
+        if let KvBackend::Paged { arena, block_bytes } = &mut backend {
+            let mut i = 0;
+            while i < active.len() {
+                if !active[i].will_step(max_seq) {
+                    i += 1;
+                    continue;
+                }
+                let mut evicted_self = false;
+                loop {
+                    let a = &mut active[i];
+                    let need = a.kv_len() + 1;
+                    let SeqKv::Paged(seq) = &mut a.kv else {
+                        unreachable!("paged backend holds paged sequences")
+                    };
+                    if arena.ensure(seq, need) {
+                        break;
+                    }
+                    debug_assert!(
+                        active.len() > 1,
+                        "a solo sequence always fits: admission rejects requests whose \
+                         lifetime blocks exceed the whole arena"
+                    );
+                    // Evict the youngest sequence that is still prefilling or
+                    // decoding — never one finishing this round, whose blocks
+                    // free at retirement anyway (evicting it would discard a
+                    // complete generation). Victims are always ≥ `i`, so a
+                    // sequence is only ever preempted for an equal-or-older
+                    // one; `i` self-evicts only when every younger sequence
+                    // retires this round, and those retirements release the
+                    // blocks it needs to re-admit — no deadlock either way.
+                    let victim = (i..active.len())
+                        .rev()
+                        .find(|&j| active[j].will_step(max_seq))
+                        .expect("sequence i itself is stepping");
+                    let v = active.remove(victim);
+                    if let SeqKv::Paged(mut s) = v.kv {
+                        arena.release(&mut s);
+                    }
+                    stats.evictions += 1;
+                    waiting.push_front(Pending {
+                        req: v.req,
+                        sink: v.sink,
+                        emitted: v.stream_sent,
+                        text_emitted: v.text_flushed,
+                        admitted_at: Some(v.admitted_at),
+                        first_token_at: v.first_token_at,
+                    });
+                    if victim == i {
+                        evicted_self = true;
+                        break;
+                    }
+                }
+                if !evicted_self {
+                    i += 1;
+                }
+                // On self-eviction a younger sequence shifted into slot `i`;
+                // re-process that slot without advancing.
+            }
+            stats.kv_blocks_high_water = arena.high_water();
+            stats.peak_kv_bytes = stats.peak_kv_bytes.max(arena.high_water() * *block_bytes);
+        }
+
         // One fused round: every active sequence advances one token — prompt
         // tokens while prefilling, sampled tokens while decoding — through a
-        // single decode_step_batch call, so each packed weight tile is decoded
+        // single fused decode call, so each packed weight tile is decoded
         // once for the whole batch (continuous batching: admissions above
         // interleave between rounds).
         let round_start = std::time::Instant::now();
         finished.clear();
         step_idx.clear();
         step_tokens.clear();
-        for (i, (a, _)) in active.iter_mut().enumerate() {
+        for (i, a) in active.iter_mut().enumerate() {
             if let Some(t) = a.pending_prompt.pop_front() {
                 step_idx.push(i);
                 step_tokens.push(t);
@@ -316,8 +699,32 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(std::time::Instant::now());
             }
+            let idx = a.generated.len() - 1;
+            if let Sink::Stream(txs) = &a.sink {
+                // Deliver the token the round it is produced. A dead receiver
+                // means the client is gone: cancel the sequence so its blocks
+                // free this round instead of decoding to completion.
+                if idx >= a.stream_sent {
+                    // Text = whatever newly-complete UTF-8 the byte stream now
+                    // holds (a multi-byte character split across tokens is
+                    // held back until whole, never emitted as per-byte U+FFFD).
+                    let pending: Vec<u8> = a.generated[a.text_flushed..]
+                        .iter()
+                        .map(|&b| (b & 0xFF) as u8)
+                        .collect();
+                    let (consumed, text) = utf8_flush(&pending);
+                    let ev = StreamEvent::Token { id: a.req.id, index: idx, token: t, text };
+                    if txs.send(ev).is_err() {
+                        a.dropped = true;
+                        finished.push(i);
+                        continue;
+                    }
+                    a.stream_sent = idx + 1;
+                    a.text_flushed += consumed;
+                }
+            }
             let done = a.generated.len() >= a.req.max_new_tokens
-                || a.cache.len + 1 >= a.cache.capacity;
+                || a.kv_len() + 1 >= a.kv_cap(max_seq);
             if done {
                 finished.push(i);
                 continue;
@@ -327,28 +734,52 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         }
 
         if !step_idx.is_empty() {
-            let mut caches: Vec<&mut KvCache> = Vec::with_capacity(step_idx.len());
-            {
-                let mut want = step_idx.iter().peekable();
-                for (i, (a, _)) in active.iter_mut().enumerate() {
-                    if want.peek() == Some(&&i) {
-                        want.next();
-                        caches.push(&mut a.cache);
-                    }
-                }
-            }
             // One allocation-free fused round: every temporary lives in the
             // persistent scratch arena, every linear is striped across the
             // pool, and a 1-sequence round takes the tighter single-column
-            // kernels inside decode_step_batch_with — outputs are
-            // bit-identical either way.
-            let logits =
-                model.decode_step_batch_with(&mut caches, &step_tokens, &mut scratch, &pool);
+            // kernels — outputs are bit-identical either way, and identical
+            // between the paged and contiguous KV layouts.
+            let logits = match &mut backend {
+                KvBackend::Contig { .. } => {
+                    let mut caches: Vec<&mut KvCache> = Vec::with_capacity(step_idx.len());
+                    let mut want = step_idx.iter().peekable();
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if want.peek() == Some(&&i) {
+                            want.next();
+                            let SeqKv::Contig(c) = &mut a.kv else {
+                                unreachable!("contiguous backend holds contiguous caches")
+                            };
+                            caches.push(c);
+                        }
+                    }
+                    model.decode_step_batch_with(&mut caches, &step_tokens, &mut scratch, &pool)
+                }
+                KvBackend::Paged { arena, .. } => {
+                    let mut seqs: Vec<&mut KvSeq> = Vec::with_capacity(step_idx.len());
+                    let mut want = step_idx.iter().peekable();
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if want.peek() == Some(&&i) {
+                            want.next();
+                            let SeqKv::Paged(s) = &mut a.kv else {
+                                unreachable!("paged backend holds paged sequences")
+                            };
+                            seqs.push(s);
+                        }
+                    }
+                    model.decode_step_batch_paged(
+                        arena,
+                        &mut seqs,
+                        &step_tokens,
+                        &mut scratch,
+                        &pool,
+                    )
+                }
+            };
             stats.fused_rounds += 1;
             stats.max_fused_batch = stats.max_fused_batch.max(step_tokens.len());
             stats.total_step_tokens += step_tokens.len();
             for (j, &i) in step_idx.iter().enumerate() {
-                let (a, _) = &mut active[i];
+                let a = &mut active[i];
                 if !a.pending_prompt.is_empty() {
                     // Mid-prefill: logits are discarded until the last prompt
                     // token has been consumed.
@@ -364,9 +795,16 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         }
         stats.total_decode_secs += round_start.elapsed().as_secs_f64();
 
-        // Retire finished sequences (largest index first).
+        // Retire finished sequences (descending index; `remove` keeps the
+        // survivors in admission order for the eviction policy). Blocks are
+        // reclaimed here — the same round the sequence finishes.
         for i in finished.drain(..).rev() {
-            let (a, tx) = active.swap_remove(i);
+            let a = active.remove(i);
+            release_seq(a.kv, &mut backend);
+            if a.dropped {
+                stats.cancelled += 1;
+                continue;
+            }
             let now = std::time::Instant::now();
             let total = (now - a.admitted_at).as_secs_f64();
             let ttft = a
@@ -379,15 +817,14 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             let resp = GenResponse {
                 id: a.req.id,
                 text: tok.decode(&a.generated),
-                tokens: a.generated.clone(),
                 prompt_tokens: a.prompt_len,
                 ttft,
                 total_secs: total,
                 decode_tok_per_sec: (a.generated.len() as f64 - 1.0).max(0.0) / decode_secs,
+                tokens: a.generated,
                 error: None,
             };
-            cache_pool.push(a.cache);
-            let _ = tx.send(resp);
+            a.sink.send_done(resp);
         }
     }
 }
@@ -432,13 +869,21 @@ mod tests {
         // tiny_model is fully dense, so the stats must say so rather than
         // claim a decode-kernel family that never ran.
         assert_eq!(stats.kernel, "dense");
+        // Default layout resolves to the paged arena, and the stats carry its
+        // geometry.
+        assert_eq!(stats.kv_layout, "paged");
+        assert!(stats.kv_block_positions > 0);
+        assert!(stats.kv_blocks_total > 0);
+        assert!(stats.kv_blocks_high_water >= 1);
+        assert_eq!(stats.peak_active, 1);
     }
 
     #[test]
     fn batched_equals_sequential() {
         // Correctness invariant of the batcher: per-request outputs must be
-        // identical to running each request alone (caches are independent),
-        // even though all sequences share one fused decode pass per round.
+        // identical to running each request alone (sequences are
+        // independent), even though all sequences share one fused decode
+        // pass per round — and, under the paged layout, one block arena.
         let model = tiny_model();
         let server = ServerHandle::spawn(model.clone(), ServerConfig::default());
         let reqs: Vec<GenRequest> =
@@ -447,7 +892,7 @@ mod tests {
         let batched: Vec<GenResponse> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
         let stats = server.shutdown();
         // The fused kernel must actually have been used: at least one round
-        // advanced several sequences through a single decode_step_batch call.
+        // advanced several sequences through a single fused call.
         assert!(
             stats.max_fused_batch >= 2,
             "6 concurrent requests never shared a fused round (max fused batch {})",
@@ -464,15 +909,50 @@ mod tests {
     }
 
     #[test]
-    fn oversized_kv_request_is_rejected_not_spun_on() {
-        // Regression: a request whose KV cache exceeds the budget used to sit in
-        // `waiting` forever while serve_loop busy-spun and shutdown never
-        // completed. It must now be rejected with an error response.
+    fn contig_and_paged_serve_identical_tokens() {
+        // The paged arena is bit-identical to the contiguous reference
+        // layout, so the same request mix must produce the same tokens under
+        // both schedulers (including a deliberately tiny block size that
+        // forces mid-sequence block-table boundaries).
+        let model = tiny_model();
+        let run = |layout: KvLayout, kv_block: usize| -> Vec<Vec<u16>> {
+            let server = ServerHandle::spawn(
+                model.clone(),
+                ServerConfig { kv_layout: layout, kv_block, ..Default::default() },
+            );
+            let rxs: Vec<_> = (0..5)
+                .map(|i| server.submit(req(i, &format!("p{i}"), 5 + i as usize)))
+                .collect();
+            let out = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+            server.shutdown();
+            out
+        };
+        let reference = run(KvLayout::Contig, 0);
+        for block in [1usize, 3, 32] {
+            assert_eq!(
+                run(KvLayout::Paged, block),
+                reference,
+                "paged serving (block={block}) diverged from the contiguous reference"
+            );
+        }
+    }
+
+    #[test]
+    fn contig_oversized_kv_request_is_rejected_not_spun_on() {
+        // Regression (contiguous reference scheduler): a request whose KV
+        // cache exceeds the budget used to sit in `waiting` forever while
+        // serve_loop busy-spun and shutdown never completed. It must be
+        // rejected with an error response.
         let model = tiny_model();
         let per_seq = KvCache::size_bytes_for(&model.cfg);
         let server = ServerHandle::spawn(
             model,
-            ServerConfig { max_batch: 4, kv_budget_bytes: per_seq - 1, ..Default::default() },
+            ServerConfig {
+                max_batch: 4,
+                kv_budget_bytes: per_seq - 1,
+                kv_layout: KvLayout::Contig,
+                ..Default::default()
+            },
         );
         let resp = server.submit(req(7, "hello", 8)).recv().unwrap();
         assert!(resp.error.is_some(), "unservable request must carry an error");
@@ -481,6 +961,209 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.completed, 0);
         assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.kv_layout, "contig");
+    }
+
+    #[test]
+    fn paged_serves_where_sequence_granular_admission_rejects() {
+        // The point of the arena: a budget below one full contiguous cache
+        // still serves requests whose actual footprint fits in blocks.
+        let model = tiny_model();
+        let per_seq = KvCache::size_bytes_for(&model.cfg);
+        let server = ServerHandle::spawn(
+            model,
+            ServerConfig { max_batch: 4, kv_budget_bytes: per_seq - 1, ..Default::default() },
+        );
+        let resp = server.submit(req(7, "hello", 8)).recv().unwrap();
+        assert!(resp.error.is_none(), "paged layout must serve: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 8);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn paged_unservable_request_is_rejected_not_spun_on() {
+        // A budget too small for even one block can never serve anything:
+        // reject (with shutdown completing), don't busy-spin.
+        let server = ServerHandle::spawn(
+            tiny_model(),
+            ServerConfig { max_batch: 2, kv_budget_bytes: 1, ..Default::default() },
+        );
+        let resp = server.submit(req(3, "x", 4)).recv().unwrap();
+        assert!(resp.error.is_some());
+        assert!(resp.error.unwrap().contains("budget"));
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.kv_blocks_total, 0);
+    }
+
+    #[test]
+    fn continuous_batching_admits_more_than_sequence_granular() {
+        // Acceptance: under the same kv_budget_bytes, token-granular
+        // admission must reach strictly higher concurrency on mixed-length
+        // traffic than reserving a full max_seq cache per sequence.
+        let model = tiny_model();
+        let per_seq = KvCache::size_bytes_for(&model.cfg);
+        let budget = 2 * per_seq; // contiguous admission caps at 2 sequences
+        let run = |layout: KvLayout| {
+            let server = ServerHandle::spawn(
+                model.clone(),
+                ServerConfig {
+                    max_batch: 8,
+                    kv_budget_bytes: budget,
+                    kv_layout: layout,
+                    ..Default::default()
+                },
+            );
+            let rxs: Vec<_> =
+                (0..6).map(|i| server.submit(req(i, "q", 40 + i as usize))).collect();
+            for rx in rxs {
+                assert!(rx.recv().unwrap().error.is_none());
+            }
+            server.shutdown()
+        };
+        let contig = run(KvLayout::Contig);
+        let paged = run(KvLayout::Paged);
+        assert_eq!(contig.completed, 6);
+        assert_eq!(paged.completed, 6);
+        assert!(contig.peak_active <= 2, "budget admits 2 full caches, got {}", contig.peak_active);
+        assert!(
+            paged.peak_active > contig.peak_active,
+            "paged admission ({}) must beat sequence-granular ({}) under the same budget",
+            paged.peak_active,
+            contig.peak_active
+        );
+    }
+
+    #[test]
+    fn eviction_under_pressure_requeues_and_preserves_outputs() {
+        // Two long generations that cannot both fit the arena: the youngest
+        // is preempted (blocks freed, re-queued, restarted) and both must
+        // still complete with tokens identical to running each alone.
+        let model = tiny_model();
+        let block = 8usize;
+        let blocks_for_max = model.cfg.max_seq.div_ceil(block); // 8 blocks
+        let budget = blocks_for_max * KvArena::block_bytes(&model.cfg, block);
+        let pressured = ServerConfig {
+            max_batch: 2,
+            kv_budget_bytes: budget,
+            kv_block: block,
+            kv_layout: KvLayout::Paged,
+            ..Default::default()
+        };
+        let server = ServerHandle::spawn(model.clone(), pressured);
+        let ra = req(1, "a", 40);
+        let rb = req(2, "b", 40);
+        let rx_a = server.submit(ra.clone());
+        let rx_b = server.submit(rb.clone());
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert!(
+            stats.evictions >= 1,
+            "40+40 generated positions in an {blocks_for_max}-block arena must evict"
+        );
+        for (r, got) in [(ra, a), (rb, b)] {
+            let solo = ServerHandle::spawn(model.clone(), ServerConfig::default());
+            let want = solo.submit(r.clone()).recv().unwrap();
+            solo.shutdown();
+            assert_eq!(want.tokens, got.tokens, "request {} corrupted by eviction", r.id);
+        }
+    }
+
+    #[test]
+    fn streaming_emits_every_token_then_done() {
+        let model = tiny_model();
+        let server = ServerHandle::spawn(model.clone(), ServerConfig::default());
+        let unary = server.submit(req(1, "stream me", 9)).recv().unwrap();
+        let rx = server.submit_stream(req(2, "stream me", 9));
+        let mut streamed: Vec<u16> = Vec::new();
+        let mut done: Option<GenResponse> = None;
+        for ev in rx.iter() {
+            match ev {
+                StreamEvent::Token { id, index, token, .. } => {
+                    assert_eq!(id, 2);
+                    assert_eq!(index, streamed.len(), "token indices must be contiguous");
+                    streamed.push(token);
+                }
+                StreamEvent::Done(r) => {
+                    done = Some(r);
+                    break;
+                }
+            }
+        }
+        let done = done.expect("stream must terminate with Done");
+        assert_eq!(streamed, unary.tokens, "streamed tokens diverged from unary response");
+        assert_eq!(done.tokens, streamed);
+        assert!(done.error.is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn dropped_stream_receiver_cancels_and_frees_blocks() {
+        // A disconnected streaming client must not hold KV blocks: size the
+        // arena so a second full-length request can only be admitted once the
+        // first's blocks are reclaimed, drop the first mid-generation, and
+        // require the second to complete.
+        let model = tiny_model();
+        let block = 8usize;
+        let budget = model.cfg.max_seq.div_ceil(block) * KvArena::block_bytes(&model.cfg, block);
+        let server = ServerHandle::spawn(
+            model,
+            ServerConfig {
+                max_batch: 2,
+                kv_budget_bytes: budget,
+                kv_block: block,
+                kv_layout: KvLayout::Paged,
+                ..Default::default()
+            },
+        );
+        let rx = server.submit_stream(req(1, "long", 60));
+        // Wait for generation to actually start, then vanish.
+        match rx.recv().unwrap() {
+            StreamEvent::Token { .. } => {}
+            ev => panic!("expected a token first, got {ev:?}"),
+        }
+        drop(rx);
+        let resp = server.submit(req(2, "after", 50)).recv().unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.tokens.len(), 50);
+        let stats = server.shutdown();
+        assert_eq!(stats.cancelled, 1, "dropped stream must be cancelled");
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn explicit_cancel_reclaims_a_waiting_or_active_request() {
+        let server = ServerHandle::spawn(tiny_model(), ServerConfig::default());
+        let rx = server.submit(req(5, "cancel me", 60));
+        server.cancel(5);
+        let follow = server.submit(req(6, "serve me", 4)).recv().unwrap();
+        assert_eq!(follow.tokens.len(), 4);
+        // The cancelled request never answers: its sender is dropped.
+        assert!(rx.recv().is_err(), "cancelled request must not receive a response");
+        let stats = server.shutdown();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn utf8_flush_reassembles_multibyte_sequences() {
+        // 'é' = 0xC3 0xA9 split across two tokens: the lone lead byte is held
+        // back (nothing emitted), then the pair flushes as one character.
+        assert_eq!(utf8_flush(&[0xC3]), (0, String::new()));
+        assert_eq!(utf8_flush(&[0xC3, 0xA9]), (2, "é".to_string()));
+        // ASCII passes straight through.
+        assert_eq!(utf8_flush(b"ab"), (2, "ab".to_string()));
+        // A definitively invalid byte becomes exactly one replacement char
+        // and does not block the bytes after it.
+        assert_eq!(utf8_flush(&[0xFF, b'x']), (2, "\u{FFFD}x".to_string()));
+        let (c, s) = utf8_flush(&[0xC3, b'x']);
+        assert_eq!((c, s.as_str()), (2, "\u{FFFD}x"));
+        assert_eq!(utf8_flush(&[]), (0, String::new()));
     }
 
     #[test]
@@ -531,6 +1214,7 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.completed, 5);
         assert!(stats.peak_batch <= 2);
+        assert!(stats.queue_high_water >= 1, "5 requests through a 2-wide batch must queue");
     }
 
     #[test]

@@ -8,16 +8,27 @@
 //!   <- {"id": 0, "text": "...", "tokens": 32, "ttft_ms": 12.1,
 //!       "tok_per_sec": 154.2}
 //!
+//! With `"stream": true` the server emits one line per generated token as it
+//! is produced, then a terminal line:
+//!   <- {"id": 0, "index": 0, "token": 102, "text": "f", "done": false}
+//!   <- ...
+//!   <- {"id": 0, "done": true, "text": "...", "tokens": 32, ...}
+//!
+//! A client that disconnects mid-request is detected (failed token write for
+//! streams, socket EOF probe for unary waits) and its request is cancelled so
+//! the scheduler reclaims the KV blocks immediately.
+//!
 //! Start with `qtip serve --tcp 127.0.0.1:7171` or [`TcpFrontend::spawn`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::server::{GenRequest, ServerHandle};
+use super::server::{GenRequest, GenResponse, ServerHandle, StreamEvent};
 use crate::util::json::Json;
 
 pub struct TcpFrontend {
@@ -102,18 +113,16 @@ fn handle_conn(
                 let text = String::from_utf8_lossy(&line);
                 let trimmed = text.trim();
                 if !trimmed.is_empty() {
-                    let resp = respond(trimmed, server, ids);
-                    writeln!(writer, "{resp}")?;
+                    serve_line(trimmed, server, ids, &mut writer)?;
                 }
                 return Ok(());
             }
             Ok(_) => {
                 let eof_tail = line.last() != Some(&b'\n');
-                let text = String::from_utf8_lossy(&line);
+                let text = String::from_utf8_lossy(&line).into_owned();
                 let trimmed = text.trim();
                 if !trimmed.is_empty() {
-                    let resp = respond(trimmed, server, ids);
-                    writeln!(writer, "{resp}")?;
+                    serve_line(trimmed, server, ids, &mut writer)?;
                 }
                 line.clear();
                 if eof_tail {
@@ -137,68 +146,186 @@ fn handle_conn(
     }
 }
 
-fn respond(line: &str, server: &ServerHandle, ids: &AtomicU64) -> Json {
+/// Has the peer's connection *failed* (reset/broken)? An orderly FIN
+/// (`peek` = 0 bytes) is deliberately NOT treated as gone: a client may
+/// half-close its write side after sending a request and still be reading
+/// the response (`printf ... | nc` does exactly this), and `handle_conn`'s
+/// EOF path serves that final request. A fully-closed peer is detected when
+/// a token/response write fails (RST), which is the cancellation signal for
+/// streams. Pending pipelined bytes read as "alive" and are left unconsumed.
+fn conn_closed(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    match stream.peek(&mut probe) {
+        Ok(_) => false,
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::Interrupted
+            ) =>
+        {
+            false
+        }
+        Err(_) => true,
+    }
+}
+
+/// Parse one request line and serve it — unary or streaming — onto `writer`.
+/// IO errors on `writer` (client gone) cancel the in-flight request so the
+/// scheduler frees its KV blocks immediately.
+fn serve_line(
+    line: &str,
+    server: &ServerHandle,
+    ids: &AtomicU64,
+    writer: &mut TcpStream,
+) -> Result<()> {
     let id = ids.fetch_add(1, Ordering::Relaxed);
-    match Json::parse(line) {
-        Ok(j) => {
-            let req = GenRequest {
-                id,
-                prompt: j.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string(),
-                max_new_tokens: j
-                    .get("max_new_tokens")
-                    .and_then(|v| v.as_usize())
-                    .unwrap_or(32),
-                temperature: j
-                    .get("temperature")
-                    .and_then(|v| v.as_f64())
-                    .unwrap_or(0.7) as f32,
-                top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
-                seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
-            };
-            match server.submit(req).recv() {
-                Ok(r) => {
-                    if let Some(err) = r.error {
-                        // Rejected at admission (e.g. KV cache above the budget).
-                        Json::obj(vec![
-                            ("id", Json::Num(r.id as f64)),
-                            ("error", Json::Str(err)),
-                        ])
-                    } else {
-                        Json::obj(vec![
-                            ("id", Json::Num(r.id as f64)),
-                            ("text", Json::Str(r.text)),
-                            ("tokens", Json::Num(r.tokens.len() as f64)),
-                            ("ttft_ms", Json::Num(r.ttft * 1e3)),
-                            ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
-                        ])
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            let resp = Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("error", Json::Str(format!("bad request: {e}"))),
+            ]);
+            writeln!(writer, "{resp}")?;
+            return Ok(());
+        }
+    };
+    let stream_mode = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    let req = GenRequest {
+        id,
+        prompt: j.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string(),
+        max_new_tokens: j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32),
+        temperature: j.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.7) as f32,
+        top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
+        seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
+    };
+
+    if stream_mode {
+        let rx = server.submit_stream(req);
+        loop {
+            match next_event(&rx, writer) {
+                Wait::Event(StreamEvent::Token { id, index, token, text }) => {
+                    let ev = Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("index", Json::Num(index as f64)),
+                        ("token", Json::Num(token as f64)),
+                        ("text", Json::Str(text)),
+                        ("done", Json::Bool(false)),
+                    ]);
+                    if writeln!(writer, "{ev}").is_err() {
+                        // Client vanished mid-stream: cancel so the scheduler
+                        // frees the sequence's KV blocks this round.
+                        server.cancel(id);
+                        return Ok(());
                     }
                 }
-                Err(_) => Json::obj(vec![
-                    ("id", Json::Num(id as f64)),
-                    ("error", Json::Str("server shut down before responding".into())),
-                ]),
+                Wait::Event(StreamEvent::Done(r)) => {
+                    let mut resp = final_json(r);
+                    if let Json::Obj(map) = &mut resp {
+                        map.insert("done".to_string(), Json::Bool(true));
+                    }
+                    writeln!(writer, "{resp}")?;
+                    return Ok(());
+                }
+                Wait::PeerGone => {
+                    server.cancel(id);
+                    return Ok(());
+                }
+                Wait::ServerGone => {
+                    let mut resp = server_gone_json(id);
+                    if let Json::Obj(map) = &mut resp {
+                        map.insert("done".to_string(), Json::Bool(true));
+                    }
+                    writeln!(writer, "{resp}")?;
+                    return Ok(());
+                }
             }
         }
-        Err(e) => Json::obj(vec![
-            ("id", Json::Num(id as f64)),
-            ("error", Json::Str(format!("bad request: {e}"))),
-        ]),
     }
+
+    let rx = server.submit(req);
+    let resp = match next_event(&rx, writer) {
+        Wait::Event(r) => final_json(r),
+        Wait::PeerGone => {
+            server.cancel(id);
+            return Ok(());
+        }
+        Wait::ServerGone => server_gone_json(id),
+    };
+    writeln!(writer, "{resp}")?;
+    Ok(())
+}
+
+/// Outcome of waiting on the batcher while watching the client's socket.
+enum Wait<T> {
+    Event(T),
+    /// The connection failed (reset/broken) while waiting: cancel the request.
+    PeerGone,
+    /// The server shut down before responding.
+    ServerGone,
+}
+
+/// Cancellation-aware wait shared by the unary and streaming paths: block on
+/// the batcher in 50 ms slices, probing the socket between slices so a dead
+/// client cancels the request instead of it decoding to completion against a
+/// closed connection.
+fn next_event<T>(rx: &std::sync::mpsc::Receiver<T>, stream: &TcpStream) -> Wait<T> {
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Ok(ev) => return Wait::Event(ev),
+            Err(RecvTimeoutError::Timeout) => {
+                if conn_closed(stream) {
+                    return Wait::PeerGone;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return Wait::ServerGone,
+        }
+    }
+}
+
+fn server_gone_json(id: u64) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str("server shut down before responding".into())),
+    ])
+}
+
+/// The terminal response object shared by unary and streaming requests.
+fn final_json(r: GenResponse) -> Json {
+    if let Some(err) = r.error {
+        // Rejected at admission (e.g. KV needs above the budget).
+        return Json::obj(vec![("id", Json::Num(r.id as f64)), ("error", Json::Str(err))]);
+    }
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("text", Json::Str(r.text)),
+        ("tokens", Json::Num(r.tokens.len() as f64)),
+        ("ttft_ms", Json::Num(r.ttft * 1e3)),
+        ("tok_per_sec", Json::Num(r.decode_tok_per_sec)),
+    ])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::ServerConfig;
+    use crate::model::kv::{KvArena, KvLayout};
     use crate::model::{ModelConfig, Transformer, WeightStore};
 
-    fn tiny_server() -> Arc<ServerHandle> {
+    fn tiny_cfg() -> ModelConfig {
         let mut cfg = ModelConfig::nano();
         cfg.d_model = 32;
         cfg.n_heads = 2;
         cfg.d_ff = 64;
         cfg.n_layers = 1;
         cfg.max_seq = 64;
+        cfg
+    }
+
+    fn tiny_server() -> Arc<ServerHandle> {
+        let cfg = tiny_cfg();
         let model = Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 3)));
         Arc::new(ServerHandle::spawn(model, ServerConfig::default()))
     }
@@ -227,6 +354,112 @@ mod tests {
     }
 
     #[test]
+    fn tcp_streaming_emits_token_lines_then_done() {
+        let server = tiny_server();
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        // Reference: the same deterministic request served unary.
+        let want = roundtrip(
+            fe.addr,
+            r#"{"prompt": "s", "max_new_tokens": 5, "temperature": 0, "top_k": 1, "seed": 9}"#,
+        );
+        let want_text = want.get("text").unwrap().as_str().unwrap().to_string();
+
+        let mut s = TcpStream::connect(fe.addr).unwrap();
+        let line = concat!(
+            r#"{"prompt": "s", "max_new_tokens": 5, "temperature": 0, "top_k": 1,"#,
+            r#" "seed": 9, "stream": true}"#
+        );
+        writeln!(s, "{line}").unwrap();
+        let mut r = BufReader::new(s);
+        let mut n_tokens = 0usize;
+        loop {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            if j.get("done").unwrap().as_bool().unwrap() {
+                // The terminal line carries the same full response as unary.
+                assert_eq!(j.get("tokens").unwrap().as_usize(), Some(5));
+                assert_eq!(j.get("text").unwrap().as_str().unwrap(), want_text);
+                break;
+            }
+            assert_eq!(j.get("index").unwrap().as_usize(), Some(n_tokens));
+            assert!(j.get("token").unwrap().as_usize().unwrap() < 256, "byte-vocab token");
+            n_tokens += 1;
+        }
+        assert_eq!(n_tokens, 5, "one token line per generated token");
+        fe.shutdown();
+    }
+
+    #[test]
+    fn tcp_disconnect_mid_generation_cancels_and_frees_blocks() {
+        // A streaming client that vanishes mid-generation must not pin KV:
+        // size the arena so a follow-up full-length request only fits once
+        // the dead request's blocks are reclaimed.
+        let cfg = tiny_cfg();
+        let block = 8usize;
+        let budget = cfg.max_seq.div_ceil(block) * KvArena::block_bytes(&cfg, block);
+        let model = Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 3)));
+        let server = Arc::new(ServerHandle::spawn(
+            model,
+            ServerConfig {
+                max_batch: 2,
+                kv_budget_bytes: budget,
+                kv_block: block,
+                kv_layout: KvLayout::Paged,
+                ..Default::default()
+            },
+        ));
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+
+        // Start a long streaming request, read one token line, then vanish.
+        let mut s = TcpStream::connect(fe.addr).unwrap();
+        let line =
+            r#"{"prompt": "long", "max_new_tokens": 60, "temperature": 0, "stream": true}"#;
+        writeln!(s, "{line}").unwrap();
+        let mut r = BufReader::new(s);
+        let mut first = String::new();
+        r.read_line(&mut first).unwrap();
+        assert!(Json::parse(&first).unwrap().get("token").is_some());
+        drop(r); // closes the socket: FIN / RST on the next token write
+
+        // The follow-up needs most of the arena; it can only complete if the
+        // cancelled request's blocks were reclaimed.
+        let resp = roundtrip(
+            fe.addr,
+            r#"{"prompt": "after", "max_new_tokens": 50, "temperature": 0}"#,
+        );
+        assert_eq!(
+            resp.get("tokens").and_then(|t| t.as_usize()),
+            Some(50),
+            "post-disconnect request failed: {resp}"
+        );
+        fe.shutdown();
+    }
+
+    #[test]
+    fn tcp_half_close_client_still_gets_response() {
+        // A client that sends a request and then shuts down its write side
+        // (`printf ... | nc` style) is NOT a disconnect: the final request
+        // must be served, not cancelled — the FIN only closes their send
+        // direction while they keep reading.
+        let server = tiny_server();
+        let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let mut s = TcpStream::connect(fe.addr).unwrap();
+        writeln!(s, r#"{{"prompt": "half", "max_new_tokens": 24, "temperature": 0}}"#).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut r = BufReader::new(s);
+        let mut out = String::new();
+        r.read_line(&mut out).unwrap();
+        let resp = Json::parse(&out).unwrap();
+        assert_eq!(
+            resp.get("tokens").and_then(|t| t.as_usize()),
+            Some(24),
+            "half-closed client must still be answered: {resp}"
+        );
+        fe.shutdown();
+    }
+
+    #[test]
     fn tcp_bad_request_reports_error() {
         let server = tiny_server();
         let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
@@ -237,14 +470,9 @@ mod tests {
 
     #[test]
     fn tcp_unservable_request_gets_error_line() {
-        // A server whose KV budget can't hold even one sequence must answer
+        // A server whose KV budget can't hold even one block must answer
         // over the wire with an error object instead of hanging the connection.
-        let mut cfg = ModelConfig::nano();
-        cfg.d_model = 32;
-        cfg.n_heads = 2;
-        cfg.d_ff = 64;
-        cfg.n_layers = 1;
-        cfg.max_seq = 64;
+        let cfg = tiny_cfg();
         let model = Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 3)));
         let server = Arc::new(ServerHandle::spawn(
             model,

@@ -68,6 +68,11 @@ pub struct ArtifactInfo {
     /// e.g. `"3inst L=12 k=2 V=1 tiles 16x16"`.
     pub quant_desc: String,
     pub quantized_layers: usize,
+    /// KV-block geometry (positions per arena block) recorded at save time —
+    /// no KV data lives in the artifact, but the manifest carries the serving
+    /// geometry so a cold-started server defaults to it (0 when the manifest
+    /// predates the field).
+    pub kv_block: usize,
 }
 
 /// Append-only blob builder; returns byte offsets for the manifest.
@@ -220,12 +225,28 @@ fn quant_desc(qm: &QuantizedMatrix) -> String {
 ///
 /// Every decoder linear must be `Linear::Quantized`; embeddings, norms, and
 /// the head travel as dense f32 sections so the load path needs nothing but
-/// the artifact pair.
+/// the artifact pair. Records the ambient KV-block geometry
+/// (`QTIP_KV_BLOCK` env > default) in the manifest; a CLI `--kv-block` must
+/// go through [`save_quantized_model_with_kv_block`].
 pub fn save_quantized_model(
     dir: &Path,
     name: &str,
     model: &Transformer,
     report: &QuantizeReport,
+) -> Result<ArtifactInfo> {
+    let kv_block = crate::model::kv::resolve_kv_block(0, 0);
+    save_quantized_model_with_kv_block(dir, name, model, report, kv_block)
+}
+
+/// [`save_quantized_model`] with an explicit KV-block geometry to record in
+/// the manifest (the `quantize --save --kv-block N` path — the CLI flag
+/// outranks the env var, so the caller resolves precedence).
+pub fn save_quantized_model_with_kv_block(
+    dir: &Path,
+    name: &str,
+    model: &Transformer,
+    report: &QuantizeReport,
+    kv_block: usize,
 ) -> Result<ArtifactInfo> {
     if name.is_empty()
         || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
@@ -326,12 +347,16 @@ pub fn save_quantized_model(
 
     let checksum = fnv1a64(&blob.buf);
     let quantized_layers = layer_entries.len();
+    // No KV tensors are persisted (they are runtime state), but the manifest
+    // records the KV-block geometry in effect at save time so cold-started
+    // servers default to the same arena shape.
     let manifest = Json::obj(vec![
         ("kind", Json::Str(ARTIFACT_KIND.into())),
         ("format_version", num(FORMAT_VERSION)),
         ("model_config", model.cfg.to_json()),
         ("quant_desc", Json::Str(desc.clone())),
         ("quantized_layers", num(quantized_layers)),
+        ("kv_block", num(kv_block)),
         ("blob_file", Json::Str(format!("quant_{name}.bin"))),
         ("blob_bytes", num(blob.buf.len())),
         ("checksum_fnv1a64", Json::Str(format!("{checksum:016x}"))),
@@ -352,6 +377,7 @@ pub fn save_quantized_model(
         config: model.cfg.clone(),
         quant_desc: desc,
         quantized_layers,
+        kv_block,
     })
 }
 
@@ -604,6 +630,9 @@ fn reassemble_model(
         config: cfg,
         quant_desc: j.req_str("quant_desc").to_string(),
         quantized_layers: j.req_usize("quantized_layers"),
+        // Optional: manifests saved before the paged KV arena carry no
+        // geometry; 0 lets the serve path fall through to its default.
+        kv_block: j.get("kv_block").and_then(|v| v.as_usize()).unwrap_or(0),
     };
     Ok((model, report, info))
 }
@@ -655,6 +684,7 @@ pub fn list_quantized_artifacts(dir: &Path) -> Vec<ArtifactInfo> {
             config: ModelConfig::from_json(cfg_json),
             quant_desc: desc.to_string(),
             quantized_layers: nlayers,
+            kv_block: j.get("kv_block").and_then(|v| v.as_usize()).unwrap_or(0),
         });
     }
     out
@@ -725,6 +755,10 @@ mod tests {
         assert_eq!(linfo.quantized_layers, 7);
         assert_eq!(lreport.layers.len(), report.layers.len());
         assert_eq!(lreport.bytes_after, report.bytes_after);
+        // The manifest records the save-time KV geometry (no KV data itself),
+        // and it round-trips through load.
+        assert_eq!(info.kv_block, crate::model::kv::resolve_kv_block(0, 0));
+        assert_eq!(linfo.kv_block, info.kv_block);
 
         // Every packed word, sign, and scale bit must round-trip exactly.
         for ((n1, a), (n2, b)) in model.linears().iter().zip(loaded.linears().iter()) {
@@ -778,10 +812,13 @@ mod tests {
         assert!(list_quantized_artifacts(&dir).is_empty());
         let (model, report) = tiny_quantized("3inst", 1);
         save_quantized_model(&dir, "alpha", &model, &report).unwrap();
-        save_quantized_model(&dir, "beta", &model, &report).unwrap();
+        // An explicit geometry (the `--kv-block` path) must be recorded and
+        // listed verbatim, outranking env/default.
+        save_quantized_model_with_kv_block(&dir, "beta", &model, &report, 8).unwrap();
         let infos = list_quantized_artifacts(&dir);
         assert_eq!(infos.len(), 2);
         assert_eq!(infos[0].name, "alpha");
+        assert_eq!(infos[1].kv_block, 8, "explicit --kv-block geometry must round-trip");
         assert_eq!(infos[1].name, "beta");
         assert!(infos[0].quant_desc.contains("3inst"));
         assert_eq!(infos[0].config.name, "tiny");

@@ -27,6 +27,13 @@
 //! the decode-matvec kernel family (precedence `--kernel` > `QTIP_KERNEL` >
 //! auto); `info` prints the resolved selection. Scalar and lane kernels are
 //! bit-identical — the flag trades speed, never output.
+//!
+//! `serve` additionally takes `--kv-layout auto|contig|paged` (auto → paged:
+//! the block-arena continuous batcher; contig keeps the sequence-granular
+//! reference scheduler) and `--kv-block N` for the arena geometry (precedence
+//! `--kv-block` > `QTIP_KV_BLOCK` > the artifact manifest's recorded
+//! geometry > 32). Both layouts emit bit-identical tokens — the flags trade
+//! admission capacity, never output.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -39,7 +46,8 @@ use qtip::coordinator::{
 use qtip::eval::{perplexity_pool, zeroshot_suite_pool};
 use qtip::hessian::collect_hessians;
 use qtip::model::{
-    calibration_split, eval_split, load_corpus, ModelConfig, Transformer, WeightStore,
+    calibration_split, eval_split, load_corpus, resolve_kv_block, KvLayout, ModelConfig,
+    Transformer, WeightStore,
 };
 use qtip::quant::{kernel, KernelKind, QtipConfig};
 use qtip::util::threadpool::{resolve_workers, ExecPool};
@@ -158,6 +166,20 @@ fn cmd_info(args: &Args) -> Result<()> {
         "  intra-op: decode matvecs, GEMMs, per-layer quantize jobs, and artifact \
          loads all stripe across this pool"
     );
+    // Propagate a bad --kv-layout spelling instead of silently reporting the
+    // default — `info` is where users check their flags before a long serve.
+    let layout = kv_layout_from_args(args)?;
+    println!(
+        "  kv layout: {} (resolves to '{}'; --kv-layout auto|contig|paged; both layouts \
+         emit bit-identical tokens)",
+        layout.name(),
+        layout.resolve().name()
+    );
+    println!(
+        "  kv block: {} positions (precedence --kv-block > QTIP_KV_BLOCK > artifact \
+         manifest > 32); the serve arena leases blocks per sequence on demand",
+        resolve_kv_block(args.get_usize("kv-block", 0), 0)
+    );
     Ok(())
 }
 
@@ -190,8 +212,13 @@ fn quantize_inner(args: &Args, allow_random: bool) -> Result<(Transformer, Quant
 
 /// Acquire a quantized model: cold-start from a saved artifact when
 /// `--artifact <name>` is given (no calibration, no quantization), otherwise
-/// run the full quantization pipeline.
-fn quantized_model(args: &Args, allow_random: bool) -> Result<(Transformer, QuantizeReport)> {
+/// run the full quantization pipeline. The third element is the artifact
+/// manifest's recorded KV-block geometry (0 when quantizing fresh) — the
+/// lowest-precedence default for `serve`'s arena geometry.
+fn quantized_model(
+    args: &Args,
+    allow_random: bool,
+) -> Result<(Transformer, QuantizeReport, usize)> {
     if let Some(name) = args.get("artifact") {
         let timer = Timer::start();
         let pool = make_pool(args);
@@ -204,9 +231,10 @@ fn quantized_model(args: &Args, allow_random: bool) -> Result<(Transformer, Quan
             info.blob_bytes,
             timer.secs()
         );
-        Ok((model, report))
+        Ok((model, report, info.kv_block))
     } else {
-        quantize_inner(args, allow_random)
+        let (model, report) = quantize_inner(args, allow_random)?;
+        Ok((model, report, 0))
     }
 }
 
@@ -222,7 +250,16 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         report.mean_relative_proxy()
     );
     if let Some(save_name) = args.get("save") {
-        let info = qtip::io::save_quantized_model(&artifacts_dir(), save_name, &model, &report)?;
+        // Record the resolved geometry (--kv-block > QTIP_KV_BLOCK > 32) in
+        // the manifest so cold-started serves default to it.
+        let kv_block = resolve_kv_block(args.get_usize("kv-block", 0), 0);
+        let info = qtip::io::save_quantized_model_with_kv_block(
+            &artifacts_dir(),
+            save_name,
+            &model,
+            &report,
+            kv_block,
+        )?;
         println!(
             "saved quantized artifact '{save_name}' -> {:?} ({} blob bytes, {} layers); \
              cold-start it with `qtip serve --artifact {save_name}`",
@@ -244,7 +281,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     // Acquire the quantized model first: with --artifact, the fp32 baseline
     // must come from the model the artifact was quantized from, not whatever
     // --model defaults to — otherwise the comparison is cross-model garbage.
-    let (mut qmodel, report) = quantized_model(args, true)?;
+    let (mut qmodel, report, _) = quantized_model(args, true)?;
     let dense_name = qmodel.cfg.name.clone();
     if let Some(explicit) = args.get("model") {
         if args.get("artifact").is_some() && explicit != dense_name {
@@ -287,14 +324,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let mut model = if args.has_flag("fp32") {
-        load_model(args.get_or("model", "nano"), args.has_flag("allow-random"))?
+    let (mut model, artifact_kv_block) = if args.has_flag("fp32") {
+        (load_model(args.get_or("model", "nano"), args.has_flag("allow-random"))?, 0)
     } else {
-        quantized_model(args, args.has_flag("allow-random"))?.0
+        let (m, _, kvb) = quantized_model(args, args.has_flag("allow-random"))?;
+        (m, kvb)
     };
     model.ensure_caches();
-    let server_cfg =
-        ServerConfig { threads: args.get_usize("threads", 0), ..Default::default() };
+    let server_cfg = ServerConfig {
+        threads: args.get_usize("threads", 0),
+        kv_layout: kv_layout_from_args(args)?,
+        kv_block: resolve_kv_block(args.get_usize("kv-block", 0), artifact_kv_block),
+        ..Default::default()
+    };
     let server = ServerHandle::spawn(Arc::new(model), server_cfg);
     let req = GenRequest {
         id: 0,
@@ -325,15 +367,45 @@ fn print_server_stats(stats: &ServerStats) {
         stats.workers,
         stats.kernel
     );
+    println!(
+        "  scheduling: {} kv layout, peak active {}, queue high-water {}, {} evictions, \
+         {} rejected, {} cancelled",
+        stats.kv_layout,
+        stats.peak_active,
+        stats.queue_high_water,
+        stats.evictions,
+        stats.rejected,
+        stats.cancelled
+    );
+    if stats.kv_blocks_total > 0 {
+        println!(
+            "  kv arena: {} blocks x {} positions, high-water {} blocks ({} B peak)",
+            stats.kv_blocks_total,
+            stats.kv_block_positions,
+            stats.kv_blocks_high_water,
+            stats.peak_kv_bytes
+        );
+    }
+}
+
+/// `--kv-layout auto|contig|paged` (default auto → paged).
+fn kv_layout_from_args(args: &Args) -> Result<KvLayout> {
+    match args.get("kv-layout") {
+        Some(spec) => KvLayout::parse(spec).map_err(anyhow::Error::msg),
+        None => Ok(KvLayout::Auto),
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (mut model, report) = quantized_model(args, args.has_flag("allow-random"))?;
+    let (mut model, report, artifact_kv_block) =
+        quantized_model(args, args.has_flag("allow-random"))?;
     model.ensure_caches();
     let server_cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 4),
         kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
         threads: args.get_usize("threads", 0),
+        kv_layout: kv_layout_from_args(args)?,
+        kv_block: resolve_kv_block(args.get_usize("kv-block", 0), artifact_kv_block),
     };
     // Network mode: expose the batcher over newline-JSON TCP until Ctrl-C,
     // then close the frontend, drain in-flight requests, and report stats.
@@ -415,7 +487,7 @@ fn main() -> Result<()> {
                 "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> \
                  [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
                  [--artifact NAME] [--threads N] [--kernel auto|scalar|lanes] \
-                 [--allow-random] ..."
+                 [--kv-layout auto|contig|paged] [--kv-block N] [--allow-random] ..."
             );
             std::process::exit(2);
         }

@@ -1,0 +1,423 @@
+//! KV-cache storage for the serving path.
+//!
+//! Two layouts back the decode attention:
+//!
+//! * [`KvCache`] — the historical per-sequence contiguous cache
+//!   (`n_layers × max_seq × d_model` K and V, eagerly allocated). It remains
+//!   the **reference implementation**: simple, provably correct, and the
+//!   baseline every paged result is parity-tested against.
+//! * [`KvArena`] + [`KvSeq`] — the paged layout. One shared block pool per
+//!   server; sequences lease fixed-size blocks (default
+//!   [`DEFAULT_KV_BLOCK`] = 32 positions, all layers' K and V together) on
+//!   demand through a per-sequence block table, so KV memory scales with the
+//!   tokens actually resident instead of `max_seq` per admitted sequence.
+//!   With QTIP weights trellis-compressed to 2–4 bits, the KV cache is the
+//!   dominant serving allocation — block-granular accounting is what lets the
+//!   continuous batcher admit mixed-length traffic far beyond the
+//!   sequence-granular budget.
+//!
+//! Both layouts store bit-identical rows in the same order, so attention over
+//! a block table reproduces the contiguous path's logits exactly (see the
+//! parity tests in `transformer.rs` and `tests/paging_parity.rs`).
+
+use crate::model::config::ModelConfig;
+use crate::util::matrix::Matrix;
+
+/// Default positions per KV block (tokens per lease).
+pub const DEFAULT_KV_BLOCK: usize = 32;
+
+/// Resolve the block geometry: `cli` (`--kv-block`, 0 = unset) >
+/// `QTIP_KV_BLOCK` env > `fallback` (e.g. the artifact manifest's recorded
+/// geometry, 0 = unset) > [`DEFAULT_KV_BLOCK`]. An unparsable env value is
+/// ignored rather than aborting a serve.
+pub fn resolve_kv_block(cli: usize, fallback: usize) -> usize {
+    resolve_kv_block_from(cli, std::env::var("QTIP_KV_BLOCK").ok().as_deref(), fallback)
+}
+
+/// Pure precedence rule behind [`resolve_kv_block`] (testable without
+/// touching process env).
+pub fn resolve_kv_block_from(cli: usize, env: Option<&str>, fallback: usize) -> usize {
+    if cli > 0 {
+        return cli;
+    }
+    if let Some(v) = env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        if v > 0 {
+            return v;
+        }
+    }
+    if fallback > 0 {
+        return fallback;
+    }
+    DEFAULT_KV_BLOCK
+}
+
+/// Which KV layout the server schedules over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Defer to the build's default (currently [`KvLayout::Paged`]).
+    Auto,
+    /// Per-sequence contiguous caches with sequence-granular admission — the
+    /// reference scheduler (static round batching).
+    Contig,
+    /// Shared block arena with token-granular continuous batching.
+    Paged,
+}
+
+impl KvLayout {
+    /// Parse a CLI/env spelling: `auto` | `contig` | `paged`.
+    pub fn parse(s: &str) -> Result<KvLayout, String> {
+        match s.trim() {
+            "auto" => Ok(KvLayout::Auto),
+            "contig" => Ok(KvLayout::Contig),
+            "paged" => Ok(KvLayout::Paged),
+            other => Err(format!("unknown kv layout '{other}' (expected auto | contig | paged)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvLayout::Auto => "auto",
+            KvLayout::Contig => "contig",
+            KvLayout::Paged => "paged",
+        }
+    }
+
+    /// Resolve `Auto` to the concrete layout the server will schedule over.
+    /// Both layouts are bit-identical per sequence, so `Auto` simply picks
+    /// the one that admits more traffic.
+    pub fn resolve(self) -> KvLayout {
+        match self {
+            KvLayout::Auto => KvLayout::Paged,
+            k => k,
+        }
+    }
+}
+
+/// Per-sequence contiguous KV cache (reference layout).
+pub struct KvCache {
+    /// Per layer: (keys, values), each `max_seq × d_model` with `len` rows valid.
+    pub k: Vec<Matrix>,
+    pub v: Vec<Matrix>,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model)).collect(),
+            len: 0,
+            capacity: cfg.max_seq,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes held (for the server's cache manager accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|m| m.data.len() * 4).sum()
+    }
+
+    /// Bytes a cache built from `cfg` will hold, without allocating one — the
+    /// server's per-round admission check must not allocate full K/V buffers
+    /// just to read their size.
+    pub fn size_bytes_for(cfg: &ModelConfig) -> usize {
+        2 * cfg.n_layers * cfg.max_seq * cfg.d_model * 4
+    }
+}
+
+/// A sequence's lease on arena blocks: the block table plus the number of
+/// valid positions. Created empty; the scheduler grows it via
+/// [`KvArena::ensure`] and returns it via [`KvArena::release`].
+#[derive(Debug, Default)]
+pub struct KvSeq {
+    blocks: Vec<u32>,
+    /// Positions written so far (same meaning as `KvCache::len`).
+    pub len: usize,
+}
+
+impl KvSeq {
+    pub fn new() -> KvSeq {
+        KvSeq::default()
+    }
+
+    /// Blocks currently leased by this sequence.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// The shared paged KV arena: one flat f32 pool carved into fixed-size
+/// blocks, a free list, and per-block addressing for every layer's K and V
+/// rows. A block holds `block_positions` positions for **all** layers
+/// (`[layer][K rows | V rows]` inside the block), so one lease advances a
+/// sequence by `block_positions` tokens everywhere at once.
+pub struct KvArena {
+    n_layers: usize,
+    d_model: usize,
+    block_positions: usize,
+    n_blocks: usize,
+    data: Vec<f32>,
+    /// Free block ids (stack: release pushes, lease pops).
+    free: Vec<u32>,
+    /// Most blocks simultaneously leased over the arena's lifetime.
+    high_water: usize,
+}
+
+impl KvArena {
+    /// Build an arena of `n_blocks` blocks of `block_positions` positions
+    /// each, shaped for `cfg`'s layer count and width.
+    pub fn new(cfg: &ModelConfig, block_positions: usize, n_blocks: usize) -> KvArena {
+        assert!(block_positions > 0, "KV block must hold at least one position");
+        let stride = Self::block_floats(cfg, block_positions);
+        KvArena {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            block_positions,
+            n_blocks,
+            data: vec![0.0; n_blocks * stride],
+            free: (0..n_blocks as u32).rev().collect(),
+            high_water: 0,
+        }
+    }
+
+    fn block_floats(cfg: &ModelConfig, block_positions: usize) -> usize {
+        2 * cfg.n_layers * block_positions * cfg.d_model
+    }
+
+    /// Bytes one block occupies for `cfg` — the unit of the server's KV
+    /// budget arithmetic (must not require allocating an arena to compute).
+    pub fn block_bytes(cfg: &ModelConfig, block_positions: usize) -> usize {
+        Self::block_floats(cfg, block_positions) * 4
+    }
+
+    /// Blocks needed to hold `positions` positions at `block_positions`
+    /// granularity.
+    pub fn blocks_for_positions(positions: usize, block_positions: usize) -> usize {
+        positions.div_ceil(block_positions)
+    }
+
+    pub fn block_positions(&self) -> usize {
+        self.block_positions
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Most blocks simultaneously leased since construction.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Blocks this arena needs to hold `positions` positions of one sequence.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        Self::blocks_for_positions(positions, self.block_positions)
+    }
+
+    /// Positions `seq` can hold with its current leases.
+    pub fn seq_capacity(&self, seq: &KvSeq) -> usize {
+        seq.blocks.len() * self.block_positions
+    }
+
+    /// Lease one more block onto `seq`'s table. Returns false when the free
+    /// list is empty (the scheduler then evicts or waits).
+    pub fn lease(&mut self, seq: &mut KvSeq) -> bool {
+        match self.free.pop() {
+            Some(b) => {
+                seq.blocks.push(b);
+                self.high_water = self.high_water.max(self.blocks_in_use());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Lease blocks until `seq` can hold `positions` positions. On failure
+    /// the blocks already leased stay on the table (the scheduler either
+    /// evicts another sequence and retries, or releases this one).
+    pub fn ensure(&mut self, seq: &mut KvSeq, positions: usize) -> bool {
+        while self.seq_capacity(seq) < positions {
+            if !self.lease(seq) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Return every block `seq` holds to the free list and reset it.
+    pub fn release(&mut self, seq: &mut KvSeq) {
+        self.free.extend(seq.blocks.drain(..));
+        seq.len = 0;
+    }
+
+    #[inline]
+    fn row_offset(&self, seq: &KvSeq, layer: usize, pos: usize, is_v: bool) -> usize {
+        debug_assert!(pos < self.seq_capacity(seq), "position beyond leased blocks");
+        debug_assert!(layer < self.n_layers);
+        let blk = seq.blocks[pos / self.block_positions] as usize;
+        let row = pos % self.block_positions;
+        let stride = 2 * self.n_layers * self.block_positions * self.d_model;
+        blk * stride
+            + layer * (2 * self.block_positions * self.d_model)
+            + if is_v { self.block_positions * self.d_model } else { 0 }
+            + row * self.d_model
+    }
+
+    #[inline]
+    pub fn k_row(&self, seq: &KvSeq, layer: usize, pos: usize) -> &[f32] {
+        let off = self.row_offset(seq, layer, pos, false);
+        &self.data[off..off + self.d_model]
+    }
+
+    #[inline]
+    pub fn v_row(&self, seq: &KvSeq, layer: usize, pos: usize) -> &[f32] {
+        let off = self.row_offset(seq, layer, pos, true);
+        &self.data[off..off + self.d_model]
+    }
+
+    #[inline]
+    pub fn k_row_mut(&mut self, seq: &KvSeq, layer: usize, pos: usize) -> &mut [f32] {
+        let off = self.row_offset(seq, layer, pos, false);
+        &mut self.data[off..off + self.d_model]
+    }
+
+    #[inline]
+    pub fn v_row_mut(&mut self, seq: &KvSeq, layer: usize, pos: usize) -> &mut [f32] {
+        let off = self.row_offset(seq, layer, pos, true);
+        &mut self.data[off..off + self.d_model]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 16;
+        cfg.n_layers = 2;
+        cfg.max_seq = 64;
+        cfg
+    }
+
+    #[test]
+    fn lease_release_accounting() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        assert_eq!(arena.blocks_total(), 4);
+        assert_eq!(arena.blocks_free(), 4);
+        let mut a = KvSeq::new();
+        let mut b = KvSeq::new();
+        assert!(arena.ensure(&mut a, 20)); // 3 blocks of 8
+        assert_eq!(a.n_blocks(), 3);
+        assert_eq!(arena.blocks_free(), 1);
+        assert!(arena.ensure(&mut b, 8));
+        assert_eq!(arena.blocks_free(), 0);
+        assert_eq!(arena.high_water(), 4);
+        // Pool exhausted: the next lease must fail, not panic.
+        assert!(!arena.ensure(&mut b, 16));
+        arena.release(&mut a);
+        assert_eq!(a.n_blocks(), 0);
+        assert_eq!(a.len, 0);
+        assert_eq!(arena.blocks_free(), 3);
+        // Freed blocks are reusable.
+        assert!(arena.ensure(&mut b, 16));
+        arena.release(&mut b);
+        assert_eq!(arena.blocks_free(), 4);
+        assert_eq!(arena.high_water(), 4, "high water survives release");
+    }
+
+    #[test]
+    fn row_addressing_is_disjoint_and_stable() {
+        // Write a unique pattern into every (seq, layer, pos, k/v) row via the
+        // mut accessors, then read everything back — any overlap between rows,
+        // layers, K/V halves, or sequences would corrupt the pattern.
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 4, 8);
+        let mut seqs: Vec<KvSeq> = (0..2).map(|_| KvSeq::new()).collect();
+        let positions = 10usize; // crosses block boundaries (4-position blocks)
+        for s in seqs.iter_mut() {
+            assert!(arena.ensure(s, positions));
+        }
+        let tag = |si: usize, li: usize, pos: usize, v: bool, d: usize| {
+            (si * 100_000 + li * 10_000 + pos * 100 + (v as usize) * 10 + d) as f32
+        };
+        for (si, s) in seqs.iter().enumerate() {
+            for li in 0..cfg.n_layers {
+                for pos in 0..positions {
+                    for d in 0..cfg.d_model {
+                        arena.k_row_mut(s, li, pos)[d] = tag(si, li, pos, false, d);
+                        arena.v_row_mut(s, li, pos)[d] = tag(si, li, pos, true, d);
+                    }
+                }
+            }
+        }
+        for (si, s) in seqs.iter().enumerate() {
+            for li in 0..cfg.n_layers {
+                for pos in 0..positions {
+                    for d in 0..cfg.d_model {
+                        assert_eq!(arena.k_row(s, li, pos)[d], tag(si, li, pos, false, d));
+                        assert_eq!(arena.v_row(s, li, pos)[d], tag(si, li, pos, true, d));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let cfg = tiny_cfg();
+        let arena = KvArena::new(&cfg, 8, 4);
+        assert_eq!(arena.blocks_for(0), 0);
+        assert_eq!(arena.blocks_for(1), 1);
+        assert_eq!(arena.blocks_for(8), 1);
+        assert_eq!(arena.blocks_for(9), 2);
+        assert_eq!(KvArena::blocks_for_positions(17, 8), 3);
+    }
+
+    #[test]
+    fn block_bytes_matches_allocation() {
+        let cfg = tiny_cfg();
+        let arena = KvArena::new(&cfg, 8, 3);
+        assert_eq!(arena.data.len() * 4, 3 * KvArena::block_bytes(&cfg, 8));
+        // One full-length sequence in blocks == the contiguous cache bytes.
+        let blocks = arena.blocks_for(cfg.max_seq);
+        assert_eq!(blocks * KvArena::block_bytes(&cfg, 8), KvCache::size_bytes_for(&cfg));
+    }
+
+    #[test]
+    fn kv_block_resolution_precedence() {
+        // cli > env > fallback > default; zeros and garbage fall through.
+        assert_eq!(resolve_kv_block_from(16, Some("8"), 4), 16);
+        assert_eq!(resolve_kv_block_from(0, Some("8"), 4), 8);
+        assert_eq!(resolve_kv_block_from(0, Some("bogus"), 4), 4);
+        assert_eq!(resolve_kv_block_from(0, Some("0"), 4), 4);
+        assert_eq!(resolve_kv_block_from(0, None, 4), 4);
+        assert_eq!(resolve_kv_block_from(0, None, 0), DEFAULT_KV_BLOCK);
+    }
+
+    #[test]
+    fn kv_layout_parse_and_resolve() {
+        assert_eq!(KvLayout::parse("auto").unwrap(), KvLayout::Auto);
+        assert_eq!(KvLayout::parse("contig").unwrap(), KvLayout::Contig);
+        assert_eq!(KvLayout::parse("paged").unwrap(), KvLayout::Paged);
+        assert!(KvLayout::parse("wat").is_err());
+        assert_eq!(KvLayout::Auto.resolve(), KvLayout::Paged);
+        assert_eq!(KvLayout::Contig.resolve(), KvLayout::Contig);
+        for l in [KvLayout::Auto, KvLayout::Contig, KvLayout::Paged] {
+            assert_eq!(KvLayout::parse(l.name()).unwrap(), l);
+        }
+    }
+}

@@ -3,11 +3,13 @@
 //! Llama-style decoder with dense/quantized linear layers.
 
 pub mod config;
+pub mod kv;
 pub mod tokenizer;
 pub mod transformer;
 pub mod weights;
 
 pub use config::ModelConfig;
+pub use kv::{resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, DEFAULT_KV_BLOCK};
 pub use tokenizer::{calibration_split, eval_split, load_corpus, split_corpus, ByteTokenizer};
-pub use transformer::{DecodeScratch, KvCache, Linear, Transformer};
+pub use transformer::{DecodeScratch, Linear, Transformer};
 pub use weights::WeightStore;

@@ -10,6 +10,7 @@
 //!   compressed stream beats fp32 on bandwidth).
 
 use crate::model::config::ModelConfig;
+use crate::model::kv::{KvArena, KvCache, KvSeq};
 use crate::model::weights::WeightStore;
 use crate::quant::{KernelKind, QuantizedMatrix};
 use crate::util::matrix::{gemv, gemv_multi_pool, gemv_pool, Matrix};
@@ -165,47 +166,107 @@ pub struct Layer {
     pub mlp: Mlp,
 }
 
-/// Per-sequence KV cache.
-pub struct KvCache {
-    /// Per layer: (keys, values), each `max_seq × d_model` with `len` rows valid.
-    pub k: Vec<Matrix>,
-    pub v: Vec<Matrix>,
-    pub len: usize,
-    pub capacity: usize,
+/// Uniform view of the KV storage for one decode round: the attention core is
+/// generic over this trait, so the contiguous reference caches
+/// ([`KvCache`]) and the paged arena ([`KvArena`] + [`KvSeq`] block tables)
+/// run the **same** decode code path. Rows are read and written in the same
+/// order either way, so the two layouts are bit-identical by construction.
+pub trait KvBatch {
+    /// Sequences in the round.
+    fn n(&self) -> usize;
+    /// Positions already written for sequence `i`.
+    fn len(&self, i: usize) -> usize;
+    /// Panics when sequence `i` cannot take one more position (the contiguous
+    /// cache is full, or the scheduler failed to lease a block).
+    fn check_capacity(&self, i: usize);
+    fn k_row(&self, i: usize, layer: usize, pos: usize) -> &[f32];
+    fn v_row(&self, i: usize, layer: usize, pos: usize) -> &[f32];
+    /// Write the new K/V rows for sequence `i` at its current length.
+    fn store(&mut self, i: usize, layer: usize, k: &[f32], v: &[f32]);
+    /// Sequence `i` advanced one position this round.
+    fn advance(&mut self, i: usize);
 }
 
-impl KvCache {
-    pub fn new(cfg: &ModelConfig) -> Self {
-        KvCache {
-            k: (0..cfg.n_layers)
-                .map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model))
-                .collect(),
-            v: (0..cfg.n_layers)
-                .map(|_| Matrix::zeros(cfg.max_seq, cfg.d_model))
-                .collect(),
-            len: 0,
-            capacity: cfg.max_seq,
-        }
+/// [`KvBatch`] over per-sequence contiguous caches (the reference layout).
+pub struct ContigKv<'a, 'b>(pub &'a mut [&'b mut KvCache]);
+
+impl KvBatch for ContigKv<'_, '_> {
+    fn n(&self) -> usize {
+        self.0.len()
     }
 
-    pub fn clear(&mut self) {
-        self.len = 0;
+    fn len(&self, i: usize) -> usize {
+        self.0[i].len
     }
 
-    /// Bytes held (for the server's cache manager accounting).
-    pub fn size_bytes(&self) -> usize {
-        self.k
-            .iter()
-            .chain(self.v.iter())
-            .map(|m| m.data.len() * 4)
-            .sum()
+    fn check_capacity(&self, i: usize) {
+        assert!(self.0[i].len < self.0[i].capacity, "KV cache full");
     }
 
-    /// Bytes a cache built from `cfg` will hold, without allocating one — the
-    /// server's per-round admission check must not allocate full K/V buffers
-    /// just to read their size.
-    pub fn size_bytes_for(cfg: &ModelConfig) -> usize {
-        2 * cfg.n_layers * cfg.max_seq * cfg.d_model * 4
+    fn k_row(&self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.0[i].k[layer].row(pos)
+    }
+
+    fn v_row(&self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.0[i].v[layer].row(pos)
+    }
+
+    fn store(&mut self, i: usize, layer: usize, k: &[f32], v: &[f32]) {
+        let pos = self.0[i].len;
+        self.0[i].k[layer].row_mut(pos).copy_from_slice(k);
+        self.0[i].v[layer].row_mut(pos).copy_from_slice(v);
+    }
+
+    fn advance(&mut self, i: usize) {
+        self.0[i].len += 1;
+    }
+}
+
+/// [`KvBatch`] over the shared paged arena: each sequence reads and writes
+/// through its own block table. The scheduler must have leased enough blocks
+/// for one more position per stepping sequence ([`KvArena::ensure`]);
+/// [`KvBatch::check_capacity`] enforces that contract.
+pub struct PagedKv<'a, 'b> {
+    pub arena: &'a mut KvArena,
+    pub seqs: &'a mut [&'b mut KvSeq],
+}
+
+impl KvBatch for PagedKv<'_, '_> {
+    fn n(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn len(&self, i: usize) -> usize {
+        self.seqs[i].len
+    }
+
+    fn check_capacity(&self, i: usize) {
+        let seq = &*self.seqs[i];
+        assert!(
+            seq.len < self.arena.seq_capacity(seq),
+            "paged KV sequence has no leased block for position {} — the scheduler must \
+             KvArena::ensure capacity before the decode round",
+            seq.len
+        );
+    }
+
+    fn k_row(&self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.arena.k_row(&*self.seqs[i], layer, pos)
+    }
+
+    fn v_row(&self, i: usize, layer: usize, pos: usize) -> &[f32] {
+        self.arena.v_row(&*self.seqs[i], layer, pos)
+    }
+
+    fn store(&mut self, i: usize, layer: usize, k: &[f32], v: &[f32]) {
+        let seq = &*self.seqs[i];
+        let pos = seq.len;
+        self.arena.k_row_mut(seq, layer, pos).copy_from_slice(k);
+        self.arena.v_row_mut(seq, layer, pos).copy_from_slice(v);
+    }
+
+    fn advance(&mut self, i: usize) {
+        self.seqs[i].len += 1;
     }
 }
 
@@ -547,24 +608,27 @@ impl Transformer {
         scratch: &'s mut DecodeScratch,
         pool: &ExecPool,
     ) -> &'s [f32] {
-        self.decode_step_core(cache, token, scratch, pool);
+        let mut one = [cache];
+        let mut kv = ContigKv(&mut one);
+        self.decode_step_core(&mut kv, 0, token, scratch, pool);
         self.head.matvec_into(&scratch.x, &mut scratch.logits, &mut scratch.xt, pool);
         &scratch.logits
     }
 
-    /// Shared body of the single-token paths: advances the cache and leaves
-    /// the out-normed final hidden state in `scratch.x` (the caller applies
-    /// the head into its own logits target).
-    fn decode_step_core(
+    /// Shared body of the single-token paths: advances sequence `i` of `kv`
+    /// and leaves the out-normed final hidden state in `scratch.x` (the
+    /// caller applies the head into its own logits target).
+    fn decode_step_core<K: KvBatch>(
         &self,
-        cache: &mut KvCache,
+        kv: &mut K,
+        i: usize,
         token: u16,
         scratch: &mut DecodeScratch,
         pool: &ExecPool,
     ) {
         let cfg = &self.cfg;
-        let pos = cache.len;
-        assert!(pos < cache.capacity, "KV cache full");
+        let pos = kv.len(i);
+        kv.check_capacity(i);
         let h = cfg.n_heads;
         let dh = cfg.head_dim();
 
@@ -581,8 +645,7 @@ impl Transformer {
                 rope_rotate(&mut q[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
                 rope_rotate(&mut k[head * dh..(head + 1) * dh], pos, cfg.rope_theta);
             }
-            cache.k[li].row_mut(pos).copy_from_slice(k);
-            cache.v[li].row_mut(pos).copy_from_slice(v);
+            kv.store(i, li, k, v);
 
             let scale = 1.0 / (dh as f32).sqrt();
             attn_out.fill(0.0);
@@ -592,14 +655,14 @@ impl Transformer {
                 let qh = &q[hs..hs + dh];
                 for tk in 0..=pos {
                     scores[tk] =
-                        crate::util::matrix::dot(qh, &cache.k[li].row(tk)[hs..hs + dh]) * scale;
+                        crate::util::matrix::dot(qh, &kv.k_row(i, li, tk)[hs..hs + dh]) * scale;
                 }
                 softmax_inplace(scores);
                 for tk in 0..=pos {
                     let w = scores[tk];
-                    let vrow = &cache.v[li].row(tk)[hs..hs + dh];
-                    for i in 0..dh {
-                        attn_out[hs + i] += w * vrow[i];
+                    let vrow = &kv.v_row(i, li, tk)[hs..hs + dh];
+                    for j in 0..dh {
+                        attn_out[hs + j] += w * vrow[j];
                     }
                 }
             }
@@ -620,41 +683,19 @@ impl Transformer {
                 *xv += dn;
             }
         }
-        cache.len = pos + 1;
+        kv.advance(i);
         rmsnorm_row(x, &self.out_norm, cfg.rms_eps);
     }
 
-    /// One decode round for a whole serving batch: advance every sequence by one
-    /// token, decoding each packed weight tile **once** for all B sequences.
-    ///
-    /// Sequences are independent — each attends over its own KV cache at its own
-    /// position (heterogeneous lengths are fine); only the weight decode is
-    /// shared. Per-sequence logits are bit-identical to calling [`decode_step`]
-    /// on each (cache, token) pair separately: the fused linear kernels keep the
-    /// per-row accumulation order, and everything else (norms, RoPE, attention,
-    /// residuals) is computed per sequence.
-    ///
-    /// Returns one logits vector per sequence, in input order.
-    pub fn decode_step_batch(
-        &self,
-        caches: &mut [&mut KvCache],
-        tokens: &[u16],
-    ) -> Vec<Vec<f32>> {
-        if tokens.is_empty() {
-            assert!(caches.is_empty(), "one cache per token");
-            return Vec::new();
-        }
-        let mut scratch = DecodeScratch::new(&self.cfg);
-        let pool = ExecPool::sequential();
-        let logits = self.decode_step_batch_with(caches, tokens, &mut scratch, &pool);
-        (0..tokens.len()).map(|r| logits.row(r).to_vec()).collect()
-    }
-
-    /// Allocation-free fused decode round: one row of returned logits per
-    /// sequence, every temporary staged in `scratch`, every linear striped
-    /// across `pool`. A 1-sequence round takes the tighter single-column
-    /// kernels (no activation transpose); outputs are bit-identical either
-    /// way, and bit-identical to per-sequence [`Self::decode_step`] calls.
+    /// Allocation-free fused decode round over contiguous caches: one row of
+    /// returned logits per sequence, every temporary staged in `scratch`,
+    /// every linear striped across `pool`. A 1-sequence round takes the
+    /// tighter single-column kernels (no activation transpose); outputs are
+    /// bit-identical either way, and bit-identical to per-sequence
+    /// [`Self::decode_step`] calls. (The historical `decode_step_batch`
+    /// convenience wrapper — fresh scratch, sequential pool, and a
+    /// `Vec<Vec<f32>>` logits copy per call — is gone; hold a
+    /// [`DecodeScratch`] and read rows off the returned matrix instead.)
     pub fn decode_step_batch_with<'s>(
         &self,
         caches: &mut [&mut KvCache],
@@ -662,15 +703,48 @@ impl Transformer {
         scratch: &'s mut DecodeScratch,
         pool: &ExecPool,
     ) -> &'s Matrix {
+        let mut kv = ContigKv(caches);
+        self.decode_step_batch_kv(&mut kv, tokens, scratch, pool)
+    }
+
+    /// [`Self::decode_step_batch_with`] over the paged KV arena: each
+    /// sequence attends through its own block table. The scheduler must have
+    /// leased capacity for one more position per sequence
+    /// ([`KvArena::ensure`]). Bit-identical to the contiguous path — same
+    /// rows, same order, different addressing.
+    pub fn decode_step_batch_paged<'s>(
+        &self,
+        arena: &mut KvArena,
+        seqs: &mut [&mut KvSeq],
+        tokens: &[u16],
+        scratch: &'s mut DecodeScratch,
+        pool: &ExecPool,
+    ) -> &'s Matrix {
+        let mut kv = PagedKv { arena, seqs };
+        self.decode_step_batch_kv(&mut kv, tokens, scratch, pool)
+    }
+
+    /// One decode round for a whole serving batch: advance every sequence by
+    /// one token, decoding each packed weight tile **once** for all B
+    /// sequences. Sequences are independent — each attends over its own KV
+    /// state at its own position (heterogeneous lengths are fine); only the
+    /// weight decode is shared.
+    fn decode_step_batch_kv<'s, K: KvBatch>(
+        &self,
+        kv: &mut K,
+        tokens: &[u16],
+        scratch: &'s mut DecodeScratch,
+        pool: &ExecPool,
+    ) -> &'s Matrix {
         let b = tokens.len();
-        assert_eq!(caches.len(), b, "one cache per token");
+        assert_eq!(kv.n(), b, "one KV sequence per token");
         let cfg = &self.cfg;
         if b == 0 {
             scratch.blogits.reshape_scratch(0, cfg.vocab);
             return &scratch.blogits;
         }
         if b == 1 {
-            self.decode_step_core(&mut *caches[0], tokens[0], scratch, pool);
+            self.decode_step_core(kv, 0, tokens[0], scratch, pool);
             scratch.blogits.reshape_scratch(1, cfg.vocab);
             self.head.matvec_into(
                 &scratch.x,
@@ -682,8 +756,8 @@ impl Transformer {
         }
         let h = cfg.n_heads;
         let dh = cfg.head_dim();
-        for c in caches.iter() {
-            assert!(c.len < c.capacity, "KV cache full");
+        for i in 0..b {
+            kv.check_capacity(i);
         }
 
         let DecodeScratch {
@@ -706,22 +780,20 @@ impl Transformer {
             layer.attn.k.matvec_multi_into(bxn, bk, bxt, xcol, pool);
             layer.attn.v.matvec_multi_into(bxn, bv, bxt, xcol, pool);
             for bi in 0..b {
-                let pos = caches[bi].len;
+                let pos = kv.len(bi);
                 let theta = cfg.rope_theta;
                 for head in 0..h {
                     rope_rotate(&mut bq.row_mut(bi)[head * dh..(head + 1) * dh], pos, theta);
                     rope_rotate(&mut bk.row_mut(bi)[head * dh..(head + 1) * dh], pos, theta);
                 }
-                caches[bi].k[li].row_mut(pos).copy_from_slice(bk.row(bi));
-                caches[bi].v[li].row_mut(pos).copy_from_slice(bv.row(bi));
+                kv.store(bi, li, bk.row(bi), bv.row(bi));
             }
 
             let scale = 1.0 / (dh as f32).sqrt();
             battn.reshape_scratch(b, cfg.d_model);
             battn.data.fill(0.0);
             for bi in 0..b {
-                let pos = caches[bi].len;
-                let cache = &*caches[bi];
+                let pos = kv.len(bi);
                 let out = battn.row_mut(bi);
                 let scores = &mut scores[..pos + 1];
                 for head in 0..h {
@@ -729,13 +801,13 @@ impl Transformer {
                     let qh = &bq.row(bi)[hs..hs + dh];
                     for tk in 0..=pos {
                         scores[tk] =
-                            crate::util::matrix::dot(qh, &cache.k[li].row(tk)[hs..hs + dh])
+                            crate::util::matrix::dot(qh, &kv.k_row(bi, li, tk)[hs..hs + dh])
                                 * scale;
                     }
                     softmax_inplace(scores);
                     for tk in 0..=pos {
                         let w = scores[tk];
-                        let vrow = &cache.v[li].row(tk)[hs..hs + dh];
+                        let vrow = &kv.v_row(bi, li, tk)[hs..hs + dh];
                         for i in 0..dh {
                             out[hs + i] += w * vrow[i];
                         }
@@ -759,8 +831,8 @@ impl Transformer {
             x.axpy(1.0, bdown);
         }
 
-        for cache in caches.iter_mut() {
-            cache.len += 1;
+        for i in 0..b {
+            kv.advance(i);
         }
         for r in 0..b {
             rmsnorm_row(x.row_mut(r), &self.out_norm, cfg.rms_eps);
@@ -916,8 +988,12 @@ mod tests {
             ref_logits.push(s.iter().map(|&t| m.decode_step(&mut cache, t)).collect());
         }
 
-        // Fused: one decode_step_batch round per position, dropping sequences
-        // as they run out of tokens (so batch composition changes mid-flight).
+        // Fused: one decode_step_batch_with round per position through one
+        // persistent scratch, dropping sequences as they run out of tokens
+        // (so batch composition changes mid-flight). Logits are read straight
+        // off the returned matrix rows — no per-round Vec<Vec<f32>> copies.
+        let mut scratch = DecodeScratch::new(&m.cfg);
+        let pool = ExecPool::sequential();
         let mut caches: Vec<KvCache> = (0..3).map(|_| KvCache::new(&m.cfg)).collect();
         let max_len = streams.iter().map(|s| s.len()).max().unwrap();
         for pos in 0..max_len {
@@ -935,10 +1011,11 @@ mod tests {
                     refs.push(c);
                 }
             }
-            let logits = m.decode_step_batch(&mut refs, &tokens);
+            let logits = m.decode_step_batch_with(&mut refs, &tokens, &mut scratch, &pool);
             for (j, &i) in idxs.iter().enumerate() {
                 assert_eq!(
-                    logits[j], ref_logits[i][pos],
+                    logits.row(j),
+                    &ref_logits[i][pos][..],
                     "seq {i} pos {pos}: fused logits diverged from decode_step"
                 );
             }
@@ -951,8 +1028,81 @@ mod tests {
     #[test]
     fn decode_step_batch_empty_is_noop() {
         let m = tiny_model(7);
+        let mut scratch = DecodeScratch::new(&m.cfg);
+        let pool = ExecPool::sequential();
         let mut caches: Vec<&mut KvCache> = Vec::new();
-        assert!(m.decode_step_batch(&mut caches, &[]).is_empty());
+        let logits = m.decode_step_batch_with(&mut caches, &[], &mut scratch, &pool);
+        assert_eq!(logits.rows, 0);
+    }
+
+    #[test]
+    fn paged_decode_bit_identical_to_contiguous() {
+        // The paged arena must reproduce the contiguous reference caches
+        // bit-for-bit at every position, for block sizes that divide the
+        // stream length, don't, and degenerate to one position per block —
+        // each geometry exercises different block-table boundaries.
+        let m = tiny_model(9);
+        let streams: [&[u16]; 3] = [&[10, 200, 37, 99, 5, 7], &[7, 7, 42], &[250, 1]];
+        let mut scratch = DecodeScratch::new(&m.cfg);
+        let pool = ExecPool::sequential();
+
+        // Reference: contiguous fused rounds.
+        let mut ref_rounds: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut caches: Vec<KvCache> = (0..3).map(|_| KvCache::new(&m.cfg)).collect();
+        let max_len = streams.iter().map(|s| s.len()).max().unwrap();
+        for pos in 0..max_len {
+            let (mut tokens, mut idxs) = (Vec::new(), Vec::new());
+            for (i, s) in streams.iter().enumerate() {
+                if pos < s.len() {
+                    tokens.push(s[pos]);
+                    idxs.push(i);
+                }
+            }
+            let mut refs: Vec<&mut KvCache> = Vec::new();
+            for (i, c) in caches.iter_mut().enumerate() {
+                if idxs.contains(&i) {
+                    refs.push(c);
+                }
+            }
+            let logits = m.decode_step_batch_with(&mut refs, &tokens, &mut scratch, &pool);
+            ref_rounds.push((0..tokens.len()).map(|r| logits.row(r).to_vec()).collect());
+        }
+
+        for block in [1usize, 3, 4, 32] {
+            let n_blocks = 3 * m.cfg.max_seq.div_ceil(block);
+            let mut arena = KvArena::new(&m.cfg, block, n_blocks);
+            let mut seqs: Vec<KvSeq> = (0..3).map(|_| KvSeq::new()).collect();
+            for pos in 0..max_len {
+                let (mut tokens, mut idxs) = (Vec::new(), Vec::new());
+                for (i, s) in streams.iter().enumerate() {
+                    if pos < s.len() {
+                        tokens.push(s[pos]);
+                        idxs.push(i);
+                    }
+                }
+                let mut refs: Vec<&mut KvSeq> = Vec::new();
+                for (i, s) in seqs.iter_mut().enumerate() {
+                    if idxs.contains(&i) {
+                        let need = s.len + 1;
+                        assert!(arena.ensure(&mut *s, need));
+                        refs.push(s);
+                    }
+                }
+                let logits =
+                    m.decode_step_batch_paged(&mut arena, &mut refs, &tokens, &mut scratch, &pool);
+                for (j, _) in idxs.iter().enumerate() {
+                    assert_eq!(
+                        logits.row(j),
+                        &ref_rounds[pos][j][..],
+                        "block={block} pos={pos}: paged logits diverged from contiguous"
+                    );
+                }
+            }
+            for (s, stream) in seqs.iter().zip(&streams) {
+                assert_eq!(s.len, stream.len());
+                assert_eq!(s.n_blocks(), stream.len().div_ceil(block));
+            }
+        }
     }
 
     #[test]

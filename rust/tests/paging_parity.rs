@@ -1,0 +1,244 @@
+//! Paged-KV parity under continuous batching: sequences admitted at
+//! **different steps** with **heterogeneous prompt lengths**, decoding
+//! through the shared block arena, must produce token streams bit-identical
+//! to generating each sequence alone on the contiguous reference cache — for
+//! every `CodeSpec` variant, both decode-kernel families, and pool widths
+//! 1/2/4. A deliberately tiny block size (4 positions) forces every sequence
+//! across multiple block-table boundaries.
+
+use std::collections::VecDeque;
+
+use qtip::coordinator::quantize_model_qtip;
+use qtip::hessian::collect_hessians;
+use qtip::model::{
+    DecodeScratch, KvArena, KvCache, KvSeq, ModelConfig, Transformer, WeightStore,
+};
+use qtip::quant::{KernelKind, QtipConfig};
+use qtip::util::threadpool::ExecPool;
+
+const WIDTHS: [usize; 3] = [1, 2, 4];
+const BLOCK: usize = 4;
+
+/// All 4 CodeSpec variants as (code name, V) quantizer configs.
+const CODES: [(&str, u32); 4] = [("1mad", 1), ("3inst", 1), ("hyb", 2), ("lut", 1)];
+
+fn quantized_tiny(code: &str, v: u32) -> Transformer {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 2;
+    cfg.max_seq = 64;
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 21));
+    let seqs = vec![(0..48u16).collect::<Vec<_>>(), (60..108u16).collect::<Vec<_>>()];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v, tx: 8, ty: 8, code: code.into(), seed: 5 };
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    model
+}
+
+/// One simulated request: a prompt, a generation budget, and the round at
+/// which the scheduler admits it.
+struct Job {
+    prompt: Vec<u16>,
+    max_new: usize,
+    join_round: usize,
+}
+
+fn jobs() -> Vec<Job> {
+    vec![
+        Job { prompt: vec![10, 200, 37, 99, 5, 7, 7], max_new: 9, join_round: 0 },
+        Job { prompt: vec![42], max_new: 12, join_round: 2 },
+        Job { prompt: (0..13).map(|i| (i * 17) as u16).collect(), max_new: 5, join_round: 3 },
+        Job { prompt: vec![250, 1, 2], max_new: 8, join_round: 7 },
+    ]
+}
+
+/// Reference: each job generated alone on a contiguous cache (greedy).
+fn solo_streams(model: &Transformer, pool: &ExecPool) -> Vec<Vec<u16>> {
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    let mut out = Vec::new();
+    for job in jobs() {
+        let mut cache = KvCache::new(&model.cfg);
+        let mut logits: Vec<f32> = Vec::new();
+        for &t in &job.prompt {
+            logits = model.decode_step_with(&mut cache, t, &mut scratch, pool).to_vec();
+        }
+        let mut tokens = Vec::new();
+        let mut rng = qtip::util::rng::Rng::new(1);
+        let mut next = Transformer::sample(&logits, 0.0, 1, &mut rng);
+        loop {
+            tokens.push(next);
+            if tokens.len() >= job.max_new {
+                break;
+            }
+            let l = model.decode_step_with(&mut cache, next, &mut scratch, pool);
+            next = Transformer::sample(l, 0.0, 1, &mut rng);
+        }
+        out.push(tokens);
+    }
+    out
+}
+
+/// A sequence mid-flight in the simulated continuous batcher.
+struct Live {
+    job_idx: usize,
+    seq: KvSeq,
+    pending: VecDeque<u16>,
+    next: Option<u16>,
+    generated: Vec<u16>,
+}
+
+/// Continuous batching over the paged arena: jobs join at their round, share
+/// fused rounds with whatever else is live, and leave when done.
+fn paged_streams(model: &Transformer, pool: &ExecPool) -> Vec<Vec<u16>> {
+    let all = jobs();
+    let n_blocks = all.len() * model.cfg.max_seq.div_ceil(BLOCK);
+    let mut arena = KvArena::new(&model.cfg, BLOCK, n_blocks);
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    let mut live: Vec<Live> = Vec::new();
+    let mut done: Vec<Option<Vec<u16>>> = (0..all.len()).map(|_| None).collect();
+    let mut rng = qtip::util::rng::Rng::new(1);
+    let mut round = 0usize;
+    while done.iter().any(|d| d.is_none()) {
+        for (ji, job) in all.iter().enumerate() {
+            if job.join_round == round {
+                live.push(Live {
+                    job_idx: ji,
+                    seq: KvSeq::new(),
+                    pending: job.prompt.iter().copied().collect(),
+                    next: None,
+                    generated: Vec::new(),
+                });
+            }
+        }
+        let mut tokens: Vec<u16> = Vec::new();
+        let mut stepping: Vec<usize> = Vec::new();
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, l) in live.iter_mut().enumerate() {
+            if let Some(t) = l.pending.pop_front() {
+                tokens.push(t);
+                stepping.push(i);
+                continue;
+            }
+            let t = l.next.expect("decoding sequence holds a token");
+            l.generated.push(t);
+            if l.generated.len() >= all[l.job_idx].max_new {
+                finished.push(i);
+                continue;
+            }
+            tokens.push(t);
+            stepping.push(i);
+        }
+        if !tokens.is_empty() {
+            let mut refs: Vec<&mut KvSeq> = Vec::new();
+            {
+                let mut want = stepping.iter().peekable();
+                for (i, l) in live.iter_mut().enumerate() {
+                    if want.peek() == Some(&&i) {
+                        want.next();
+                        let need = l.seq.len + 1;
+                        assert!(arena.ensure(&mut l.seq, need), "arena sized for all jobs");
+                        refs.push(&mut l.seq);
+                    }
+                }
+            }
+            let logits =
+                model.decode_step_batch_paged(&mut arena, &mut refs, &tokens, &mut scratch, pool);
+            for (j, &i) in stepping.iter().enumerate() {
+                let l = &mut live[i];
+                if !l.pending.is_empty() {
+                    continue;
+                }
+                l.next = Some(Transformer::sample(logits.row(j), 0.0, 1, &mut rng));
+            }
+        }
+        for i in finished.drain(..).rev() {
+            let mut l = live.remove(i);
+            arena.release(&mut l.seq);
+            done[l.job_idx] = Some(l.generated);
+        }
+        round += 1;
+        assert!(round < 10_000, "simulated batcher failed to converge");
+    }
+    assert_eq!(arena.blocks_in_use(), 0, "every finished sequence must release its blocks");
+    done.into_iter().map(|d| d.unwrap()).collect()
+}
+
+#[test]
+fn continuous_paged_batching_matches_solo_for_all_codes_kernels_widths() {
+    for (code, v) in CODES {
+        let mut model = quantized_tiny(code, v);
+        for kernel in [KernelKind::Scalar, KernelKind::Lanes] {
+            model.set_decode_kernel(kernel);
+            let reference = solo_streams(&model, &ExecPool::sequential());
+            for width in WIDTHS {
+                let pool = ExecPool::new(width);
+                let got = paged_streams(&model, &pool);
+                assert_eq!(
+                    got,
+                    reference,
+                    "{code} kernel={} width={width}: paged continuous batching diverged \
+                     from solo contiguous decode",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_single_round_logits_match_contiguous_for_all_codes() {
+    // Direct logits-level parity (not just argmax tokens): one fused batch
+    // round over the arena vs the contiguous caches, per CodeSpec.
+    for (code, v) in CODES {
+        let model = quantized_tiny(code, v);
+        let pool = ExecPool::new(2);
+        let mut scratch = DecodeScratch::new(&model.cfg);
+        let streams: [&[u16]; 3] = [&[9, 8, 7, 6], &[1, 2], &[100]];
+
+        let mut caches: Vec<KvCache> = (0..3).map(|_| KvCache::new(&model.cfg)).collect();
+        let mut arena = KvArena::new(&model.cfg, BLOCK, 3 * model.cfg.max_seq.div_ceil(BLOCK));
+        let mut seqs: Vec<KvSeq> = (0..3).map(|_| KvSeq::new()).collect();
+        let max_len = streams.iter().map(|s| s.len()).max().unwrap();
+        for pos in 0..max_len {
+            let (mut tokens, mut idxs) = (Vec::new(), Vec::new());
+            for (i, s) in streams.iter().enumerate() {
+                if pos < s.len() {
+                    tokens.push(s[pos]);
+                    idxs.push(i);
+                }
+            }
+            let mut want: Vec<Vec<f32>> = Vec::new();
+            {
+                let mut refs: Vec<&mut KvCache> = Vec::new();
+                for (i, c) in caches.iter_mut().enumerate() {
+                    if idxs.contains(&i) {
+                        refs.push(c);
+                    }
+                }
+                let logits = model.decode_step_batch_with(&mut refs, &tokens, &mut scratch, &pool);
+                for j in 0..tokens.len() {
+                    want.push(logits.row(j).to_vec());
+                }
+            }
+            let mut refs: Vec<&mut KvSeq> = Vec::new();
+            for (i, s) in seqs.iter_mut().enumerate() {
+                if idxs.contains(&i) {
+                    let need = s.len + 1;
+                    assert!(arena.ensure(&mut *s, need));
+                    refs.push(s);
+                }
+            }
+            let logits = model
+                .decode_step_batch_paged(&mut arena, &mut refs, &tokens, &mut scratch, &pool);
+            for j in 0..tokens.len() {
+                assert_eq!(
+                    logits.row(j),
+                    &want[j][..],
+                    "{code} pos={pos} seq={j}: paged round diverged from contiguous"
+                );
+            }
+        }
+    }
+}

@@ -1,13 +1,14 @@
 //! Serving-stack integration: quantized model under the continuous batcher,
-//! including mid-flight admission and stress over the KV pool.
+//! including mid-flight admission, stress over the paged KV arena,
+//! preemption-by-eviction, and contiguous-vs-paged scheduler parity.
 
 use std::sync::Arc;
 
 use qtip::coordinator::{
-    quantize_model_qtip, GenRequest, ServerConfig, ServerHandle,
+    quantize_model_qtip, GenRequest, ServerConfig, ServerHandle, StreamEvent,
 };
 use qtip::hessian::collect_hessians;
-use qtip::model::{ModelConfig, Transformer, WeightStore};
+use qtip::model::{KvArena, KvCache, KvLayout, ModelConfig, Transformer, WeightStore};
 use qtip::quant::QtipConfig;
 use qtip::util::threadpool::ExecPool;
 
@@ -141,4 +142,170 @@ fn stress_many_requests_small_pool() {
     let stats = server.shutdown();
     assert_eq!(stats.completed, 16);
     assert!(stats.peak_batch <= 3);
+    assert!(stats.queue_high_water >= 1, "16 requests through 3 slots must queue");
+}
+
+#[test]
+fn paged_and_contig_schedulers_serve_identical_tokens_on_quantized_model() {
+    // The paged arena walks block tables through the *quantized* fused decode
+    // path; its tokens must match the contiguous reference scheduler exactly,
+    // including with a tiny block size that forces mid-sequence boundaries.
+    let model = quantized_tiny();
+    let run = |layout: KvLayout, kv_block: usize| -> Vec<Vec<u16>> {
+        let server = ServerHandle::spawn(
+            model.clone(),
+            ServerConfig { max_batch: 4, kv_layout: layout, kv_block, ..Default::default() },
+        );
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                server.submit(GenRequest {
+                    id: i,
+                    prompt: "y".repeat(1 + 4 * i as usize),
+                    max_new_tokens: 6 + 2 * i as usize,
+                    temperature: 0.0,
+                    top_k: 1,
+                    seed: i,
+                })
+            })
+            .collect();
+        let out = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+        server.shutdown();
+        out
+    };
+    let reference = run(KvLayout::Contig, 0);
+    for block in [3usize, 16] {
+        assert_eq!(
+            run(KvLayout::Paged, block),
+            reference,
+            "paged scheduler (block={block}) diverged on the quantized model"
+        );
+    }
+}
+
+#[test]
+fn mixed_length_continuous_admission_preserves_streams_and_admits_more() {
+    // Acceptance: mixed-length sequences admitted at different steps under a
+    // tight budget — the paged scheduler must reach strictly higher
+    // concurrency than sequence-granular admission AND keep every stream
+    // token-identical to a solo run.
+    let model = quantized_tiny();
+    let per_seq = KvCache::size_bytes_for(&model.cfg);
+    let budget = 2 * per_seq;
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| GenRequest {
+            id: i,
+            prompt: "p".repeat(1 + 3 * (i as usize % 3)),
+            max_new_tokens: 24 + 4 * i as usize,
+            temperature: 0.0,
+            top_k: 1,
+            seed: i,
+        })
+        .collect();
+    let run = |layout: KvLayout| {
+        let server = ServerHandle::spawn(
+            model.clone(),
+            ServerConfig {
+                max_batch: 6,
+                kv_budget_bytes: budget,
+                kv_layout: layout,
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+        let outs: Vec<Vec<u16>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+        (outs, server.shutdown())
+    };
+    let (contig_outs, contig) = run(KvLayout::Contig);
+    let (paged_outs, paged) = run(KvLayout::Paged);
+    assert_eq!(contig.completed, 6);
+    assert_eq!(paged.completed, 6);
+    assert!(contig.peak_active <= 2);
+    assert!(
+        paged.peak_active > contig.peak_active,
+        "paged peak_active {} must exceed sequence-granular {}",
+        paged.peak_active,
+        contig.peak_active
+    );
+    assert_eq!(paged_outs, contig_outs, "scheduler choice changed the tokens");
+    for (r, out) in reqs.iter().zip(&paged_outs) {
+        let solo = ServerHandle::spawn(model.clone(), ServerConfig::default());
+        let want = solo.submit(r.clone()).recv().unwrap();
+        solo.shutdown();
+        assert_eq!(&want.tokens, out, "request {} diverged from solo decode", r.id);
+    }
+}
+
+#[test]
+fn eviction_preemption_smoke_on_quantized_model() {
+    // Block pressure on the quantized serving path: the youngest sequence is
+    // evicted, re-queued, and restarted — outputs stay identical to solo
+    // runs and every block returns to the arena (proven by a follow-up
+    // request needing most of it).
+    let model = quantized_tiny();
+    let block = 8usize;
+    let blocks = model.cfg.max_seq.div_ceil(block);
+    let budget = blocks * KvArena::block_bytes(&model.cfg, block);
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 2,
+            kv_budget_bytes: budget,
+            kv_block: block,
+            kv_layout: KvLayout::Paged,
+            ..Default::default()
+        },
+    );
+    let ra = req(1, 50);
+    let rb = req(2, 50);
+    let rx_a = server.submit(ra.clone());
+    let rx_b = server.submit(rb.clone());
+    let a = rx_a.recv().unwrap();
+    let b = rx_b.recv().unwrap();
+    // Post-pressure health: a near-arena-sized request still completes.
+    let c = server.submit(req(3, 60)).recv().unwrap();
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 3);
+    assert!(stats.evictions >= 1, "two 50-token generations cannot share {blocks} blocks");
+    assert_eq!(c.tokens.len(), 60);
+    for (r, got) in [(ra, a), (rb, b)] {
+        let solo = ServerHandle::spawn(model.clone(), ServerConfig::default());
+        let want = solo.submit(r.clone()).recv().unwrap();
+        solo.shutdown();
+        assert_eq!(want.tokens, got.tokens, "request {} corrupted by eviction", r.id);
+    }
+}
+
+#[test]
+fn disconnect_mid_generation_does_not_hold_blocks() {
+    // Satellite requirement: a client that vanishes mid-generation must have
+    // its sequence cancelled and its blocks freed — proven by a follow-up
+    // request that needs the whole arena.
+    let model = quantized_tiny();
+    let block = 8usize;
+    let budget = model.cfg.max_seq.div_ceil(block) * KvArena::block_bytes(&model.cfg, block);
+    let server = ServerHandle::spawn(
+        model,
+        ServerConfig {
+            max_batch: 2,
+            kv_budget_bytes: budget,
+            kv_block: block,
+            kv_layout: KvLayout::Paged,
+            ..Default::default()
+        },
+    );
+    let rx = server.submit_stream(req(1, 80));
+    match rx.recv().unwrap() {
+        StreamEvent::Token { .. } => {}
+        ev => panic!("expected a first token, got {ev:?}"),
+    }
+    drop(rx); // client disconnects mid-generation
+    let resp = server.submit(req(2, 80)).recv().unwrap();
+    assert_eq!(resp.tokens.len(), 80);
+    let stats = server.shutdown();
+    assert_eq!(stats.cancelled, 1, "disconnected stream must be cancelled");
+    assert_eq!(stats.completed, 1);
+    assert!(
+        stats.kv_blocks_high_water <= stats.kv_blocks_total,
+        "arena accounting corrupted"
+    );
 }

@@ -1,7 +1,8 @@
 #!/usr/bin/env python3
 """Schema check for the perf-trajectory files (BENCH_*.json at the repo root).
 
-Usage: check_bench_json.py [--min-lanes-speedup X] BENCH_microbench.json [...]
+Usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain]
+                           BENCH_microbench.json [...]
 
 Pins the same contract as `bench::BenchJson` (rust/src/bench.rs) and its
 `bench_json_schema_roundtrips` unit test: top-level bench / schema_version /
@@ -12,6 +13,12 @@ CI catches schema drift before a downstream comparison tool does.
 With `--min-lanes-speedup X`, additionally enforces the lane-kernel
 acceptance gate on any file carrying `lanes_speedup` rows: the measured
 speedup for the pure-computed codes (1mad, 3inst) must be >= X.
+
+With `--require-paging-gain`, enforces the paged-KV acceptance gate on any
+file carrying `peak_concurrency` rows keyed by a `scheduler` param (the
+serving bench): the paged scheduler's peak concurrency must be *strictly
+greater* than the contiguous (sequence-granular) scheduler's under the same
+KV budget.
 """
 
 import json
@@ -47,6 +54,38 @@ def check_speedup_gate(path: str, doc: dict, min_speedup: float) -> None:
     if gated != len(GATED_CODES):
         fail(f"{path}: expected lanes_speedup rows for {GATED_CODES}, found {gated}")
     print(f"{path}: lanes_speedup gate ok (>= {min_speedup:.2f}x for {GATED_CODES})")
+
+
+def check_paging_gate(path: str, doc: dict) -> None:
+    rows = [
+        r
+        for r in doc["rows"]
+        if r["metric"] == "peak_concurrency" and "scheduler" in r["params"]
+    ]
+    if not rows:
+        # Unlike --min-lanes-speedup (applied across a file list where some
+        # files legitimately lack the metric), this gate is pointed at the one
+        # file that must carry the rows — an empty match means the serving
+        # bench stopped emitting the acceptance metric, which must fail loudly
+        # rather than silently disable the gate.
+        fail(
+            f"{path}: --require-paging-gain found no peak_concurrency rows keyed by "
+            f"'scheduler' — the serving bench no longer emits the acceptance metric"
+        )
+    by_sched = {r["params"]["scheduler"]: r["value"] for r in rows}
+    for sched in ("contig", "paged"):
+        if sched not in by_sched:
+            fail(f"{path}: paging gate needs a peak_concurrency row for '{sched}'")
+    if not by_sched["paged"] > by_sched["contig"]:
+        fail(
+            f"{path}: paged peak_concurrency {by_sched['paged']:.0f} is not strictly "
+            f"greater than contig {by_sched['contig']:.0f} — the paged arena must admit "
+            f"more sequences than sequence-granular admission under the same budget"
+        )
+    print(
+        f"{path}: paging gate ok (paged {by_sched['paged']:.0f} > "
+        f"contig {by_sched['contig']:.0f} peak concurrency)"
+    )
 
 
 def check(path: str) -> dict:
@@ -93,14 +132,26 @@ def check(path: str) -> dict:
 if __name__ == "__main__":
     args = sys.argv[1:]
     min_speedup = None
-    if args and args[0] == "--min-lanes-speedup":
-        if len(args) < 2:
-            fail("--min-lanes-speedup needs a value")
-        min_speedup = float(args[1])
-        args = args[2:]
+    require_paging_gain = False
+    while args and args[0].startswith("--"):
+        if args[0] == "--min-lanes-speedup":
+            if len(args) < 2:
+                fail("--min-lanes-speedup needs a value")
+            min_speedup = float(args[1])
+            args = args[2:]
+        elif args[0] == "--require-paging-gain":
+            require_paging_gain = True
+            args = args[1:]
+        else:
+            fail(f"unknown flag {args[0]}")
     if not args:
-        fail("usage: check_bench_json.py [--min-lanes-speedup X] BENCH_<name>.json [...]")
+        fail(
+            "usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain] "
+            "BENCH_<name>.json [...]"
+        )
     for p in args:
         document = check(p)
         if min_speedup is not None:
             check_speedup_gate(p, document, min_speedup)
+        if require_paging_gain:
+            check_paging_gate(p, document)
