@@ -1,0 +1,838 @@
+//! Vendored minimal [loom](https://docs.rs/loom)-compatible model checker.
+//!
+//! The qtip build environment has no crates.io access, so the real loom crate
+//! cannot be a dependency. This crate re-implements the small slice of loom's
+//! API that `qtip::util::sync` re-exports — `model`, `thread::spawn`/`join`,
+//! `sync::{Arc, Mutex, MutexGuard, Condvar}` and `sync::atomic::*` — backed by
+//! a systematic scheduler that *exhaustively enumerates thread interleavings*
+//! (up to a preemption bound) instead of sampling whatever schedule the OS
+//! happens to produce.
+//!
+//! ## How it explores
+//!
+//! Inside [`model`], threads are real OS threads but only one runs at a time:
+//! a token (the active thread id) is passed under a scheduler mutex. Every
+//! *visible* operation — atomic load/store/rmw, mutex lock, condvar
+//! wait/notify, spawn, join, thread exit — is a decision point where the
+//! scheduler picks which runnable thread continues. The sequence of picks is
+//! recorded as a decision trace; after each run the trace is advanced
+//! depth-first (last decision with an unexplored alternative is bumped, the
+//! suffix is discarded) and the closure is re-run, replaying the prefix
+//! deterministically. The search terminates when every decision has been
+//! exhausted.
+//!
+//! Like CHESS and loom's `LOOM_MAX_PREEMPTIONS`, the search bounds the number
+//! of *preemptions* (switching away from a runnable thread) per schedule —
+//! `LOOM_MAX_PREEMPTIONS`, default 2 — which keeps the space tractable while
+//! still catching the vast majority of ordering bugs. Forced switches (the
+//! active thread blocks) are free.
+//!
+//! ## Honest limitations vs real loom
+//!
+//! * Atomics are modeled *sequentially consistent*. The checker permutes
+//!   statement interleavings, not C11 weak-memory reorderings, so it can miss
+//!   bugs that only a relaxed-memory execution exposes (those are TSan's and
+//!   code review's job; see EXPERIMENTS.md "Soundness tooling").
+//! * Condvar spurious wakeups are not injected; `notify_one` wakes the
+//!   longest-waiting thread. The pool only uses `notify_all`.
+//! * No `UnsafeCell` access checking — the shimmed code's `unsafe` blocks are
+//!   covered by Miri instead.
+//!
+//! Deadlocks (no runnable thread) and livelocks (schedules exceeding a step
+//! cap) abort the model with a panic, as does a closure that returns while
+//! spawned threads are still live (a missing `join`).
+
+#![forbid(unsafe_code)]
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex};
+
+const DEFAULT_MAX_PREEMPTIONS: usize = 2;
+const DEFAULT_MAX_ITERATIONS: usize = 500_000;
+const MAX_STEPS_PER_SCHEDULE: usize = 100_000;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run state of one modeled thread.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    Runnable,
+    /// Waiting to acquire the mutex at this address; runnable once it is free.
+    BlockedMutex(usize),
+    /// Parked on the condvar at this address; a notify moves it to
+    /// `BlockedMutex` on the mutex it released when it began waiting.
+    BlockedCv(usize),
+    /// Waiting for the thread with this id to finish.
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// One scheduling decision: the runnable candidates (canonical order:
+/// current thread first, then ascending tid) and which index was taken.
+struct Decision {
+    options: Vec<usize>,
+    pick: usize,
+}
+
+struct SchedState {
+    /// Tid holding the run token. `usize::MAX` after the last thread exits.
+    active: usize,
+    threads: Vec<Run>,
+    /// Mutex address -> holder tid (None = free).
+    mutexes: HashMap<usize, Option<usize>>,
+    /// Condvar address -> FIFO of (waiter tid, mutex address it released).
+    cv_waiters: HashMap<usize, Vec<(usize, usize)>>,
+    trace: Vec<Decision>,
+    /// Next index in `trace` to replay; past the end means we are extending.
+    cursor: usize,
+    preemptions: usize,
+    steps: usize,
+    /// Set on deadlock/divergence/panic so parked threads wake and unwind
+    /// instead of hanging the test binary.
+    aborted: Option<String>,
+}
+
+struct Scheduler {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+    max_preemptions: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<(StdArc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<(StdArc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(s: &StdArc<Scheduler>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some((StdArc::clone(s), tid)));
+}
+
+fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+fn runnable(st: &SchedState, tid: usize) -> bool {
+    match st.threads[tid] {
+        Run::Runnable => true,
+        Run::BlockedMutex(m) => st.mutexes.get(&m).map_or(true, |h| h.is_none()),
+        _ => false,
+    }
+}
+
+fn deadlock_msg(st: &SchedState) -> String {
+    let mut s = String::from("deadlock: no runnable thread; states:");
+    for (t, r) in st.threads.iter().enumerate() {
+        s.push_str(&format!(" t{t}={r:?}"));
+    }
+    s
+}
+
+type Guard<'a> = std::sync::MutexGuard<'a, SchedState>;
+
+impl Scheduler {
+    fn new(trace: Vec<Decision>, max_preemptions: usize) -> Self {
+        Scheduler {
+            state: StdMutex::new(SchedState {
+                active: 0,
+                threads: vec![Run::Runnable],
+                mutexes: HashMap::new(),
+                cv_waiters: HashMap::new(),
+                trace,
+                cursor: 0,
+                preemptions: 0,
+                steps: 0,
+                aborted: None,
+            }),
+            cv: StdCondvar::new(),
+            max_preemptions,
+        }
+    }
+
+    /// Lock the scheduler state, recovering from poisoning (a panicking model
+    /// thread is an expected failure mode; the state itself stays coherent
+    /// because every mutation is a small atomic-at-this-level update).
+    fn lock_state(&self) -> Guard<'_> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn wait_state<'a>(&'a self, g: Guard<'a>) -> Guard<'a> {
+        self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn check_abort(&self, st: &Guard<'_>) {
+        if let Some(msg) = &st.aborted {
+            let msg = msg.clone();
+            panic!("loom model aborted: {msg}");
+        }
+    }
+
+    fn abort(&self, mut st: Guard<'_>, msg: String) -> ! {
+        st.aborted = Some(msg.clone());
+        self.cv.notify_all();
+        drop(st);
+        panic!("loom model aborted: {msg}");
+    }
+
+    /// Make one scheduling decision on behalf of `me` (the token holder),
+    /// replaying the trace if inside the recorded prefix and extending it
+    /// otherwise. If another thread is chosen, hands the token over and — when
+    /// `wait_token` — blocks until `me` is scheduled again. `wait_token` is
+    /// false only for a finishing thread, which hands off and exits.
+    fn decide(&self, mut st: Guard<'_>, me: usize, wait_token: bool) -> Guard<'_> {
+        self.check_abort(&st);
+        st.steps += 1;
+        if st.steps > MAX_STEPS_PER_SCHEDULE {
+            self.abort(
+                st,
+                format!(
+                    "schedule exceeded {MAX_STEPS_PER_SCHEDULE} steps; \
+                     livelock (unbounded spin) in the modeled code?"
+                ),
+            );
+        }
+        let chosen = if st.cursor < st.trace.len() {
+            // Replay: re-take the recorded pick; re-derive the preemption
+            // count so the extension phase budgets against the right value.
+            let d = &st.trace[st.cursor];
+            let (c, first) = (d.options[d.pick], d.options[0]);
+            if !runnable(&st, c) {
+                let msg = format!(
+                    "replay divergence at step {}: thread {c} is not \
+                     runnable (non-deterministic model closure?)",
+                    st.cursor
+                );
+                self.abort(st, msg);
+            }
+            if first == me && c != me {
+                st.preemptions += 1;
+            }
+            c
+        } else {
+            // Extend: enumerate runnable candidates. Switching away from a
+            // runnable `me` is a preemption and only offered under budget.
+            let me_runnable = runnable(&st, me);
+            let mut options = Vec::new();
+            if me_runnable {
+                options.push(me);
+            }
+            if !me_runnable || st.preemptions < self.max_preemptions {
+                for t in 0..st.threads.len() {
+                    if t != me && runnable(&st, t) {
+                        options.push(t);
+                    }
+                }
+            }
+            if options.is_empty() {
+                let done = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .all(|(t, r)| t == me || *r == Run::Finished);
+                if done && !wait_token {
+                    // `me` was the last live thread and just finished.
+                    st.active = usize::MAX;
+                    self.cv.notify_all();
+                    return st;
+                }
+                let msg = deadlock_msg(&st);
+                self.abort(st, msg);
+            }
+            let c = options[0];
+            st.trace.push(Decision { options, pick: 0 });
+            c
+        };
+        st.cursor += 1;
+        st.active = chosen;
+        if chosen != me {
+            self.cv.notify_all();
+            if wait_token {
+                loop {
+                    st = self.wait_state(st);
+                    self.check_abort(&st);
+                    if st.active == me {
+                        break;
+                    }
+                }
+            }
+        }
+        st
+    }
+
+    /// Decision point for a non-blocking visible op (atomic access, the
+    /// instant before a lock attempt, spawn, notify).
+    fn switch(&self, me: usize) {
+        let st = self.lock_state();
+        drop(self.decide(st, me, true));
+    }
+
+    /// Block until a new thread is granted the token for the first time.
+    fn wait_for_token(&self, me: usize) {
+        let mut st = self.lock_state();
+        loop {
+            self.check_abort(&st);
+            if st.active == me {
+                return;
+            }
+            st = self.wait_state(st);
+        }
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.lock_state();
+        st.threads.push(Run::Runnable);
+        st.threads.len() - 1
+    }
+
+    fn model_lock(&self, addr: usize, me: usize) {
+        self.switch(me);
+        let mut st = self.lock_state();
+        loop {
+            let holder = st.mutexes.get(&addr).copied().flatten();
+            match holder {
+                None => {
+                    st.mutexes.insert(addr, Some(me));
+                    st.threads[me] = Run::Runnable;
+                    return;
+                }
+                Some(h) if h == me => {
+                    let msg = format!("thread {me} re-locked a mutex it already holds");
+                    self.abort(st, msg);
+                }
+                Some(_) => {
+                    st.threads[me] = Run::BlockedMutex(addr);
+                    // We are only rescheduled once the mutex is free; the
+                    // loop re-checks and claims it.
+                    st = self.decide(st, me, true);
+                }
+            }
+        }
+    }
+
+    fn model_unlock(&self, addr: usize, me: usize) {
+        let mut st = self.lock_state();
+        let holder = st.mutexes.get(&addr).copied().flatten();
+        if holder == Some(me) {
+            st.mutexes.insert(addr, None);
+        } else {
+            let msg = format!("thread {me} released a mutex it does not hold");
+            self.abort(st, msg);
+        }
+        // No decision point here: blocked waiters become runnable candidates
+        // at the very next decision, which every subsequent visible op (or
+        // thread exit) provides.
+    }
+
+    fn model_cv_wait(&self, cv: usize, mutex_addr: usize, me: usize) {
+        self.switch(me);
+        let mut st = self.lock_state();
+        let holder = st.mutexes.get(&mutex_addr).copied().flatten();
+        if holder != Some(me) {
+            let msg = format!("thread {me} waited on a condvar without holding the mutex");
+            self.abort(st, msg);
+        }
+        // Atomically (the token is not released until `decide`) drop the
+        // mutex and register as a waiter, matching std condvar semantics.
+        st.mutexes.insert(mutex_addr, None);
+        st.cv_waiters.entry(cv).or_default().push((me, mutex_addr));
+        st.threads[me] = Run::BlockedCv(cv);
+        st = self.decide(st, me, true);
+        // A notify moved us to BlockedMutex(mutex_addr) and a later decision
+        // scheduled us, which requires the mutex to be free — but another
+        // woken waiter may race us to it, so loop like a lock.
+        loop {
+            let holder = st.mutexes.get(&mutex_addr).copied().flatten();
+            if holder.is_none() {
+                st.mutexes.insert(mutex_addr, Some(me));
+                st.threads[me] = Run::Runnable;
+                return;
+            }
+            st.threads[me] = Run::BlockedMutex(mutex_addr);
+            st = self.decide(st, me, true);
+        }
+    }
+
+    fn model_notify(&self, cv: usize, me: usize, all: bool) {
+        self.switch(me);
+        let mut st = self.lock_state();
+        let woken: Vec<(usize, usize)> = match st.cv_waiters.get_mut(&cv) {
+            Some(w) if !w.is_empty() => {
+                if all {
+                    std::mem::take(w)
+                } else {
+                    vec![w.remove(0)]
+                }
+            }
+            _ => Vec::new(),
+        };
+        for (t, m) in woken {
+            st.threads[t] = Run::BlockedMutex(m);
+        }
+    }
+
+    fn model_join(&self, target: usize, me: usize) {
+        self.switch(me);
+        let mut st = self.lock_state();
+        if st.threads[target] != Run::Finished {
+            st.threads[me] = Run::BlockedJoin(target);
+            st = self.decide(st, me, true);
+            debug_assert_eq!(st.threads[target], Run::Finished);
+        }
+        drop(st);
+    }
+
+    fn finish_thread(&self, me: usize, panicked: bool) {
+        let mut st = self.lock_state();
+        st.threads[me] = Run::Finished;
+        for t in 0..st.threads.len() {
+            if st.threads[t] == Run::BlockedJoin(me) {
+                st.threads[t] = Run::Runnable;
+            }
+        }
+        if panicked {
+            // Don't try to schedule further: flag the whole model so every
+            // parked thread wakes up and unwinds.
+            st.aborted
+                .get_or_insert_with(|| format!("model thread {me} panicked"));
+            st.active = usize::MAX;
+            self.cv.notify_all();
+            return;
+        }
+        drop(self.decide(st, me, false));
+    }
+}
+
+/// Depth-first advance: bump the deepest decision with an unexplored
+/// alternative, discarding everything after it. Returns false when the whole
+/// space has been explored.
+fn advance(trace: &mut Vec<Decision>) -> bool {
+    while let Some(d) = trace.last_mut() {
+        d.pick += 1;
+        if d.pick < d.options.len() {
+            return true;
+        }
+        trace.pop();
+    }
+    false
+}
+
+/// Exhaustively model-check `f` under every thread interleaving (up to the
+/// `LOOM_MAX_PREEMPTIONS` bound, default 2). Panics — failing the enclosing
+/// test — on the first schedule where `f` panics, deadlocks, livelocks, or
+/// returns with unjoined threads.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let max_preemptions = env_usize("LOOM_MAX_PREEMPTIONS", DEFAULT_MAX_PREEMPTIONS);
+    let max_iterations = env_usize("LOOM_MAX_ITERATIONS", DEFAULT_MAX_ITERATIONS);
+    let mut trace: Vec<Decision> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        assert!(
+            iterations <= max_iterations,
+            "loom: {max_iterations} schedules explored without exhausting the \
+             space; raise LOOM_MAX_ITERATIONS or shrink the model"
+        );
+        let sched = StdArc::new(Scheduler::new(std::mem::take(&mut trace), max_preemptions));
+        set_ctx(&sched, 0);
+        let out = catch_unwind(AssertUnwindSafe(&f));
+        clear_ctx();
+        let mut st = sched.lock_state();
+        if let Err(payload) = out {
+            st.aborted
+                .get_or_insert_with(|| "model closure panicked".to_string());
+            sched.cv.notify_all();
+            drop(st);
+            resume_unwind(payload);
+        }
+        if st.threads.iter().skip(1).any(|r| *r != Run::Finished) {
+            let msg = format!(
+                "model closure returned with live threads (missing join?): {}",
+                deadlock_msg(&st)
+            );
+            st.aborted = Some(msg.clone());
+            sched.cv.notify_all();
+            drop(st);
+            panic!("{msg}");
+        }
+        trace = std::mem::take(&mut st.trace);
+        drop(st);
+        if !advance(&mut trace) {
+            return;
+        }
+    }
+}
+
+pub mod thread {
+    use super::{clear_ctx, ctx, set_ctx};
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+    pub struct JoinHandle<T> {
+        inner: Option<std::thread::JoinHandle<T>>,
+        tid: Option<usize>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(mut self) -> std::thread::Result<T> {
+            if let Some(tid) = self.tid {
+                if let Some((s, me)) = ctx() {
+                    s.model_join(tid, me);
+                }
+            }
+            self.inner.take().expect("join called twice").join()
+        }
+    }
+
+    /// Spawn a thread. Inside [`super::model`] the thread joins the modeled
+    /// schedule (its first step is waiting to be scheduled); outside it this
+    /// is a plain `std::thread::spawn`.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match ctx() {
+            None => JoinHandle { inner: Some(std::thread::spawn(f)), tid: None },
+            Some((sched, me)) => {
+                let tid = sched.register_thread();
+                let s2 = std::sync::Arc::clone(&sched);
+                let inner = std::thread::Builder::new()
+                    .name(format!("loom-model-{tid}"))
+                    .spawn(move || {
+                        set_ctx(&s2, tid);
+                        s2.wait_for_token(tid);
+                        let out = catch_unwind(AssertUnwindSafe(f));
+                        s2.finish_thread(tid, out.is_err());
+                        clear_ctx();
+                        match out {
+                            Ok(v) => v,
+                            Err(p) => resume_unwind(p),
+                        }
+                    })
+                    .expect("spawn loom model thread");
+                // The spawn itself is a visible op: child-runs-first schedules
+                // must be explorable.
+                sched.switch(me);
+                JoinHandle { inner: Some(inner), tid: Some(tid) }
+            }
+        }
+    }
+}
+
+pub mod sync {
+    pub use std::sync::Arc;
+
+    use super::ctx;
+    use std::sync::{LockResult, PoisonError};
+
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        modeled: Option<(std::sync::Arc<super::Scheduler>, usize)>,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Self {
+            Mutex { inner: std::sync::Mutex::new(t) }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Mutex<T> as usize
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let modeled = ctx();
+            if let Some((s, me)) = &modeled {
+                // The model grants exclusive ownership before we touch the
+                // real mutex, so the inner lock below never contends.
+                s.model_lock(self.addr(), *me);
+            }
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), modeled }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    modeled,
+                })),
+            }
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard present until drop")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard present until drop")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Release the real lock first, then the model's ownership record;
+            // no other model thread can run in between (we hold the token).
+            self.inner.take();
+            if let Some((s, me)) = self.modeled.take() {
+                s.model_unlock(self.lock.addr(), me);
+            }
+        }
+    }
+
+    #[derive(Default)]
+    pub struct Condvar {
+        raw: std::sync::Condvar,
+    }
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Condvar { raw: std::sync::Condvar::new() }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Condvar as usize
+        }
+
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let lock = guard.lock;
+            match guard.modeled.take() {
+                Some((s, me)) => {
+                    // Drop the real guard before the model releases the
+                    // mutex; the token serializes us against other threads.
+                    guard.inner.take();
+                    drop(guard);
+                    s.model_cv_wait(self.addr(), lock.addr(), me);
+                    // Woken and re-granted the mutex by the model; the real
+                    // lock is uncontended.
+                    match lock.inner.lock() {
+                        Ok(g) => Ok(MutexGuard {
+                            lock,
+                            inner: Some(g),
+                            modeled: Some((s, me)),
+                        }),
+                        Err(p) => Err(PoisonError::new(MutexGuard {
+                            lock,
+                            inner: Some(p.into_inner()),
+                            modeled: Some((s, me)),
+                        })),
+                    }
+                }
+                None => {
+                    let inner = guard.inner.take().expect("guard present until drop");
+                    drop(guard);
+                    match self.raw.wait(inner) {
+                        Ok(g) => Ok(MutexGuard { lock, inner: Some(g), modeled: None }),
+                        Err(p) => Err(PoisonError::new(MutexGuard {
+                            lock,
+                            inner: Some(p.into_inner()),
+                            modeled: None,
+                        })),
+                    }
+                }
+            }
+        }
+
+        pub fn notify_all(&self) {
+            match ctx() {
+                Some((s, me)) => s.model_notify(self.addr(), me, true),
+                None => self.raw.notify_all(),
+            }
+        }
+
+        pub fn notify_one(&self) {
+            match ctx() {
+                Some((s, me)) => s.model_notify(self.addr(), me, false),
+                None => self.raw.notify_one(),
+            }
+        }
+    }
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        use super::super::ctx;
+
+        fn decision_point() {
+            if let Some((s, me)) = ctx() {
+                s.switch(me);
+            }
+        }
+
+        macro_rules! modeled_atomic {
+            ($name:ident, $std:ty, $val:ty) => {
+                /// Modeled atomic: every access is a scheduler decision point.
+                /// Memory-order arguments are accepted for API compatibility
+                /// but the model executes sequentially consistent (see crate
+                /// docs for why that is an under-approximation).
+                #[derive(Debug, Default)]
+                pub struct $name {
+                    v: $std,
+                }
+
+                impl $name {
+                    pub fn new(v: $val) -> Self {
+                        Self { v: <$std>::new(v) }
+                    }
+
+                    pub fn load(&self, _order: Ordering) -> $val {
+                        decision_point();
+                        self.v.load(Ordering::SeqCst)
+                    }
+
+                    pub fn store(&self, val: $val, _order: Ordering) {
+                        decision_point();
+                        self.v.store(val, Ordering::SeqCst)
+                    }
+
+                    pub fn swap(&self, val: $val, _order: Ordering) -> $val {
+                        decision_point();
+                        self.v.swap(val, Ordering::SeqCst)
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        current: $val,
+                        new: $val,
+                        _success: Ordering,
+                        _failure: Ordering,
+                    ) -> Result<$val, $val> {
+                        decision_point();
+                        self.v.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+                    }
+
+                    pub fn into_inner(self) -> $val {
+                        self.v.into_inner()
+                    }
+                }
+            };
+        }
+
+        macro_rules! modeled_atomic_int {
+            ($name:ident, $val:ty) => {
+                impl $name {
+                    pub fn fetch_add(&self, val: $val, _order: Ordering) -> $val {
+                        decision_point();
+                        self.v.fetch_add(val, Ordering::SeqCst)
+                    }
+
+                    pub fn fetch_sub(&self, val: $val, _order: Ordering) -> $val {
+                        decision_point();
+                        self.v.fetch_sub(val, Ordering::SeqCst)
+                    }
+                }
+            };
+        }
+
+        modeled_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+        modeled_atomic!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+        modeled_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        modeled_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+        modeled_atomic_int!(AtomicU8, u8);
+        modeled_atomic_int!(AtomicU64, u64);
+        modeled_atomic_int!(AtomicUsize, usize);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+
+    /// The checker must find the lost-update interleaving of a naive
+    /// read-modify-write split across two threads.
+    #[test]
+    fn finds_lost_update() {
+        let raced = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let raced2 = std::sync::Arc::clone(&raced);
+        super::model(move || {
+            let v = Arc::new(AtomicUsize::new(0));
+            let v2 = Arc::clone(&v);
+            let h = super::thread::spawn(move || {
+                let x = v2.load(Ordering::SeqCst);
+                v2.store(x + 1, Ordering::SeqCst);
+            });
+            let x = v.load(Ordering::SeqCst);
+            v.store(x + 1, Ordering::SeqCst);
+            h.join().unwrap();
+            if v.load(Ordering::SeqCst) == 1 {
+                raced2.store(true, std::sync::atomic::Ordering::SeqCst);
+            }
+        });
+        assert!(
+            raced.load(std::sync::atomic::Ordering::SeqCst),
+            "exploration never produced the lost-update schedule"
+        );
+    }
+
+    /// Mutexed increments must never lose an update, under every schedule.
+    #[test]
+    fn mutex_excludes() {
+        super::model(|| {
+            let v = Arc::new(Mutex::new(0usize));
+            let v2 = Arc::clone(&v);
+            let h = super::thread::spawn(move || {
+                *v2.lock().unwrap() += 1;
+            });
+            *v.lock().unwrap() += 1;
+            h.join().unwrap();
+            assert_eq!(*v.lock().unwrap(), 2);
+        });
+    }
+
+    /// Classic flag + condvar handshake: the waiter must always observe the
+    /// flag, in particular when it parks before the signaler runs.
+    #[test]
+    fn condvar_handshake_never_hangs() {
+        super::model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let pair2 = Arc::clone(&pair);
+            let h = super::thread::spawn(move || {
+                let mut done = pair2.0.lock().unwrap();
+                *done = true;
+                pair2.1.notify_all();
+            });
+            let mut done = pair.0.lock().unwrap();
+            while !*done {
+                done = pair.1.wait(done).unwrap();
+            }
+            drop(done);
+            h.join().unwrap();
+        });
+    }
+
+    /// A deadlock (waiting with nobody left to notify) must be detected and
+    /// reported, not hang the test binary.
+    #[test]
+    fn deadlock_is_detected() {
+        let r = std::panic::catch_unwind(|| {
+            super::model(|| {
+                let pair = Arc::new((Mutex::new(false), Condvar::new()));
+                let g = pair.0.lock().unwrap();
+                let _ = pair.1.wait(g).unwrap();
+            });
+        });
+        let msg = match r {
+            Ok(()) => panic!("deadlocked model returned successfully"),
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "non-string panic".to_string()),
+        };
+        assert!(msg.contains("deadlock"), "unexpected panic: {msg}");
+    }
+}

@@ -826,6 +826,23 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             };
             a.sink.send_done(resp);
         }
+
+        // Round boundary: every lease the scheduler knows about lives on an
+        // active sequence (retired/evicted/cancelled tables were just
+        // released), so in debug builds re-verify the arena's partition
+        // invariant — free ⊎ leased = pool, no double-lease — before the next
+        // admission/eviction round can compound a bookkeeping bug into KV
+        // corruption. Release builds skip the O(blocks) walk.
+        if cfg!(debug_assertions) {
+            if let KvBackend::Paged { arena, .. } = &backend {
+                arena.assert_partition(active.iter().map(|a| match &a.kv {
+                    SeqKv::Paged(s) => s,
+                    SeqKv::Contig(_) => {
+                        unreachable!("paged backend holds paged sequences")
+                    }
+                }));
+            }
+        }
     }
 }
 

@@ -33,6 +33,10 @@ use crate::util::json::Json;
 
 pub struct TcpFrontend {
     pub addr: std::net::SocketAddr,
+    /// Shutdown flag polled by the accept and connection loops. All its
+    /// accesses are `Relaxed` (allowlisted in scripts/relaxed_allowlist.txt):
+    /// it is a standalone stop signal — no other memory is published through
+    /// it, and the loops re-check it within a bounded poll interval.
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
 }

@@ -19,6 +19,23 @@
 //! Both layouts store bit-identical rows in the same order, so attention over
 //! a block table reproduces the contiguous path's logits exactly (see the
 //! parity tests in `transformer.rs` and `tests/paging_parity.rs`).
+//!
+//! ## Soundness tooling
+//!
+//! The arena is externally synchronized (`&mut self` everywhere — the serve
+//! loop owns it), so its correctness story is protocol-level, not `unsafe`:
+//! every block is either on the free list or on exactly one sequence's table.
+//! Three layers machine-check that claim before refcounted block aliasing
+//! (prefix sharing / copy-on-write) lands on top of it:
+//!
+//! * debug builds keep a per-block occupancy bitmap and catch double-lease /
+//!   double-release at the faulting call;
+//! * [`KvArena::assert_partition`] checks the full `free ⊎ leased = pool`
+//!   partition; the continuous batcher asserts it at every round boundary
+//!   (debug builds) and the paging-parity tests assert it explicitly;
+//! * the loom lane (`tests/loom.rs`) exhaustively interleaves lease/release
+//!   from concurrent threads through a `util::sync` Mutex and re-checks the
+//!   partition at every join point.
 
 use crate::model::config::ModelConfig;
 use crate::util::matrix::Matrix;
@@ -165,6 +182,11 @@ pub struct KvArena {
     free: Vec<u32>,
     /// Most blocks simultaneously leased over the arena's lifetime.
     high_water: usize,
+    /// Debug-only occupancy bitmap: `leased[b]` iff block `b` is currently on
+    /// some sequence's table. Catches double-lease/double-release at the
+    /// faulting call instead of as downstream KV corruption.
+    #[cfg(debug_assertions)]
+    leased: Vec<bool>,
 }
 
 impl KvArena {
@@ -181,6 +203,8 @@ impl KvArena {
             data: vec![0.0; n_blocks * stride],
             free: (0..n_blocks as u32).rev().collect(),
             high_water: 0,
+            #[cfg(debug_assertions)]
+            leased: vec![false; n_blocks],
         }
     }
 
@@ -236,6 +260,12 @@ impl KvArena {
     pub fn lease(&mut self, seq: &mut KvSeq) -> bool {
         match self.free.pop() {
             Some(b) => {
+                #[cfg(debug_assertions)]
+                {
+                    let slot = &mut self.leased[b as usize];
+                    debug_assert!(!*slot, "block {b} double-leased (still marked in use)");
+                    *slot = true;
+                }
                 seq.blocks.push(b);
                 self.high_water = self.high_water.max(self.blocks_in_use());
                 true
@@ -258,8 +288,69 @@ impl KvArena {
 
     /// Return every block `seq` holds to the free list and reset it.
     pub fn release(&mut self, seq: &mut KvSeq) {
+        #[cfg(debug_assertions)]
+        for &b in &seq.blocks {
+            let slot = &mut self.leased[b as usize];
+            debug_assert!(
+                *slot,
+                "block {b} double-released (returned while already on the free list)"
+            );
+            *slot = false;
+        }
         self.free.extend(seq.blocks.drain(..));
         seq.len = 0;
+    }
+
+    /// Invariant checker: given **every** live block table, assert that the
+    /// free list and the leased blocks form an exact partition of the pool —
+    /// no block leaked, none double-leased, none both free and leased, and no
+    /// sequence claiming more positions than its leases hold. O(blocks); the
+    /// continuous batcher calls it at round boundaries in debug builds, and
+    /// the paging-parity tests call it unconditionally. Panics on violation.
+    ///
+    /// Pre-refcounting contract: once copy-on-write prefix sharing lands,
+    /// "exactly one table" relaxes to "refcount many tables" and this checker
+    /// is the place that relaxation must be encoded.
+    pub fn assert_partition<'a, I>(&self, tables: I)
+    where
+        I: IntoIterator<Item = &'a KvSeq>,
+    {
+        let mut seen = vec![false; self.n_blocks];
+        let mut free_ct = 0usize;
+        for &b in &self.free {
+            let b = b as usize;
+            assert!(b < self.n_blocks, "free list holds out-of-range block {b}");
+            assert!(!seen[b], "block {b} appears twice in the free list");
+            seen[b] = true;
+            free_ct += 1;
+            #[cfg(debug_assertions)]
+            debug_assert!(!self.leased[b], "block {b} is free but marked leased");
+        }
+        let mut leased_ct = 0usize;
+        for seq in tables {
+            assert!(
+                seq.len <= self.seq_capacity(seq),
+                "sequence claims {} positions but its {} blocks hold only {}",
+                seq.len,
+                seq.blocks.len(),
+                self.seq_capacity(seq)
+            );
+            for &b in &seq.blocks {
+                let b = b as usize;
+                assert!(b < self.n_blocks, "table holds out-of-range block {b}");
+                assert!(!seen[b], "block {b} is on two tables (or both free and leased)");
+                seen[b] = true;
+                leased_ct += 1;
+                #[cfg(debug_assertions)]
+                debug_assert!(self.leased[b], "block {b} is on a table but marked free");
+            }
+        }
+        assert_eq!(
+            free_ct + leased_ct,
+            self.n_blocks,
+            "free ⊎ leased must cover the pool exactly (a block table is missing \
+             from the checked set, or a block leaked)"
+        );
     }
 
     #[inline]
@@ -374,6 +465,61 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn partition_checker_accepts_every_lease_release_state() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        let mut a = KvSeq::new();
+        let mut b = KvSeq::new();
+        arena.assert_partition(std::iter::empty()); // all free
+        assert!(arena.ensure(&mut a, 20));
+        assert!(arena.ensure(&mut b, 8));
+        arena.assert_partition([&a, &b]);
+        arena.release(&mut a);
+        arena.assert_partition([&b]);
+        arena.release(&mut b);
+        arena.assert_partition(std::iter::empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "free ⊎ leased")]
+    fn partition_checker_catches_missing_table() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 8));
+        // `a` holds a block but is withheld from the checked set: the
+        // partition no longer covers the pool.
+        arena.assert_partition(std::iter::empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "twice in the free list")]
+    fn partition_checker_catches_double_free_entry() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        // Corrupt the free list directly (release() itself would catch the
+        // double-release in debug builds before the list is ever corrupted).
+        let b = *arena.free.last().unwrap();
+        arena.free.push(b);
+        arena.assert_partition(std::iter::empty());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "double-released")]
+    fn release_catches_stale_table_in_debug() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 8));
+        // Clone the table, release once, then release the stale copy: the
+        // debug occupancy bitmap must flag the second return of the block.
+        let mut stale = KvSeq { blocks: a.blocks.clone(), len: a.len };
+        arena.release(&mut a);
+        arena.release(&mut stale);
     }
 
     #[test]

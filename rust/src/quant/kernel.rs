@@ -71,6 +71,9 @@ impl KernelKind {
 
 /// Process-wide CLI override: 0 = unset, else the 1-based [`encode`] of the
 /// kind — `decode(encode(k)) == Some(k)` by construction (roundtrip-tested).
+/// Accessed with `Relaxed` (allowlisted in scripts/relaxed_allowlist.txt):
+/// a single standalone byte set once at CLI parse time, publishing no other
+/// memory.
 static PROCESS_OVERRIDE: AtomicU8 = AtomicU8::new(0);
 
 fn encode(k: KernelKind) -> u8 {

@@ -330,9 +330,13 @@ struct YCells {
     stride: usize,
 }
 
-// SAFETY: every writer touches a distinct (b, row) address — bands own
-// disjoint `row` ranges and each band index is claimed exactly once.
+// SAFETY: the handle is a pointer + stride into an `f32` matrix the caller
+// exclusively borrows for the whole dispatch; moving it to a worker moves
+// only the address, and `f32: Send`.
 unsafe impl Send for YCells {}
+// SAFETY: shared `&YCells` access is race-free by the `add` contract — every
+// writer touches a distinct (b, row) address, because bands own disjoint
+// `row` ranges and each band index is claimed exactly once (`ExecPool::run`).
 unsafe impl Sync for YCells {}
 
 impl YCells {
@@ -340,10 +344,17 @@ impl YCells {
         YCells { ptr: y.data.as_mut_ptr(), stride: y.cols }
     }
 
-    /// `y[b][row] += v`. Caller must hold the band owning `row`.
+    /// `y[b][row] += v`.
+    ///
+    /// # Safety
+    /// `b` must be in-batch and `row` in-matrix (so the address is inside the
+    /// borrowed accumulator), and the calling band must own `row` for the
+    /// duration of the dispatch — no other thread may touch `(·, row)` cells.
     #[inline]
     unsafe fn add(&self, b: usize, row: usize, v: f32) {
-        *self.ptr.add(b * self.stride + row) += v;
+        // SAFETY: caller contract — in-bounds address, exclusively owned via
+        // the band partition while the dispatch runs.
+        unsafe { *self.ptr.add(b * self.stride + row) += v };
     }
 }
 
@@ -1641,6 +1652,37 @@ mod tests {
         assert_eq!(back.mse, m.mse);
         assert_eq!(back.bits_per_weight, m.bits_per_weight);
         assert_eq!(back.seconds, m.seconds);
+    }
+
+    #[test]
+    fn ycells_pool_disjoint_bands_accumulate_exactly_once() {
+        // Focused Miri/TSan target for the raw-pointer accumulator: stripe
+        // row bands of a B×rows matrix across a real multi-worker pool and
+        // accumulate through `YCells::add` exactly as the multi kernels do.
+        // Any aliasing between bands, batch columns, or a retagging bug in
+        // the pointer arithmetic is UB Miri rejects; the value check catches
+        // lost or doubled updates.
+        let (b, rows, band) = (3usize, 32usize, 4usize);
+        let mut y = Matrix::zeros(b, rows);
+        let cells = YCells::of(&mut y);
+        let pool = crate::util::threadpool::ExecPool::new(3);
+        pool.run_bands(rows, band, |r0, r1| {
+            for row in r0..r1 {
+                for bb in 0..b {
+                    // Two adds per cell proves accumulation, not overwrite.
+                    // SAFETY: this band owns rows [r0, r1); `bb < b` and
+                    // `row < rows` are in-bounds; `y` outlives the dispatch.
+                    unsafe { cells.add(bb, row, (bb * rows + row) as f32) };
+                    // SAFETY: same disjoint-band ownership as the line above.
+                    unsafe { cells.add(bb, row, 1.0) };
+                }
+            }
+        });
+        for bb in 0..b {
+            for row in 0..rows {
+                assert_eq!(y.at(bb, row), (bb * rows + row) as f32 + 1.0, "({bb},{row})");
+            }
+        }
     }
 
     #[test]

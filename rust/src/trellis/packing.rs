@@ -238,6 +238,75 @@ mod tests {
     }
 
     #[test]
+    fn guard_word_property_adversarial_lengths() {
+        // Property form of the guard-word invariant, Miri-friendly: streams
+        // are drawn directly from the RNG (no Viterbi walk — any bit pattern
+        // is a legal cyclic stream for the padding layout), so the Miri lane
+        // can afford it. Lengths are biased toward the adversarial word
+        // boundaries (`padded_bits % 32 ∈ {0, 1, 31}`) where an off-by-one in
+        // the guard-word arithmetic would first go out of bounds.
+        prop_check("pad_for_decode guard word bounds", 40, |g| {
+            let l = g.usize_in(4, 16);
+            let k = g.usize_in(1, 2);
+            let v = if 2 * k < l && g.bool() { 2 } else { 1 };
+            let kv = k * v;
+            if kv >= l {
+                return;
+            }
+            let mut steps = g.usize_in(l.div_ceil(kv) + 1, 200);
+            if g.bool() {
+                // Nudge toward a boundary-adjacent padded length. Bounded
+                // scan: some (kV, L) residue classes can never land on one.
+                for _ in 0..32 {
+                    if matches!((steps * kv + (l - kv)) % 32, 0 | 1 | 31) {
+                        break;
+                    }
+                    steps += 1;
+                }
+            }
+            let trellis = Trellis::new(l as u32, k as u32, v as u32);
+            let total_bits = steps * kv;
+            let mut words: Vec<u32> =
+                (0..total_bits.div_ceil(32)).map(|_| g.rng.next_u64() as u32).collect();
+            // Zero the stray bits past the stream end, as pack_states would.
+            if total_bits % 32 != 0 {
+                let last = words.len() - 1;
+                words[last] &= (1u32 << (total_bits % 32)) - 1;
+            }
+            let padded = pad_for_decode(&trellis, &words, steps);
+            let padded_bits = total_bits + (l - kv);
+            assert_eq!(
+                padded.len(),
+                padded_bits.div_ceil(32) + 1,
+                "L={l} kV={kv} steps={steps}: padded length must be content + guard"
+            );
+            assert_eq!(
+                *padded.last().unwrap(),
+                0,
+                "L={l} kV={kv} steps={steps}: guard word must be zero"
+            );
+            for t in 0..steps {
+                let bit = t * kv;
+                // The decode kernels' unconditional high-word load.
+                assert!(
+                    (bit >> 5) + 1 < padded.len(),
+                    "L={l} kV={kv} steps={steps} step {t}: padded[w+1] out of bounds"
+                );
+                // Cyclic-stream reference, bit by bit.
+                let mut expect = 0u32;
+                for i in 0..l {
+                    expect |= get_bit(&words, (bit + i) % total_bits) << i;
+                }
+                assert_eq!(
+                    decode_window(&padded, bit, l as u32),
+                    expect,
+                    "L={l} kV={kv} steps={steps} step {t}: window != cyclic reference"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn decode_window_basics() {
         // Stream: bits 0..32 in word0 = 0xDEADBEEF, word1 = 0x12345678.
         let words = vec![0xDEADBEEFu32, 0x12345678, 0];

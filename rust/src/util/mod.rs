@@ -10,6 +10,7 @@ pub mod prop;
 pub mod rng;
 pub mod shutdown;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 
 /// Wall-clock timer for the bench harness.

@@ -6,8 +6,15 @@
 //! Offline environment: `ctrlc`/`signal-hook` are unavailable, so the handler
 //! is registered through libc's `signal` symbol directly (unix only; elsewhere
 //! `install` degrades to a flag that can only be tripped programmatically).
+//!
+//! The flag deliberately comes from [`crate::util::sync::real`] — the
+//! always-`std` corner of the sync shim — rather than the loom-switchable
+//! types: it must live in a `static` (loom atomics are runtime-constructed)
+//! and is written from an async-signal context that no loom model can
+//! schedule. `SeqCst` on a single flag is trivially sound; the loom lane
+//! covers the protocols that are not (`ExecPool`, `KvArena`).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::real::{AtomicBool, Ordering};
 
 static SHUTDOWN: AtomicBool = AtomicBool::new(false);
 
@@ -30,7 +37,7 @@ impl ShutdownFlag {
 #[cfg(unix)]
 mod imp {
     use super::SHUTDOWN;
-    use std::sync::atomic::Ordering;
+    use crate::util::sync::real::Ordering;
 
     pub const SIGINT: i32 = 2;
     pub const SIGTERM: i32 = 15;
@@ -45,6 +52,10 @@ mod imp {
     }
 
     pub fn install_handlers() {
+        // SAFETY: `signal` is the libc symbol with its documented C ABI;
+        // `on_signal` is `extern "C"`, never unwinds, and performs only an
+        // async-signal-safe atomic store. Re-registration (idempotent calls)
+        // is permitted by POSIX.
         unsafe {
             signal(SIGINT, on_signal);
             signal(SIGTERM, on_signal);
@@ -84,6 +95,8 @@ mod tests {
             fn raise(sig: i32) -> i32;
         }
         let flag = install();
+        // SAFETY: `raise` is the libc symbol; delivering SIGINT to ourselves
+        // is safe because `install` just registered a handler for it.
         unsafe {
             raise(imp::SIGINT);
         }

@@ -1,0 +1,109 @@
+//! Synchronization shim: the single import point for every concurrency
+//! primitive the crate uses on its parallel hot paths.
+//!
+//! Under a normal build this module is a zero-cost re-export of `std::sync`.
+//! Under `RUSTFLAGS="--cfg loom"` (the CI loom lane, `tests/loom.rs`) the same
+//! names resolve to [loom](https://docs.rs/loom)'s instrumented doubles, so
+//! loom can exhaustively model-check every interleaving of the `ExecPool`
+//! dispatch/steal/park protocol and the `KvArena` lease/release protocol
+//! instead of relying on whatever schedule the test machine happens to
+//! produce. Modules that participate in the modeled protocols
+//! (`util::threadpool`, `model::kv` call sites, the loom tests) must import
+//! `Mutex`/`Condvar`/`Arc`/`atomic::*` and thread spawning from here, never
+//! from `std::sync` directly — otherwise loom cannot see (or permute) the
+//! operation.
+//!
+//! ## What is deliberately *not* modeled
+//!
+//! * [`real`] re-exports the `std` atomics unconditionally. It exists for the
+//!   one place loom types cannot go: `util::shutdown`'s process-wide signal
+//!   flag, which must be a `static` (loom atomics are runtime-constructed and
+//!   only usable inside `loom::model`) and is written from an async-signal
+//!   context loom has no concept of. Routing it through `real` keeps the
+//!   exclusion explicit and greppable.
+//! * `OnceLock` statics (e.g. `ExecPool::shared_sequential`) stay on `std`;
+//!   the loom tests construct their pools explicitly inside the model.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+/// Always-`std` atomics for state that exists outside any loom model: the
+/// async-signal-safe shutdown flag (`util::shutdown`). Everything else should
+/// use [`atomic`] so the loom lane can check it.
+pub mod real {
+    pub use std::sync::atomic::{AtomicBool, Ordering};
+}
+
+/// Thread handle type for pool workers (std or loom, matching the build).
+#[cfg(not(loom))]
+pub type JoinHandle = std::thread::JoinHandle<()>;
+#[cfg(loom)]
+pub type JoinHandle = loom::thread::JoinHandle<()>;
+
+/// Spawn a named worker thread. Under loom the name is dropped (loom's
+/// scheduler identifies threads itself) but the spawn is modeled.
+#[cfg(not(loom))]
+pub fn spawn_worker<F>(name: String, f: F) -> JoinHandle
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new().name(name).spawn(f).expect("spawn pool worker")
+}
+
+#[cfg(loom)]
+pub fn spawn_worker<F>(_name: String, f: F) -> JoinHandle
+where
+    F: FnOnce() + Send + 'static,
+{
+    loom::thread::spawn(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomic::{AtomicUsize, Ordering};
+    use super::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn shim_primitives_behave_like_std() {
+        // Not a concurrency test — just pins that the re-exported surface is
+        // the one the pool relies on (lock/wait/notify/fetch_add names).
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let counter = AtomicUsize::new(0);
+        {
+            let mut ready = pair.0.lock().unwrap();
+            *ready = true;
+            counter.fetch_add(2, Ordering::AcqRel);
+            pair.1.notify_all();
+        }
+        assert!(*pair.0.lock().unwrap());
+        assert_eq!(counter.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn worker_spawn_runs_and_joins() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = Arc::clone(&hits);
+        let h = super::spawn_worker("qtip-sync-smoke".to_string(), move || {
+            h2.fetch_add(1, Ordering::Release);
+        });
+        h.join().expect("worker must not panic");
+        assert_eq!(hits.load(Ordering::Acquire), 1);
+    }
+}

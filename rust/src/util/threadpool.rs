@@ -15,11 +15,22 @@
 //! uneven per-index cost load-balances automatically. On the single-core CI
 //! machine a width-1 pool spawns no threads and degrades to plain sequential
 //! execution; all callers are written so results are identical either way.
+//!
+//! ## Soundness tooling
+//!
+//! Every primitive below comes from [`crate::util::sync`], the
+//! `cfg(loom)`-switchable shim, so the dispatch protocol — the `busy`
+//! swap/store re-entrancy gate, the `next` `fetch_add` work-stealing counter,
+//! the `remaining` AcqRel countdown, condvar park/wake, panic propagation and
+//! nested-use inline degradation — is exhaustively model-checked by the loom
+//! lane (`tests/loom.rs`, `RUSTFLAGS="--cfg loom" cargo test --test loom`).
+//! The raw-pointer surface (`Job::data`, [`SendPtr`], [`ExecPool::map`]) is
+//! additionally exercised under Miri in CI.
 
-use std::mem::{ManuallyDrop, MaybeUninit};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Condvar, Mutex};
+use std::mem::MaybeUninit;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of workers to use: `QTIP_THREADS` env var, else available parallelism.
 pub fn default_workers() -> usize {
@@ -71,13 +82,25 @@ impl Clone for Job {
 }
 
 // SAFETY: `data` points at an `F: Sync` borrowed for the duration of `run`
-// (see `Job` docs); the raw pointer itself is only dereferenced through
-// `call`, which requires a claimed index.
+// (see `Job` docs), so moving the handle to another thread moves only a
+// pointer that stays valid until `remaining` drains; it is dereferenced
+// exclusively through `call` under a claimed index.
 unsafe impl Send for Job {}
+// SAFETY: all shared state is `Arc`-wrapped atomics, and `&Job` exposes
+// `data` only as `&F` where `F: Sync` (enforced by the `call_shim::<F>`
+// instantiation in `run`), so concurrent shared access is safe.
 unsafe impl Sync for Job {}
 
+/// Call the type-erased job closure for index `i`.
+///
+/// # Safety
+/// `data` must point at a live `F` (guaranteed by [`ExecPool::run`], which
+/// keeps the closure on its stack until `remaining == 0`), and `i` must be an
+/// index claimed exactly once from `Job::next`.
 unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
-    (*(data as *const F))(i)
+    // SAFETY: caller contract above — `data` was produced from `&F` in `run`
+    // and is still borrowed for the duration of this call.
+    unsafe { (*(data as *const F))(i) }
 }
 
 struct State {
@@ -107,7 +130,7 @@ struct Shared {
 /// the degenerate pool, not a separate code path.
 pub struct ExecPool {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<crate::util::sync::JoinHandle>,
     width: usize,
 }
 
@@ -125,10 +148,9 @@ impl ExecPool {
         let handles = (0..width - 1)
             .map(|i| {
                 let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("qtip-exec-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn pool worker")
+                crate::util::sync::spawn_worker(format!("qtip-exec-{i}"), move || {
+                    worker_loop(sh)
+                })
             })
             .collect();
         ExecPool { shared, handles, width }
@@ -144,9 +166,18 @@ impl ExecPool {
     /// caller). Lets non-pool convenience entry points — e.g.
     /// `QuantizedMatrix::matvec` — route through the scratch-based pool
     /// kernels without constructing a pool per call.
+    #[cfg(not(loom))]
     pub fn shared_sequential() -> &'static ExecPool {
-        static SEQ: OnceLock<ExecPool> = OnceLock::new();
+        static SEQ: std::sync::OnceLock<ExecPool> = std::sync::OnceLock::new();
         SEQ.get_or_init(ExecPool::sequential)
+    }
+
+    /// Loom builds cannot park a loom primitive in a process-wide static
+    /// (loom objects only live inside `loom::model`), so the shared handle
+    /// degrades to a leaked per-call pool. Only loom tests ever run this.
+    #[cfg(loom)]
+    pub fn shared_sequential() -> &'static ExecPool {
+        Box::leak(Box::new(ExecPool::sequential()))
     }
 
     /// Total execution width, including the submitting thread.
@@ -168,7 +199,9 @@ impl ExecPool {
             return;
         }
         // Inline paths: degenerate pool, single item, or the pool is already
-        // executing a job (re-entrant or concurrent submission).
+        // executing a job (re-entrant or concurrent submission). Acquire on
+        // the winning swap pairs with the Release store below, so a thread
+        // that takes ownership of the pool sees the previous job fully drained.
         if self.width <= 1 || n == 1 || self.shared.busy.swap(true, Ordering::Acquire) {
             for i in 0..n {
                 f(i);
@@ -244,6 +277,16 @@ impl ExecPool {
     /// Parallel map preserving order. Results are written straight into their
     /// disjoint output slots (no Mutex per slot, no `T: Default + Clone`
     /// pre-fill — the seed's `parallel_map` needed both).
+    ///
+    /// The reassembly is a per-slot `assume_init` walk rather than a
+    /// `Vec::from_raw_parts` pointer cast of the `MaybeUninit` buffer: the
+    /// cast version retagged the allocation through a derived pointer, which
+    /// Miri's borrow tracking rejects, and it silently relied on
+    /// `Vec<MaybeUninit<T>>`/`Vec<T>` allocation-identity. The element-wise
+    /// path is unambiguously defined behavior (and `collect` reuses the
+    /// allocation in practice). On a worker panic `run` unwinds first, so the
+    /// buffer is dropped as `MaybeUninit` — initialized slots leak rather
+    /// than risk dropping a half-written value.
     pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -254,12 +297,13 @@ impl ExecPool {
         self.run_chunks(&mut out, 1, |i, slot| {
             slot[0].write(f(i));
         });
-        // SAFETY: `run` returns only after every index executed (a worker
-        // panic propagates above and leaks the buffer instead of reading it),
-        // so all n slots are initialized. Vec<MaybeUninit<T>> and Vec<T>
-        // share layout.
-        let mut out = ManuallyDrop::new(out);
-        unsafe { Vec::from_raw_parts(out.as_mut_ptr() as *mut T, out.len(), out.capacity()) }
+        out.into_iter()
+            .map(|slot| {
+                // SAFETY: `run` returned without panicking, so every index
+                // executed and wrote its slot exactly once.
+                unsafe { slot.assume_init() }
+            })
+            .collect()
     }
 }
 
@@ -278,10 +322,28 @@ impl Drop for ExecPool {
 
 /// Raw-pointer wrapper so closures writing provably disjoint ranges can be
 /// `Sync`. Shared by [`ExecPool::run_chunks`] and the pool-striped kernels
-/// (`util::matrix`); every user must guarantee its claimed ranges are
-/// disjoint and that the pointee outlives the dispatch.
+/// (`util::matrix`, `quant`); every user must guarantee its claimed ranges
+/// are disjoint and that the pointee outlives the dispatch.
+///
+/// ## Why the bound is `T: Send` (and not `T: Sync`)
+///
+/// What actually crosses threads here is *exclusive* access: each claimed
+/// index materializes `&mut T` (or `&mut [T]`) over a range no other index
+/// touches, so the wrapper hands whole values to one thread at a time —
+/// exactly the capability `T: Send` certifies. `T: Sync` would be the wrong
+/// (and insufficient) bound: it certifies shared `&T` access, which these
+/// kernels never perform through the pointer, and demanding it would reject
+/// perfectly fine `Send`-only payloads. Conversely, without `T: Send` a
+/// `!Send` type (e.g. `Rc`) could have its drop/refcount run on another
+/// worker — the exact UB the auto-trait machinery exists to rule out.
 pub struct SendPtr<T>(pub *mut T);
+// SAFETY: sending the wrapper only moves the address; users take `&mut T`
+// over disjoint ranges, so cross-thread transfer of the pointee is exclusive
+// access, which `T: Send` certifies (see the bound rationale above).
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: `&SendPtr<T>` exposes nothing but a copy of the address; all
+// dereferencing is done by callers under the disjoint-ranges contract, each
+// range being exclusively owned by one thread (`T: Send`), never shared.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
@@ -291,6 +353,12 @@ impl<T> Clone for SendPtr<T> {
 impl<T> Copy for SendPtr<T> {}
 
 /// Claim-and-run loop shared by workers and the submitting thread.
+///
+/// `next` claims may be `Relaxed`: indices are independent and the claim
+/// itself carries no payload. The `remaining` countdown is `AcqRel` — each
+/// worker's decrement releases its writes, and the submitter's final Acquire
+/// load (in `run`) pairs with them, so everything the job wrote
+/// happens-before `run` returns.
 fn execute(job: &Job, shared: &Shared) {
     loop {
         let i = job.next.fetch_add(1, Ordering::Relaxed);
@@ -299,6 +367,9 @@ fn execute(job: &Job, shared: &Shared) {
         }
         // A panic must still decrement `remaining`, or the submitter (and any
         // borrowed data the job closure captures) would deadlock forever.
+        //
+        // SAFETY: `i` was claimed exactly once from `next` and `i < n`; the
+        // closure behind `data` outlives the dispatch (see `Job` docs).
         let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) })).is_ok();
         if !ok {
             job.panicked.store(true, Ordering::Release);
@@ -381,6 +452,27 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(v.0, i * i);
         }
+    }
+
+    #[test]
+    fn map_drops_every_result_exactly_once() {
+        // Guards the MaybeUninit reassembly in `map`: each produced value must
+        // be dropped exactly once by the caller (a double-init, skipped slot,
+        // or double-drop in the assume_init walk would show up here — and
+        // under the Miri CI lane, as UB).
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct CountsDrop(usize);
+        impl Drop for CountsDrop {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let pool = ExecPool::new(4);
+        let out = pool.map(37, CountsDrop);
+        assert_eq!(out.len(), 37);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 0, "no value may drop during map");
+        drop(out);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 37);
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! Loom lane: exhaustive model checking of the crate's two concurrency
+//! protocols — the [`ExecPool`] dispatch/steal/park protocol and the
+//! [`KvArena`] lease/release partition under external synchronization.
+//!
+//! This file only compiles under `RUSTFLAGS="--cfg loom"`, which switches
+//! `qtip::util::sync` from `std::sync` re-exports to the (vendored) loom
+//! doubles. `loom::model` then re-runs each closure under **every** thread
+//! interleaving up to the `LOOM_MAX_PREEMPTIONS` bound (default 2), so the
+//! assertions below hold for every schedule the model can produce, not just
+//! the ones the CI machine happens to exhibit. Run locally with:
+//!
+//! ```text
+//! cd rust && RUSTFLAGS="--cfg loom" cargo test --release --test loom -- --test-threads=1
+//! ```
+//!
+//! Models are deliberately minimal (width-2 pools, 1–2 item jobs, 1-block
+//! arenas): loom cost is exponential in visible operations, and the protocol
+//! logic — busy-gate handoff, epoch observation, countdown-then-park,
+//! lease/release exclusivity — is fully exercised by the smallest instance
+//! with real concurrency. Observer counters use plain `std` atomics so they
+//! do not add decision points to the explored schedule.
+
+#![cfg(loom)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc as StdArc;
+
+use qtip::model::{KvArena, KvSeq, ModelConfig};
+use qtip::util::threadpool::ExecPool;
+
+fn tiny_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 4;
+    cfg.n_layers = 1;
+    cfg.max_seq = 16;
+    cfg
+}
+
+/// Every index of a dispatched job is executed exactly once, whether it is
+/// claimed by the parked worker or stolen by the submitting thread, for every
+/// interleaving of submit, worker wake-up, claim, countdown, and park.
+#[test]
+fn pool_run_executes_each_index_exactly_once() {
+    loom::model(|| {
+        let pool = ExecPool::new(2);
+        let hits: StdArc<Vec<AtomicUsize>> =
+            StdArc::new((0..2).map(|_| AtomicUsize::new(0)).collect());
+        let h2 = StdArc::clone(&hits);
+        pool.run(2, move |i| {
+            h2[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} claim count");
+        }
+        // Pool drop (shutdown flag, notify, join) is part of the model too.
+    });
+}
+
+/// The pool survives consecutive submissions: the busy-gate release and the
+/// `remaining` countdown of job 1 must hand the pool back in a state where
+/// job 2 dispatches correctly under every schedule (a stale worker waking
+/// late for job 1 must claim nothing from job 2's counter).
+#[test]
+fn pool_is_reusable_after_a_job_drains() {
+    loom::model(|| {
+        let pool = ExecPool::new(2);
+        let count = StdArc::new(AtomicUsize::new(0));
+        for _ in 0..2 {
+            let c = StdArc::clone(&count);
+            pool.run(2, move |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    });
+}
+
+/// A panicking job index must surface as a panic from `run` on the submitter
+/// — never a deadlock (the countdown still drains) — and must leave the pool
+/// usable for the next submission, wherever the panicking index lands.
+#[test]
+fn pool_panic_propagates_and_pool_remains_usable() {
+    // The panic fires in every explored schedule; silence the default hook so
+    // the lane's log is not thousands of expected backtraces.
+    std::panic::set_hook(Box::new(|_| {}));
+    loom::model(|| {
+        let pool = ExecPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, |i| {
+                if i == 1 {
+                    panic!("deliberate model panic");
+                }
+            });
+        }));
+        assert!(r.is_err(), "job panic must propagate out of run()");
+        let ran = StdArc::new(AtomicUsize::new(0));
+        let r2 = StdArc::clone(&ran);
+        pool.run(2, move |_| {
+            r2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "pool must be reusable after a panic");
+    });
+    let _ = std::panic::take_hook();
+}
+
+/// `run` called from inside a job degrades to inline execution (the busy gate
+/// is held by the outer job) instead of corrupting the outer dispatch —
+/// whether the nested call happens on the submitter or on the worker.
+#[test]
+fn nested_run_degrades_to_inline_under_all_schedules() {
+    loom::model(|| {
+        let pool = StdArc::new(ExecPool::new(2));
+        let inner = StdArc::new(AtomicUsize::new(0));
+        let (p2, i2) = (StdArc::clone(&pool), StdArc::clone(&inner));
+        pool.run(2, move |_| {
+            let i3 = StdArc::clone(&i2);
+            p2.run(2, move |_| {
+                i3.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(inner.load(Ordering::SeqCst), 4);
+    });
+}
+
+/// Two threads submitting to the same pool concurrently: exactly one wins the
+/// busy gate (the other runs inline), and every index of both jobs executes
+/// exactly once regardless of who wins.
+#[test]
+fn concurrent_submitters_never_corrupt_each_other() {
+    loom::model(|| {
+        let pool = StdArc::new(ExecPool::new(2));
+        let count = StdArc::new(AtomicUsize::new(0));
+        let (p2, c2) = (StdArc::clone(&pool), StdArc::clone(&count));
+        let other = loom::thread::spawn(move || {
+            let c3 = StdArc::clone(&c2);
+            p2.run(2, move |_| {
+                c3.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        let c4 = StdArc::clone(&count);
+        pool.run(2, move |_| {
+            c4.fetch_add(1, Ordering::SeqCst);
+        });
+        other.join().unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 4, "both jobs must fully execute");
+    });
+}
+
+/// Dropping a pool whose worker may not even have parked yet (or may be
+/// mid-wake) always terminates: the shutdown flag, notify, and join handshake
+/// has no lost-wakeup under any schedule.
+#[test]
+fn pool_drop_joins_worker_under_all_schedules() {
+    loom::model(|| {
+        let pool = ExecPool::new(2);
+        drop(pool);
+    });
+}
+
+/// KvArena lease/release from two threads through a `util::sync` Mutex (the
+/// serve loop's external synchronization, modeled): a successful exhaustive
+/// `ensure` implies exclusive ownership of the pool's only block — verified
+/// with the partition checker while the lock is held — and after both
+/// threads release, the pool is whole again under every interleaving.
+#[test]
+fn kv_arena_lease_release_partition_under_interleaving() {
+    loom::model(|| {
+        let cfg = tiny_cfg();
+        // One 8-position block total: the two threads contend for it.
+        let arena = qtip::util::sync::Arc::new(qtip::util::sync::Mutex::new(KvArena::new(
+            &cfg, 8, 1,
+        )));
+        let wins = StdArc::new(AtomicUsize::new(0));
+        let (a2, w2) = (qtip::util::sync::Arc::clone(&arena), StdArc::clone(&wins));
+        let worker = loom::thread::spawn(move || {
+            let mut seq = KvSeq::new();
+            let got = {
+                let mut ar = a2.lock().unwrap();
+                let got = ar.ensure(&mut seq, 8);
+                if got {
+                    // Holding the pool's only block means the partition over
+                    // just our table must be exact.
+                    ar.assert_partition([&seq]);
+                }
+                got
+            };
+            if got {
+                w2.fetch_add(1, Ordering::SeqCst);
+                let mut ar = a2.lock().unwrap();
+                ar.release(&mut seq);
+            }
+        });
+        let mut seq = KvSeq::new();
+        let got = {
+            let mut ar = arena.lock().unwrap();
+            let got = ar.ensure(&mut seq, 8);
+            if got {
+                ar.assert_partition([&seq]);
+            }
+            got
+        };
+        if got {
+            wins.fetch_add(1, Ordering::SeqCst);
+            let mut ar = arena.lock().unwrap();
+            ar.release(&mut seq);
+        }
+        worker.join().unwrap();
+        // At least one thread must have won the block (both may, serially),
+        // and after all releases the free list covers the pool exactly.
+        assert!(wins.load(Ordering::SeqCst) >= 1, "the single block must be leasable");
+        let ar = arena.lock().unwrap();
+        assert_eq!(ar.blocks_free(), 1);
+        ar.assert_partition(std::iter::empty());
+    });
+}

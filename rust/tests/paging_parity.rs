@@ -158,6 +158,10 @@ fn paged_streams(model: &Transformer, pool: &ExecPool) -> Vec<Vec<u16>> {
             arena.release(&mut l.seq);
             done[l.job_idx] = Some(l.generated);
         }
+        // Round boundary: the live block tables and the free list must form
+        // an exact partition of the pool (mirrors the serve loop's debug
+        // check, but unconditional here).
+        arena.assert_partition(live.iter().map(|l| &l.seq));
         round += 1;
         assert!(round < 10_000, "simulated batcher failed to converge");
     }
@@ -239,6 +243,9 @@ fn paged_single_round_logits_match_contiguous_for_all_codes() {
                     "{code} pos={pos} seq={j}: paged round diverged from contiguous"
                 );
             }
+            // After every fused round the arena partition must be exact over
+            // the full table set (including sequences idle this round).
+            arena.assert_partition(seqs.iter());
         }
     }
 }

@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Repo soundness lint: SAFETY comments and Ordering::Relaxed policing.
+
+Two rules, enforced over every tracked .rs file under rust/ (CI runs this in
+the lint job; run locally with `python3 scripts/lint_unsafe.py`):
+
+1. **Every `unsafe` site needs a real SAFETY comment.**
+   - `unsafe { ... }` blocks and `unsafe impl` items must have a line whose
+     comment starts with `SAFETY:` within the preceding context window (the
+     same convention clippy's `undocumented_unsafe_blocks` checks at compile
+     time — this lint is the textual backstop that also covers cfg'd-out code
+     and runs without a Rust toolchain).
+   - `unsafe fn` declarations must carry a `# Safety` doc section (or a
+     `SAFETY:` comment) explaining the caller contract.
+   - `unsafe` in *type* position (`fn(...)` pointer types) is not a site.
+
+2. **`Ordering::Relaxed` is allowlist-only.** Every line using Relaxed must
+   match an entry in scripts/relaxed_allowlist.txt (format:
+   `<repo-relative path> | <line substring>`). The allowlist carries a written
+   justification per entry; a new Relaxed use fails this lint until it is
+   justified there or upgraded to an acquire/release ordering.
+
+Exit status 0 iff no violations. No third-party dependencies.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+RUST_ROOTS = [REPO / "rust"]
+ALLOWLIST = REPO / "scripts" / "relaxed_allowlist.txt"
+
+# How far above an `unsafe` site a SAFETY comment may sit. Small on purpose:
+# a comment ten lines away is not documenting *this* block.
+SAFETY_WINDOW = 6
+# How far above an `unsafe fn` a doc comment block may declare `# Safety`.
+DOC_WINDOW = 30
+
+SAFETY_RE = re.compile(r"(//|/\*)[/!*\s]*SAFETY:")
+DOC_SAFETY_RE = re.compile(r"(///|//!).*#\s*Safety")
+RELAXED_RE = re.compile(r"Ordering::Relaxed")
+# `unsafe` in type position: `: unsafe fn(`, `(unsafe fn(`, `-> unsafe fn(`.
+TYPE_POS_RE = re.compile(r"(:|\(|->)\s*unsafe\s+fn\s*\(")
+STRING_RE = re.compile(r'"(?:[^"\\]|\\.)*"')
+
+
+def rs_files() -> list[Path]:
+    out: list[Path] = []
+    for root in RUST_ROOTS:
+        for p in sorted(root.rglob("*.rs")):
+            if "target" in p.parts:
+                continue
+            out.append(p)
+    return out
+
+
+def strip_noise(line: str) -> str:
+    """Remove string literals and line comments so tokens inside them do not
+    register as code. (Block comments spanning lines are handled by the
+    caller's in_block_comment state.)"""
+    line = STRING_RE.sub('""', line)
+    cut = line.find("//")
+    if cut != -1:
+        line = line[:cut]
+    return line
+
+
+def classify_unsafe(code: str) -> str | None:
+    """Return the kind of unsafe site on this code line, if any."""
+    if TYPE_POS_RE.search(code):
+        code = TYPE_POS_RE.sub("", code)
+    if not re.search(r"\bunsafe\b", code):
+        return None
+    if re.search(r"\bunsafe\s+impl\b", code):
+        return "impl"
+    if re.search(r"\bunsafe\s+(?:extern\s+\S+\s+)?fn\b", code):
+        return "fn"
+    return "block"
+
+
+def has_safety_above(lines: list[str], idx: int, window: int, doc_ok: bool) -> bool:
+    lo = max(0, idx - window)
+    for j in range(idx, lo - 1, -1):
+        line = lines[j]
+        if SAFETY_RE.search(line):
+            return True
+        if doc_ok and DOC_SAFETY_RE.search(line):
+            return True
+    return False
+
+
+def load_allowlist() -> list[tuple[str, str]]:
+    entries: list[tuple[str, str]] = []
+    if not ALLOWLIST.exists():
+        return entries
+    for raw in ALLOWLIST.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if "|" not in line:
+            print(f"relaxed_allowlist.txt: malformed entry (need 'path | substring'): {line}")
+            sys.exit(2)
+        path, sub = (part.strip() for part in line.split("|", 1))
+        entries.append((path, sub))
+    return entries
+
+
+def main() -> int:
+    violations: list[str] = []
+    allow = load_allowlist()
+    used = [False] * len(allow)
+
+    for path in rs_files():
+        rel = path.relative_to(REPO).as_posix()
+        lines = path.read_text().splitlines()
+        in_block_comment = False
+        for i, raw in enumerate(lines):
+            line = raw
+            if in_block_comment:
+                end = line.find("*/")
+                if end == -1:
+                    continue
+                line = line[end + 2 :]
+                in_block_comment = False
+            # Strip (possibly several) block comments opening on this line.
+            while True:
+                start = line.find("/*")
+                if start == -1:
+                    break
+                end = line.find("*/", start + 2)
+                if end == -1:
+                    line = line[:start]
+                    in_block_comment = True
+                    break
+                line = line[:start] + line[end + 2 :]
+            code = strip_noise(line)
+
+            kind = classify_unsafe(code)
+            if kind == "impl" or kind == "block":
+                if not has_safety_above(lines, i, SAFETY_WINDOW, doc_ok=False):
+                    violations.append(
+                        f"{rel}:{i + 1}: unsafe {kind} without a '// SAFETY:' comment"
+                    )
+            elif kind == "fn":
+                if not has_safety_above(lines, i, DOC_WINDOW, doc_ok=True):
+                    violations.append(
+                        f"{rel}:{i + 1}: unsafe fn without a '# Safety' doc section"
+                    )
+
+            if RELAXED_RE.search(code):
+                hit = False
+                for k, (apath, sub) in enumerate(allow):
+                    if apath == rel and sub in raw:
+                        used[k] = True
+                        hit = True
+                        break
+                if not hit:
+                    violations.append(
+                        f"{rel}:{i + 1}: Ordering::Relaxed not in scripts/relaxed_allowlist.txt "
+                        f"(justify it there or use an acquire/release ordering)"
+                    )
+
+    for (apath, sub), u in zip(allow, used):
+        if not u:
+            print(f"warning: stale allowlist entry never matched: {apath} | {sub}")
+
+    if violations:
+        print(f"{len(violations)} soundness-lint violation(s):")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print(f"lint_unsafe: OK ({len(rs_files())} files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
