@@ -48,7 +48,7 @@ fn main() {
         code: "3inst".into(),
         seed: 0x5171_50,
     };
-    let report = quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::new(0), |_| {});
+    let report = quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::new(0), |_| {}).unwrap();
     let quant_model_secs = t.secs();
     let mut cache = KvCache::new(&model.cfg);
     let _ = model.decode_step(&mut cache, 42);

@@ -53,7 +53,7 @@ impl Workload {
     ) -> (f64, QuantizeReport) {
         let mut m = self.model();
         let report =
-            quantize_model_qtip(&mut m, hs, cfg, &ExecPool::sequential(), |_| {});
+            quantize_model_qtip(&mut m, hs, cfg, &ExecPool::sequential(), |_| {}).unwrap();
         m.ensure_caches();
         let rep = perplexity(&m, &self.eval, eval_tokens);
         (rep.ppl, report)
@@ -68,7 +68,7 @@ impl Workload {
     ) -> (f64, QuantizeReport) {
         let mut m = self.model();
         let report =
-            quantize_model_baseline(&mut m, hs, kind, 0xBA5E, &ExecPool::sequential());
+            quantize_model_baseline(&mut m, hs, kind, 0xBA5E, &ExecPool::sequential()).unwrap();
         let rep = perplexity(&m, &self.eval, eval_tokens);
         (rep.ppl, report)
     }

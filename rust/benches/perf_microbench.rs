@@ -9,8 +9,8 @@
 //!  * sgemm GF/s and RHT transforms/s (substrate rooflines).
 
 use qtip::bench::{f2, samples, BenchJson, Table};
-use qtip::codes::{build_code, Code, HybridCode, PureLutCode};
-use qtip::quant::{CodeSpec, KernelKind, QuantizedMatrix};
+use qtip::codes::{build_code, Code};
+use qtip::quant::{registry, KernelKind, QuantizedMatrix};
 use qtip::trellis::{Trellis, Viterbi, ViterbiWorkspace};
 use qtip::util::hadamard::hadamard_inplace;
 use qtip::util::matrix::Matrix;
@@ -22,16 +22,20 @@ fn main() {
     let mut table = Table::new("§Perf microbenchmarks", &["kernel", "metric", "value"]);
     let mut json = BenchJson::new("microbench");
 
-    // Decode rates.
-    for name in ["1mad", "3inst", "hyb", "lut"] {
-        let v = if name == "hyb" { 2 } else { 1 };
-        let code = build_code(name, 16, v, 1);
+    // Decode rates, per registered method (each at its bench trellis width —
+    // pure-LUT codes cap L so the table stays L1-resident).
+    for m in registry::all() {
+        let name = m.name();
+        let l = m.bench_l();
+        let (_trellis, spec) = m.synthetic_entry(l, 2, 1);
+        let v = spec.v() as usize;
+        let mask = (1u32 << l) - 1;
         let n = (4 << 20) as u32;
         let mut out = [0.0f32; 2];
         let t = Timer::start();
         let mut acc = 0.0f32;
         for s in 0..n {
-            code.decode(s & 0xFFFF, &mut out[..v as usize]);
+            spec.decode(s & mask, &mut out[..v]);
             acc += out[0];
         }
         std::hint::black_box(acc);
@@ -46,8 +50,8 @@ fn main() {
 
     // Fused decode-matvec vs dense GEMV at d=2048.
     let d = 2048;
-    let qm =
-        QuantizedMatrix::synthetic(d, d, Trellis::new(16, 2, 1), CodeSpec::ThreeInst, 16, 16, 2);
+    let (ti_trellis, ti_spec) = registry::require("3inst").synthetic_entry(16, 2, 1);
+    let qm = QuantizedMatrix::synthetic(d, d, ti_trellis, ti_spec, 16, 16, 2);
     let mut rng = Rng::new(3);
     let x = rng.gauss_vec(d);
     let mut y = vec![0.0f32; d];
@@ -147,19 +151,19 @@ fn main() {
 }
 
 /// §Perf optimization #2: scalar vs lane-blocked fused decode-matvec,
-/// single-thread, per CodeSpec variant. The acceptance gate tracks the 1MAD
-/// and 3INST `lanes_speedup` rows (≥ 1.5× on the CI host); `ns_per_weight`
-/// is the trajectory metric successive PRs compare.
+/// single-thread, per registered quant method (each at its bench trellis
+/// width). The acceptance gate tracks the 1MAD and 3INST `lanes_speedup`
+/// rows (≥ 1.5× on the CI host); `ns_per_weight` is the trajectory metric
+/// successive PRs compare. New registry entries get rows automatically.
 fn kernel_comparison(scale: f64, table: &mut Table, json: &mut BenchJson) {
     let d = 1024usize;
-    let hyb = HybridCode::train(16, 2, 9, 5);
-    let lut = PureLutCode::new(12, 1, 6);
-    let specs: Vec<(&str, Trellis, CodeSpec)> = vec![
-        ("1mad", Trellis::new(16, 2, 1), CodeSpec::OneMad),
-        ("3inst", Trellis::new(16, 2, 1), CodeSpec::ThreeInst),
-        ("hyb", Trellis::new(16, 2, 2), CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() }),
-        ("lut", Trellis::new(12, 2, 1), CodeSpec::Lut { v: 1, table: lut.table.clone() }),
-    ];
+    let specs: Vec<_> = registry::all()
+        .iter()
+        .map(|m| {
+            let (trellis, spec) = m.synthetic_entry(m.bench_l(), 2, 5);
+            (m.name(), trellis, spec)
+        })
+        .collect();
     let mut rng = Rng::new(41);
     let x = rng.gauss_vec(d);
     let mut y = vec![0.0f32; d];

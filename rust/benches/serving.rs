@@ -39,7 +39,7 @@ fn bench_model() -> Arc<Transformer> {
     let seqs = vec![(0..96u16).collect::<Vec<_>>(), (50..146u16).collect::<Vec<_>>()];
     let hs = collect_hessians(&model, &seqs);
     let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 16, ty: 16, code: "3inst".into(), seed: 7 };
-    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
     Arc::new(model)
 }
 
@@ -57,6 +57,7 @@ fn workload(n: usize) -> Vec<GenRequest> {
                 temperature: 0.0,
                 top_k: 1,
                 seed: i as u64,
+                model: String::new(),
             }
         })
         .collect()

@@ -15,8 +15,7 @@
 //! throughput stays flat, so fused beats B× per-sequence by B = 8.
 
 use qtip::bench::{f2, samples, BenchJson, Table};
-use qtip::quant::{CodeSpec, QuantizedMatrix};
-use qtip::trellis::Trellis;
+use qtip::quant::{registry, QuantizedMatrix};
 use qtip::util::matrix::Matrix;
 use qtip::util::rng::Rng;
 use qtip::util::threadpool::ExecPool;
@@ -132,15 +131,8 @@ fn main() {
 
         // QTIP computed codes at 2/3/4 bits.
         for k in [2u32, 3, 4] {
-            let qm = QuantizedMatrix::synthetic(
-                d,
-                d,
-                Trellis::new(16, k, 1),
-                CodeSpec::ThreeInst,
-                16,
-                16,
-                3,
-            );
+            let (trellis, spec) = registry::require("3inst").synthetic_entry(16, k, 3);
+            let qm = QuantizedMatrix::synthetic(d, d, trellis, spec, 16, 16, 3);
             let bytes = qm.size_bytes();
             let (rate, bw) = bench_matvec(d, d, bytes, min_secs, |x, y| {
                 y.fill(0.0);
@@ -163,16 +155,8 @@ fn main() {
         }
 
         // QTIP HYB (2-bit, V=2, Q=9 — 2KiB LUT stays L1-resident).
-        let hyb = qtip::codes::HybridCode::train(16, 2, 9, 5);
-        let qm = QuantizedMatrix::synthetic(
-            d,
-            d,
-            Trellis::new(16, 2, 2),
-            CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() },
-            16,
-            16,
-            4,
-        );
+        let (trellis, spec) = registry::require("hyb").synthetic_entry(16, 2, 5);
+        let qm = QuantizedMatrix::synthetic(d, d, trellis, spec, 16, 16, 4);
         let (rate, bw) = bench_matvec(d, d, qm.size_bytes(), min_secs, |x, y| {
             y.fill(0.0);
             qm.matvec_tilde(x, y);
@@ -210,15 +194,8 @@ fn thread_sweep(min_secs: f64, json: &mut BenchJson) {
         &["B", "workers", "rounds/s", "tok/s (cols/s)", "vs 1 worker"],
     );
     let d = 1024usize;
-    let qm = QuantizedMatrix::synthetic(
-        d,
-        d,
-        Trellis::new(16, 2, 1),
-        CodeSpec::ThreeInst,
-        16,
-        16,
-        3,
-    );
+    let (trellis, spec) = registry::require("3inst").synthetic_entry(16, 2, 3);
+    let qm = QuantizedMatrix::synthetic(d, d, trellis, spec, 16, 16, 3);
     let mut rng = Rng::new(13);
 
     for b in [1usize, 8] {
@@ -284,15 +261,8 @@ fn batch_sweep(min_secs: f64, json: &mut BenchJson) {
         &["B", "path", "rounds/s", "tok/s (cols/s)", "fused vs per-seq"],
     );
     let d = 1024usize;
-    let qm = QuantizedMatrix::synthetic(
-        d,
-        d,
-        Trellis::new(16, 2, 1),
-        CodeSpec::ThreeInst,
-        16,
-        16,
-        3,
-    );
+    let (trellis, spec) = registry::require("3inst").synthetic_entry(16, 2, 3);
+    let qm = QuantizedMatrix::synthetic(d, d, trellis, spec, 16, 16, 3);
     let mut rng = Rng::new(11);
 
     for b in [1usize, 2, 4, 8] {

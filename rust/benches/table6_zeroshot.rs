@@ -38,7 +38,8 @@ fn main() {
         for k in [4u32, 2] {
             let mut m = w.model();
             let pool = ExecPool::sequential();
-            quantize_model_qtip(&mut m, &hs, &qtip_cfg(code, 12, k, 1), &pool, |_| {});
+            quantize_model_qtip(&mut m, &hs, &qtip_cfg(code, 12, k, 1), &pool, |_| {})
+                .unwrap();
             m.ensure_caches();
             let z = zeroshot_suite(&m, &w.eval, cases, 7);
             table.row(vec![
@@ -55,7 +56,7 @@ fn main() {
     for k in [4u32, 2] {
         let mut m = w.model();
         let pool = ExecPool::sequential();
-        quantize_model_baseline(&mut m, &hs, &BaselineKind::Scalar { k }, 1, &pool);
+        quantize_model_baseline(&mut m, &hs, &BaselineKind::Scalar { k }, 1, &pool).unwrap();
         let z = zeroshot_suite(&m, &w.eval, cases, 7);
         table.row(vec![
             "Scalar LDLQ".into(),

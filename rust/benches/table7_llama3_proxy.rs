@@ -63,7 +63,8 @@ fn main() {
     for k in [4u32, 3, 2] {
         let mut mq = w.model();
         let pool = ExecPool::sequential();
-        quantize_model_qtip(&mut mq, &hs, &qtip_cfg("3inst", 12, k, 1), &pool, |_| {});
+        quantize_model_qtip(&mut mq, &hs, &qtip_cfg("3inst", 12, k, 1), &pool, |_| {})
+                .unwrap();
         mq.ensure_caches();
         let mut mv = w.model();
         quantize_model_baseline(
@@ -72,7 +73,8 @@ fn main() {
             &BaselineKind::E8Rvq { k, entries: 1 << 16 },
             1,
             &pool,
-        );
+        )
+        .unwrap();
         for (eval_name, data) in [("in-dist", w.eval.as_slice()), ("shifted", shifted.as_slice())] {
             let pq = perplexity(&mq, data, eval_tokens).ppl;
             let pv = perplexity(&mv, data, eval_tokens).ppl;

@@ -7,6 +7,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
+    /// Every occurrence of each `--key value` in argv order; `options` keeps
+    /// only the last. Repeatable options (`--artifact a --artifact b`) read
+    /// from here via [`Args::get_all`].
+    pub repeated: BTreeMap<String, Vec<String>>,
     pub flags: Vec<String>,
 }
 
@@ -19,6 +23,7 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 // --key=value | --key value | --flag
                 if let Some((k, v)) = name.split_once('=') {
+                    out.repeated.entry(k.to_string()).or_default().push(v.to_string());
                     out.options.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
@@ -26,6 +31,7 @@ impl Args {
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
+                    out.repeated.entry(name.to_string()).or_default().push(v.clone());
                     out.options.insert(name.to_string(), v);
                 } else {
                     out.flags.push(name.to_string());
@@ -39,6 +45,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// All values given for a repeatable option, in argv order (empty if the
+    /// option never appeared).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.repeated.get(key).map_or_else(Vec::new, |v| v.iter().map(|s| s.as_str()).collect())
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -112,5 +124,14 @@ mod tests {
         let a = parse("--fast --k 2");
         assert!(a.has_flag("fast"));
         assert_eq!(a.get_usize("k", 0), 2);
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let a = parse("--artifact m1 --artifact m2 --k 2");
+        assert_eq!(a.get_all("artifact"), vec!["m1", "m2"]);
+        // Scalar getter keeps last-wins semantics.
+        assert_eq!(a.get("artifact"), Some("m2"));
+        assert_eq!(a.get_all("missing"), Vec::<&str>::new());
     }
 }

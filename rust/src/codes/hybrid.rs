@@ -11,8 +11,16 @@
 //! initialized by k-means on an empirical i.i.d. Gaussian (paper §3.1.2) and
 //! fine-tuned afterwards.
 
+use anyhow::{bail, ensure, Result};
+
 use super::kmeans::kmeans;
 use super::Code;
+use crate::quant::method::{
+    CodeSpec, KernelCall, MethodBuild, MethodInfo, QuantMethod, TableSink, TableSource,
+};
+use crate::quant::{QtipConfig, LANES};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The Klimov–Shamir T-function hash used by HYB.
@@ -114,6 +122,152 @@ impl Code for HybridCode {
         if flip {
             out[v - 1] = -out[v - 1];
         }
+    }
+}
+
+/// Registry entry for the HYB computed-lookup code (V∈{1,2}, 2^Q×V LUT).
+pub struct HybMethod;
+
+impl HybMethod {
+    /// `q` is the first (and only) method param of a HYB spec.
+    fn q(spec: &CodeSpec) -> u32 {
+        spec.params()[0]
+    }
+}
+
+impl QuantMethod for HybMethod {
+    fn name(&self) -> &'static str {
+        "hyb"
+    }
+
+    fn info(&self) -> MethodInfo {
+        MethodInfo {
+            name: "hyb",
+            summary: "hybrid code: Klimov-Shamir hash indexes a sign-folded 2^Q x V LUT",
+            v_options: &[1, 2],
+            bits_min: 1,
+            bits_max: 8,
+            // Paper default Q=9, V=2 -> 2 KiB fp16 (bank-conflict-free in smem).
+            default_table_bytes: (1usize << 9) * 2 * 2,
+        }
+    }
+
+    fn preferred_v(&self) -> u32 {
+        2
+    }
+
+    fn build(&'static self, cfg: &QtipConfig) -> Result<MethodBuild> {
+        ensure!(cfg.v == 1 || cfg.v == 2, "hyb supports V in {{1,2}} (got V={})", cfg.v);
+        // Paper §3.1.2 geometries: Q=9 at V=2 (2 KiB LUT), Q=6 at V=1 (ARM).
+        let q = if cfg.v == 2 { 9 } else { 6 };
+        let hc = HybridCode::train(cfg.l, cfg.v, q, cfg.seed);
+        let spec = CodeSpec::new(self, cfg.v, vec![q], hc.lut.clone());
+        Ok(MethodBuild { code: Box::new(hc), spec })
+    }
+
+    fn decode_state(&self, spec: &CodeSpec, state: u32, out: &mut [f32]) {
+        let q = Self::q(spec);
+        let lut = spec.table();
+        let x = hash(state);
+        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+        let vv = spec.v() as usize;
+        out[..vv].copy_from_slice(&lut[idx * vv..(idx + 1) * vv]);
+        if x & (1 << 15) != 0 {
+            out[vv - 1] = -out[vv - 1];
+        }
+    }
+
+    fn spec_to_json(&self, spec: &CodeSpec, sink: &mut dyn TableSink) -> Json {
+        let lut_off = sink.put_f32s(spec.table());
+        Json::obj(vec![
+            ("method", Json::Str("hyb".into())),
+            ("q", Json::Num(Self::q(spec) as f64)),
+            ("v", Json::Num(spec.v() as f64)),
+            ("lut_off", Json::Num(lut_off as f64)),
+            ("lut_len", Json::Num(spec.table().len() as f64)),
+        ])
+    }
+
+    fn spec_from_json(
+        &'static self,
+        j: &Json,
+        src: &dyn TableSource,
+        _trellis: &Trellis,
+    ) -> Result<CodeSpec> {
+        let q = j.req_usize("q") as u32;
+        let v = j.req_usize("v") as u32;
+        if q > 14 || !(1..=2).contains(&v) {
+            bail!("hyb code spec out of range (q={q}, v={v})");
+        }
+        let lut_len = j.req_usize("lut_len");
+        ensure!(
+            lut_len == (1usize << q) * v as usize,
+            "hyb LUT length {lut_len} does not match q={q}, v={v}"
+        );
+        let lut = src.f32s(j.req_usize("lut_off"), lut_len)?;
+        Ok(CodeSpec::new(self, v, vec![q], lut))
+    }
+
+    fn run_kernel(&self, spec: &CodeSpec, call: KernelCall<'_>) {
+        let q = Self::q(spec);
+        let lut = spec.table();
+        if spec.v() == 1 {
+            call.run_v1(
+                move |s| {
+                    let x = hash(s);
+                    let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                    let val = lut[idx];
+                    if x & (1 << 15) != 0 {
+                        -val
+                    } else {
+                        val
+                    }
+                },
+                move |s: [u32; LANES]| {
+                    let h = hash_lanes(s);
+                    let mut out = [0.0f32; LANES];
+                    for (o, &x) in out.iter_mut().zip(h.iter()) {
+                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                        let val = lut[idx];
+                        *o = if x & (1 << 15) != 0 { -val } else { val };
+                    }
+                    out
+                },
+            )
+        } else {
+            call.run_v2(
+                move |s| {
+                    let x = hash(s);
+                    let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                    let a = lut[idx * 2];
+                    let mut b = lut[idx * 2 + 1];
+                    if x & (1 << 15) != 0 {
+                        b = -b;
+                    }
+                    (a, b)
+                },
+                move |s: [u32; LANES]| {
+                    let h = hash_lanes(s);
+                    let mut a = [0.0f32; LANES];
+                    let mut b = [0.0f32; LANES];
+                    for ((av, bv), &x) in a.iter_mut().zip(b.iter_mut()).zip(h.iter()) {
+                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
+                        *av = lut[idx * 2];
+                        let mut second = lut[idx * 2 + 1];
+                        if x & (1 << 15) != 0 {
+                            second = -second;
+                        }
+                        *bv = second;
+                    }
+                    (a, b)
+                },
+            )
+        }
+    }
+
+    fn synthetic_entry(&'static self, l: u32, k: u32, seed: u64) -> (Trellis, CodeSpec) {
+        let hc = HybridCode::train(l, 2, 9, seed);
+        (Trellis::new(l, k, 2), CodeSpec::new(self, 2, vec![9], hc.lut))
     }
 }
 

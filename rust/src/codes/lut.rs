@@ -7,7 +7,15 @@
 //! table would blow out L1 (the point of §3.1's computed codes) — but quantization
 //! quality comparisons need it.
 
+use anyhow::{ensure, Result};
+
 use super::Code;
+use crate::quant::method::{
+    CodeSpec, KernelCall, MethodBuild, MethodInfo, QuantMethod, TableSink, TableSource,
+};
+use crate::quant::{QtipConfig, LANES};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
 use crate::util::rng::mix64;
 
 /// Deterministic standard normal from a 64-bit key (Box–Muller on two hashes).
@@ -40,9 +48,8 @@ impl PureLutCode {
         let mut table = Vec::with_capacity(states * v as usize);
         for s in 0..states {
             for j in 0..v {
-                table.push(key_gauss(
-                    (seed << 1) ^ ((s as u64) << 3) ^ (j as u64).wrapping_mul(0xB5AD_4ECE_DA1C_E2A9),
-                ));
+                let j_mix = (j as u64).wrapping_mul(0xB5AD_4ECE_DA1C_E2A9);
+                table.push(key_gauss((seed << 1) ^ ((s as u64) << 3) ^ j_mix));
             }
         }
         PureLutCode { l, v, seed, table }
@@ -80,6 +87,108 @@ impl Code for PureLutCode {
 
     fn materialize(&self) -> Vec<f32> {
         self.table.clone()
+    }
+}
+
+/// Registry entry for the pure-LUT code (2^L × V materialized table).
+pub struct LutMethod;
+
+impl QuantMethod for LutMethod {
+    fn name(&self) -> &'static str {
+        "lut"
+    }
+
+    fn info(&self) -> MethodInfo {
+        MethodInfo {
+            name: "lut",
+            summary: "pure-lookup i.i.d. Gaussian codebook (quality ceiling, 2^L x V table)",
+            v_options: &[1, 2],
+            bits_min: 1,
+            bits_max: 8,
+            // L=12, V=1 fp16 table: the largest geometry that stays L1-resident.
+            default_table_bytes: (1usize << 12) * 2,
+        }
+    }
+
+    fn build(&'static self, cfg: &QtipConfig) -> Result<MethodBuild> {
+        ensure!(cfg.l <= 24, "lut requires L <= 24 (got L={})", cfg.l);
+        let code = PureLutCode::new(cfg.l, cfg.v, cfg.seed);
+        let spec = CodeSpec::new(self, cfg.v, Vec::new(), code.table.clone());
+        Ok(MethodBuild { code: Box::new(code), spec })
+    }
+
+    fn decode_state(&self, spec: &CodeSpec, state: u32, out: &mut [f32]) {
+        let vv = spec.v() as usize;
+        let base = state as usize * vv;
+        out[..vv].copy_from_slice(&spec.table()[base..base + vv]);
+    }
+
+    fn spec_to_json(&self, spec: &CodeSpec, sink: &mut dyn TableSink) -> Json {
+        let table_off = sink.put_f32s(spec.table());
+        Json::obj(vec![
+            ("method", Json::Str("lut".into())),
+            ("v", Json::Num(spec.v() as f64)),
+            ("table_off", Json::Num(table_off as f64)),
+            ("table_len", Json::Num(spec.table().len() as f64)),
+        ])
+    }
+
+    fn spec_from_json(
+        &'static self,
+        j: &Json,
+        src: &dyn TableSource,
+        trellis: &Trellis,
+    ) -> Result<CodeSpec> {
+        let v = j.req_usize("v") as u32;
+        ensure!((1..=2).contains(&v), "lut code spec out of range (v={v})");
+        let table_len = j.req_usize("table_len");
+        ensure!(
+            table_len == (1usize << trellis.l) * v as usize,
+            "lut table length {table_len} does not match L={}, v={v}",
+            trellis.l
+        );
+        let table = src.f32s(j.req_usize("table_off"), table_len)?;
+        Ok(CodeSpec::new(self, v, Vec::new(), table))
+    }
+
+    fn run_kernel(&self, spec: &CodeSpec, call: KernelCall<'_>) {
+        let table = spec.table();
+        if spec.v() == 1 {
+            call.run_v1(
+                move |s| table[s as usize],
+                move |s: [u32; LANES]| {
+                    let mut out = [0.0f32; LANES];
+                    for (o, &st) in out.iter_mut().zip(s.iter()) {
+                        *o = table[st as usize];
+                    }
+                    out
+                },
+            )
+        } else {
+            call.run_v2(
+                move |s| (table[s as usize * 2], table[s as usize * 2 + 1]),
+                move |s: [u32; LANES]| {
+                    let mut a = [0.0f32; LANES];
+                    let mut b = [0.0f32; LANES];
+                    for ((av, bv), &st) in a.iter_mut().zip(b.iter_mut()).zip(s.iter()) {
+                        *av = table[st as usize * 2];
+                        *bv = table[st as usize * 2 + 1];
+                    }
+                    (a, b)
+                },
+            )
+        }
+    }
+
+    fn synthetic_entry(&'static self, l: u32, k: u32, seed: u64) -> (Trellis, CodeSpec) {
+        let code = PureLutCode::new(l, 1, seed);
+        (Trellis::new(l, k, 1), CodeSpec::new(self, 1, Vec::new(), code.table))
+    }
+
+    fn bench_l(&self) -> u32 {
+        // Cap the bench trellis so the materialized table stays L1-resident,
+        // matching the regime the paper benches LUT codes in.
+        12
     }
 }
 

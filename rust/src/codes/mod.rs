@@ -25,12 +25,14 @@ pub mod kmeans;
 pub mod lut;
 pub mod onemad;
 pub mod threeinst;
+pub mod vptq;
 
 pub use correlated::CorrelatedCode;
-pub use hybrid::HybridCode;
-pub use lut::PureLutCode;
-pub use onemad::OneMadCode;
-pub use threeinst::ThreeInstCode;
+pub use hybrid::{HybMethod, HybridCode};
+pub use lut::{LutMethod, PureLutCode};
+pub use onemad::{OneMadCode, OneMadMethod};
+pub use threeinst::{ThreeInstCode, ThreeInstMethod};
+pub use vptq::{VptqCode, VptqMethod};
 
 /// A trellis node-value code: decodes an L-bit state word into V weights.
 pub trait Code: Send + Sync {

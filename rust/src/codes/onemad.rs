@@ -7,7 +7,15 @@
 //! weight amortized; here the identical u32 arithmetic runs on CPU and inside the
 //! Pallas kernel (`python/compile/kernels/codes.py`).
 
+use anyhow::{ensure, Result};
+
 use super::Code;
+use crate::quant::method::{
+    CodeSpec, KernelCall, MethodBuild, MethodInfo, QuantMethod, TableSink, TableSource,
+};
+use crate::quant::{QtipConfig, LANES};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
 
 /// LCG multiplier from the paper (§3.1.1).
 pub const A: u32 = 34038481;
@@ -70,6 +78,60 @@ impl Code for OneMadCode {
     #[inline]
     fn decode(&self, state: u32, out: &mut [f32]) {
         out[0] = decode_scalar(state);
+    }
+}
+
+/// Registry entry for the 1MAD computed code (V=1, no decode table).
+pub struct OneMadMethod;
+
+impl QuantMethod for OneMadMethod {
+    fn name(&self) -> &'static str {
+        "1mad"
+    }
+
+    fn info(&self) -> MethodInfo {
+        MethodInfo {
+            name: "1mad",
+            summary: "computed Gaussian code: LCG + byte-sum (MAD/AND/vabsdiff4/MAD)",
+            v_options: &[1],
+            bits_min: 1,
+            bits_max: 8,
+            default_table_bytes: 0,
+        }
+    }
+
+    fn build(&'static self, cfg: &QtipConfig) -> Result<MethodBuild> {
+        ensure!(cfg.v == 1, "1mad is a V=1 code (got V={})", cfg.v);
+        Ok(MethodBuild {
+            code: Box::new(OneMadCode::new(cfg.l)),
+            spec: CodeSpec::new(self, 1, Vec::new(), Vec::new()),
+        })
+    }
+
+    fn decode_state(&self, _spec: &CodeSpec, state: u32, out: &mut [f32]) {
+        out[0] = decode_scalar(state);
+    }
+
+    fn spec_to_json(&self, _spec: &CodeSpec, _sink: &mut dyn TableSink) -> Json {
+        Json::obj(vec![("method", Json::Str("1mad".into()))])
+    }
+
+    fn spec_from_json(
+        &'static self,
+        _j: &Json,
+        _src: &dyn TableSource,
+        _trellis: &Trellis,
+    ) -> Result<CodeSpec> {
+        Ok(CodeSpec::new(self, 1, Vec::new(), Vec::new()))
+    }
+
+    fn run_kernel(&self, _spec: &CodeSpec, call: KernelCall<'_>) {
+        call.run_v1(decode_scalar, decode_lanes::<LANES>);
+    }
+
+    fn synthetic_entry(&'static self, l: u32, k: u32, seed: u64) -> (Trellis, CodeSpec) {
+        let _ = seed;
+        (Trellis::new(l, k, 1), CodeSpec::new(self, 1, Vec::new(), Vec::new()))
     }
 }
 

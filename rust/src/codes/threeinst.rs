@@ -8,7 +8,15 @@
 //! halves is close to Gaussian. On GPU: MAD, lop3 (mask+XOR with the packed
 //! duplicated magic), HADD2 — 3 instructions for two weights.
 
+use anyhow::{ensure, Result};
+
 use super::Code;
+use crate::quant::method::{
+    CodeSpec, KernelCall, MethodBuild, MethodInfo, QuantMethod, TableSink, TableSource,
+};
+use crate::quant::{QtipConfig, LANES};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
 
 /// LCG multiplier from the paper (§3.1.1).
 pub const A: u32 = 89226354;
@@ -86,6 +94,60 @@ impl Code for ThreeInstCode {
     #[inline]
     fn decode(&self, state: u32, out: &mut [f32]) {
         out[0] = decode_scalar(state);
+    }
+}
+
+/// Registry entry for the 3INST computed code (V=1, no decode table).
+pub struct ThreeInstMethod;
+
+impl QuantMethod for ThreeInstMethod {
+    fn name(&self) -> &'static str {
+        "3inst"
+    }
+
+    fn info(&self) -> MethodInfo {
+        MethodInfo {
+            name: "3inst",
+            summary: "computed Gaussian code: LCG + masked-XOR f16 halves (MAD/lop3/HADD2)",
+            v_options: &[1],
+            bits_min: 1,
+            bits_max: 8,
+            default_table_bytes: 0,
+        }
+    }
+
+    fn build(&'static self, cfg: &QtipConfig) -> Result<MethodBuild> {
+        ensure!(cfg.v == 1, "3inst is a V=1 code (got V={})", cfg.v);
+        Ok(MethodBuild {
+            code: Box::new(ThreeInstCode::new(cfg.l)),
+            spec: CodeSpec::new(self, 1, Vec::new(), Vec::new()),
+        })
+    }
+
+    fn decode_state(&self, _spec: &CodeSpec, state: u32, out: &mut [f32]) {
+        out[0] = decode_scalar(state);
+    }
+
+    fn spec_to_json(&self, _spec: &CodeSpec, _sink: &mut dyn TableSink) -> Json {
+        Json::obj(vec![("method", Json::Str("3inst".into()))])
+    }
+
+    fn spec_from_json(
+        &'static self,
+        _j: &Json,
+        _src: &dyn TableSource,
+        _trellis: &Trellis,
+    ) -> Result<CodeSpec> {
+        Ok(CodeSpec::new(self, 1, Vec::new(), Vec::new()))
+    }
+
+    fn run_kernel(&self, _spec: &CodeSpec, call: KernelCall<'_>) {
+        call.run_v1(decode_scalar, decode_lanes::<LANES>);
+    }
+
+    fn synthetic_entry(&'static self, l: u32, k: u32, seed: u64) -> (Trellis, CodeSpec) {
+        let _ = seed;
+        (Trellis::new(l, k, 1), CodeSpec::new(self, 1, Vec::new(), Vec::new()))
     }
 }
 

@@ -1,0 +1,320 @@
+//! VPTQ-style vector-codebook code: residual two-stage vector quantization.
+//!
+//! Following VPTQ (Liu et al., 2024; see PAPERS.md), each code point is a 2-D
+//! vector reconstructed as `c1[i1] + c2[i2]` from a first-stage codebook and a
+//! residual codebook, both trained with k-means (first stage on N(0, I₂)
+//! samples, second stage on the residuals to the nearest first-stage
+//! centroid). Unlike VPTQ's per-layer codebooks we key both indices off the
+//! trellis state through a multiplicative hash, which turns the pair of
+//! codebooks into a stateful trellis code the Viterbi encoder can search —
+//! the registry's proof that a genuinely different decode scheme plugs in
+//! without touching the quant/io/serve layers.
+//!
+//! Both codebooks are 2^Q1 = 2^Q2 = 64 entries × V=2, so the concatenated
+//! decode table is 256 f32 (512 fp16 bytes on device) — far below the L1
+//! budget Table 10 cares about, while the *effective* codebook is the 4096-
+//! entry Minkowski sum.
+
+use anyhow::{bail, ensure, Result};
+
+use super::kmeans::{kmeans, nearest};
+use super::Code;
+use crate::quant::method::{
+    CodeSpec, KernelCall, MethodBuild, MethodInfo, QuantMethod, TableSink, TableSource,
+};
+use crate::quant::{QtipConfig, LANES};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// log2 first-stage codebook entries.
+pub const Q1: u32 = 6;
+/// log2 residual codebook entries.
+pub const Q2: u32 = 6;
+/// Training sample count (first stage; residuals reuse the same points).
+const TRAIN_POINTS: usize = 4096;
+/// k-means Lloyd iterations per stage.
+const TRAIN_ITERS: usize = 25;
+
+/// State mixer: one multiplicative hash (Fibonacci multiplier) whose *high*
+/// bits index the codebooks — high bits of a multiplicative hash have the
+/// best avalanche, which is what decorrelates the trellis-adjacent states
+/// sharing L−k low bits (the property Figure 3 demands of any code here).
+#[inline(always)]
+pub fn mix(state: u32) -> u32 {
+    state.wrapping_mul(0x9E37_79B1)
+}
+
+/// Lane-array mixer: elementwise [`mix`] in the fixed-width shape the
+/// lane-blocked kernels feed (`N` = `quant::LANES`); bit-identical per lane.
+#[inline(always)]
+pub fn mix_lanes<const N: usize>(states: [u32; N]) -> [u32; N] {
+    let mut out = [0u32; N];
+    for (o, s) in out.iter_mut().zip(states) {
+        *o = mix(s);
+    }
+    out
+}
+
+/// First/second-stage codebook indices for a state.
+#[inline(always)]
+pub fn indices(x: u32) -> (usize, usize) {
+    let i1 = (x >> (32 - Q1)) as usize;
+    let i2 = ((x >> (32 - Q1 - Q2)) & ((1 << Q2) - 1)) as usize;
+    (i1, i2)
+}
+
+/// Train the two codebooks and return them concatenated:
+/// `table[..2^Q1·2]` = first stage, `table[2^Q1·2..]` = residual stage.
+pub fn train_table(seed: u64) -> Vec<f32> {
+    let k1 = 1usize << Q1;
+    let k2 = 1usize << Q2;
+    let mut rng = Rng::new(seed ^ 0x5650_5451); // "VPTQ" salt
+    let mut pts = Vec::with_capacity(TRAIN_POINTS * 2);
+    for _ in 0..TRAIN_POINTS * 2 {
+        pts.push(rng.gauss_f32());
+    }
+    let km1 = kmeans(&pts, 2, k1, TRAIN_ITERS, &mut rng);
+    // Residuals to the nearest first-stage centroid.
+    let mut res = Vec::with_capacity(pts.len());
+    for p in pts.chunks_exact(2) {
+        let c = nearest(p, &km1.centroids, 2);
+        res.push(p[0] - km1.centroids[c * 2]);
+        res.push(p[1] - km1.centroids[c * 2 + 1]);
+    }
+    let km2 = kmeans(&res, 2, k2, TRAIN_ITERS, &mut rng);
+    let mut table = km1.centroids;
+    table.extend_from_slice(&km2.centroids);
+    table
+}
+
+/// The VPTQ-style code (V=2): encode-side [`Code`] for the Viterbi search.
+#[derive(Clone, Debug)]
+pub struct VptqCode {
+    l: u32,
+    /// Concatenated `[first-stage | residual]` codebooks, `(2^Q1 + 2^Q2) × 2`.
+    pub table: Vec<f32>,
+}
+
+impl VptqCode {
+    pub fn new(l: u32, seed: u64) -> Self {
+        assert!(l <= 24);
+        VptqCode { l, table: train_table(seed) }
+    }
+
+    pub fn from_table(l: u32, table: Vec<f32>) -> Self {
+        assert_eq!(table.len(), ((1usize << Q1) + (1usize << Q2)) * 2);
+        VptqCode { l, table }
+    }
+}
+
+impl Code for VptqCode {
+    fn l(&self) -> u32 {
+        self.l
+    }
+
+    fn v(&self) -> u32 {
+        2
+    }
+
+    fn name(&self) -> &'static str {
+        "vptq"
+    }
+
+    #[inline]
+    fn decode(&self, state: u32, out: &mut [f32]) {
+        let (i1, i2) = indices(mix(state));
+        let c2 = &self.table[(1usize << Q1) * 2..];
+        out[0] = self.table[i1 * 2] + c2[i2 * 2];
+        out[1] = self.table[i1 * 2 + 1] + c2[i2 * 2 + 1];
+    }
+}
+
+/// Registry entry for the VPTQ-style residual vector-codebook code.
+pub struct VptqMethod;
+
+impl QuantMethod for VptqMethod {
+    fn name(&self) -> &'static str {
+        "vptq"
+    }
+
+    fn info(&self) -> MethodInfo {
+        MethodInfo {
+            name: "vptq",
+            summary: "residual two-stage vector codebooks (VPTQ-style), hash-indexed",
+            v_options: &[2],
+            bits_min: 1,
+            bits_max: 4,
+            default_table_bytes: ((1usize << Q1) + (1usize << Q2)) * 2 * 2,
+        }
+    }
+
+    fn preferred_v(&self) -> u32 {
+        2
+    }
+
+    fn build(&'static self, cfg: &QtipConfig) -> Result<MethodBuild> {
+        ensure!(cfg.v == 2, "vptq is a V=2 code (got V={})", cfg.v);
+        let code = VptqCode::new(cfg.l, cfg.seed);
+        let spec = CodeSpec::new(self, 2, vec![Q1, Q2], code.table.clone());
+        Ok(MethodBuild { code: Box::new(code), spec })
+    }
+
+    fn decode_state(&self, spec: &CodeSpec, state: u32, out: &mut [f32]) {
+        let (i1, i2) = indices(mix(state));
+        let table = spec.table();
+        let c2 = &table[(1usize << Q1) * 2..];
+        out[0] = table[i1 * 2] + c2[i2 * 2];
+        out[1] = table[i1 * 2 + 1] + c2[i2 * 2 + 1];
+    }
+
+    fn spec_to_json(&self, spec: &CodeSpec, sink: &mut dyn TableSink) -> Json {
+        let table_off = sink.put_f32s(spec.table());
+        Json::obj(vec![
+            ("method", Json::Str("vptq".into())),
+            ("q1", Json::Num(Q1 as f64)),
+            ("q2", Json::Num(Q2 as f64)),
+            ("table_off", Json::Num(table_off as f64)),
+            ("table_len", Json::Num(spec.table().len() as f64)),
+        ])
+    }
+
+    fn spec_from_json(
+        &'static self,
+        j: &Json,
+        src: &dyn TableSource,
+        _trellis: &Trellis,
+    ) -> Result<CodeSpec> {
+        let q1 = j.req_usize("q1") as u32;
+        let q2 = j.req_usize("q2") as u32;
+        if q1 != Q1 || q2 != Q2 {
+            bail!("vptq codebook geometry (q1={q1}, q2={q2}) unsupported by this build");
+        }
+        let table_len = j.req_usize("table_len");
+        ensure!(
+            table_len == ((1usize << Q1) + (1usize << Q2)) * 2,
+            "vptq table length {table_len} does not match q1={Q1}, q2={Q2}"
+        );
+        let table = src.f32s(j.req_usize("table_off"), table_len)?;
+        Ok(CodeSpec::new(self, 2, vec![Q1, Q2], table))
+    }
+
+    fn run_kernel(&self, spec: &CodeSpec, call: KernelCall<'_>) {
+        let table = spec.table();
+        let (c1, c2) = table.split_at((1usize << Q1) * 2);
+        call.run_v2(
+            move |s| {
+                let (i1, i2) = indices(mix(s));
+                (c1[i1 * 2] + c2[i2 * 2], c1[i1 * 2 + 1] + c2[i2 * 2 + 1])
+            },
+            move |s: [u32; LANES]| {
+                let h = mix_lanes(s);
+                let mut a = [0.0f32; LANES];
+                let mut b = [0.0f32; LANES];
+                for ((av, bv), &x) in a.iter_mut().zip(b.iter_mut()).zip(h.iter()) {
+                    let (i1, i2) = indices(x);
+                    *av = c1[i1 * 2] + c2[i2 * 2];
+                    *bv = c1[i1 * 2 + 1] + c2[i2 * 2 + 1];
+                }
+                (a, b)
+            },
+        )
+    }
+
+    fn synthetic_entry(&'static self, l: u32, k: u32, seed: u64) -> (Trellis, CodeSpec) {
+        (Trellis::new(l, k, 2), CodeSpec::new(self, 2, vec![Q1, Q2], train_table(seed)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn mix_golden_and_lanes_match() {
+        // Fibonacci multiplicative hash, wrapping mod 2^32.
+        assert_eq!(mix(0), 0);
+        assert_eq!(mix(1), 0x9E37_79B1);
+        assert_eq!(mix(2), 0x3C6E_F362);
+        for base in [0u32, 7, 65521, u32::MAX - 3] {
+            let states: [u32; 8] = std::array::from_fn(|j| base.wrapping_add(j as u32));
+            let lanes = mix_lanes(states);
+            for (j, &s) in states.iter().enumerate() {
+                assert_eq!(lanes[j], mix(s), "lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn indices_use_high_bits() {
+        let x = 0xFFFF_FFFFu32;
+        let (i1, i2) = indices(x);
+        assert_eq!(i1, 63);
+        assert_eq!(i2, 63);
+        let (i1, i2) = indices(0x0400_0000);
+        assert_eq!(i1, 1);
+        assert_eq!(i2, 0);
+    }
+
+    #[test]
+    fn training_is_deterministic_and_seed_sensitive() {
+        assert_eq!(train_table(9), train_table(9));
+        assert_ne!(train_table(9), train_table(10));
+        assert_eq!(train_table(9).len(), 256);
+    }
+
+    #[test]
+    fn decode_is_residual_sum() {
+        let code = VptqCode::new(12, 3);
+        let mut out = [0.0f32; 2];
+        for s in [0u32, 1, 777, 4095] {
+            code.decode(s, &mut out);
+            let (i1, i2) = indices(mix(s));
+            let c2 = &code.table[128..];
+            assert_eq!(out[0], code.table[i1 * 2] + c2[i2 * 2]);
+            assert_eq!(out[1], code.table[i1 * 2 + 1] + c2[i2 * 2 + 1]);
+        }
+    }
+
+    #[test]
+    fn effective_codebook_covers_gaussian() {
+        // The Minkowski sum of the two stages must re-center and cover the
+        // bulk + tails of N(0, I_2), like the HYB LUT does.
+        let code = VptqCode::new(12, 5);
+        let values = code.materialize();
+        let xs: Vec<f32> = values.iter().step_by(2).copied().collect();
+        let ys: Vec<f32> = values.iter().skip(1).step_by(2).copied().collect();
+        for comp in [&xs, &ys] {
+            assert!(stats::mean(comp).abs() < 0.1);
+            let min = comp.iter().cloned().fold(f32::INFINITY, f32::min);
+            let max = comp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(min < -2.0 && max > 2.0, "component must cover tails");
+        }
+    }
+
+    #[test]
+    fn residual_stage_refines_first_stage() {
+        // Two-stage reconstruction must beat first-stage-only on fresh
+        // Gaussian points — the property that makes the residual stage worth
+        // its bits.
+        let table = train_table(11);
+        let (c1, c2) = table.split_at(128);
+        let mut rng = Rng::new(424242);
+        let mut mse1 = 0.0f64;
+        let mut mse2 = 0.0f64;
+        let n = 2000;
+        for _ in 0..n {
+            let p = [rng.gauss_f32(), rng.gauss_f32()];
+            let i1 = nearest(&p, c1, 2);
+            let r = [p[0] - c1[i1 * 2], p[1] - c1[i1 * 2 + 1]];
+            mse1 += (r[0] * r[0] + r[1] * r[1]) as f64;
+            let i2 = nearest(&r, c2, 2);
+            let e = [r[0] - c2[i2 * 2], r[1] - c2[i2 * 2 + 1]];
+            mse2 += (e[0] * e[0] + e[1] * e[1]) as f64;
+        }
+        mse1 /= (2 * n) as f64;
+        mse2 /= (2 * n) as f64;
+        assert!(mse2 < mse1 * 0.5, "residual stage must refine: {mse2} vs {mse1}");
+    }
+}

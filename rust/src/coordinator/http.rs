@@ -1,0 +1,530 @@
+//! HTTP/1.1 front-end for the generation server: the same continuous batcher
+//! as the raw TCP front-end (`coordinator::tcp`), spoken over plain HTTP with
+//! Server-Sent Events for streaming.
+//!
+//! Routes:
+//!   - `POST /v1/generate` — body is the same JSON object the TCP protocol
+//!     takes (`prompt`, `max_new_tokens`, `temperature`, `top_k`, `seed`,
+//!     `model`, `stream`). Without `"stream": true` the response is one JSON
+//!     object (the TCP terminal object). With `"stream": true` the response is
+//!     `text/event-stream`: one `data: {...}` event per generated token, then
+//!     a terminal event with `"done": true` carrying the full response.
+//!   - `GET /v1/models` — names of the served models (index 0 is the default
+//!     route for requests that omit `"model"`).
+//!   - `GET /health` — liveness probe.
+//!
+//! Status codes: 200 on success, 400 for malformed requests and admission
+//! rejections, 404 for unknown paths and unknown model names. SSE responses
+//! commit to 200 before generation starts, so in-stream failures arrive as a
+//! terminal event with an `"error"` field rather than a status code.
+//!
+//! Connections are `Connection: close` — one request per connection, no
+//! keep-alive state machine. A client that disconnects mid-request is
+//! detected exactly as on the TCP path (failed event write for streams,
+//! socket probe for unary waits) and its request is cancelled so the
+//! scheduler reclaims the KV blocks immediately.
+//!
+//! Start with `qtip serve --http 127.0.0.1:8080` or [`HttpFrontend::spawn`].
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::server::{GenRequest, ServerHandle, StreamEvent};
+use super::tcp::{conn_closed, final_json, next_event, server_gone_json, Wait};
+use crate::util::json::Json;
+
+/// Parsing caps: a front door for generation requests, not a general web
+/// server — anything larger than these is a malformed or hostile request.
+const MAX_HEAD_BYTES: usize = 64 << 10;
+const MAX_BODY_BYTES: usize = 1 << 20;
+
+pub struct HttpFrontend {
+    pub addr: std::net::SocketAddr,
+    /// Shutdown flag polled by the accept and connection loops. All its
+    /// accesses are `Relaxed` (allowlisted in scripts/relaxed_allowlist.txt):
+    /// it is a standalone stop signal — no other memory is published through
+    /// it, and the loops re-check it within a bounded poll interval.
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpFrontend {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve until dropped.
+    pub fn spawn(server: Arc<ServerHandle>, addr: &str) -> Result<HttpFrontend> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let next_id = Arc::new(AtomicU64::new(0));
+        let join = std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let srv = server.clone();
+                        let ids = next_id.clone();
+                        let conn_stop = stop2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &srv, &ids, &conn_stop);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(HttpFrontend { addr: local, stop, join: Some(join) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for HttpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// One parsed request: method, path, and the (possibly empty) body.
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Read one HTTP/1.1 request off the socket. Bounded reads poll `stop` so
+/// frontend shutdown never hangs on an idle connection; `Ok(None)` means the
+/// peer closed (or shutdown was requested) before a full request arrived.
+fn read_request(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<HttpRequest>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // Head: everything through the blank line.
+    let head_end = loop {
+        if let Some(pos) = find_seq(&buf, b"\r\n\r\n") {
+            break pos + 4;
+        }
+        if stop.load(Ordering::Relaxed) || buf.len() > MAX_HEAD_BYTES {
+            return Ok(None);
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(None),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Ok(None);
+    }
+    // Body: whatever followed the head in `buf`, plus the rest off the wire.
+    let mut body: Vec<u8> = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(None),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    body.truncate(content_length);
+    Ok(Some(HttpRequest { method, path, body }))
+}
+
+fn find_seq(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Write a complete non-streaming response and finish the connection.
+fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) -> Result<()> {
+    let payload = body.to_string();
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        payload.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Status for a terminal response object: admission rejections are client
+/// errors, a bad route (unknown model) is a 404, success is 200.
+fn status_for(resp: &Json) -> (u16, &'static str) {
+    match resp.get("error").and_then(|e| e.as_str()) {
+        None => (200, "OK"),
+        Some(e) if e.starts_with("unknown model") => (404, "Not Found"),
+        Some(_) => (400, "Bad Request"),
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    server: &ServerHandle,
+    ids: &AtomicU64,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // Bounded reads: a connection parked on an idle client must re-check the
+    // stop flag periodically, or frontend shutdown would hang in join() on
+    // every open socket and the server could never drain and report stats.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let Some(req) = read_request(&mut stream, stop)? else {
+        return Ok(());
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => serve_generate(&req.body, server, ids, &mut stream),
+        ("GET", "/v1/models") => {
+            let names = server.models();
+            let body = Json::obj(vec![
+                (
+                    "models",
+                    Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()),
+                ),
+                ("default", Json::Str(names[0].clone())),
+            ]);
+            write_response(&mut stream, 200, "OK", &body)
+        }
+        ("GET", "/health") => {
+            let body = Json::obj(vec![("status", Json::Str("ok".into()))]);
+            write_response(&mut stream, 200, "OK", &body)
+        }
+        (method, path) => write_response(
+            &mut stream,
+            404,
+            "Not Found",
+            &Json::obj(vec![("error", Json::Str(format!("no route {method} {path}")))]),
+        ),
+    }
+}
+
+/// `POST /v1/generate`: parse the body, submit to the batcher, and relay the
+/// result — unary JSON or an SSE stream. IO errors on `stream` (client gone)
+/// cancel the in-flight request so the scheduler frees its KV blocks.
+fn serve_generate(
+    body: &[u8],
+    server: &ServerHandle,
+    ids: &AtomicU64,
+    stream: &mut TcpStream,
+) -> Result<()> {
+    let id = ids.fetch_add(1, Ordering::Relaxed);
+    let j = match std::str::from_utf8(body).ok().and_then(|s| Json::parse(s).ok()) {
+        Some(j) => j,
+        None => {
+            let body = Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("error", Json::Str("bad request: body is not valid JSON".into())),
+            ]);
+            return write_response(stream, 400, "Bad Request", &body);
+        }
+    };
+    let stream_mode = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    // Same defaults as the TCP protocol, so the two front-ends are
+    // interchangeable for the smoke tests that compare their outputs.
+    let req = GenRequest {
+        id,
+        prompt: j.get("prompt").and_then(|p| p.as_str()).unwrap_or("").to_string(),
+        max_new_tokens: j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32),
+        temperature: j.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.7) as f32,
+        top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
+        seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
+        model: j.get("model").and_then(|m| m.as_str()).unwrap_or("").to_string(),
+    };
+
+    if stream_mode {
+        let rx = server.submit_stream(req);
+        // Commit the SSE response before the first token: the body is
+        // EOF-delimited (`Connection: close`), no chunked framing needed.
+        write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+             Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        )?;
+        stream.flush()?;
+        loop {
+            match next_event(&rx, stream) {
+                Wait::Event(StreamEvent::Token { id, index, token, text }) => {
+                    let ev = Json::obj(vec![
+                        ("id", Json::Num(id as f64)),
+                        ("index", Json::Num(index as f64)),
+                        ("token", Json::Num(token as f64)),
+                        ("text", Json::Str(text)),
+                        ("done", Json::Bool(false)),
+                    ]);
+                    if write!(stream, "data: {ev}\n\n").is_err() || stream.flush().is_err() {
+                        // Client vanished mid-stream: cancel so the scheduler
+                        // frees the sequence's KV blocks this round.
+                        server.cancel(id);
+                        return Ok(());
+                    }
+                }
+                Wait::Event(StreamEvent::Done(r)) => {
+                    let mut resp = final_json(r);
+                    if let Json::Obj(map) = &mut resp {
+                        map.insert("done".to_string(), Json::Bool(true));
+                    }
+                    write!(stream, "data: {resp}\n\n")?;
+                    stream.flush()?;
+                    return Ok(());
+                }
+                Wait::PeerGone => {
+                    server.cancel(id);
+                    return Ok(());
+                }
+                Wait::ServerGone => {
+                    let mut resp = server_gone_json(id);
+                    if let Json::Obj(map) = &mut resp {
+                        map.insert("done".to_string(), Json::Bool(true));
+                    }
+                    write!(stream, "data: {resp}\n\n")?;
+                    stream.flush()?;
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    let rx = server.submit(req);
+    let resp = match next_event(&rx, stream) {
+        Wait::Event(r) => final_json(r),
+        Wait::PeerGone => {
+            server.cancel(id);
+            return Ok(());
+        }
+        Wait::ServerGone => server_gone_json(id),
+    };
+    let (status, reason) = status_for(&resp);
+    write_response(stream, status, reason, &resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::model::{ModelConfig, Transformer, WeightStore};
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 64;
+        cfg
+    }
+
+    fn model_with_seed(seed: u64) -> Arc<Transformer> {
+        Arc::new(Transformer::from_store(&WeightStore::random(&tiny_cfg(), seed)))
+    }
+
+    fn tiny_server() -> Arc<ServerHandle> {
+        Arc::new(ServerHandle::spawn(model_with_seed(3), ServerConfig::default()))
+    }
+
+    /// Minimal HTTP client: one request, full response (head + body) as text.
+    fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn status_of(resp: &str) -> u16 {
+        resp.split_whitespace().nth(1).unwrap().parse().unwrap()
+    }
+
+    fn body_of(resp: &str) -> Json {
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        Json::parse(body).unwrap()
+    }
+
+    #[test]
+    fn http_generate_matches_tcp_protocol_shape() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        let resp = http(
+            fe.addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "hello", "max_new_tokens": 6, "temperature": 0, "top_k": 1}"#,
+        );
+        assert_eq!(status_of(&resp), 200, "{resp}");
+        let j = body_of(&resp);
+        assert_eq!(j.get("tokens").unwrap().as_usize(), Some(6));
+        assert!(j.get("text").unwrap().as_str().is_some());
+        assert!(j.get("tok_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_sse_streams_tokens_then_done_matching_unary() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        let req = r#"{"prompt": "s", "max_new_tokens": 5, "temperature": 0, "top_k": 1, "seed": 9}"#;
+        let unary = body_of(&http(fe.addr, "POST", "/v1/generate", req));
+        let want_text = unary.get("text").unwrap().as_str().unwrap().to_string();
+
+        let streaming = req.trim_end_matches('}').to_string() + r#", "stream": true}"#;
+        let resp = http(fe.addr, "POST", "/v1/generate", &streaming);
+        assert!(resp.contains("Content-Type: text/event-stream"), "{resp}");
+        let events: Vec<Json> = resp
+            .lines()
+            .filter_map(|l| l.strip_prefix("data: "))
+            .map(|d| Json::parse(d).unwrap())
+            .collect();
+        assert_eq!(events.len(), 6, "5 token events + terminal: {resp}");
+        for (i, ev) in events[..5].iter().enumerate() {
+            assert_eq!(ev.get("index").unwrap().as_usize(), Some(i));
+            assert!(ev.get("token").unwrap().as_usize().unwrap() < 256, "byte-vocab token");
+        }
+        let done = &events[5];
+        assert_eq!(done.get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(done.get("tokens").unwrap().as_usize(), Some(5));
+        assert_eq!(done.get("text").unwrap().as_str().unwrap(), want_text);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_models_and_health_and_404() {
+        let server = Arc::new(ServerHandle::spawn_multi(
+            vec![
+                ("alpha".to_string(), model_with_seed(3)),
+                ("beta".to_string(), model_with_seed(99)),
+            ],
+            ServerConfig::default(),
+        ));
+        let fe = HttpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+
+        let resp = http(fe.addr, "GET", "/v1/models", "");
+        assert_eq!(status_of(&resp), 200);
+        let j = body_of(&resp);
+        let names: Vec<&str> =
+            j.get("models").unwrap().as_arr().unwrap().iter().filter_map(|m| m.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"]);
+        assert_eq!(j.get("default").unwrap().as_str(), Some("alpha"));
+
+        let health = http(fe.addr, "GET", "/health", "");
+        assert_eq!(status_of(&health), 200);
+        assert_eq!(body_of(&health).get("status").unwrap().as_str(), Some("ok"));
+
+        let missing = http(fe.addr, "GET", "/nope", "");
+        assert_eq!(status_of(&missing), 404);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_routes_models_and_rejects_unknown_with_404() {
+        let server = Arc::new(ServerHandle::spawn_multi(
+            vec![
+                ("alpha".to_string(), model_with_seed(3)),
+                ("beta".to_string(), model_with_seed(99)),
+            ],
+            ServerConfig::default(),
+        ));
+        let fe = HttpFrontend::spawn(server, "127.0.0.1:0").unwrap();
+        let gen = |model: &str| {
+            let body = format!(
+                r#"{{"prompt": "h", "max_new_tokens": 6, "temperature": 0, "model": "{model}"}}"#
+            );
+            http(fe.addr, "POST", "/v1/generate", &body)
+        };
+        let a = gen("alpha");
+        let b = gen("beta");
+        assert_eq!(status_of(&a), 200);
+        assert_eq!(status_of(&b), 200);
+        assert_ne!(
+            body_of(&a).get("text").unwrap().as_str(),
+            body_of(&b).get("text").unwrap().as_str(),
+            "different weights must generate differently"
+        );
+        let bad = gen("gamma");
+        assert_eq!(status_of(&bad), 404, "{bad}");
+        let err = body_of(&bad).get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("unknown model 'gamma'"), "{err}");
+        assert!(err.contains("alpha") && err.contains("beta"), "{err}");
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_bad_json_is_400() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        let resp = http(fe.addr, "POST", "/v1/generate", "{not json");
+        assert_eq!(status_of(&resp), 400);
+        assert!(body_of(&resp).get("error").is_some());
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_shutdown_drains_with_idle_connection_open() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        let idle = TcpStream::connect(fe.addr).unwrap();
+        let resp = http(
+            fe.addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "x", "max_new_tokens": 2, "temperature": 0}"#,
+        );
+        assert_eq!(status_of(&resp), 200);
+        let t = std::time::Instant::now();
+        fe.shutdown();
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "shutdown hung on an idle connection"
+        );
+        drop(idle);
+    }
+}

@@ -3,10 +3,12 @@
 //! topology, and metrics; compiled XLA artifacts and the native fused decoder do
 //! the math.
 
+pub mod http;
 pub mod pipeline;
 pub mod server;
 pub mod tcp;
 
+pub use http::HttpFrontend;
 pub use pipeline::{
     layer_seed, quantize_model_baseline, quantize_model_qtip, LayerReport, QuantizeReport,
 };

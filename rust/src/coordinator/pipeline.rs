@@ -2,6 +2,8 @@
 //! fanned across workers, with progress reporting and per-layer metrics. This is
 //! what `qtip quantize` runs and what the perplexity benches call.
 
+use anyhow::{bail, Context, Result};
+
 use crate::hessian::HessianSet;
 use crate::model::transformer::{Linear, Transformer};
 use crate::quant::{
@@ -112,32 +114,35 @@ impl QuantizeReport {
 /// Per-layer jobs fan out across `pool` (sequential when its width is 1, as
 /// on the single-core CI machine). Results are independent of pool width:
 /// each job is a pure function of its (weight, Hessian, per-layer seed).
+///
+/// Errors (already-quantized layer, missing Hessian, a layer the fan-out
+/// never produced) name the offending layer instead of panicking, so the
+/// serving coordinator can surface them as structured failures.
 pub fn quantize_model_qtip(
     model: &mut Transformer,
     hessians: &HessianSet,
     cfg: &QtipConfig,
     pool: &ExecPool,
     mut progress: impl FnMut(&LayerReport),
-) -> QuantizeReport {
+) -> Result<QuantizeReport> {
     let timer = Timer::start();
     // Snapshot job inputs.
     let jobs: Vec<(String, Matrix, Matrix)> = {
         let linears = model.linears_mut();
-        linears
-            .iter()
-            .map(|(name, lin)| {
-                let w = match lin {
-                    Linear::Dense(w) => (*w).clone(),
-                    _ => panic!("layer '{name}' already quantized"),
-                };
-                let h = hessians
-                    .by_layer
-                    .get(name)
-                    .unwrap_or_else(|| panic!("no Hessian for layer '{name}'"))
-                    .clone();
-                (name.clone(), w, h)
-            })
-            .collect()
+        let mut jobs = Vec::with_capacity(linears.len());
+        for (name, lin) in &linears {
+            let w = match lin {
+                Linear::Dense(w) => (*w).clone(),
+                _ => bail!("layer '{name}' is already quantized"),
+            };
+            let h = hessians
+                .by_layer
+                .get(name)
+                .with_context(|| format!("no Hessian collected for layer '{name}'"))?
+                .clone();
+            jobs.push((name.clone(), w, h));
+        }
+        jobs
     };
 
     // Fan the per-layer jobs across the pool; `map` writes each result into
@@ -169,13 +174,15 @@ pub fn quantize_model_qtip(
         by_name.insert(name, res.qm);
     }
     for (name, lin) in model.linears_mut() {
-        let qm = by_name.remove(&name).unwrap();
+        let Some(qm) = by_name.remove(&name) else {
+            bail!("quantization pipeline produced no result for layer '{name}'");
+        };
         *lin = Linear::Quantized { qm, cache: None };
     }
 
     let bytes_before: usize = reports.iter().map(|r| r.bytes_before).sum();
     let bytes_after: usize = reports.iter().map(|r| r.bytes_after).sum();
-    QuantizeReport { layers: reports, seconds: timer.secs(), bytes_before, bytes_after }
+    Ok(QuantizeReport { layers: reports, seconds: timer.secs(), bytes_before, bytes_after })
 }
 
 /// Quantize with a baseline inner rounder (dense reconstructions installed —
@@ -186,20 +193,24 @@ pub fn quantize_model_baseline(
     kind: &BaselineKind,
     seed: u64,
     pool: &ExecPool,
-) -> QuantizeReport {
+) -> Result<QuantizeReport> {
     let timer = Timer::start();
     let jobs: Vec<(String, Matrix, Matrix)> = {
         let linears = model.linears_mut();
-        linears
-            .iter()
-            .map(|(name, lin)| {
-                let w = match lin {
-                    Linear::Dense(w) => (*w).clone(),
-                    _ => panic!("layer '{name}' already quantized"),
-                };
-                (name.clone(), w, hessians.by_layer[name].clone())
-            })
-            .collect()
+        let mut jobs = Vec::with_capacity(linears.len());
+        for (name, lin) in &linears {
+            let w = match lin {
+                Linear::Dense(w) => (*w).clone(),
+                _ => bail!("layer '{name}' is already quantized"),
+            };
+            let h = hessians
+                .by_layer
+                .get(name)
+                .with_context(|| format!("no Hessian collected for layer '{name}'"))?
+                .clone();
+            jobs.push((name.clone(), w, h));
+        }
+        jobs
     };
     let results = pool.map(jobs.len(), |i| {
         let (name, w, h) = &jobs[i];
@@ -224,11 +235,14 @@ pub fn quantize_model_baseline(
         by_name.insert(name, w_hat);
     }
     for (name, lin) in model.linears_mut() {
-        *lin = Linear::Dense(by_name.remove(&name).unwrap());
+        let Some(w_hat) = by_name.remove(&name) else {
+            bail!("baseline pipeline produced no result for layer '{name}'");
+        };
+        *lin = Linear::Dense(w_hat);
     }
     let bytes_before: usize = reports.iter().map(|r| r.bytes_before).sum();
     let bytes_after: usize = reports.iter().map(|r| r.bytes_after).sum();
-    QuantizeReport { layers: reports, seconds: timer.secs(), bytes_before, bytes_after }
+    Ok(QuantizeReport { layers: reports, seconds: timer.secs(), bytes_before, bytes_after })
 }
 
 #[cfg(test)]
@@ -258,7 +272,8 @@ mod tests {
         let hs = collect_hessians(&model, &seqs);
         let mut n = 0;
         let report =
-            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), &ExecPool::sequential(), |_| n += 1);
+            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), &ExecPool::sequential(), |_| n += 1)
+                .unwrap();
         assert_eq!(report.layers.len(), 7); // q,k,v,o,gate,up,down × 1 layer
         assert_eq!(n, 7);
         assert!(report.compression_ratio() > 8.0, "{}", report.compression_ratio());
@@ -283,7 +298,7 @@ mod tests {
         let hs = collect_hessians(&model, &seqs);
         let mut cfg = tiny_cfg();
         cfg.k = 4; // 4-bit: near-lossless regime
-        quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::sequential(), |_| {});
+        quantize_model_qtip(&mut model, &hs, &cfg, &ExecPool::sequential(), |_| {}).unwrap();
         model.ensure_caches();
         let q_logits = model.forward_batch(&[10, 20, 30, 40]);
         // Compare softmax-ish behaviour: logits should be highly correlated.
@@ -361,7 +376,7 @@ mod tests {
         let quantize = |pool: &ExecPool| {
             let mut model = tiny();
             let hs = collect_hessians(&model, &seqs);
-            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), pool, |_| {});
+            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), pool, |_| {}).unwrap();
             model
         };
         let a = quantize(&ExecPool::sequential());
@@ -390,9 +405,39 @@ mod tests {
             &BaselineKind::Scalar { k: 2 },
             1,
             &ExecPool::sequential(),
-        );
+        )
+        .unwrap();
         assert_eq!(report.layers.len(), 7);
         let logits = model.forward_batch(&[5, 6]);
         assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn missing_hessian_errors_with_layer_name() {
+        // Regression: an incomplete Hessian set used to panic deep inside the
+        // fan-out; it must surface as an Err naming the layer instead.
+        let mut model = tiny();
+        let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+        let mut hs = collect_hessians(&model, &seqs);
+        hs.by_layer.remove("l0.gate");
+        let err =
+            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), &ExecPool::sequential(), |_| {})
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("l0.gate"), "error must name the missing layer: {err}");
+    }
+
+    #[test]
+    fn already_quantized_model_errors() {
+        let mut model = tiny();
+        let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
+        let hs = collect_hessians(&model, &seqs);
+        quantize_model_qtip(&mut model, &hs, &tiny_cfg(), &ExecPool::sequential(), |_| {})
+            .unwrap();
+        let err =
+            quantize_model_qtip(&mut model, &hs, &tiny_cfg(), &ExecPool::sequential(), |_| {})
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("already quantized"), "{err}");
     }
 }

@@ -49,6 +49,24 @@ pub struct GenRequest {
     pub temperature: f32,
     pub top_k: usize,
     pub seed: u64,
+    /// Target model for a multi-model coordinator ([`ServerHandle::spawn_multi`]).
+    /// Empty routes to the default (first) model; an unknown name is rejected
+    /// with a structured error response.
+    pub model: String,
+}
+
+impl Default for GenRequest {
+    fn default() -> GenRequest {
+        GenRequest {
+            id: 0,
+            prompt: String::new(),
+            max_new_tokens: 32,
+            temperature: 0.0,
+            top_k: 1,
+            seed: 0,
+            model: String::new(),
+        }
+    }
 }
 
 /// Completion with per-request serving metrics.
@@ -341,14 +359,38 @@ enum Msg {
 pub struct ServerHandle {
     tx: Sender<Msg>,
     join: Option<std::thread::JoinHandle<()>>,
+    models: Vec<String>,
 }
 
 impl ServerHandle {
-    /// Spawn the serving loop on its own thread.
+    /// Spawn the serving loop on its own thread (single model, named
+    /// "default").
     pub fn spawn(model: Arc<Transformer>, cfg: ServerConfig) -> ServerHandle {
+        ServerHandle::spawn_multi(vec![("default".to_string(), model)], cfg)
+    }
+
+    /// Spawn one serving loop over several models. Each model gets its own KV
+    /// backend (paged arena or contiguous pool, each sized against
+    /// `cfg.kv_budget_bytes`) and its own queues, but every lane's fused
+    /// rounds run on the one shared [`ExecPool`]. Requests route on
+    /// [`GenRequest::model`]; an empty field selects the first entry.
+    ///
+    /// Panics if `models` is empty or contains a duplicate name.
+    pub fn spawn_multi(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig) -> ServerHandle {
+        assert!(!models.is_empty(), "spawn_multi needs at least one model");
+        let names: Vec<String> = models.iter().map(|(n, _)| n.clone()).collect();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[..i].contains(n), "duplicate model name '{n}'");
+        }
         let (tx, rx) = channel::<Msg>();
-        let join = std::thread::spawn(move || serve_loop(model, cfg, rx));
-        ServerHandle { tx, join: Some(join) }
+        let join = std::thread::spawn(move || serve_loop(models, cfg, rx));
+        ServerHandle { tx, join: Some(join), models: names }
+    }
+
+    /// Names of the served models in registration order; index 0 is the
+    /// default route for requests that leave [`GenRequest::model`] empty.
+    pub fn models(&self) -> &[String] {
+        &self.models
     }
 
     /// Submit a request; the response arrives on the returned receiver.
@@ -417,147 +459,151 @@ fn need_positions(prompt_len: usize, max_new: usize, max_seq: usize) -> usize {
     (prompt_len + max_new.saturating_sub(1)).min(max_seq.saturating_sub(1).max(1)).max(1)
 }
 
-fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
-    let tok = ByteTokenizer;
-    let mut waiting: VecDeque<Pending> = VecDeque::new();
+/// One served model inside the coordinator: its own KV backend, decode
+/// scratch, and request queues. Every lane's fused rounds run on the single
+/// serving thread and its shared [`ExecPool`]; isolation between models is at
+/// the KV/memory level, not the compute level.
+struct Lane {
+    name: String,
+    model: Arc<Transformer>,
+    backend: KvBackend,
+    scratch: DecodeScratch,
+    waiting: VecDeque<Pending>,
     // Admission-ordered: index 0 is the oldest sequence (eviction picks from
     // the back, so the oldest always runs to completion — the progress
     // guarantee that makes preemption deadlock-free).
-    let mut active: Vec<Active> = Vec::new();
-    let mut stats = ServerStats::default();
-    let mut shutting_down: Option<Sender<ServerStats>> = None;
-    // The loop owns the execution pool and the scratch arena: workers persist
-    // across rounds (spawned once, parked between jobs) and every activation
-    // buffer is reused — the model forward allocates nothing per round.
-    let pool = ExecPool::new(cfg.threads);
-    let mut scratch = DecodeScratch::new(&model.cfg);
-    stats.workers = pool.width();
-    stats.kernel = model
-        .decode_kernel()
-        .map(|k| k.name().to_string())
-        .unwrap_or_else(|| "dense".to_string());
-    let max_batch = cfg.max_batch.max(1);
-    let max_seq = model.cfg.max_seq;
-
-    let layout = cfg.kv_layout.resolve();
-    stats.kv_layout = layout.name().to_string();
-    let mut backend = match layout {
-        KvLayout::Contig => KvBackend::Contig {
-            free: Vec::new(),
-            per_seq_bytes: KvCache::size_bytes_for(&model.cfg),
-        },
-        _ => {
-            let block = resolve_kv_block(cfg.kv_block, 0);
-            let block_bytes = KvArena::block_bytes(&model.cfg, block);
-            // Whole blocks under the budget, but never more than max_batch
-            // full-length sequences could touch — the arena is eagerly
-            // allocated, so an oversized budget must not balloon it.
-            let by_budget = cfg.kv_budget_bytes / block_bytes;
-            let by_batch = max_batch * KvArena::blocks_for_positions(max_seq, block);
-            let n_blocks = by_budget.min(by_batch);
-            stats.kv_block_positions = block;
-            stats.kv_blocks_total = n_blocks;
-            KvBackend::Paged { arena: KvArena::new(&model.cfg, block, n_blocks), block_bytes }
-        }
-    };
-
+    active: Vec<Active>,
+    max_seq: usize,
     // Round bookkeeping buffers, reused across rounds.
-    let mut step_idx: Vec<usize> = Vec::new();
-    let mut step_tokens: Vec<u16> = Vec::new();
-    let mut finished: Vec<usize> = Vec::new();
+    step_idx: Vec<usize>,
+    step_tokens: Vec<u16>,
+    finished: Vec<usize>,
+}
 
-    loop {
-        // Drain the message queue (non-blocking while work exists; blocking idle).
-        loop {
-            let msg = if active.is_empty() && waiting.is_empty() && shutting_down.is_none() {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => return,
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                }
-            };
-            match msg {
-                Msg::Submit(req, sink) => {
-                    // Can-this-ever-fit is invariant once the backend exists,
-                    // so the verdict is rendered exactly once, here — not by
-                    // re-scanning the whole queue every round. (A request that
-                    // can never fit must be rejected, not queued forever: the
-                    // loop would busy-spin and shutdown would never drain.)
-                    let reject = match &backend {
-                        KvBackend::Contig { per_seq_bytes, .. }
-                            if *per_seq_bytes > cfg.kv_budget_bytes =>
-                        {
-                            Some(format!(
-                                "KV cache per sequence ({per_seq_bytes} B) exceeds the \
-                                 server budget ({} B)",
-                                cfg.kv_budget_bytes
-                            ))
-                        }
-                        KvBackend::Paged { arena, .. } => {
-                            let plen = effective_prompt_len(&req, max_seq);
-                            let need = need_positions(plen, req.max_new_tokens, max_seq);
-                            let bp = arena.block_positions();
-                            let blocks = KvArena::blocks_for_positions(need, bp);
-                            let total = arena.blocks_total();
-                            (blocks > total).then(|| {
-                                format!(
-                                    "request needs {blocks} KV blocks ({need} positions × \
-                                     {bp}-position blocks) but the whole arena holds {total} \
-                                     under the {} B budget",
-                                    cfg.kv_budget_bytes
-                                )
-                            })
-                        }
-                        _ => None,
-                    };
-                    match reject {
-                        Some(reason) => {
-                            stats.rejected += 1;
-                            sink.send_done(GenResponse::rejected(req.id, reason));
-                        }
-                        None => waiting.push_back(Pending::new(req, sink)),
-                    }
-                }
-                Msg::Cancel(id) => {
-                    if let Some(pos) = waiting.iter().position(|p| p.req.id == id) {
-                        let _ = waiting.remove(pos);
-                        stats.cancelled += 1;
-                    } else if let Some(pos) = active.iter().position(|a| a.req.id == id) {
-                        let a = active.remove(pos);
-                        release_seq(a.kv, &mut backend);
-                        stats.cancelled += 1;
-                    }
-                }
-                Msg::Shutdown(tx) => shutting_down = Some(tx),
+impl Lane {
+    fn new(
+        name: String,
+        model: Arc<Transformer>,
+        cfg: &ServerConfig,
+        stats: &mut ServerStats,
+    ) -> Lane {
+        let max_batch = cfg.max_batch.max(1);
+        let max_seq = model.cfg.max_seq;
+        let backend = match cfg.kv_layout.resolve() {
+            KvLayout::Contig => KvBackend::Contig {
+                free: Vec::new(),
+                per_seq_bytes: KvCache::size_bytes_for(&model.cfg),
+            },
+            _ => {
+                let block = resolve_kv_block(cfg.kv_block, 0);
+                let block_bytes = KvArena::block_bytes(&model.cfg, block);
+                // Whole blocks under the budget, but never more than max_batch
+                // full-length sequences could touch — the arena is eagerly
+                // allocated, so an oversized budget must not balloon it.
+                let by_budget = cfg.kv_budget_bytes / block_bytes;
+                let by_batch = max_batch * KvArena::blocks_for_positions(max_seq, block);
+                let n_blocks = by_budget.min(by_batch);
+                stats.kv_block_positions = block;
+                stats.kv_blocks_total += n_blocks;
+                KvBackend::Paged { arena: KvArena::new(&model.cfg, block, n_blocks), block_bytes }
             }
+        };
+        let scratch = DecodeScratch::new(&model.cfg);
+        Lane {
+            name,
+            model,
+            backend,
+            scratch,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            max_seq,
+            step_idx: Vec::new(),
+            step_tokens: Vec::new(),
+            finished: Vec::new(),
         }
-        stats.queue_high_water = stats.queue_high_water.max(waiting.len());
+    }
 
-        // Admission. Paged: token-granular — a request joins as soon as the
-        // free list covers its *prompt* (leased here so concurrent admissions
-        // never double-count a block); decode blocks are leased on demand.
-        // Contiguous: sequence-granular — a whole max_seq cache must fit.
+    /// Render the once-per-request can-this-ever-fit verdict and enqueue.
+    /// Can-this-ever-fit is invariant once the backend exists, so the
+    /// verdict is rendered exactly once, here — not by re-scanning the whole
+    /// queue every round. (A request that can never fit must be rejected, not
+    /// queued forever: the loop would busy-spin and shutdown would never
+    /// drain.)
+    fn submit(&mut self, req: GenRequest, sink: Sink, cfg: &ServerConfig, stats: &mut ServerStats) {
+        let reject = match &self.backend {
+            KvBackend::Contig { per_seq_bytes, .. } if *per_seq_bytes > cfg.kv_budget_bytes => {
+                Some(format!(
+                    "KV cache per sequence ({per_seq_bytes} B) exceeds the \
+                     server budget ({} B)",
+                    cfg.kv_budget_bytes
+                ))
+            }
+            KvBackend::Paged { arena, .. } => {
+                let plen = effective_prompt_len(&req, self.max_seq);
+                let need = need_positions(plen, req.max_new_tokens, self.max_seq);
+                let bp = arena.block_positions();
+                let blocks = KvArena::blocks_for_positions(need, bp);
+                let total = arena.blocks_total();
+                (blocks > total).then(|| {
+                    format!(
+                        "request needs {blocks} KV blocks ({need} positions × \
+                         {bp}-position blocks) but the whole arena holds {total} \
+                         under the {} B budget",
+                        cfg.kv_budget_bytes
+                    )
+                })
+            }
+            _ => None,
+        };
+        match reject {
+            Some(reason) => {
+                stats.rejected += 1;
+                sink.send_done(GenResponse::rejected(req.id, reason));
+            }
+            None => self.waiting.push_back(Pending::new(req, sink)),
+        }
+    }
+
+    /// Cancel a queued or active request; true if it lived on this lane.
+    fn cancel(&mut self, id: u64, stats: &mut ServerStats) -> bool {
+        if let Some(pos) = self.waiting.iter().position(|p| p.req.id == id) {
+            let _ = self.waiting.remove(pos);
+            stats.cancelled += 1;
+            true
+        } else if let Some(pos) = self.active.iter().position(|a| a.req.id == id) {
+            let a = self.active.remove(pos);
+            release_seq(a.kv, &mut self.backend);
+            stats.cancelled += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Admission. Paged: token-granular — a request joins as soon as the
+    /// free list covers its *prompt* (leased here so concurrent admissions
+    /// never double-count a block); decode blocks are leased on demand.
+    /// Contiguous: sequence-granular — a whole max_seq cache must fit.
+    fn admit(&mut self, cfg: &ServerConfig, tok: &ByteTokenizer, stats: &mut ServerStats) {
+        let max_batch = cfg.max_batch.max(1);
         loop {
-            if active.len() >= max_batch || waiting.is_empty() {
+            if self.active.len() >= max_batch || self.waiting.is_empty() {
                 break;
             }
-            let kv = match &mut backend {
+            let kv = match &mut self.backend {
                 KvBackend::Contig { free, per_seq_bytes } => {
-                    if (active.len() + 1) * *per_seq_bytes > cfg.kv_budget_bytes {
+                    if (self.active.len() + 1) * *per_seq_bytes > cfg.kv_budget_bytes {
                         break;
                     }
-                    let mut cache = free.pop().unwrap_or_else(|| KvCache::new(&model.cfg));
+                    let mut cache = free.pop().unwrap_or_else(|| KvCache::new(&self.model.cfg));
                     cache.clear();
                     stats.peak_kv_bytes =
-                        stats.peak_kv_bytes.max((active.len() + 1) * *per_seq_bytes);
+                        stats.peak_kv_bytes.max((self.active.len() + 1) * *per_seq_bytes);
                     SeqKv::Contig(cache)
                 }
                 KvBackend::Paged { arena, .. } => {
-                    let plen = effective_prompt_len(&waiting.front().unwrap().req, max_seq);
+                    let plen =
+                        effective_prompt_len(&self.waiting.front().unwrap().req, self.max_seq);
                     if arena.blocks_free() < arena.blocks_for(plen) {
                         break;
                     }
@@ -567,10 +613,10 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                     SeqKv::Paged(seq)
                 }
             };
-            let p = waiting.pop_front().unwrap();
+            let p = self.waiting.pop_front().unwrap();
             // One source of truth for truncation: the same effective_prompt_len
             // that sized the admission lease and the rejection verdict.
-            let plen = effective_prompt_len(&p.req, max_seq);
+            let plen = effective_prompt_len(&p.req, self.max_seq);
             let mut pending_prompt: VecDeque<u16> =
                 tok.encode(&p.req.prompt).into_iter().take(plen).collect();
             if pending_prompt.is_empty() {
@@ -580,7 +626,7 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             }
             debug_assert_eq!(pending_prompt.len(), plen, "lease sizing diverged from prompt");
             let prompt_len = pending_prompt.len();
-            active.push(Active {
+            self.active.push(Active {
                 rng: Rng::new(p.req.seed),
                 stream_sent: p.emitted,
                 text_flushed: p.text_emitted,
@@ -597,36 +643,26 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                 next_token: None,
                 dropped: false,
             });
-            stats.peak_batch = stats.peak_batch.max(active.len());
-            stats.peak_active = stats.peak_active.max(active.len());
         }
+    }
 
-        if active.is_empty() {
-            if let Some(tx) = shutting_down.take() {
-                if waiting.is_empty() {
-                    let _ = tx.send(stats.clone());
-                    return;
-                }
-                shutting_down = Some(tx);
-            }
-            continue;
-        }
-
-        // Paged capacity phase: every sequence that will write a position
-        // this round must hold a block for it. Under pressure the youngest
-        // sequence is evicted (blocks freed, request re-queued at the front);
-        // the oldest is never evicted for a younger one, so it always
-        // completes and the arena always drains.
-        if let KvBackend::Paged { arena, block_bytes } = &mut backend {
+    /// Paged capacity phase: every sequence that will write a position
+    /// this round must hold a block for it. Under pressure the youngest
+    /// sequence is evicted (blocks freed, request re-queued at the front);
+    /// the oldest is never evicted for a younger one, so it always
+    /// completes and the arena always drains.
+    fn capacity_phase(&mut self, stats: &mut ServerStats) {
+        let max_seq = self.max_seq;
+        if let KvBackend::Paged { arena, block_bytes } = &mut self.backend {
             let mut i = 0;
-            while i < active.len() {
-                if !active[i].will_step(max_seq) {
+            while i < self.active.len() {
+                if !self.active[i].will_step(max_seq) {
                     i += 1;
                     continue;
                 }
                 let mut evicted_self = false;
                 loop {
-                    let a = &mut active[i];
+                    let a = &mut self.active[i];
                     let need = a.kv_len() + 1;
                     let SeqKv::Paged(seq) = &mut a.kv else {
                         unreachable!("paged backend holds paged sequences")
@@ -635,7 +671,7 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                         break;
                     }
                     debug_assert!(
-                        active.len() > 1,
+                        self.active.len() > 1,
                         "a solo sequence always fits: admission rejects requests whose \
                          lifetime blocks exceed the whole arena"
                     );
@@ -647,16 +683,16 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                     // one; `i` self-evicts only when every younger sequence
                     // retires this round, and those retirements release the
                     // blocks it needs to re-admit — no deadlock either way.
-                    let victim = (i..active.len())
+                    let victim = (i..self.active.len())
                         .rev()
-                        .find(|&j| active[j].will_step(max_seq))
+                        .find(|&j| self.active[j].will_step(max_seq))
                         .expect("sequence i itself is stepping");
-                    let v = active.remove(victim);
+                    let v = self.active.remove(victim);
                     if let SeqKv::Paged(mut s) = v.kv {
                         arena.release(&mut s);
                     }
                     stats.evictions += 1;
-                    waiting.push_front(Pending {
+                    self.waiting.push_front(Pending {
                         req: v.req,
                         sink: v.sink,
                         emitted: v.stream_sent,
@@ -675,23 +711,27 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                 // On self-eviction a younger sequence shifted into slot `i`;
                 // re-process that slot without advancing.
             }
-            stats.kv_blocks_high_water = arena.high_water();
+            stats.kv_blocks_high_water = stats.kv_blocks_high_water.max(arena.high_water());
             stats.peak_kv_bytes = stats.peak_kv_bytes.max(arena.high_water() * *block_bytes);
         }
+    }
 
-        // One fused round: every active sequence advances one token — prompt
-        // tokens while prefilling, sampled tokens while decoding — through a
-        // single fused decode call, so each packed weight tile is decoded
-        // once for the whole batch (continuous batching: admissions above
-        // interleave between rounds).
+    /// One fused round: every active sequence advances one token — prompt
+    /// tokens while prefilling, sampled tokens while decoding — through a
+    /// single fused decode call, so each packed weight tile is decoded
+    /// once for the whole batch (continuous batching: admissions above
+    /// interleave between rounds). Finishes by retiring completed sequences
+    /// and reclaiming their KV the same round.
+    fn round(&mut self, pool: &ExecPool, tok: &ByteTokenizer, stats: &mut ServerStats) {
+        let max_seq = self.max_seq;
         let round_start = std::time::Instant::now();
-        finished.clear();
-        step_idx.clear();
-        step_tokens.clear();
-        for (i, a) in active.iter_mut().enumerate() {
+        self.finished.clear();
+        self.step_idx.clear();
+        self.step_tokens.clear();
+        for (i, a) in self.active.iter_mut().enumerate() {
             if let Some(t) = a.pending_prompt.pop_front() {
-                step_idx.push(i);
-                step_tokens.push(t);
+                self.step_idx.push(i);
+                self.step_tokens.push(t);
                 continue;
             }
             let t = a.next_token.expect("decoding sequence always holds a sampled token");
@@ -716,7 +756,7 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                     let ev = StreamEvent::Token { id: a.req.id, index: idx, token: t, text };
                     if txs.send(ev).is_err() {
                         a.dropped = true;
-                        finished.push(i);
+                        self.finished.push(i);
                         continue;
                     }
                     a.stream_sent = idx + 1;
@@ -726,24 +766,24 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
             let done = a.generated.len() >= a.req.max_new_tokens
                 || a.kv_len() + 1 >= a.kv_cap(max_seq);
             if done {
-                finished.push(i);
+                self.finished.push(i);
                 continue;
             }
-            step_idx.push(i);
-            step_tokens.push(t);
+            self.step_idx.push(i);
+            self.step_tokens.push(t);
         }
 
-        if !step_idx.is_empty() {
+        if !self.step_idx.is_empty() {
             // One allocation-free fused round: every temporary lives in the
             // persistent scratch arena, every linear is striped across the
             // pool, and a 1-sequence round takes the tighter single-column
             // kernels — outputs are bit-identical either way, and identical
             // between the paged and contiguous KV layouts.
-            let logits = match &mut backend {
+            let logits = match &mut self.backend {
                 KvBackend::Contig { .. } => {
-                    let mut caches: Vec<&mut KvCache> = Vec::with_capacity(step_idx.len());
-                    let mut want = step_idx.iter().peekable();
-                    for (i, a) in active.iter_mut().enumerate() {
+                    let mut caches: Vec<&mut KvCache> = Vec::with_capacity(self.step_idx.len());
+                    let mut want = self.step_idx.iter().peekable();
+                    for (i, a) in self.active.iter_mut().enumerate() {
                         if want.peek() == Some(&&i) {
                             want.next();
                             let SeqKv::Contig(c) = &mut a.kv else {
@@ -752,12 +792,17 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                             caches.push(c);
                         }
                     }
-                    model.decode_step_batch_with(&mut caches, &step_tokens, &mut scratch, &pool)
+                    self.model.decode_step_batch_with(
+                        &mut caches,
+                        &self.step_tokens,
+                        &mut self.scratch,
+                        pool,
+                    )
                 }
                 KvBackend::Paged { arena, .. } => {
-                    let mut seqs: Vec<&mut KvSeq> = Vec::with_capacity(step_idx.len());
-                    let mut want = step_idx.iter().peekable();
-                    for (i, a) in active.iter_mut().enumerate() {
+                    let mut seqs: Vec<&mut KvSeq> = Vec::with_capacity(self.step_idx.len());
+                    let mut want = self.step_idx.iter().peekable();
+                    for (i, a) in self.active.iter_mut().enumerate() {
                         if want.peek() == Some(&&i) {
                             want.next();
                             let SeqKv::Paged(s) = &mut a.kv else {
@@ -766,20 +811,20 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
                             seqs.push(s);
                         }
                     }
-                    model.decode_step_batch_paged(
+                    self.model.decode_step_batch_paged(
                         arena,
                         &mut seqs,
-                        &step_tokens,
-                        &mut scratch,
-                        &pool,
+                        &self.step_tokens,
+                        &mut self.scratch,
+                        pool,
                     )
                 }
             };
             stats.fused_rounds += 1;
-            stats.max_fused_batch = stats.max_fused_batch.max(step_tokens.len());
-            stats.total_step_tokens += step_tokens.len();
-            for (j, &i) in step_idx.iter().enumerate() {
-                let a = &mut active[i];
+            stats.max_fused_batch = stats.max_fused_batch.max(self.step_tokens.len());
+            stats.total_step_tokens += self.step_tokens.len();
+            for (j, &i) in self.step_idx.iter().enumerate() {
+                let a = &mut self.active[i];
                 if !a.pending_prompt.is_empty() {
                     // Mid-prefill: logits are discarded until the last prompt
                     // token has been consumed.
@@ -798,9 +843,9 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         // Retire finished sequences (descending index; `remove` keeps the
         // survivors in admission order for the eviction policy). Blocks are
         // reclaimed here — the same round the sequence finishes.
-        for i in finished.drain(..).rev() {
-            let a = active.remove(i);
-            release_seq(a.kv, &mut backend);
+        for i in self.finished.drain(..).rev() {
+            let a = self.active.remove(i);
+            release_seq(a.kv, &mut self.backend);
             if a.dropped {
                 stats.cancelled += 1;
                 continue;
@@ -834,14 +879,120 @@ fn serve_loop(model: Arc<Transformer>, cfg: ServerConfig, rx: Receiver<Msg>) {
         // admission/eviction round can compound a bookkeeping bug into KV
         // corruption. Release builds skip the O(blocks) walk.
         if cfg!(debug_assertions) {
-            if let KvBackend::Paged { arena, .. } = &backend {
-                arena.assert_partition(active.iter().map(|a| match &a.kv {
+            if let KvBackend::Paged { arena, .. } = &self.backend {
+                arena.assert_partition(self.active.iter().map(|a| match &a.kv {
                     SeqKv::Paged(s) => s,
                     SeqKv::Contig(_) => {
                         unreachable!("paged backend holds paged sequences")
                     }
                 }));
             }
+        }
+    }
+}
+
+fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Receiver<Msg>) {
+    let tok = ByteTokenizer;
+    let mut stats = ServerStats::default();
+    let mut shutting_down: Option<Sender<ServerStats>> = None;
+    // The loop owns the execution pool: workers persist across rounds
+    // (spawned once, parked between jobs) and are shared by every lane —
+    // per-lane scratch arenas mean the model forwards allocate nothing per
+    // round.
+    let pool = ExecPool::new(cfg.threads);
+    stats.workers = pool.width();
+    stats.kv_layout = cfg.kv_layout.resolve().name().to_string();
+    let mut lanes: Vec<Lane> = models
+        .into_iter()
+        .map(|(name, model)| Lane::new(name, model, &cfg, &mut stats))
+        .collect();
+    assert!(!lanes.is_empty(), "serve_loop needs at least one model");
+    // Stats report the default lane's decode-kernel family (lanes may mix).
+    stats.kernel = lanes[0]
+        .model
+        .decode_kernel()
+        .map(|k| k.name().to_string())
+        .unwrap_or_else(|| "dense".to_string());
+
+    loop {
+        // Drain the message queue (non-blocking while work exists; blocking idle).
+        loop {
+            let idle = lanes.iter().all(|l| l.active.is_empty() && l.waiting.is_empty());
+            let msg = if idle && shutting_down.is_none() {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Submit(req, sink) => {
+                    // Route on the request's model field: empty selects the
+                    // default (first) lane; an unknown name is a structured
+                    // rejection, mirroring the admission-time verdicts.
+                    let lane = if req.model.is_empty() {
+                        Some(0)
+                    } else {
+                        lanes.iter().position(|l| l.name == req.model)
+                    };
+                    match lane {
+                        Some(li) => lanes[li].submit(req, sink, &cfg, &mut stats),
+                        None => {
+                            stats.rejected += 1;
+                            let avail = lanes
+                                .iter()
+                                .map(|l| l.name.as_str())
+                                .collect::<Vec<_>>()
+                                .join(", ");
+                            sink.send_done(GenResponse::rejected(
+                                req.id,
+                                format!("unknown model '{}' (available: {avail})", req.model),
+                            ));
+                        }
+                    }
+                }
+                Msg::Cancel(id) => {
+                    for lane in &mut lanes {
+                        if lane.cancel(id, &mut stats) {
+                            break;
+                        }
+                    }
+                }
+                Msg::Shutdown(tx) => shutting_down = Some(tx),
+            }
+        }
+        stats.queue_high_water = stats
+            .queue_high_water
+            .max(lanes.iter().map(|l| l.waiting.len()).sum());
+
+        for lane in &mut lanes {
+            lane.admit(&cfg, &tok, &mut stats);
+        }
+        let total_active: usize = lanes.iter().map(|l| l.active.len()).sum();
+        stats.peak_batch = stats.peak_batch.max(total_active);
+        stats.peak_active = stats.peak_active.max(total_active);
+
+        if total_active == 0 {
+            if let Some(tx) = shutting_down.take() {
+                if lanes.iter().all(|l| l.waiting.is_empty()) {
+                    let _ = tx.send(stats.clone());
+                    return;
+                }
+                shutting_down = Some(tx);
+            }
+            continue;
+        }
+
+        for lane in &mut lanes {
+            if lane.active.is_empty() {
+                continue;
+            }
+            lane.capacity_phase(&mut stats);
+            lane.round(&pool, &tok, &mut stats);
         }
     }
 }
@@ -869,6 +1020,7 @@ mod tests {
             temperature: 0.0,
             top_k: 1,
             seed: id,
+            model: String::new(),
         }
     }
 
@@ -1262,6 +1414,7 @@ mod tests {
             temperature: 0.8,
             top_k: 20,
             seed: 1234,
+            model: String::new(),
         };
         let a = server.submit(mk()).recv().unwrap();
         let b = server.submit(mk()).recv().unwrap();
@@ -1299,6 +1452,7 @@ mod tests {
                         temperature: 0.8,
                         top_k: 16,
                         seed: 99 + i,
+                        model: String::new(),
                     })
                 })
                 .collect();
@@ -1315,5 +1469,78 @@ mod tests {
                 "serve_loop output changed under a {threads}-worker pool"
             );
         }
+    }
+
+    fn second_model() -> Arc<Transformer> {
+        let mut cfg = ModelConfig::nano();
+        cfg.d_model = 32;
+        cfg.n_heads = 2;
+        cfg.d_ff = 64;
+        cfg.n_layers = 1;
+        cfg.max_seq = 64;
+        Arc::new(Transformer::from_store(&WeightStore::random(&cfg, 99)))
+    }
+
+    #[test]
+    fn multi_model_routes_by_name_with_isolated_kv() {
+        // Two models behind one coordinator: routing on the request's model
+        // field must reach the right weights (different seeds => different
+        // greedy generations) while each lane's KV arena stays isolated and
+        // both share one ExecPool.
+        let (ma, mb) = (tiny_model(), second_model());
+        let solo_a = {
+            let s = ServerHandle::spawn(ma.clone(), ServerConfig::default());
+            let t = s.submit(req(1, "hello", 8)).recv().unwrap().tokens;
+            s.shutdown();
+            t
+        };
+        let solo_b = {
+            let s = ServerHandle::spawn(mb.clone(), ServerConfig::default());
+            let t = s.submit(req(1, "hello", 8)).recv().unwrap().tokens;
+            s.shutdown();
+            t
+        };
+        assert_ne!(solo_a, solo_b, "test models must diverge for routing to be observable");
+
+        let server = ServerHandle::spawn_multi(
+            vec![("alpha".to_string(), ma), ("beta".to_string(), mb)],
+            ServerConfig { max_batch: 4, ..Default::default() },
+        );
+        assert_eq!(server.models(), ["alpha".to_string(), "beta".to_string()]);
+        let mut ra = req(1, "hello", 8);
+        ra.model = "alpha".into();
+        let mut rb = req(2, "hello", 8);
+        rb.model = "beta".into();
+        // Submit both before receiving either so the lanes serve concurrently.
+        let (rx_a, rx_b) = (server.submit(ra), server.submit(rb));
+        let (out_a, out_b) = (rx_a.recv().unwrap(), rx_b.recv().unwrap());
+        assert_eq!(out_a.tokens, solo_a, "lane 'alpha' diverged from a solo server");
+        assert_eq!(out_b.tokens, solo_b, "lane 'beta' diverged from a solo server");
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn multi_model_unknown_name_is_rejected_and_empty_routes_default() {
+        let server = ServerHandle::spawn_multi(
+            vec![("alpha".to_string(), tiny_model()), ("beta".to_string(), second_model())],
+            ServerConfig::default(),
+        );
+        let mut bad = req(7, "x", 4);
+        bad.model = "gamma".into();
+        let resp = server.submit(bad).recv().unwrap();
+        let err = resp.error.expect("unknown model must yield a structured error");
+        assert!(err.contains("unknown model 'gamma'"), "error was: {err}");
+        assert!(err.contains("alpha") && err.contains("beta"), "error lists lanes: {err}");
+
+        // Empty model field falls back to the default (first) lane.
+        let default_out = server.submit(req(8, "x", 4)).recv().unwrap();
+        let mut explicit = req(8, "x", 4);
+        explicit.model = "alpha".into();
+        let explicit_out = server.submit(explicit).recv().unwrap();
+        assert_eq!(default_out.tokens, explicit_out.tokens);
+        let stats = server.shutdown();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.completed, 2);
     }
 }

@@ -157,7 +157,8 @@ fn handle_conn(
 /// EOF path serves that final request. A fully-closed peer is detected when
 /// a token/response write fails (RST), which is the cancellation signal for
 /// streams. Pending pipelined bytes read as "alive" and are left unconsumed.
-fn conn_closed(stream: &TcpStream) -> bool {
+/// Shared with the HTTP front-end (`coordinator::http`).
+pub(super) fn conn_closed(stream: &TcpStream) -> bool {
     let mut probe = [0u8; 1];
     match stream.peek(&mut probe) {
         Ok(_) => false,
@@ -204,6 +205,7 @@ fn serve_line(
         temperature: j.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.7) as f32,
         top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
         seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
+        model: j.get("model").and_then(|m| m.as_str()).unwrap_or("").to_string(),
     };
 
     if stream_mode {
@@ -263,7 +265,8 @@ fn serve_line(
 }
 
 /// Outcome of waiting on the batcher while watching the client's socket.
-enum Wait<T> {
+/// Shared with the HTTP front-end (`coordinator::http`).
+pub(super) enum Wait<T> {
     Event(T),
     /// The connection failed (reset/broken) while waiting: cancel the request.
     PeerGone,
@@ -275,7 +278,7 @@ enum Wait<T> {
 /// the batcher in 50 ms slices, probing the socket between slices so a dead
 /// client cancels the request instead of it decoding to completion against a
 /// closed connection.
-fn next_event<T>(rx: &std::sync::mpsc::Receiver<T>, stream: &TcpStream) -> Wait<T> {
+pub(super) fn next_event<T>(rx: &std::sync::mpsc::Receiver<T>, stream: &TcpStream) -> Wait<T> {
     loop {
         match rx.recv_timeout(std::time::Duration::from_millis(50)) {
             Ok(ev) => return Wait::Event(ev),
@@ -289,15 +292,16 @@ fn next_event<T>(rx: &std::sync::mpsc::Receiver<T>, stream: &TcpStream) -> Wait<
     }
 }
 
-fn server_gone_json(id: u64) -> Json {
+pub(super) fn server_gone_json(id: u64) -> Json {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
         ("error", Json::Str("server shut down before responding".into())),
     ])
 }
 
-/// The terminal response object shared by unary and streaming requests.
-fn final_json(r: GenResponse) -> Json {
+/// The terminal response object shared by unary and streaming requests (and
+/// by both wire front-ends).
+pub(super) fn final_json(r: GenResponse) -> Json {
     if let Some(err) = r.error {
         // Rejected at admission (e.g. KV needs above the budget).
         return Json::obj(vec![("id", Json::Num(r.id as f64)), ("error", Json::Str(err))]);

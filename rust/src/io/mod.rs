@@ -30,14 +30,22 @@ use crate::coordinator::QuantizeReport;
 use crate::model::transformer::{Attention, Layer, Linear, Mlp, Transformer};
 use crate::model::weights::{f32s_to_le_bytes, le_bytes_to_f32s, WeightStore};
 use crate::model::ModelConfig;
-use crate::quant::{CodeSpec, QuantMetrics, QuantizedMatrix, RhtContext};
+use crate::quant::{
+    registry, CodeSpec, QuantMetrics, QuantizedMatrix, RhtContext, TableSink, TableSource,
+};
 use crate::trellis::Trellis;
 use crate::util::json::Json;
 use crate::util::matrix::Matrix;
 use crate::util::threadpool::ExecPool;
 
-/// On-disk format version; bump on any incompatible layout change.
-pub const FORMAT_VERSION: usize = 1;
+/// On-disk format version; bump on any incompatible layout change. v2 keys
+/// each per-layer code object by a registry `method` id and delegates its
+/// contents to the owning [`crate::quant::QuantMethod`].
+pub const FORMAT_VERSION: usize = 2;
+/// Oldest manifest version this build still reads. v1 manifests key the code
+/// object by `name` with the same per-method fields, so the method parsers
+/// read both; writes always use the current version.
+pub const MIN_FORMAT_VERSION: usize = 1;
 /// Manifest `kind` discriminator (shares the artifacts dir with model weights
 /// and AOT kernels).
 pub const ARTIFACT_KIND: &str = "qtip-quantized-model";
@@ -67,6 +75,9 @@ pub struct ArtifactInfo {
     pub config: ModelConfig,
     /// e.g. `"3inst L=12 k=2 V=1 tiles 16x16"`.
     pub quant_desc: String,
+    /// Registry id of the quant method used (e.g. "3inst"); for v1 manifests
+    /// this is recovered from the first token of `quant_desc`.
+    pub method: String,
     pub quantized_layers: usize,
     /// KV-block geometry (positions per arena block) recorded at save time —
     /// no KV data lives in the artifact, but the manifest carries the serving
@@ -93,6 +104,14 @@ impl BlobWriter {
         let off = self.buf.len();
         self.buf.extend_from_slice(&f32s_to_le_bytes(vals));
         off
+    }
+}
+
+/// Methods write their decode tables through this bridge — they never see the
+/// blob layout, only section offsets.
+impl TableSink for BlobWriter {
+    fn put_f32s(&mut self, vals: &[f32]) -> usize {
+        BlobWriter::put_f32s(self, vals)
     }
 }
 
@@ -127,64 +146,38 @@ impl<'a> BlobReader<'a> {
     }
 }
 
+/// Bounds-checked table reads for method spec deserialization.
+impl TableSource for BlobReader<'_> {
+    fn f32s(&self, off: usize, n: usize) -> Result<Vec<f32>> {
+        BlobReader::f32s(self, off, n)
+    }
+}
+
 fn num(n: usize) -> Json {
     Json::Num(n as f64)
 }
 
 fn code_spec_to_json(code: &CodeSpec, blob: &mut BlobWriter) -> Json {
-    match code {
-        CodeSpec::OneMad => Json::obj(vec![("name", Json::Str("1mad".into()))]),
-        CodeSpec::ThreeInst => Json::obj(vec![("name", Json::Str("3inst".into()))]),
-        CodeSpec::Hyb { q, v, lut } => {
-            let off = blob.put_f32s(lut);
-            Json::obj(vec![
-                ("name", Json::Str("hyb".into())),
-                ("q", num(*q as usize)),
-                ("v", num(*v as usize)),
-                ("lut_off", num(off)),
-                ("lut_len", num(lut.len())),
-            ])
-        }
-        CodeSpec::Lut { v, table } => {
-            let off = blob.put_f32s(table);
-            Json::obj(vec![
-                ("name", Json::Str("lut".into())),
-                ("v", num(*v as usize)),
-                ("table_off", num(off)),
-                ("table_len", num(table.len())),
-            ])
-        }
-    }
+    // Method-owned serialization: the owning method writes its `method` id
+    // and config fields, staging decode tables through the TableSink bridge.
+    code.method().spec_to_json(code, blob)
 }
 
 fn code_spec_from_json(j: &Json, blob: &BlobReader, trellis: &Trellis) -> Result<CodeSpec> {
-    let spec = match j.req_str("name") {
-        "1mad" => CodeSpec::OneMad,
-        "3inst" => CodeSpec::ThreeInst,
-        "hyb" => {
-            let q = j.req_usize("q") as u32;
-            let v = j.req_usize("v") as u32;
-            // Mirrors HybridCode::from_lut's invariants: a bad q would make
-            // the decode hot loop's `15 - q` shift underflow at serve time.
-            if !(1..=2).contains(&v) || q > 14 {
-                bail!("hyb code with unsupported q={q} / v={v}");
-            }
-            let len = j.req_usize("lut_len");
-            if len != (1usize << q) * v as usize {
-                bail!("hyb LUT length {len} != 2^{q} * {v}");
-            }
-            CodeSpec::Hyb { q, v, lut: blob.f32s(j.req_usize("lut_off"), len)? }
-        }
-        "lut" => {
-            let v = j.req_usize("v") as u32;
-            let len = j.req_usize("table_len");
-            if v == 0 || len != (1usize << trellis.l) * v as usize {
-                bail!("LUT table length {len} != 2^{} * {v}", trellis.l);
-            }
-            CodeSpec::Lut { v, table: blob.f32s(j.req_usize("table_off"), len)? }
-        }
-        other => bail!("unknown code '{other}' in quantized artifact"),
-    };
+    // v2 manifests key the code object by `method`; v1 used `name` with the
+    // same per-method fields, so resolving the id is the only version split.
+    let id = j
+        .get("method")
+        .and_then(|m| m.as_str())
+        .or_else(|| j.get("name").and_then(|m| m.as_str()))
+        .ok_or_else(|| anyhow!("layer code object carries neither 'method' nor 'name'"))?;
+    let method = registry::get(id).ok_or_else(|| {
+        anyhow!(
+            "unknown code '{id}' in quantized artifact (registered methods: {})",
+            registry::names().join("|")
+        )
+    })?;
+    let spec = method.spec_from_json(j, blob, trellis)?;
     if spec.v() != trellis.v {
         bail!("code dimension V={} disagrees with trellis V={}", spec.v(), trellis.v);
     }
@@ -207,6 +200,18 @@ fn dense_entry(
         ("cols", num(cols)),
         ("off", num(off)),
     ]));
+}
+
+/// Quant-method id from a manifest: v2 records it as `quant_method`; v1
+/// manifests lead `quant_desc` with the method name ("3inst L=12 ...").
+fn manifest_method(j: &Json) -> String {
+    j.get("quant_method")
+        .and_then(|m| m.as_str())
+        .or_else(|| {
+            j.get("quant_desc").and_then(|d| d.as_str()).and_then(|d| d.split_whitespace().next())
+        })
+        .unwrap_or("?")
+        .to_string()
 }
 
 fn quant_desc(qm: &QuantizedMatrix) -> String {
@@ -257,6 +262,7 @@ pub fn save_quantized_model_with_kv_block(
     let mut blob = BlobWriter { buf: Vec::new() };
     let mut layer_entries = Vec::new();
     let mut desc = String::new();
+    let mut method = String::new();
     for (lname, lin) in model.linears() {
         let qm = match lin {
             Linear::Quantized { qm, .. } => qm,
@@ -266,6 +272,7 @@ pub fn save_quantized_model_with_kv_block(
         };
         if desc.is_empty() {
             desc = quant_desc(qm);
+            method = qm.code.name().to_string();
         }
         let packed_off = blob.put_u32s(&qm.packed);
         let sign_rows_off = blob.put_u32s(&RhtContext::sign_bits(&qm.rht.sign_rows));
@@ -355,6 +362,7 @@ pub fn save_quantized_model_with_kv_block(
         ("format_version", num(FORMAT_VERSION)),
         ("model_config", model.cfg.to_json()),
         ("quant_desc", Json::Str(desc.clone())),
+        ("quant_method", Json::Str(method.clone())),
         ("quantized_layers", num(quantized_layers)),
         ("kv_block", num(kv_block)),
         ("blob_file", Json::Str(format!("quant_{name}.bin"))),
@@ -376,6 +384,7 @@ pub fn save_quantized_model_with_kv_block(
         blob_bytes: blob.buf.len(),
         config: model.cfg.clone(),
         quant_desc: desc,
+        method,
         quantized_layers,
         kv_block,
     })
@@ -419,10 +428,11 @@ pub fn load_quantized_model_pool(
         bail!("{manifest_path:?} is a '{kind}' artifact, not '{ARTIFACT_KIND}'");
     }
     let version = j.req_usize("format_version");
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         bail!(
             "quantized artifact '{name}' uses format version {version}; this build reads \
-             version {FORMAT_VERSION} — re-save it with `qtip quantize --save {name}`"
+             versions {MIN_FORMAT_VERSION}..={FORMAT_VERSION} — re-save it with \
+             `qtip quantize --save {name}`"
         );
     }
     let cfg = ModelConfig::from_json(j.get("model_config").context("manifest.model_config")?);
@@ -629,6 +639,7 @@ fn reassemble_model(
         blob_bytes,
         config: cfg,
         quant_desc: j.req_str("quant_desc").to_string(),
+        method: manifest_method(&j),
         quantized_layers: j.req_usize("quantized_layers"),
         // Optional: manifests saved before the paged KV arena carry no
         // geometry; 0 lets the serve path fall through to its default.
@@ -655,8 +666,9 @@ pub fn list_quantized_artifacts(dir: &Path) -> Vec<ArtifactInfo> {
         };
         let Ok(text) = std::fs::read_to_string(&path) else { continue };
         let Ok(j) = Json::parse(&text) else { continue };
+        let version = j.get("format_version").and_then(|v| v.as_usize());
         if j.get("kind").and_then(|k| k.as_str()) != Some(ARTIFACT_KIND)
-            || j.get("format_version").and_then(|v| v.as_usize()) != Some(FORMAT_VERSION)
+            || !version.is_some_and(|v| (MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&v))
         {
             continue;
         }
@@ -683,6 +695,7 @@ pub fn list_quantized_artifacts(dir: &Path) -> Vec<ArtifactInfo> {
             blob_bytes,
             config: ModelConfig::from_json(cfg_json),
             quant_desc: desc.to_string(),
+            method: manifest_method(&j),
             quantized_layers: nlayers,
             kv_block: j.get("kv_block").and_then(|v| v.as_usize()).unwrap_or(0),
         });
@@ -724,7 +737,8 @@ mod tests {
             &qcfg,
             &crate::util::threadpool::ExecPool::sequential(),
             |_| {},
-        );
+        )
+        .unwrap();
         (model, report)
     }
 
@@ -859,11 +873,85 @@ mod tests {
         save_quantized_model(&dir, "v", &model, &report).unwrap();
         let mpath = quant_manifest_path(&dir, "v");
         let text = std::fs::read_to_string(&mpath).unwrap();
-        let bumped = text.replace("\"format_version\":1", "\"format_version\":99");
+        let bumped = text.replace("\"format_version\":2", "\"format_version\":99");
         assert_ne!(bumped, text, "manifest rewrite failed to find the version field");
         std::fs::write(&mpath, bumped).unwrap();
         let err = load_quantized_model(&dir, "v").unwrap_err().to_string();
         assert!(err.contains("format version 99"), "unhelpful version error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_manifest_still_loads() {
+        // Pre-registry manifests (format_version 1) keyed the per-layer code
+        // object by "name"; the same fields under the same keys must keep
+        // loading, bit-identically, without a re-save.
+        let dir = tmp_dir("v1compat");
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "old", &model, &report).unwrap();
+        let mpath = quant_manifest_path(&dir, "old");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let downgraded = text
+            .replace("\"format_version\":2", "\"format_version\":1")
+            .replace(",\"quant_method\":\"3inst\"", "")
+            .replace("\"method\":\"3inst\"", "\"name\":\"3inst\"");
+        assert_ne!(downgraded, text, "manifest rewrite failed to downgrade to v1");
+        std::fs::write(&mpath, downgraded).unwrap();
+        let (loaded, _, linfo) = load_quantized_model(&dir, "old").unwrap();
+        // v1 carries no `quant_method`; the id is recovered from quant_desc.
+        assert_eq!(linfo.method, "3inst");
+        let infos = list_quantized_artifacts(&dir);
+        assert_eq!(infos.len(), 1, "v1 manifests must still be listed");
+        let mut ca = KvCache::new(&model.cfg);
+        let mut cb = KvCache::new(&loaded.cfg);
+        for &t in &[3u16, 17, 99] {
+            assert_eq!(
+                model.decode_step(&mut ca, t),
+                loaded.decode_step(&mut cb, t),
+                "v1-manifest load diverged from the in-memory model"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_method_error_lists_registered_names() {
+        let dir = tmp_dir("unknown_method");
+        let (model, report) = tiny_quantized("3inst", 1);
+        save_quantized_model(&dir, "z", &model, &report).unwrap();
+        let mpath = quant_manifest_path(&dir, "z");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let bad = text.replace("\"method\":\"3inst\"", "\"method\":\"zeta\"");
+        assert_ne!(bad, text, "manifest rewrite failed to find the method id");
+        std::fs::write(&mpath, bad).unwrap();
+        let err = load_quantized_model(&dir, "z").unwrap_err().to_string();
+        assert!(err.contains("unknown code 'zeta'"), "{err}");
+        for name in registry::names() {
+            assert!(err.contains(name), "error should list registered method '{name}': {err}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn vptq_artifact_roundtrip() {
+        // The plug-in method must flow quantize → save → load → decode with
+        // no special cases in io: this test would fail on any registry leak.
+        let dir = tmp_dir("vptq");
+        let (model, report) = tiny_quantized("vptq", 2);
+        let info = save_quantized_model(&dir, "vq", &model, &report).unwrap();
+        assert_eq!(info.method, "vptq");
+        let (loaded, _, linfo) = load_quantized_model(&dir, "vq").unwrap();
+        assert_eq!(linfo.method, "vptq");
+        assert!(linfo.quant_desc.starts_with("vptq"));
+        let mut ca = KvCache::new(&model.cfg);
+        let mut cb = KvCache::new(&loaded.cfg);
+        for &t in &[3u16, 17, 99] {
+            assert_eq!(
+                model.decode_step(&mut ca, t),
+                loaded.decode_step(&mut cb, t),
+                "vptq loaded-artifact logits diverged"
+            );
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   info                         environment + artifact status, including
-//!                                saved quantized artifacts
+//!                                saved quantized artifacts and the registered
+//!                                quantization methods
 //!   quantize --model nano --k 2  quantize a model, report per-layer metrics;
 //!                                --save <name> persists the packed trellis
 //!                                artifact for cold-start serving
@@ -14,8 +15,13 @@
 //!   serve    --model nano        quantize then serve demo requests (batched);
 //!                                --artifact <name> cold-starts from a saved
 //!                                artifact (skips calibration/quantization);
-//!                                --tcp 127.0.0.1:7171 for the network
-//!                                front-end (Ctrl-C drains, then prints stats)
+//!                                repeat --artifact to serve several models
+//!                                behind one batcher, routed on the request's
+//!                                "model" field (lane names = artifact names);
+//!                                --tcp 127.0.0.1:7171 for the newline-JSON
+//!                                front-end, --http 127.0.0.1:8080 for the
+//!                                HTTP/SSE front-end — both may run at once
+//!                                (Ctrl-C drains, then prints stats)
 //!   generate --prompt "..."      one-shot generation from a quantized model
 //!                                (--artifact <name> supported)
 //!
@@ -126,6 +132,19 @@ fn cmd_info(args: &Args) -> Result<()> {
             if ok { "trained weights present" } else { "absent (random init fallback)" }
         );
     }
+    println!("  quant methods (registry):");
+    for m in qtip::quant::registry::all() {
+        let info = m.info();
+        let table = if info.default_table_bytes == 0 {
+            "computed (no LUT)".to_string()
+        } else {
+            format!("{} LUT bytes", info.default_table_bytes)
+        };
+        println!(
+            "    - {}: {} | V {:?} | {}-{} bits/weight | {}",
+            info.name, info.summary, info.v_options, info.bits_min, info.bits_max, table
+        );
+    }
     let quants = qtip::io::list_quantized_artifacts(&artifacts_dir());
     if quants.is_empty() {
         println!("  quantized artifacts: none (save one with `qtip quantize --save <name>`)");
@@ -133,8 +152,8 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("  quantized artifacts: {}", quants.len());
         for q in &quants {
             println!(
-                "    - {}: model {} | {} | {} layers quantized | {} blob bytes",
-                q.name, q.config.name, q.quant_desc, q.quantized_layers, q.blob_bytes
+                "    - {}: model {} | method {} | {} | {} layers quantized | {} blob bytes",
+                q.name, q.config.name, q.method, q.quant_desc, q.quantized_layers, q.blob_bytes
             );
         }
     }
@@ -206,7 +225,7 @@ fn quantize_inner(args: &Args, allow_random: bool) -> Result<(Transformer, Quant
             layer.metrics.mse,
             layer.metrics.seconds
         );
-    });
+    })?;
     Ok((model, report))
 }
 
@@ -345,6 +364,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         temperature: args.get_f32("temp", 0.7),
         top_k: args.get_usize("top-k", 40),
         seed: args.get_u64("seed", 1),
+        model: String::new(),
     };
     let resp = server.submit(req).recv()?;
     if let Some(err) = resp.error {
@@ -396,10 +416,43 @@ fn kv_layout_from_args(args: &Args) -> Result<KvLayout> {
     }
 }
 
+/// Models to serve, as `(lane name, model)` pairs. A single `--artifact` (or
+/// none) keeps the historical single-model path with lane name "default";
+/// repeated `--artifact` flags cold-start each saved artifact as its own lane
+/// named after the artifact, all behind the shared batcher.
+fn serve_models(args: &Args) -> Result<(Vec<(String, Arc<Transformer>)>, QuantizeReport, usize)> {
+    let artifacts = args.get_all("artifact");
+    if artifacts.len() <= 1 {
+        let (mut model, report, kv_block) = quantized_model(args, args.has_flag("allow-random"))?;
+        model.ensure_caches();
+        return Ok((vec![("default".to_string(), Arc::new(model))], report, kv_block));
+    }
+    let pool = make_pool(args);
+    let mut models = Vec::new();
+    let mut first_report = None;
+    let mut kv_block = 0usize;
+    for name in &artifacts {
+        let (mut model, report, info) =
+            qtip::io::load_quantized_model_pool(&artifacts_dir(), name, &pool)?;
+        model.ensure_caches();
+        eprintln!(
+            "[qtip] lane '{name}': model {} quantized with {} ({} blob bytes)",
+            info.config.name, info.quant_desc, info.blob_bytes
+        );
+        // First artifact's recorded geometry is the lowest-precedence default
+        // (the lanes share one --kv-block setting).
+        if kv_block == 0 {
+            kv_block = info.kv_block;
+        }
+        first_report.get_or_insert(report);
+        models.push((name.to_string(), Arc::new(model)));
+    }
+    Ok((models, first_report.expect("at least two artifacts"), kv_block))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (mut model, report, artifact_kv_block) =
-        quantized_model(args, args.has_flag("allow-random"))?;
-    model.ensure_caches();
+    let (models, report, artifact_kv_block) = serve_models(args)?;
+    let n_models = models.len();
     let server_cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 4),
         kv_budget_bytes: args.get_usize("kv-budget-mb", 256) << 20,
@@ -407,22 +460,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv_layout: kv_layout_from_args(args)?,
         kv_block: resolve_kv_block(args.get_usize("kv-block", 0), artifact_kv_block),
     };
-    // Network mode: expose the batcher over newline-JSON TCP until Ctrl-C,
-    // then close the frontend, drain in-flight requests, and report stats.
-    if let Some(addr) = args.get("tcp") {
+    // Network mode: expose the batcher over newline-JSON TCP and/or HTTP+SSE
+    // until Ctrl-C, then close the frontends, drain in-flight requests, and
+    // report stats.
+    let (tcp_addr, http_addr) = (args.get("tcp"), args.get("http"));
+    if tcp_addr.is_some() || http_addr.is_some() {
         println!(
-            "serving quantized model ({:.2}x compression) over TCP...",
+            "serving {n_models} quantized model(s) ({:.2}x compression) over the network...",
             report.compression_ratio()
         );
-        let server = Arc::new(ServerHandle::spawn(Arc::new(model), server_cfg));
-        let fe = qtip::coordinator::TcpFrontend::spawn(server.clone(), addr)?;
-        println!("listening on {} (Ctrl-C to drain and stop)", fe.addr);
+        let server = Arc::new(ServerHandle::spawn_multi(models, server_cfg));
+        let tcp_fe = tcp_addr
+            .map(|addr| qtip::coordinator::TcpFrontend::spawn(server.clone(), addr))
+            .transpose()?;
+        let http_fe = http_addr
+            .map(|addr| qtip::coordinator::HttpFrontend::spawn(server.clone(), addr))
+            .transpose()?;
+        if let Some(fe) = &tcp_fe {
+            println!("listening on tcp://{}", fe.addr);
+        }
+        if let Some(fe) = &http_fe {
+            println!("listening on http://{} (POST /v1/generate, GET /v1/models)", fe.addr);
+        }
+        println!("models: {} (Ctrl-C to drain and stop)", server.models().join(", "));
         let shutdown = qtip::util::shutdown::install();
         while !shutdown.is_set() {
             std::thread::sleep(std::time::Duration::from_millis(100));
         }
-        eprintln!("[qtip] shutdown requested; closing frontend and draining...");
-        fe.shutdown();
+        eprintln!("[qtip] shutdown requested; closing frontends and draining...");
+        if let Some(fe) = tcp_fe {
+            fe.shutdown();
+        }
+        if let Some(fe) = http_fe {
+            fe.shutdown();
+        }
         let server = Arc::try_unwrap(server)
             .map_err(|_| anyhow::anyhow!("frontend still holds server references after join"))?;
         print_server_stats(&server.shutdown());
@@ -433,7 +504,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serving quantized model ({:.2}x compression); submitting {n} demo requests",
         report.compression_ratio(),
     );
-    let server = ServerHandle::spawn(Arc::new(model), server_cfg);
+    let server = ServerHandle::spawn_multi(models, server_cfg);
+    let lane_names: Vec<String> = server.models().to_vec();
     let prompts = ["fn main", "pub struct", "import ", "## ", "let mut ", "def "];
     let rxs: Vec<_> = (0..n)
         .map(|i| {
@@ -444,6 +516,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 temperature: 0.7,
                 top_k: 40,
                 seed: i as u64,
+                // Demo requests round-robin across the served lanes.
+                model: lane_names[i % lane_names.len()].clone(),
             })
         })
         .collect();
@@ -486,8 +560,9 @@ fn main() -> Result<()> {
             eprintln!(
                 "unknown command '{other}'\nusage: qtip <info|quantize|eval|generate|serve> \
                  [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
-                 [--artifact NAME] [--threads N] [--kernel auto|scalar|lanes] \
-                 [--kv-layout auto|contig|paged] [--kv-block N] [--allow-random] ..."
+                 [--artifact NAME]... [--threads N] [--kernel auto|scalar|lanes] \
+                 [--kv-layout auto|contig|paged] [--kv-block N] \
+                 [--tcp ADDR] [--http ADDR] [--allow-random] ..."
             );
             std::process::exit(2);
         }

@@ -1,0 +1,293 @@
+//! The pluggable quantization-method surface: every code (1MAD, 3INST, HYB,
+//! LUT, VPTQ, …) implements [`QuantMethod`] in its own module and registers a
+//! single static in [`crate::quant::registry`]. The trait owns the full
+//! method lifecycle:
+//!
+//! * **build** — construct the encode-side [`Code`] (trellis decode values for
+//!   Viterbi) *and* the decode-side [`CodeSpec`] from a [`QtipConfig`], in one
+//!   call, so LUT training happens exactly once;
+//! * **persistence** — serialize/deserialize the spec's method-owned config
+//!   blob in the artifact manifest ([`QuantMethod::spec_to_json`] /
+//!   [`QuantMethod::spec_from_json`], bridged to the io layer through
+//!   [`TableSink`] / [`TableSource`] so methods never see file formats);
+//! * **kernel dispatch** — [`QuantMethod::run_kernel`] receives a
+//!   [`KernelCall`] (a band of a single-column or batch-fused decode matvec)
+//!   and completes it via [`KernelCall::run_v1`] / [`KernelCall::run_v2`] with
+//!   the method's scalar and lane decode closures. The generic kernels
+//!   monomorphize *inside each method's module*, so the hot loops compile to
+//!   the same per-weight ALU sequences as the pre-registry dispatch macros —
+//!   bit-identity with the reference paths is preserved by construction
+//!   (`tests/kernel_parity.rs` sweeps every registry entry).
+//!
+//! Adding a method touches exactly two places: the method's own module and
+//! the registration line in `quant/registry.rs`.
+
+use anyhow::Result;
+
+use crate::codes::Code;
+use crate::quant::kernel::KernelKind;
+use crate::quant::{QtipConfig, QuantizedMatrix, YCells, LANES};
+use crate::trellis::Trellis;
+use crate::util::json::Json;
+
+/// Static description of a registered method (for `qtip info`).
+#[derive(Clone, Copy, Debug)]
+pub struct MethodInfo {
+    pub name: &'static str,
+    /// One-line description of the decode scheme.
+    pub summary: &'static str,
+    /// Supported code vector dimensions.
+    pub v_options: &'static [u32],
+    /// Validated bits-per-weight range (trellis `k`; `k·V ≤ 8`, `k·V < L`).
+    pub bits_min: u32,
+    pub bits_max: u32,
+    /// Decoder-table bytes at the method's default configuration
+    /// (0 = fully computed code, no table).
+    pub default_table_bytes: usize,
+}
+
+/// Everything one `build` call produces: the encode-side trellis code (feeds
+/// Viterbi via `Code::materialize`) and the decode-side spec carried by the
+/// packed artifact. Producing both from one call guarantees any trained
+/// tables are trained once and shared bit-exactly by both sides.
+pub struct MethodBuild {
+    pub code: Box<dyn Code>,
+    pub spec: CodeSpec,
+}
+
+/// Where a method stores its decode tables when serializing a spec; the io
+/// layer's blob writer implements this. Returns the byte offset of the
+/// appended section.
+pub trait TableSink {
+    fn put_f32s(&mut self, vals: &[f32]) -> usize;
+}
+
+/// Bounds-checked decode-table reads when deserializing a spec; the io
+/// layer's blob reader implements this.
+pub trait TableSource {
+    fn f32s(&self, off: usize, n: usize) -> Result<Vec<f32>>;
+}
+
+/// A quantization method: config parsing, code construction, artifact
+/// persistence, and decode-kernel dispatch, owned by one module per method.
+/// Implementors are unit structs registered as `&'static dyn QuantMethod` in
+/// [`crate::quant::registry`].
+pub trait QuantMethod: Send + Sync {
+    /// Registry id; also the `--code` CLI spelling and the manifest `method`.
+    fn name(&self) -> &'static str;
+
+    /// Static description for `qtip info`.
+    fn info(&self) -> MethodInfo;
+
+    /// Preferred code dimension V when the caller does not pin one (parity
+    /// sweeps, `--code` defaults).
+    fn preferred_v(&self) -> u32 {
+        1
+    }
+
+    /// Build the encode-side code and decode-side spec for one quantization
+    /// run. Errors on configs the method does not support (wrong V, bad L).
+    fn build(&'static self, cfg: &QtipConfig) -> Result<MethodBuild>;
+
+    /// Decode one trellis state into `out[..V]` (cold path: tile
+    /// reconstruction, debugging; the matvec hot loops go through
+    /// [`QuantMethod::run_kernel`] instead).
+    fn decode_state(&self, spec: &CodeSpec, state: u32, out: &mut [f32]);
+
+    /// Bytes of decode-time table state (0 for computed codes): the quantity
+    /// Table 10 budgets against L1 cache. Tables are fp16 on device.
+    fn table_bytes(&self, spec: &CodeSpec) -> usize {
+        spec.table().len() * 2
+    }
+
+    /// Serialize the spec's method-owned config (tables go to `sink`; the
+    /// returned object is embedded in the layer manifest next to a `method`
+    /// id written by the io layer).
+    fn spec_to_json(&self, spec: &CodeSpec, sink: &mut dyn TableSink) -> Json;
+
+    /// Rebuild a spec from its manifest object + blob sections, validating
+    /// everything the decode hot path would otherwise trust blindly.
+    fn spec_from_json(
+        &'static self,
+        j: &Json,
+        src: &dyn TableSource,
+        trellis: &Trellis,
+    ) -> Result<CodeSpec>;
+
+    /// Complete a decode-matvec band with this method's kernels: call
+    /// [`KernelCall::run_v1`] (V=1) or [`KernelCall::run_v2`] (V=2) with the
+    /// scalar and lane decode closures. Monomorphization happens here, in the
+    /// method's own module — one dyn call per band, zero per weight.
+    fn run_kernel(&self, spec: &CodeSpec, call: KernelCall<'_>);
+
+    /// A synthetic decode spec (random packed bits are valid tail-biting
+    /// walks) for parity sweeps and throughput benches: the trellis geometry
+    /// `(l, k, preferred V)` plus a spec with any tables trained from `seed`.
+    fn synthetic_entry(&'static self, l: u32, k: u32, seed: u64) -> (Trellis, CodeSpec);
+
+    /// Trellis L the throughput benches should exercise (pure-LUT codes cap
+    /// it so the table stays L1-resident, matching the paper's regime).
+    fn bench_l(&self) -> u32 {
+        16
+    }
+}
+
+/// Decode-side code specification carried inside the artifact: the owning
+/// method plus its parameters and decode tables. LUT-bearing methods own
+/// their tables so a `QuantizedMatrix` stays self-contained.
+#[derive(Clone)]
+pub struct CodeSpec {
+    method: &'static dyn QuantMethod,
+    v: u32,
+    /// Method-owned integer parameters (e.g. HYB's `q`). Meaning is private
+    /// to the method; everything else treats them as opaque.
+    params: Vec<u32>,
+    /// Method-owned decode table (empty for computed codes).
+    table: Vec<f32>,
+}
+
+impl CodeSpec {
+    pub fn new(
+        method: &'static dyn QuantMethod,
+        v: u32,
+        params: Vec<u32>,
+        table: Vec<f32>,
+    ) -> CodeSpec {
+        CodeSpec { method, v, params, table }
+    }
+
+    #[inline]
+    pub fn method(&self) -> &'static dyn QuantMethod {
+        self.method
+    }
+
+    #[inline]
+    pub fn name(&self) -> &'static str {
+        self.method.name()
+    }
+
+    #[inline]
+    pub fn v(&self) -> u32 {
+        self.v
+    }
+
+    #[inline]
+    pub fn params(&self) -> &[u32] {
+        &self.params
+    }
+
+    #[inline]
+    pub fn table(&self) -> &[f32] {
+        &self.table
+    }
+
+    /// Decode one state (cold path; the matvec hot loops monomorphize in the
+    /// owning method's `run_kernel` instead).
+    #[inline]
+    pub fn decode(&self, state: u32, out: &mut [f32]) {
+        self.method.decode_state(self, state, out);
+    }
+
+    /// Bytes of decode-time table state (0 for the pure-computed codes): the
+    /// quantity Table 10 budgets against L1 cache.
+    pub fn decoder_table_bytes(&self) -> usize {
+        self.method.table_bytes(self)
+    }
+}
+
+impl std::fmt::Debug for CodeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CodeSpec")
+            .field("method", &self.name())
+            .field("v", &self.v)
+            .field("params", &self.params)
+            .field("table_len", &self.table.len())
+            .finish()
+    }
+}
+
+/// One pending decode-matvec band, handed to [`QuantMethod::run_kernel`].
+/// The shape (single-column vs batch-fused) is private; the method only
+/// chooses the decode closures and the V arity via [`KernelCall::run_v1`] /
+/// [`KernelCall::run_v2`] — the call routes itself to the matching scalar or
+/// lane-blocked kernel from the matrix's [`KernelKind`] selection.
+pub struct KernelCall<'a> {
+    inner: CallInner<'a>,
+}
+
+enum CallInner<'a> {
+    /// Single-column band: `y` holds output rows `[bi0·tx, bi1·tx)`.
+    Tilde { qm: &'a QuantizedMatrix, bi0: usize, bi1: usize, xt: &'a [f32], y: &'a mut [f32] },
+    /// Batch-fused band over column-major activations (`cols × nb`).
+    Multi {
+        qm: &'a QuantizedMatrix,
+        bi0: usize,
+        bi1: usize,
+        xcol: &'a [f32],
+        nb: usize,
+        y: YCells,
+    },
+}
+
+impl<'a> KernelCall<'a> {
+    pub(super) fn tilde(
+        qm: &'a QuantizedMatrix,
+        bi0: usize,
+        bi1: usize,
+        xt: &'a [f32],
+        y: &'a mut [f32],
+    ) -> KernelCall<'a> {
+        KernelCall { inner: CallInner::Tilde { qm, bi0, bi1, xt, y } }
+    }
+
+    pub(super) fn multi(
+        qm: &'a QuantizedMatrix,
+        bi0: usize,
+        bi1: usize,
+        xcol: &'a [f32],
+        nb: usize,
+        y: YCells,
+    ) -> KernelCall<'a> {
+        KernelCall { inner: CallInner::Multi { qm, bi0, bi1, xcol, nb, y } }
+    }
+
+    /// Run the band with V=1 decode closures. `scalar` and `lanes` must be
+    /// the exact same op sequence per lane — that equivalence is what keeps
+    /// the two kernel families bit-identical (`tests/kernel_parity.rs`).
+    #[inline]
+    pub fn run_v1<S, L>(self, scalar: S, lanes: L)
+    where
+        S: Fn(u32) -> f32,
+        L: Fn([u32; LANES]) -> [f32; LANES],
+    {
+        match self.inner {
+            CallInner::Tilde { qm, bi0, bi1, xt, y } => match qm.kernel {
+                KernelKind::Scalar => qm.matvec_tilde_v1(bi0, bi1, xt, y, scalar),
+                _ => qm.matvec_tilde_lanes_v1(bi0, bi1, xt, y, lanes),
+            },
+            CallInner::Multi { qm, bi0, bi1, xcol, nb, y } => match qm.kernel {
+                KernelKind::Scalar => qm.matvec_tilde_multi_v1(bi0, bi1, xcol, nb, y, scalar),
+                _ => qm.matvec_tilde_multi_lanes_v1(bi0, bi1, xcol, nb, y, lanes),
+            },
+        }
+    }
+
+    /// Run the band with V=2 pair-decode closures.
+    #[inline]
+    pub fn run_v2<S, L>(self, scalar: S, lanes: L)
+    where
+        S: Fn(u32) -> (f32, f32),
+        L: Fn([u32; LANES]) -> ([f32; LANES], [f32; LANES]),
+    {
+        match self.inner {
+            CallInner::Tilde { qm, bi0, bi1, xt, y } => match qm.kernel {
+                KernelKind::Scalar => qm.matvec_tilde_v2(bi0, bi1, xt, y, scalar),
+                _ => qm.matvec_tilde_lanes_v2(bi0, bi1, xt, y, lanes),
+            },
+            CallInner::Multi { qm, bi0, bi1, xcol, nb, y } => match qm.kernel {
+                KernelKind::Scalar => qm.matvec_tilde_multi_v2(bi0, bi1, xcol, nb, y, scalar),
+                _ => qm.matvec_tilde_multi_lanes_v2(bi0, bi1, xcol, nb, y, lanes),
+            },
+        }
+    }
+}

@@ -11,14 +11,19 @@
 pub mod incoherence;
 pub mod kernel;
 pub mod ldlq;
+pub mod method;
 pub mod proxy;
+pub mod registry;
 
 pub use incoherence::RhtContext;
 pub use kernel::{KernelKind, LANES};
 pub use ldlq::{block_ldlq, BlockRounder, ScalarRounder};
+pub use method::{
+    CodeSpec, KernelCall, MethodBuild, MethodInfo, QuantMethod, TableSink, TableSource,
+};
 
 use crate::baselines::{E8Rvq, LloydMax};
-use crate::codes::{build_code, hybrid, onemad, threeinst, Code, HybridCode, PureLutCode};
+use crate::codes::Code;
 use crate::trellis::packing::{decode_window, pack_states, pad_for_decode};
 use crate::trellis::{quantize_tail_biting, Trellis, Viterbi, ViterbiWorkspace};
 use crate::util::linalg::regularize_spd;
@@ -39,7 +44,8 @@ pub struct QtipConfig {
     pub tx: usize,
     /// Tile cols (input dim) = BlockLDLQ group size.
     pub ty: usize,
-    /// Code name: "1mad" | "3inst" | "hyb" | "lut".
+    /// Registry method name (see `quant::registry::names()`), e.g. "1mad",
+    /// "3inst", "hyb", "lut", "vptq".
     pub code: String,
     pub seed: u64,
 }
@@ -55,85 +61,6 @@ impl QtipConfig {
             ty: 16,
             code: "3inst".into(),
             seed: 0x51_71_50, // "QTIP"
-        }
-    }
-}
-
-/// Decode-side code specification carried inside the artifact. The LUT-bearing
-/// variants own their tables so a `QuantizedMatrix` is self-contained.
-#[derive(Clone, Debug)]
-pub enum CodeSpec {
-    OneMad,
-    ThreeInst,
-    Hyb { q: u32, v: u32, lut: Vec<f32> },
-    Lut { v: u32, table: Vec<f32> },
-}
-
-impl CodeSpec {
-    pub fn from_code(code: &dyn Code) -> CodeSpec {
-        // Rebuild the spec from the known concrete types via name dispatch.
-        match code.name() {
-            "1mad" => CodeSpec::OneMad,
-            "3inst" => CodeSpec::ThreeInst,
-            _ => panic!("use CodeSpec::hyb/lut constructors for table codes"),
-        }
-    }
-
-    pub fn hyb(code: &HybridCode) -> CodeSpec {
-        CodeSpec::Hyb { q: code.q, v: code.v(), lut: code.lut.clone() }
-    }
-
-    pub fn lut(code: &PureLutCode) -> CodeSpec {
-        CodeSpec::Lut { v: code.v(), table: code.table.clone() }
-    }
-
-    pub fn v(&self) -> u32 {
-        match self {
-            CodeSpec::OneMad | CodeSpec::ThreeInst => 1,
-            CodeSpec::Hyb { v, .. } => *v,
-            CodeSpec::Lut { v, .. } => *v,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            CodeSpec::OneMad => "1mad",
-            CodeSpec::ThreeInst => "3inst",
-            CodeSpec::Hyb { .. } => "hyb",
-            CodeSpec::Lut { .. } => "lut",
-        }
-    }
-
-    /// Decode one state (cold path; the matvec hot loops monomorphize instead).
-    #[inline]
-    pub fn decode(&self, state: u32, out: &mut [f32]) {
-        match self {
-            CodeSpec::OneMad => out[0] = onemad::decode_scalar(state),
-            CodeSpec::ThreeInst => out[0] = threeinst::decode_scalar(state),
-            CodeSpec::Hyb { q, v, lut } => {
-                let x = hybrid::hash(state);
-                let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                let vv = *v as usize;
-                out[..vv].copy_from_slice(&lut[idx * vv..(idx + 1) * vv]);
-                if x & (1 << 15) != 0 {
-                    out[vv - 1] = -out[vv - 1];
-                }
-            }
-            CodeSpec::Lut { v, table } => {
-                let vv = *v as usize;
-                let base = state as usize * vv;
-                out[..vv].copy_from_slice(&table[base..base + vv]);
-            }
-        }
-    }
-
-    /// Bytes of decode-time table state (0 for the pure-computed codes): the
-    /// quantity Table 10 budgets against L1 cache.
-    pub fn decoder_table_bytes(&self) -> usize {
-        match self {
-            CodeSpec::OneMad | CodeSpec::ThreeInst => 0,
-            CodeSpec::Hyb { lut, .. } => lut.len() * 2, // stored as fp16 on device
-            CodeSpec::Lut { table, .. } => table.len() * 2,
         }
     }
 }
@@ -194,128 +121,6 @@ pub struct QuantizedMatrix {
     /// `--kernel` > `QTIP_KERNEL` > auto; both families are bit-identical,
     /// so flipping it never changes outputs (`tests/kernel_parity.rs`).
     pub kernel: KernelKind,
-}
-
-/// Shared per-`CodeSpec` kernel dispatch: monomorphizes the given v1 (scalar)
-/// or v2 (pair) kernel with the matching decode closure. One definition keeps
-/// the single-column and batch-fused matvecs decoding identically — the
-/// documented bit-identity between the two paths depends on it. The kernels
-/// take a tile-row band `[bi0, bi1)` so the sequential entry points (full
-/// band) and the tile-parallel pool paths (one band per worker claim) run the
-/// exact same code.
-macro_rules! dispatch_code {
-    ($self:ident, $v1:ident, $v2:ident, $($arg:expr),+) => {
-        match &$self.code {
-            CodeSpec::OneMad => $self.$v1($($arg),+, onemad::decode_scalar),
-            CodeSpec::ThreeInst => $self.$v1($($arg),+, threeinst::decode_scalar),
-            CodeSpec::Hyb { q, v, lut } => {
-                let q = *q;
-                if *v as usize == 1 {
-                    $self.$v1($($arg),+, move |s| {
-                        let x = hybrid::hash(s);
-                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                        let val = lut[idx];
-                        if x & (1 << 15) != 0 {
-                            -val
-                        } else {
-                            val
-                        }
-                    })
-                } else {
-                    $self.$v2($($arg),+, move |s| {
-                        let x = hybrid::hash(s);
-                        let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                        let a = lut[idx * 2];
-                        let mut b = lut[idx * 2 + 1];
-                        if x & (1 << 15) != 0 {
-                            b = -b;
-                        }
-                        (a, b)
-                    })
-                }
-            }
-            CodeSpec::Lut { v, table } => {
-                if *v as usize == 1 {
-                    $self.$v1($($arg),+, move |s| table[s as usize])
-                } else {
-                    $self.$v2($($arg),+, move |s| {
-                        (table[s as usize * 2], table[s as usize * 2 + 1])
-                    })
-                }
-            }
-        }
-    };
-}
-
-/// Lane-blocked counterpart of [`dispatch_code!`]: monomorphizes the given
-/// lane v1/v2 kernel with a `[u32; LANES] -> [f32; LANES]` (or paired) code
-/// evaluator — `onemad::decode_lanes`, `threeinst::decode_lanes`, the
-/// `hybrid::hash_lanes` + LUT gather, or plain LUT gathers. Every lane runs
-/// the exact scalar op sequence of the matching [`dispatch_code!`] arm, which
-/// is what makes the lane kernels bit-identical to the scalar reference.
-macro_rules! dispatch_code_lanes {
-    ($self:ident, $v1:ident, $v2:ident, $($arg:expr),+) => {
-        match &$self.code {
-            CodeSpec::OneMad => $self.$v1($($arg),+, onemad::decode_lanes::<LANES>),
-            CodeSpec::ThreeInst => $self.$v1($($arg),+, threeinst::decode_lanes::<LANES>),
-            CodeSpec::Hyb { q, v, lut } => {
-                let q = *q;
-                if *v as usize == 1 {
-                    $self.$v1($($arg),+, move |s: [u32; LANES]| {
-                        let h = hybrid::hash_lanes(s);
-                        let mut out = [0.0f32; LANES];
-                        for (o, &x) in out.iter_mut().zip(h.iter()) {
-                            let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                            let val = lut[idx];
-                            *o = if x & (1 << 15) != 0 { -val } else { val };
-                        }
-                        out
-                    })
-                } else {
-                    $self.$v2($($arg),+, move |s: [u32; LANES]| {
-                        let h = hybrid::hash_lanes(s);
-                        let mut a = [0.0f32; LANES];
-                        let mut b = [0.0f32; LANES];
-                        for ((av, bv), &x) in
-                            a.iter_mut().zip(b.iter_mut()).zip(h.iter())
-                        {
-                            let idx = ((x >> (15 - q)) & ((1 << q) - 1)) as usize;
-                            *av = lut[idx * 2];
-                            let mut second = lut[idx * 2 + 1];
-                            if x & (1 << 15) != 0 {
-                                second = -second;
-                            }
-                            *bv = second;
-                        }
-                        (a, b)
-                    })
-                }
-            }
-            CodeSpec::Lut { v, table } => {
-                if *v as usize == 1 {
-                    $self.$v1($($arg),+, move |s: [u32; LANES]| {
-                        let mut out = [0.0f32; LANES];
-                        for (o, &st) in out.iter_mut().zip(s.iter()) {
-                            *o = table[st as usize];
-                        }
-                        out
-                    })
-                } else {
-                    $self.$v2($($arg),+, move |s: [u32; LANES]| {
-                        let mut a = [0.0f32; LANES];
-                        let mut b = [0.0f32; LANES];
-                        for ((av, bv), &st) in
-                            a.iter_mut().zip(b.iter_mut()).zip(s.iter())
-                        {
-                            *av = table[st as usize * 2];
-                            *bv = table[st as usize * 2 + 1];
-                        }
-                        (a, b)
-                    })
-                }
-            }
-        }
-    };
 }
 
 /// Raw write handle for the batch accumulator (`B × rows`, row-major): the
@@ -485,24 +290,13 @@ impl QuantizedMatrix {
     }
 
     /// Single-column kernel over tile-row band `[bi0, bi1)`; `y` holds exactly
-    /// the output rows `[bi0·tx, bi1·tx)`. Dispatches on [`Self::kernel`]:
-    /// the scalar reference family or the lane-blocked family — bit-identical
-    /// by construction.
+    /// the output rows `[bi0·tx, bi1·tx)`. The owning [`QuantMethod`] completes
+    /// the call with its decode closures ([`KernelCall::run_v1`] /
+    /// [`KernelCall::run_v2`] route to the scalar or lane-blocked family from
+    /// [`Self::kernel`] — bit-identical by construction). One dyn call per
+    /// band; the hot loops monomorphize inside the method's module.
     fn tilde_band(&self, bi0: usize, bi1: usize, xt: &[f32], y: &mut [f32]) {
-        match self.kernel {
-            KernelKind::Scalar => {
-                dispatch_code!(self, matvec_tilde_v1, matvec_tilde_v2, bi0, bi1, xt, y)
-            }
-            _ => dispatch_code_lanes!(
-                self,
-                matvec_tilde_lanes_v1,
-                matvec_tilde_lanes_v2,
-                bi0,
-                bi1,
-                xt,
-                y
-            ),
-        }
+        self.code.method().run_kernel(&self.code, KernelCall::tilde(self, bi0, bi1, xt, y));
     }
 
     #[inline]
@@ -669,31 +463,10 @@ impl QuantizedMatrix {
     }
 
     /// Batch kernel over tile-row band `[bi0, bi1)` — owns output rows
-    /// `[bi0·tx, bi1·tx)` of every batch column of `y`. Dispatches on
-    /// [`Self::kernel`] like [`Self::tilde_band`].
+    /// `[bi0·tx, bi1·tx)` of every batch column of `y`. Dispatched to the
+    /// owning [`QuantMethod`] like [`Self::tilde_band`].
     fn multi_band(&self, bi0: usize, bi1: usize, xcol: &[f32], nb: usize, y: YCells) {
-        match self.kernel {
-            KernelKind::Scalar => dispatch_code!(
-                self,
-                matvec_tilde_multi_v1,
-                matvec_tilde_multi_v2,
-                bi0,
-                bi1,
-                xcol,
-                nb,
-                y
-            ),
-            _ => dispatch_code_lanes!(
-                self,
-                matvec_tilde_multi_lanes_v1,
-                matvec_tilde_multi_lanes_v2,
-                bi0,
-                bi1,
-                xcol,
-                nb,
-                y
-            ),
-        }
+        self.code.method().run_kernel(&self.code, KernelCall::multi(self, bi0, bi1, xcol, nb, y));
     }
 
     #[inline]
@@ -1155,7 +928,14 @@ pub struct QtipRounder {
 }
 
 impl QtipRounder {
-    pub fn new(trellis: Trellis, code: &dyn Code, rows: usize, cols: usize, tx: usize, ty: usize) -> Self {
+    pub fn new(
+        trellis: Trellis,
+        code: &dyn Code,
+        rows: usize,
+        cols: usize,
+        tx: usize,
+        ty: usize,
+    ) -> Self {
         assert_eq!(rows % tx, 0, "tx={tx} must divide rows={rows}");
         assert_eq!(cols % ty, 0, "ty={ty} must divide cols={cols}");
         assert_eq!((tx * ty) % trellis.v as usize, 0);
@@ -1242,28 +1022,15 @@ pub fn quantize_matrix_qtip(w: &Matrix, h: &Matrix, cfg: &QtipConfig) -> Quantiz
     let mut wn = wt.clone();
     wn.scale(1.0 / sigma);
 
-    let code = build_code(&cfg.code, cfg.l, cfg.v, cfg.seed);
+    // One registry build produces both the encode-side code (Viterbi search)
+    // and the decode-side spec, sharing any trained tables bit-exactly.
+    let MethodBuild { code, spec } =
+        registry::require(&cfg.code).build(cfg).expect("code rejected this QtipConfig");
     let mut rounder = QtipRounder::new(trellis, code.as_ref(), w.rows, w.cols, cfg.tx, cfg.ty);
     let w_hat_n = block_ldlq(&wn, &ht, &mut rounder);
 
     let relative_proxy = proxy::relative_proxy_loss(&wn, &w_hat_n, &ht);
     let mse = crate::util::stats::mse(&w_hat_n.data, &wn.data);
-
-    let spec = match &cfg.code[..] {
-        "1mad" => CodeSpec::OneMad,
-        "3inst" => CodeSpec::ThreeInst,
-        "hyb" => {
-            // Rebuild the concrete HybridCode to copy its LUT.
-            let q = if cfg.v == 2 { 9 } else { 6 };
-            let hc = HybridCode::train(cfg.l, cfg.v, q, cfg.seed);
-            CodeSpec::Hyb { q, v: cfg.v, lut: hc.lut }
-        }
-        "lut" => {
-            let lc = PureLutCode::new(cfg.l, cfg.v, cfg.seed);
-            CodeSpec::Lut { v: cfg.v, table: lc.table }
-        }
-        other => panic!("unsupported code '{other}'"),
-    };
 
     let metrics = QuantMetrics {
         relative_proxy,
@@ -1462,15 +1229,16 @@ mod tests {
 
     #[test]
     fn all_codes_run_end_to_end() {
+        // Iterates the registry: any newly registered method is automatically
+        // held to the same end-to-end quantize + matvec agreement bar.
         let mut rng = Rng::new(9);
         let w = Matrix::gaussian(16, 16, 1.0, &mut rng);
         let h = random_spd(16, 10);
-        for code in ["1mad", "3inst", "hyb", "lut"] {
+        for m in registry::all() {
+            let code = m.name();
             let mut cfg = small_cfg(2);
             cfg.code = code.into();
-            if code == "hyb" {
-                cfg.v = 2;
-            }
+            cfg.v = m.preferred_v();
             let res = quantize_matrix_qtip(&w, &h, &cfg);
             assert!(res.metrics.mse < 0.35, "{code}: {}", res.metrics.mse);
             // Fused matvec must agree with reconstruction for every code.
@@ -1492,7 +1260,13 @@ mod tests {
         let w = Matrix::gaussian(16, 16, 0.5, &mut rng);
         let h = random_spd(16, 22);
         let b = 3usize;
-        for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1), ("lut", 2)] {
+        // Registry preferred geometries plus the V=2 pure-LUT path, which no
+        // method prefers but the kernels must keep supporting.
+        let cases = registry::all()
+            .iter()
+            .map(|m| (m.name(), m.preferred_v()))
+            .chain(std::iter::once(("lut", 2)));
+        for (code, v) in cases {
             let mut cfg = small_cfg(2);
             cfg.code = code.into();
             cfg.v = v;
@@ -1525,8 +1299,9 @@ mod tests {
     fn matvec_tilde_multi_matches_singles_on_synthetic() {
         // Synthetic packed bits exercise the rolling-window decode at full tile
         // size (16×16, L=16) for both scalar-code kernels.
-        for code in [CodeSpec::OneMad, CodeSpec::ThreeInst] {
-            let qm = QuantizedMatrix::synthetic(32, 32, Trellis::new(16, 2, 1), code, 16, 16, 9);
+        for name in ["1mad", "3inst"] {
+            let (trellis, code) = registry::require(name).synthetic_entry(16, 2, 9);
+            let qm = QuantizedMatrix::synthetic(32, 32, trellis, code, 16, 16, 9);
             let mut rng = Rng::new(31);
             let b = 4usize;
             let mut x = Matrix::zeros(b, 32);
@@ -1552,7 +1327,11 @@ mod tests {
         let mut rng = Rng::new(41);
         let w = Matrix::gaussian(16, 16, 0.5, &mut rng);
         let h = random_spd(16, 42);
-        for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 2)] {
+        let cases = registry::all()
+            .iter()
+            .map(|m| (m.name(), m.preferred_v()))
+            .chain(std::iter::once(("lut", 2)));
+        for (code, v) in cases {
             let mut cfg = small_cfg(2);
             cfg.code = code.into();
             cfg.v = v;
@@ -1602,9 +1381,9 @@ mod tests {
     fn lane_kernels_match_scalar_smoke() {
         // Full lane-boundary coverage lives in tests/kernel_parity.rs; this
         // pins the in-module dispatch: flipping `kernel` never changes bits.
-        for code in [CodeSpec::OneMad, CodeSpec::ThreeInst] {
-            let mut qm =
-                QuantizedMatrix::synthetic(32, 32, Trellis::new(16, 2, 1), code, 16, 16, 77);
+        for name in ["1mad", "3inst"] {
+            let (trellis, code) = registry::require(name).synthetic_entry(16, 2, 77);
+            let mut qm = QuantizedMatrix::synthetic(32, 32, trellis, code, 16, 16, 77);
             let mut rng = Rng::new(78);
             let x = rng.gauss_vec(32);
             qm.kernel = KernelKind::Scalar;

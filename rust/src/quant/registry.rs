@@ -1,0 +1,74 @@
+//! The quant-method registry: the single registration point for
+//! [`QuantMethod`] implementations. Adding a method = implementing the trait
+//! in its own module and appending one entry to [`METHODS`]; everything else
+//! (CLI parsing, quantize pipeline, artifact io, serve-path kernel dispatch,
+//! parity sweeps, benches, `qtip info`) iterates the registry.
+
+use crate::codes::lut::LutMethod;
+use crate::codes::onemad::OneMadMethod;
+use crate::codes::threeinst::ThreeInstMethod;
+use crate::codes::vptq::VptqMethod;
+use crate::codes::HybMethod;
+use crate::quant::method::QuantMethod;
+
+/// Every registered quantization method, in presentation order.
+pub static METHODS: [&dyn QuantMethod; 5] =
+    [&OneMadMethod, &ThreeInstMethod, &HybMethod, &LutMethod, &VptqMethod];
+
+/// All registered methods.
+pub fn all() -> &'static [&'static dyn QuantMethod] {
+    &METHODS
+}
+
+/// Look up a method by registry name.
+pub fn get(name: &str) -> Option<&'static dyn QuantMethod> {
+    METHODS.iter().copied().find(|m| m.name() == name)
+}
+
+/// Registered names, in presentation order (error messages, `qtip info`).
+pub fn names() -> Vec<&'static str> {
+    METHODS.iter().map(|m| m.name()).collect()
+}
+
+/// Look up a method by name or panic with the registered spellings — the
+/// CLI-facing counterpart of [`get`] for paths that validated the name
+/// earlier (config parsing rejects unknown codes with a proper error).
+pub fn require(name: &str) -> &'static dyn QuantMethod {
+    get(name).unwrap_or_else(|| {
+        panic!("unknown code '{name}' (registered methods: {})", names().join("|"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_stable() {
+        let names = names();
+        assert!(names.contains(&"1mad"));
+        assert!(names.contains(&"3inst"));
+        assert!(names.contains(&"hyb"));
+        assert!(names.contains(&"lut"));
+        assert!(names.contains(&"vptq"));
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate registry names");
+    }
+
+    #[test]
+    fn lookup_roundtrips_and_require_panics_with_names() {
+        for m in all() {
+            assert_eq!(get(m.name()).unwrap().name(), m.name());
+            let info = m.info();
+            assert_eq!(info.name, m.name());
+            assert!(info.v_options.contains(&m.preferred_v()));
+            assert!(info.bits_min <= info.bits_max);
+        }
+        assert!(get("nope").is_none());
+        let err = std::panic::catch_unwind(|| require("nope")).unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("unknown code 'nope'") && msg.contains("vptq"), "{msg}");
+    }
+}

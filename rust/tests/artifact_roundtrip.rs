@@ -1,7 +1,8 @@
-//! Quantized-artifact persistence e2e: for every `CodeSpec` variant, a model
-//! saved with `io::save_quantized_model` and cold-start loaded again must be
-//! **bit-identical** on the serving paths — per-layer `matvec`/`matvec_multi`
-//! and full `decode_step` logits — and corrupted artifacts must fail loudly.
+//! Quantized-artifact persistence e2e: for every registered quant method, a
+//! model saved with `io::save_quantized_model` and cold-start loaded again
+//! must be **bit-identical** on the serving paths — per-layer
+//! `matvec`/`matvec_multi` and full `decode_step` logits — and corrupted
+//! artifacts must fail loudly.
 
 use std::path::PathBuf;
 
@@ -37,7 +38,7 @@ fn tiny_quantized(code: &str, v: u32, seed: u64) -> Transformer {
         code: code.into(),
         seed,
     };
-    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
     model
 }
 
@@ -79,7 +80,12 @@ fn report_of(model: &Transformer) -> qtip::coordinator::QuantizeReport {
 #[test]
 fn roundtrip_is_bit_identical_for_every_code_variant() {
     let dir = tmp_dir("codes");
-    for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1), ("lut", 2)] {
+    // Every registered method at its preferred V, plus lut's V=2 mode (the
+    // one method whose V is configurable).
+    let mut cases: Vec<(&str, u32)> =
+        qtip::quant::registry::all().iter().map(|m| (m.name(), m.preferred_v())).collect();
+    cases.push(("lut", 2));
+    for (code, v) in cases {
         let tag = format!("{code}-v{v}");
         let model = tiny_quantized(code, v, 0xA5A5 + v as u64);
         let report = report_of(&model);
@@ -158,14 +164,15 @@ fn damaged_artifacts_error_instead_of_panicking() {
     let err = load_quantized_model(&dir, "dmg").unwrap_err().to_string();
     assert!(err.contains("checksum mismatch"), "{err}");
 
-    // Restore the blob but break the version.
+    // Restore the blob but break the version (99 is above this build's
+    // supported range; v1 artifacts still load via back-compat).
     std::fs::write(&blob_path, &blob).unwrap();
     let mpath = dir.join("quant_dmg.json");
     let text = std::fs::read_to_string(&mpath).unwrap();
-    std::fs::write(&mpath, text.replace("\"format_version\":1", "\"format_version\":2"))
+    std::fs::write(&mpath, text.replace("\"format_version\":2", "\"format_version\":99"))
         .unwrap();
     let err = load_quantized_model(&dir, "dmg").unwrap_err().to_string();
-    assert!(err.contains("format version 2"), "{err}");
+    assert!(err.contains("format version 99"), "{err}");
 
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,10 +1,13 @@
 //! Lane-kernel parity: the lane-blocked decode kernels (§Perf optimization
 //! #2) must be **bit-identical** to the scalar reference kernels for every
-//! `CodeSpec` variant, every entry point (single-column, batch-fused,
+//! registered quant method, every entry point (single-column, batch-fused,
 //! pooled), and every pool width — including lane-boundary shapes where
 //! `tiles_r · tx` is not a multiple of `LANES`, which exercise the padded
 //! remainder blocks. A cold-started artifact served under `scalar` and under
 //! the default (`auto` → `lanes`) must emit identical tokens.
+//!
+//! The sweeps iterate `quant::registry` rather than a hardcoded method list,
+//! so a newly registered method is parity-checked with zero edits here.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -13,7 +16,8 @@ use qtip::coordinator::{quantize_model_qtip, GenRequest, ServerConfig, ServerHan
 use qtip::hessian::collect_hessians;
 use qtip::model::{ModelConfig, Transformer, WeightStore};
 use qtip::quant::{
-    kernel, quantize_matrix_qtip, CodeSpec, KernelKind, LANES, QtipConfig, QuantizedMatrix,
+    kernel, quantize_matrix_qtip, registry, CodeSpec, KernelKind, LANES, QtipConfig,
+    QuantizedMatrix,
 };
 use qtip::trellis::Trellis;
 use qtip::util::matrix::Matrix;
@@ -22,16 +26,16 @@ use qtip::util::threadpool::ExecPool;
 
 const WIDTHS: [usize; 3] = [1, 2, 4];
 
-/// All 4 CodeSpec variants on an L=12 trellis (both v1 and v2 decode paths).
+/// Every registered method's synthetic spec on an L=12 trellis (covers both
+/// the V=1 and V=2 decode paths).
 fn synthetic_specs() -> Vec<(&'static str, Trellis, CodeSpec)> {
-    let hyb = qtip::codes::HybridCode::train(12, 2, 9, 5);
-    let lut = qtip::codes::PureLutCode::new(12, 1, 6);
-    vec![
-        ("1mad", Trellis::new(12, 2, 1), CodeSpec::OneMad),
-        ("3inst", Trellis::new(12, 2, 1), CodeSpec::ThreeInst),
-        ("hyb", Trellis::new(12, 2, 2), CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() }),
-        ("lut", Trellis::new(12, 2, 1), CodeSpec::Lut { v: 1, table: lut.table.clone() }),
-    ]
+    registry::all()
+        .iter()
+        .map(|m| {
+            let (trellis, spec) = m.synthetic_entry(12, 2, 5);
+            (m.name(), trellis, spec)
+        })
+        .collect()
 }
 
 fn batch(rng: &mut Rng, b: usize, cols: usize) -> Matrix {
@@ -133,11 +137,12 @@ fn quantized_rht_sandwich_is_kernel_invariant() {
             *h.at_mut(i, j) = s / 32.0;
         }
     }
-    for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1)] {
+    for m in registry::all() {
+        let code = m.name();
         let cfg = QtipConfig {
             l: 10,
             k: 2,
-            v,
+            v: m.preferred_v(),
             tx: 4,
             ty: 8,
             code: code.into(),
@@ -165,7 +170,8 @@ fn tiny_quantized_model() -> (Transformer, qtip::coordinator::QuantizeReport) {
     let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
     let hs = collect_hessians(&model, &seqs);
     let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 23 };
-    let report = quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    let report =
+        quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
     (model, report)
 }
 
@@ -180,6 +186,7 @@ fn serve_tokens(model: Transformer, expect_kernel: &str) -> Vec<Vec<u16>> {
                 temperature: 0.8,
                 top_k: 16,
                 seed: 300 + i,
+                model: String::new(),
             })
         })
         .collect();

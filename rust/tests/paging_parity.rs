@@ -2,9 +2,9 @@
 //! **different steps** with **heterogeneous prompt lengths**, decoding
 //! through the shared block arena, must produce token streams bit-identical
 //! to generating each sequence alone on the contiguous reference cache — for
-//! every `CodeSpec` variant, both decode-kernel families, and pool widths
-//! 1/2/4. A deliberately tiny block size (4 positions) forces every sequence
-//! across multiple block-table boundaries.
+//! every registered quant method, both decode-kernel families, and pool
+//! widths 1/2/4. A deliberately tiny block size (4 positions) forces every
+//! sequence across multiple block-table boundaries.
 
 use std::collections::VecDeque;
 
@@ -13,14 +13,17 @@ use qtip::hessian::collect_hessians;
 use qtip::model::{
     DecodeScratch, KvArena, KvCache, KvSeq, ModelConfig, Transformer, WeightStore,
 };
-use qtip::quant::{KernelKind, QtipConfig};
+use qtip::quant::{registry, KernelKind, QtipConfig};
 use qtip::util::threadpool::ExecPool;
 
 const WIDTHS: [usize; 3] = [1, 2, 4];
 const BLOCK: usize = 4;
 
-/// All 4 CodeSpec variants as (code name, V) quantizer configs.
-const CODES: [(&str, u32); 4] = [("1mad", 1), ("3inst", 1), ("hyb", 2), ("lut", 1)];
+/// Every registered method as a (code name, V) quantizer config — iterating
+/// the registry keeps this sweep complete as methods are added.
+fn codes() -> Vec<(&'static str, u32)> {
+    registry::all().iter().map(|m| (m.name(), m.preferred_v())).collect()
+}
 
 fn quantized_tiny(code: &str, v: u32) -> Transformer {
     let mut cfg = ModelConfig::nano();
@@ -33,7 +36,7 @@ fn quantized_tiny(code: &str, v: u32) -> Transformer {
     let seqs = vec![(0..48u16).collect::<Vec<_>>(), (60..108u16).collect::<Vec<_>>()];
     let hs = collect_hessians(&model, &seqs);
     let qcfg = QtipConfig { l: 10, k: 2, v, tx: 8, ty: 8, code: code.into(), seed: 5 };
-    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
     model
 }
 
@@ -171,7 +174,7 @@ fn paged_streams(model: &Transformer, pool: &ExecPool) -> Vec<Vec<u16>> {
 
 #[test]
 fn continuous_paged_batching_matches_solo_for_all_codes_kernels_widths() {
-    for (code, v) in CODES {
+    for (code, v) in codes() {
         let mut model = quantized_tiny(code, v);
         for kernel in [KernelKind::Scalar, KernelKind::Lanes] {
             model.set_decode_kernel(kernel);
@@ -194,8 +197,8 @@ fn continuous_paged_batching_matches_solo_for_all_codes_kernels_widths() {
 #[test]
 fn paged_single_round_logits_match_contiguous_for_all_codes() {
     // Direct logits-level parity (not just argmax tokens): one fused batch
-    // round over the arena vs the contiguous caches, per CodeSpec.
-    for (code, v) in CODES {
+    // round over the arena vs the contiguous caches, per registered method.
+    for (code, v) in codes() {
         let model = quantized_tiny(code, v);
         let pool = ExecPool::new(2);
         let mut scratch = DecodeScratch::new(&model.cfg);

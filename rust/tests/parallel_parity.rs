@@ -2,15 +2,15 @@
 //!
 //! The `ExecPool` kernels stripe disjoint row-tile bands across workers but
 //! never reorder any per-row accumulation, so every parallel path must be
-//! **bit-identical** to its sequential counterpart — across all 4 `CodeSpec`
-//! variants and pool widths 1, 2, 4. A serving determinism test under a
+//! **bit-identical** to its sequential counterpart — across every registered
+//! quant method and pool widths 1, 2, 4. A serving determinism test under a
 //! multi-worker pool lives in `coordinator::server::tests`.
 
 use qtip::coordinator::quantize_model_qtip;
 use qtip::hessian::collect_hessians;
 use qtip::model::transformer::DecodeScratch;
 use qtip::model::{KvCache, ModelConfig, Transformer, WeightStore};
-use qtip::quant::{CodeSpec, QtipConfig, QuantizedMatrix};
+use qtip::quant::{registry, CodeSpec, QtipConfig, QuantizedMatrix};
 use qtip::trellis::Trellis;
 use qtip::util::matrix::Matrix;
 use qtip::util::rng::Rng;
@@ -19,14 +19,13 @@ use qtip::util::threadpool::ExecPool;
 const WIDTHS: [usize; 3] = [1, 2, 4];
 
 fn synthetic_specs() -> Vec<(&'static str, Trellis, CodeSpec)> {
-    let hyb = qtip::codes::HybridCode::train(12, 2, 9, 5);
-    let lut = qtip::codes::PureLutCode::new(12, 1, 6);
-    vec![
-        ("1mad", Trellis::new(12, 2, 1), CodeSpec::OneMad),
-        ("3inst", Trellis::new(12, 2, 1), CodeSpec::ThreeInst),
-        ("hyb", Trellis::new(12, 2, 2), CodeSpec::Hyb { q: 9, v: 2, lut: hyb.lut.clone() }),
-        ("lut", Trellis::new(12, 2, 1), CodeSpec::Lut { v: 1, table: lut.table.clone() }),
-    ]
+    registry::all()
+        .iter()
+        .map(|m| {
+            let (trellis, spec) = m.synthetic_entry(12, 2, 5);
+            (m.name(), trellis, spec)
+        })
+        .collect()
 }
 
 #[test]
@@ -88,7 +87,7 @@ fn tiny_quantized(code: &str, v: u32) -> Transformer {
     let seqs = vec![vec![1u16, 5, 9, 13, 17, 21, 25, 29]];
     let hs = collect_hessians(&model, &seqs);
     let qcfg = QtipConfig { l: 10, k: 2, v, tx: 8, ty: 8, code: code.into(), seed: 77 };
-    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
     model
 }
 
@@ -96,9 +95,9 @@ fn tiny_quantized(code: &str, v: u32) -> Transformer {
 fn decode_logits_bit_identical_across_widths_all_codes() {
     // End-to-end: full quantized decode steps through the scratch arena must
     // produce logits bit-identical to the sequential `decode_step`, for every
-    // CodeSpec variant and every pool width.
+    // registered method and every pool width.
     let tokens = [10u16, 200, 37, 99];
-    for (code, v) in [("1mad", 1u32), ("3inst", 1), ("hyb", 2), ("lut", 1)] {
+    for (code, v) in registry::all().iter().map(|m| (m.name(), m.preferred_v())) {
         let model = tiny_quantized(code, v);
         let mut ref_cache = KvCache::new(&model.cfg);
         let reference: Vec<Vec<f32>> =

@@ -26,7 +26,7 @@ fn quantized_tiny() -> Arc<Transformer> {
     ];
     let hs = collect_hessians(&model, &seqs);
     let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 2 };
-    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {});
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
     // NOTE: no ensure_caches() — the server path must work through the fused
     // decode matvec alone.
     Arc::new(model)
@@ -40,6 +40,7 @@ fn req(id: u64, n: usize) -> GenRequest {
         temperature: 0.0,
         top_k: 1,
         seed: id,
+        model: String::new(),
     }
 }
 
@@ -94,6 +95,7 @@ fn fused_batch_is_token_identical_across_heterogeneous_lengths() {
             temperature: 0.0,
             top_k: 1,
             seed: i,
+            model: String::new(),
         })
         .collect();
 
@@ -165,6 +167,7 @@ fn paged_and_contig_schedulers_serve_identical_tokens_on_quantized_model() {
                     temperature: 0.0,
                     top_k: 1,
                     seed: i,
+                    model: String::new(),
                 })
             })
             .collect();
@@ -199,6 +202,7 @@ fn mixed_length_continuous_admission_preserves_streams_and_admits_more() {
             temperature: 0.0,
             top_k: 1,
             seed: i,
+            model: String::new(),
         })
         .collect();
     let run = |layout: KvLayout| {

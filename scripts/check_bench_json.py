@@ -25,9 +25,13 @@ import json
 import sys
 
 SCHEMA_VERSION = 1
+# The quant-method registry (mirrors rust/src/quant/registry.rs): benches key
+# per-method rows by registry name, one row set per registered method. A
+# lanes_speedup row with a code outside this list is schema drift.
+REGISTRY_CODES = ("1mad", "3inst", "hyb", "lut", "vptq")
 # Codes whose lanes_speedup rows the --min-lanes-speedup gate applies to:
-# the pure-computed codes vectorize fully; HYB/LUT are gather-bound and
-# only schema-checked.
+# the pure-computed codes vectorize fully; the table-driven methods (HYB,
+# LUT, VPTQ) are gather-bound and only schema-checked.
 GATED_CODES = ("1mad", "3inst")
 
 
@@ -41,9 +45,17 @@ def check_speedup_gate(path: str, doc: dict, min_speedup: float) -> None:
     if not rows:
         return
     gated = 0
+    ungated = []
     for row in rows:
         code = row["params"].get("code", "?")
+        if code not in REGISTRY_CODES:
+            fail(
+                f"{path}: lanes_speedup row for unknown code '{code}' — not a "
+                f"registry name {REGISTRY_CODES}; update the registry mirror if "
+                f"a method was added"
+            )
         if code not in GATED_CODES:
+            ungated.append(code)
             continue
         gated += 1
         if row["value"] < min_speedup:
@@ -53,7 +65,10 @@ def check_speedup_gate(path: str, doc: dict, min_speedup: float) -> None:
             )
     if gated != len(GATED_CODES):
         fail(f"{path}: expected lanes_speedup rows for {GATED_CODES}, found {gated}")
-    print(f"{path}: lanes_speedup gate ok (>= {min_speedup:.2f}x for {GATED_CODES})")
+    print(
+        f"{path}: lanes_speedup gate ok (>= {min_speedup:.2f}x for {GATED_CODES}; "
+        f"schema-checked only: {sorted(set(ungated))})"
+    )
 
 
 def check_paging_gate(path: str, doc: dict) -> None:

@@ -1,0 +1,246 @@
+#!/usr/bin/env python3
+"""End-to-end smoke for the HTTP/SSE front door and multi-model routing.
+
+Usage: http_smoke.py <qtip-binary> <artifact> [<artifact2>]
+
+Phase 1 (always): serve <artifact> with both frontends bound to ephemeral
+ports and assert
+  * GET /health and GET /v1/models answer, and the models list has a default;
+  * POST /v1/generate (non-stream) returns 200 with a tokens array;
+  * the same request over the raw newline-JSON TCP frontend returns the
+    *identical* token ids (the two front doors share one batcher — token
+    parity is the acceptance criterion, not mere liveness);
+  * POST /v1/generate with "stream": true returns text/event-stream whose
+    per-token events reassemble to exactly the unary response;
+  * an unknown route 404s with a structured JSON error.
+
+Phase 2 (with <artifact2>): serve both artifacts as named lanes and assert
+  * /v1/models lists both lanes;
+  * "model": <lane> routes to each lane (200 + tokens);
+  * an unknown "model" gets a structured 404 whose error names the lanes;
+  * the default (no "model") equals an explicit route to the first lane.
+
+Everything is stdlib-only; the server is shut down with SIGINT and must exit
+cleanly (the Ctrl-C drain path is part of the smoke).
+"""
+
+import json
+import re
+import signal
+import socket
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+
+TIMEOUT = 60  # seconds for any single wait
+
+
+def fail(msg, proc=None):
+    print(f"http_smoke: FAIL: {msg}", file=sys.stderr)
+    if proc is not None:
+        proc.kill()
+        out, _ = proc.communicate(timeout=10)
+        print("---- server output ----", file=sys.stderr)
+        print(out, file=sys.stderr)
+    sys.exit(1)
+
+
+def start_server(qtip, artifacts):
+    cmd = [qtip, "serve"]
+    for a in artifacts:
+        cmd += ["--artifact", a]
+    cmd += ["--tcp", "127.0.0.1:0", "--http", "127.0.0.1:0", "--threads", "2"]
+    proc = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True
+    )
+    # The serve banner prints one "listening on" line per frontend with the
+    # resolved (ephemeral) port; models line follows both.
+    tcp_addr = http_addr = None
+    deadline = time.monotonic() + TIMEOUT
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            fail("server exited before binding its frontends", proc)
+        m = re.search(r"listening on tcp://(\S+)", line)
+        if m:
+            tcp_addr = m.group(1)
+        m = re.search(r"listening on http://(\S+) ", line)
+        if m:
+            http_addr = m.group(1)
+        if "models:" in line and tcp_addr and http_addr:
+            return proc, tcp_addr, http_addr
+    fail("timed out waiting for the serve banner", proc)
+
+
+def stop_server(proc):
+    proc.send_signal(signal.SIGINT)
+    try:
+        out, _ = proc.communicate(timeout=TIMEOUT)
+    except subprocess.TimeoutExpired:
+        fail("server did not drain and exit after SIGINT", proc)
+    if proc.returncode != 0:
+        print("---- server output ----", file=sys.stderr)
+        print(out, file=sys.stderr)
+        fail(f"server exited with status {proc.returncode}")
+    return out
+
+
+def http_req(http_addr, method, path, body=None):
+    """Returns (status, parsed-JSON body or raw text, content-type)."""
+    url = f"http://{http_addr}{path}"
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(url, data=data, method=method)
+    if data is not None:
+        req.add_header("Content-Type", "application/json")
+    try:
+        with urllib.request.urlopen(req, timeout=TIMEOUT) as resp:
+            status, raw = resp.status, resp.read()
+            ctype = resp.headers.get("Content-Type", "")
+    except urllib.error.HTTPError as e:
+        status, raw = e.code, e.read()
+        ctype = e.headers.get("Content-Type", "")
+    text = raw.decode("utf-8", "replace")
+    if ctype.startswith("application/json"):
+        return status, json.loads(text), ctype
+    return status, text, ctype
+
+
+def sse_events(http_addr, body):
+    """POST a streaming generate and return the parsed `data:` events."""
+    status, text, ctype = http_req(
+        http_addr, "POST", "/v1/generate", {**body, "stream": True}
+    )
+    if status != 200:
+        fail(f"SSE request got status {status}: {text}")
+    if not ctype.startswith("text/event-stream"):
+        fail(f"SSE response Content-Type is {ctype!r}")
+    events = []
+    for block in text.split("\n\n"):
+        for line in block.splitlines():
+            if line.startswith("data: "):
+                events.append(json.loads(line[len("data: "):]))
+    if not events:
+        fail("SSE stream carried no events")
+    return events
+
+
+def tcp_generate(tcp_addr, body):
+    host, port = tcp_addr.rsplit(":", 1)
+    with socket.create_connection((host, int(port)), timeout=TIMEOUT) as s:
+        s.sendall((json.dumps(body) + "\n").encode())
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = s.recv(4096)
+            if not chunk:
+                break
+            buf += chunk
+    return json.loads(buf.decode())
+
+
+GEN = {"prompt": "the quick brown fox", "max_new_tokens": 12, "temperature": 0.7,
+       "top_k": 40, "seed": 1234}
+
+
+def phase_single(qtip, artifact):
+    proc, tcp_addr, http_addr = start_server(qtip, [artifact])
+    try:
+        status, health, _ = http_req(http_addr, "GET", "/health")
+        if status != 200 or health.get("status") != "ok":
+            fail(f"/health: {status} {health}", proc)
+        status, models, _ = http_req(http_addr, "GET", "/v1/models")
+        if status != 200 or not models.get("models") or not models.get("default"):
+            fail(f"/v1/models: {status} {models}", proc)
+
+        # The terminal response object carries `text` (the generated string)
+        # and `tokens` (a count) — `text` is the parity-checked payload.
+        status, unary, _ = http_req(http_addr, "POST", "/v1/generate", GEN)
+        if status != 200 or unary.get("error") or not unary.get("text"):
+            fail(f"unary generate: {status} {unary}", proc)
+
+        over_tcp = tcp_generate(tcp_addr, GEN)
+        if over_tcp.get("text") != unary["text"]:
+            fail(
+                f"HTTP and TCP front doors disagree: "
+                f"{unary['text']!r} vs {over_tcp.get('text')!r}",
+                proc,
+            )
+
+        events = sse_events(http_addr, GEN)
+        terminal = events[-1]
+        if not terminal.get("done"):
+            fail(f"last SSE event is not terminal: {terminal}", proc)
+        if terminal.get("error"):
+            fail(f"SSE stream ended in error: {terminal}", proc)
+        streamed = "".join(e.get("text", "") for e in events[:-1])
+        if streamed != unary["text"] or terminal.get("text") != unary["text"]:
+            fail(
+                f"SSE text diverges from unary: {streamed!r} / "
+                f"{terminal.get('text')!r} vs {unary['text']!r}",
+                proc,
+            )
+        if len(events) - 1 != unary["tokens"]:
+            fail(
+                f"SSE carried {len(events) - 1} token events for a "
+                f"{unary['tokens']}-token response",
+                proc,
+            )
+
+        status, err, _ = http_req(http_addr, "GET", "/v1/nope")
+        if status != 404 or "error" not in err:
+            fail(f"unknown route: {status} {err}", proc)
+    except Exception:
+        proc.kill()
+        raise
+    stop_server(proc)
+    print(f"http_smoke: single-model phase ok ({unary['tokens']} tokens, "
+          f"HTTP == TCP == SSE)")
+
+
+def phase_multi(qtip, artifacts):
+    proc, _tcp_addr, http_addr = start_server(qtip, artifacts)
+    try:
+        status, models, _ = http_req(http_addr, "GET", "/v1/models")
+        if status != 200 or sorted(models.get("models", [])) != sorted(artifacts):
+            fail(f"/v1/models with two lanes: {status} {models}", proc)
+
+        per_lane = {}
+        for lane in artifacts:
+            status, resp, _ = http_req(
+                http_addr, "POST", "/v1/generate", {**GEN, "model": lane}
+            )
+            if status != 200 or resp.get("error") or not resp.get("text"):
+                fail(f"lane '{lane}' generate: {status} {resp}", proc)
+            per_lane[lane] = resp["text"]
+
+        status, resp, _ = http_req(http_addr, "POST", "/v1/generate", GEN)
+        if status != 200 or resp.get("text") != per_lane[artifacts[0]]:
+            fail(f"default route != first lane: {status} {resp}", proc)
+
+        status, rej, _ = http_req(
+            http_addr, "POST", "/v1/generate", {**GEN, "model": "no-such-lane"}
+        )
+        err = rej.get("error") or ""
+        if status != 404 or "unknown model" not in err:
+            fail(f"unknown model must 404 with a structured error: {status} {rej}", proc)
+        for lane in artifacts:
+            if lane not in err:
+                fail(f"rejection error must name lane '{lane}': {err}", proc)
+    except Exception:
+        proc.kill()
+        raise
+    stop_server(proc)
+    print(f"http_smoke: multi-model phase ok (lanes {artifacts}, unknown lane 404s)")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    qtip_bin = sys.argv[1]
+    arts = sys.argv[2:]
+    phase_single(qtip_bin, arts[0])
+    if len(arts) > 1:
+        phase_multi(qtip_bin, arts[:2])
+    print("http_smoke: all phases passed")
