@@ -33,7 +33,10 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use crate::model::kv::{resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq};
+use crate::model::kv::{
+    chain_hash, resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, PrefixIndex,
+    PREFIX_HASH_SEED,
+};
 use crate::model::transformer::{DecodeScratch, Transformer};
 use crate::model::ByteTokenizer;
 use crate::util::rng::Rng;
@@ -230,6 +233,21 @@ struct Active {
     text_flushed: usize,
     /// Streaming client vanished: retire silently and free KV immediately.
     dropped: bool,
+    /// Token ids whose K/V rows this sequence's positions hold (full prompt,
+    /// then each accepted generation) — the registration source for the
+    /// prefix index: position `p`'s row is the K/V of `context[p]`.
+    context: Vec<u16>,
+    /// Chain hash over the `registered` leading blocks (the `parent` for the
+    /// next registration); starts at [`PREFIX_HASH_SEED`], advanced past
+    /// admission-aliased blocks.
+    chain: u64,
+    /// Leading blocks already registered in (or aliased out of) the prefix
+    /// index.
+    registered: usize,
+    /// Set by the capacity phase when this sequence waits one round for a
+    /// finisher's blocks instead of forcing an eviction; cleared (and the
+    /// sequence skipped) by the next round.
+    stalled: bool,
 }
 
 impl Active {
@@ -276,6 +294,13 @@ pub struct ServerConfig {
     /// Positions per KV block for the paged layout (`0` = auto:
     /// `QTIP_KV_BLOCK` env var, else 32). Ignored by the contiguous layout.
     pub kv_block: usize,
+    /// Prefix sharing (paged layout only): keep a per-lane hashed-block
+    /// [`PrefixIndex`] and alias a new sequence's leading blocks onto
+    /// resident blocks covering the same token prefix instead of
+    /// re-prefilling them, with copy-on-write on first divergence. Outputs
+    /// are bit-identical with sharing on or off; off exists for A/B
+    /// benchmarking and as a hedge.
+    pub prefix_share: bool,
 }
 
 impl Default for ServerConfig {
@@ -286,6 +311,7 @@ impl Default for ServerConfig {
             threads: 0,
             kv_layout: KvLayout::Auto,
             kv_block: 0,
+            prefix_share: true,
         }
     }
 }
@@ -314,6 +340,16 @@ pub struct ServerStats {
     /// Sequences preempted-by-eviction under block pressure (re-queued and
     /// restarted; their output is unaffected).
     pub evictions: usize,
+    /// Rounds a blocked sequence waited for a same-round finisher's blocks
+    /// instead of evicting a mid-flight victim.
+    pub stalls_instead_of_evictions: usize,
+    /// Admissions that aliased at least one block out of the prefix index.
+    pub prefix_hits: usize,
+    /// Blocks aliased at admission instead of re-prefilled (each one is a
+    /// whole block of prompt forward passes skipped).
+    pub blocks_shared: usize,
+    /// Shared blocks privatized by copy-on-write before a write landed.
+    pub cow_copies: usize,
     pub peak_kv_bytes: usize,
     /// Paged arena geometry: total blocks and the most ever leased at once
     /// (0 when serving the contiguous layout).
@@ -431,8 +467,17 @@ impl ServerHandle {
 
 /// The KV backend the loop schedules over.
 enum KvBackend {
-    Contig { free: Vec<KvCache>, per_seq_bytes: usize },
-    Paged { arena: KvArena, block_bytes: usize },
+    Contig {
+        free: Vec<KvCache>,
+        per_seq_bytes: usize,
+    },
+    Paged {
+        arena: KvArena,
+        block_bytes: usize,
+        /// Hashed-block prefix index (None = sharing disabled). Per lane:
+        /// token ids only identify content within one tokenizer/model pair.
+        prefix: Option<PrefixIndex>,
+    },
 }
 
 /// Return a retired/evicted/cancelled sequence's KV residency to its backend.
@@ -505,7 +550,11 @@ impl Lane {
                 let n_blocks = by_budget.min(by_batch);
                 stats.kv_block_positions = block;
                 stats.kv_blocks_total += n_blocks;
-                KvBackend::Paged { arena: KvArena::new(&model.cfg, block, n_blocks), block_bytes }
+                KvBackend::Paged {
+                    arena: KvArena::new(&model.cfg, block, n_blocks),
+                    block_bytes,
+                    prefix: cfg.prefix_share.then(PrefixIndex::new),
+                }
             }
         };
         let scratch = DecodeScratch::new(&model.cfg);
@@ -580,9 +629,18 @@ impl Lane {
         }
     }
 
-    /// Admission. Paged: token-granular — a request joins as soon as the
-    /// free list covers its *prompt* (leased here so concurrent admissions
-    /// never double-count a block); decode blocks are leased on demand.
+    /// Admission. Paged: token-granular — a request joins as soon as free
+    /// (or index-reclaimable) blocks cover the *unshared* part of its prompt
+    /// (acquired here so concurrent admissions never double-count a block);
+    /// decode blocks are acquired on demand. With prefix sharing on, the
+    /// prompt's leading tokens are first matched against the lane's
+    /// [`PrefixIndex`]: every matched full block is aliased (refcount + 1)
+    /// instead of re-prefilled, and the sequence's cursor starts past the
+    /// shared prefix — prefill work is O(unique prompt tokens). The position
+    /// of the **last** prompt token is never aliased (its forward pass
+    /// produces the logits the first sample draws from), so a fully-matched
+    /// prompt starts one position back inside a shared block and the first
+    /// write copy-on-writes that block.
     /// Contiguous: sequence-granular — a whole max_seq cache must fit.
     fn admit(&mut self, cfg: &ServerConfig, tok: &ByteTokenizer, stats: &mut ServerStats) {
         let max_batch = cfg.max_batch.max(1);
@@ -590,6 +648,23 @@ impl Lane {
             if self.active.len() >= max_batch || self.waiting.is_empty() {
                 break;
             }
+            // One source of truth for truncation: the same effective_prompt_len
+            // that sizes the block acquisition and the rejection verdict.
+            let plen = effective_prompt_len(&self.waiting.front().unwrap().req, self.max_seq);
+            let mut ptoks: Vec<u16> = tok
+                .encode(&self.waiting.front().unwrap().req.prompt)
+                .into_iter()
+                .take(plen)
+                .collect();
+            if ptoks.is_empty() {
+                // An empty prompt must still produce real logits before the
+                // first sample — never a fake 1-element "vocab".
+                ptoks.push(BOS_FALLBACK);
+            }
+            debug_assert_eq!(ptoks.len(), plen, "block sizing diverged from prompt");
+            let mut shared_len = 0usize;
+            let mut chain = PREFIX_HASH_SEED;
+            let mut registered = 0usize;
             let kv = match &mut self.backend {
                 KvBackend::Contig { free, per_seq_bytes } => {
                     if (self.active.len() + 1) * *per_seq_bytes > cfg.kv_budget_bytes {
@@ -601,31 +676,59 @@ impl Lane {
                         stats.peak_kv_bytes.max((self.active.len() + 1) * *per_seq_bytes);
                     SeqKv::Contig(cache)
                 }
-                KvBackend::Paged { arena, .. } => {
-                    let plen =
-                        effective_prompt_len(&self.waiting.front().unwrap().req, self.max_seq);
-                    if arena.blocks_free() < arena.blocks_for(plen) {
+                KvBackend::Paged { arena, prefix, .. } => {
+                    let bp = arena.block_positions();
+                    let (aliased, parent) = match prefix.as_mut() {
+                        Some(idx) => idx.match_chain(&ptoks, bp),
+                        None => (Vec::new(), PREFIX_HASH_SEED),
+                    };
+                    let n_alias = aliased.len();
+                    // The aliased blocks cover n_alias × bp leading positions,
+                    // but the cursor starts no later than plen - 1: the last
+                    // prompt token is always recomputed for its logits. A
+                    // fully-covered prompt therefore re-enters its final
+                    // shared block, and that recompute-write (same token
+                    // prefix ⇒ bit-identical row) is the copy-on-write case —
+                    // reserve the free block it will need.
+                    shared_len = (n_alias * bp).min(plen - 1);
+                    chain = parent;
+                    registered = n_alias;
+                    let fresh = arena.blocks_for(plen) - n_alias;
+                    let cow_reserve = usize::from(n_alias * bp >= plen);
+                    // Alias first (refcount ≥ 2 shields these blocks from the
+                    // reclaim below), then turn index-only LRU entries back
+                    // into free blocks until the unshared part fits.
+                    let mut seq = KvSeq::new();
+                    for &b in &aliased {
+                        arena.retain(&mut seq, b);
+                    }
+                    if let Some(idx) = prefix.as_mut() {
+                        while arena.blocks_free() < fresh + cow_reserve
+                            && idx.reclaim_one(arena).is_some()
+                        {}
+                    }
+                    if arena.blocks_free() < fresh + cow_reserve {
+                        // Not admittable yet: undo the aliases and keep the
+                        // request queued (admission order is preserved).
+                        arena.release(&mut seq);
                         break;
                     }
-                    let mut seq = KvSeq::new();
                     let ok = arena.ensure(&mut seq, plen);
                     debug_assert!(ok, "admission checked the free list");
+                    seq.len = shared_len;
+                    if n_alias > 0 {
+                        stats.prefix_hits += 1;
+                        stats.blocks_shared += n_alias;
+                    }
                     SeqKv::Paged(seq)
                 }
             };
             let p = self.waiting.pop_front().unwrap();
-            // One source of truth for truncation: the same effective_prompt_len
-            // that sized the admission lease and the rejection verdict.
-            let plen = effective_prompt_len(&p.req, self.max_seq);
-            let mut pending_prompt: VecDeque<u16> =
-                tok.encode(&p.req.prompt).into_iter().take(plen).collect();
-            if pending_prompt.is_empty() {
-                // An empty prompt must still produce real logits before the
-                // first sample — never a fake 1-element "vocab".
-                pending_prompt.push_back(BOS_FALLBACK);
-            }
-            debug_assert_eq!(pending_prompt.len(), plen, "lease sizing diverged from prompt");
-            let prompt_len = pending_prompt.len();
+            // Prompt tokens covered by the shared prefix advance position
+            // without a forward pass: prefill starts at the cursor.
+            let pending_prompt: VecDeque<u16> = ptoks[shared_len..].iter().copied().collect();
+            debug_assert!(!pending_prompt.is_empty(), "the last prompt token is never aliased");
+            let prompt_len = ptoks.len();
             self.active.push(Active {
                 rng: Rng::new(p.req.seed),
                 stream_sent: p.emitted,
@@ -642,18 +745,27 @@ impl Lane {
                 generated: Vec::new(),
                 next_token: None,
                 dropped: false,
+                context: ptoks,
+                chain,
+                registered,
+                stalled: false,
             });
         }
     }
 
-    /// Paged capacity phase: every sequence that will write a position
-    /// this round must hold a block for it. Under pressure the youngest
-    /// sequence is evicted (blocks freed, request re-queued at the front);
-    /// the oldest is never evicted for a younger one, so it always
-    /// completes and the arena always drains.
+    /// Paged capacity phase: every sequence that will write a position this
+    /// round must hold a **writable** block for it —
+    /// [`KvArena::prepare_append`] both acquires capacity and privatizes a
+    /// shared tail block (copy-on-write) before the round's stores. Under
+    /// pressure, relief is tried cheapest-first: reclaim an index-only
+    /// prefix block (cached capacity, not live state), then stall one round
+    /// when a sequence retiring this round is about to free blocks anyway,
+    /// and only then evict the youngest sequence (blocks released, request
+    /// re-queued at the front); the oldest is never evicted for a younger
+    /// one, so it always completes and the arena always drains.
     fn capacity_phase(&mut self, stats: &mut ServerStats) {
         let max_seq = self.max_seq;
-        if let KvBackend::Paged { arena, block_bytes } = &mut self.backend {
+        if let KvBackend::Paged { arena, block_bytes, prefix } = &mut self.backend {
             let mut i = 0;
             while i < self.active.len() {
                 if !self.active[i].will_step(max_seq) {
@@ -667,13 +779,39 @@ impl Lane {
                     let SeqKv::Paged(seq) = &mut a.kv else {
                         unreachable!("paged backend holds paged sequences")
                     };
-                    if arena.ensure(seq, need) {
+                    if let Some(did_cow) = arena.prepare_append(seq, need) {
+                        if did_cow {
+                            stats.cow_copies += 1;
+                        }
+                        break;
+                    }
+                    // Starved. Cheapest relief: evict the LRU prefix-index
+                    // entry nothing else references and retry.
+                    if let Some(idx) = prefix.as_mut() {
+                        if idx.reclaim_one(arena).is_some() {
+                            continue;
+                        }
+                    }
+                    // A sequence retiring this round releases its blocks at
+                    // retirement: stall this sequence one round rather than
+                    // discarding a mid-flight victim's work. Deadlock-free:
+                    // next round the finisher is gone, so a still-starved
+                    // sequence falls through to eviction.
+                    let finisher_pending = self
+                        .active
+                        .iter()
+                        .enumerate()
+                        .any(|(j, s)| j != i && !s.will_step(max_seq));
+                    if finisher_pending {
+                        self.active[i].stalled = true;
+                        stats.stalls_instead_of_evictions += 1;
                         break;
                     }
                     debug_assert!(
                         self.active.len() > 1,
                         "a solo sequence always fits: admission rejects requests whose \
-                         lifetime blocks exceed the whole arena"
+                         lifetime blocks exceed the whole arena and reserves the \
+                         copy-on-write block for a fully-shared prompt"
                     );
                     // Evict the youngest sequence that is still prefilling or
                     // decoding — never one finishing this round, whose blocks
@@ -729,6 +867,12 @@ impl Lane {
         self.step_idx.clear();
         self.step_tokens.clear();
         for (i, a) in self.active.iter_mut().enumerate() {
+            if a.stalled {
+                // Waiting out one round for a finisher's blocks (capacity
+                // phase); neither prefill nor emission advances.
+                a.stalled = false;
+                continue;
+            }
             if let Some(t) = a.pending_prompt.pop_front() {
                 self.step_idx.push(i);
                 self.step_tokens.push(t);
@@ -736,6 +880,7 @@ impl Lane {
             }
             let t = a.next_token.expect("decoding sequence always holds a sampled token");
             a.generated.push(t);
+            a.context.push(t);
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(std::time::Instant::now());
             }
@@ -837,6 +982,32 @@ impl Lane {
                     &mut a.rng,
                 ));
             }
+
+            // Register every block the round just completed in the prefix
+            // index (whole blocks only — a block's hash covers all of its
+            // token ids). The index takes its own reference so the prefix
+            // outlives the sequence; an already-registered logical prefix
+            // (e.g. the privatized copy of a fully-shared prompt block)
+            // dedupes and takes no reference.
+            if let KvBackend::Paged { arena, prefix: Some(idx), .. } = &mut self.backend {
+                let bp = arena.block_positions();
+                for &i in &self.step_idx {
+                    let a = &mut self.active[i];
+                    let SeqKv::Paged(seq) = &a.kv else {
+                        unreachable!("paged backend holds paged sequences")
+                    };
+                    while (a.registered + 1) * bp <= seq.len {
+                        let lo = a.registered * bp;
+                        let toks = &a.context[lo..lo + bp];
+                        let blk = seq.blocks()[a.registered];
+                        if idx.insert(a.chain, toks, blk) {
+                            arena.retain_block(blk);
+                        }
+                        a.chain = chain_hash(a.chain, toks);
+                        a.registered += 1;
+                    }
+                }
+            }
         }
         stats.total_decode_secs += round_start.elapsed().as_secs_f64();
 
@@ -872,20 +1043,27 @@ impl Lane {
             a.sink.send_done(resp);
         }
 
-        // Round boundary: every lease the scheduler knows about lives on an
-        // active sequence (retired/evicted/cancelled tables were just
-        // released), so in debug builds re-verify the arena's partition
-        // invariant — free ⊎ leased = pool, no double-lease — before the next
-        // admission/eviction round can compound a bookkeeping bug into KV
-        // corruption. Release builds skip the O(blocks) walk.
+        // Round boundary: every reference the scheduler knows about lives on
+        // an active sequence's table or in the prefix index
+        // (retired/evicted/cancelled tables were just released), so in debug
+        // builds re-verify the arena's partition invariant —
+        // free ⊎ uniquely-leased ⊎ shared = pool, every refcount equal to
+        // the references held — before the next admission/eviction round can
+        // compound a bookkeeping bug into KV corruption. Release builds skip
+        // the O(blocks) walk.
         if cfg!(debug_assertions) {
-            if let KvBackend::Paged { arena, .. } = &self.backend {
-                arena.assert_partition(self.active.iter().map(|a| match &a.kv {
-                    SeqKv::Paged(s) => s,
-                    SeqKv::Contig(_) => {
-                        unreachable!("paged backend holds paged sequences")
-                    }
-                }));
+            if let KvBackend::Paged { arena, prefix, .. } = &self.backend {
+                let index_blocks: Vec<u32> =
+                    prefix.as_ref().map(|p| p.blocks().collect()).unwrap_or_default();
+                arena.assert_partition_with(
+                    self.active.iter().map(|a| match &a.kv {
+                        SeqKv::Paged(s) => s,
+                        SeqKv::Contig(_) => {
+                            unreachable!("paged backend holds paged sequences")
+                        }
+                    }),
+                    index_blocks,
+                );
             }
         }
     }

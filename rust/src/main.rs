@@ -36,10 +36,12 @@
 //!
 //! `serve` additionally takes `--kv-layout auto|contig|paged` (auto → paged:
 //! the block-arena continuous batcher; contig keeps the sequence-granular
-//! reference scheduler) and `--kv-block N` for the arena geometry (precedence
+//! reference scheduler), `--kv-block N` for the arena geometry (precedence
 //! `--kv-block` > `QTIP_KV_BLOCK` > the artifact manifest's recorded
-//! geometry > 32). Both layouts emit bit-identical tokens — the flags trade
-//! admission capacity, never output.
+//! geometry > 32), and `--no-prefix-share` to disable the paged scheduler's
+//! copy-on-write prefix sharing (on by default). Every combination emits
+//! bit-identical tokens — the flags trade admission capacity and prefill
+//! work, never output.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -405,6 +407,14 @@ fn print_server_stats(stats: &ServerStats) {
             stats.kv_blocks_high_water,
             stats.peak_kv_bytes
         );
+        println!(
+            "  prefix sharing: {} hits, {} blocks aliased, {} cow copies, {} stalls \
+             instead of evictions",
+            stats.prefix_hits,
+            stats.blocks_shared,
+            stats.cow_copies,
+            stats.stalls_instead_of_evictions
+        );
     }
 }
 
@@ -459,6 +469,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.get_usize("threads", 0),
         kv_layout: kv_layout_from_args(args)?,
         kv_block: resolve_kv_block(args.get_usize("kv-block", 0), artifact_kv_block),
+        // Prefix sharing is on by default (bit-identical outputs either way);
+        // --no-prefix-share keeps an A/B escape hatch for benchmarking.
+        prefix_share: !args.has_flag("no-prefix-share"),
     };
     // Network mode: expose the batcher over newline-JSON TCP and/or HTTP+SSE
     // until Ctrl-C, then close the frontends, drain in-flight requests, and

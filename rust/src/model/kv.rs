@@ -7,7 +7,7 @@
 //!   the **reference implementation**: simple, provably correct, and the
 //!   baseline every paged result is parity-tested against.
 //! * [`KvArena`] + [`KvSeq`] — the paged layout. One shared block pool per
-//!   server; sequences lease fixed-size blocks (default
+//!   server; sequences acquire fixed-size blocks (default
 //!   [`DEFAULT_KV_BLOCK`] = 32 positions, all layers' K and V together) on
 //!   demand through a per-sequence block table, so KV memory scales with the
 //!   tokens actually resident instead of `max_seq` per admitted sequence.
@@ -20,27 +20,58 @@
 //! a block table reproduces the contiguous path's logits exactly (see the
 //! parity tests in `transformer.rs` and `tests/paging_parity.rs`).
 //!
+//! ## Prefix sharing
+//!
+//! Blocks are **refcounted**: several sequences' tables may alias the same
+//! physical block, which is how shared-prompt traffic stops paying for its
+//! common prefix twice. The pieces:
+//!
+//! * [`KvArena::acquire`] pops a free block at refcount 1;
+//!   [`KvArena::retain`] aliases an already-resident block onto another
+//!   table; [`KvArena::release`] / [`KvArena::release_block`] decrement and
+//!   free on zero.
+//! * [`PrefixIndex`] maps a **chained hash of full-block token ids**
+//!   ([`chain_hash`], FNV-1a seeded per parent block so position matters) to
+//!   resident blocks. The continuous batcher consults it at admission: a new
+//!   sequence whose leading tokens hash-and-compare equal to registered
+//!   blocks aliases those blocks instead of re-prefilling them. Entries
+//!   store the actual token ids, so a hash collision degrades to a miss,
+//!   never to wrong K/V. The index holds its own reference on every
+//!   registered block, keeping hot prefixes resident after their sequence
+//!   finishes; [`PrefixIndex::reclaim_one`] releases the least-recently-used
+//!   index-only (refcount 1) entry when the scheduler needs blocks back.
+//! * [`KvArena::prepare_append`] is the **copy-on-write hook**: before a
+//!   sequence writes into a block it shares (refcount ≥ 2), the block is
+//!   copied to a private one and swapped into the table. K/V rows depend
+//!   only on the token-id prefix, so an aliased read path and a recomputed
+//!   write of the same position produce bit-identical rows.
+//!
 //! ## Soundness tooling
 //!
 //! The arena is externally synchronized (`&mut self` everywhere — the serve
 //! loop owns it), so its correctness story is protocol-level, not `unsafe`:
-//! every block is either on the free list or on exactly one sequence's table.
-//! Three layers machine-check that claim before refcounted block aliasing
-//! (prefix sharing / copy-on-write) lands on top of it:
+//! every block is either on the free list (refcount 0) or referenced by
+//! exactly `refcount` holders (tables + the prefix index). Three layers
+//! machine-check that claim:
 //!
-//! * debug builds keep a per-block occupancy bitmap and catch double-lease /
-//!   double-release at the faulting call;
-//! * [`KvArena::assert_partition`] checks the full `free ⊎ leased = pool`
-//!   partition; the continuous batcher asserts it at every round boundary
-//!   (debug builds) and the paging-parity tests assert it explicitly;
-//! * the loom lane (`tests/loom.rs`) exhaustively interleaves lease/release
-//!   from concurrent threads through a `util::sync` Mutex and re-checks the
-//!   partition at every join point.
+//! * the per-block refcount is **always on** (not debug-gated): release of a
+//!   refcount-zero block and retain of a free block panic at the faulting
+//!   call instead of surfacing as downstream KV corruption;
+//! * [`KvArena::assert_partition_with`] checks the full
+//!   `free ⊎ uniquely-leased ⊎ shared(refcount ≥ 2) = pool` partition and
+//!   that every refcount equals the number of references actually held; the
+//!   continuous batcher asserts it at every round boundary (debug builds)
+//!   and the paging-parity tests assert it explicitly;
+//! * the loom lane (`tests/loom.rs`) exhaustively interleaves
+//!   acquire/retain/release from concurrent threads through a `util::sync`
+//!   Mutex and re-checks the partition at every join point.
+
+use std::collections::HashMap;
 
 use crate::model::config::ModelConfig;
 use crate::util::matrix::Matrix;
 
-/// Default positions per KV block (tokens per lease).
+/// Default positions per KV block (tokens per acquired block).
 pub const DEFAULT_KV_BLOCK: usize = 32;
 
 /// Resolve the block geometry: `cli` (`--kv-block`, 0 = unset) >
@@ -146,9 +177,12 @@ impl KvCache {
     }
 }
 
-/// A sequence's lease on arena blocks: the block table plus the number of
+/// A sequence's view of arena blocks: the block table plus the number of
 /// valid positions. Created empty; the scheduler grows it via
-/// [`KvArena::ensure`] and returns it via [`KvArena::release`].
+/// [`KvArena::ensure`] / [`KvArena::retain`] and returns it via
+/// [`KvArena::release`]. Entries may be aliased (shared with other tables
+/// and/or the [`PrefixIndex`]) — the arena's refcounts track that, the table
+/// itself is just an ordered list of block ids.
 #[derive(Debug, Default)]
 pub struct KvSeq {
     blocks: Vec<u32>,
@@ -161,32 +195,39 @@ impl KvSeq {
         KvSeq::default()
     }
 
-    /// Blocks currently leased by this sequence.
+    /// Blocks currently on this sequence's table.
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// The block table itself (position `p` lives in
+    /// `blocks()[p / block_positions]`).
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
     }
 }
 
 /// The shared paged KV arena: one flat f32 pool carved into fixed-size
-/// blocks, a free list, and per-block addressing for every layer's K and V
-/// rows. A block holds `block_positions` positions for **all** layers
-/// (`[layer][K rows | V rows]` inside the block), so one lease advances a
-/// sequence by `block_positions` tokens everywhere at once.
+/// blocks, a free list, per-block refcounts, and per-block addressing for
+/// every layer's K and V rows. A block holds `block_positions` positions for
+/// **all** layers (`[layer][K rows | V rows]` inside the block), so one
+/// acquired block advances a sequence by `block_positions` tokens everywhere
+/// at once.
 pub struct KvArena {
     n_layers: usize,
     d_model: usize,
     block_positions: usize,
     n_blocks: usize,
     data: Vec<f32>,
-    /// Free block ids (stack: release pushes, lease pops).
+    /// Free block ids (stack: free-on-zero pushes, acquire pops).
     free: Vec<u32>,
-    /// Most blocks simultaneously leased over the arena's lifetime.
+    /// Most blocks simultaneously resident over the arena's lifetime.
     high_water: usize,
-    /// Debug-only occupancy bitmap: `leased[b]` iff block `b` is currently on
-    /// some sequence's table. Catches double-lease/double-release at the
-    /// faulting call instead of as downstream KV corruption.
-    #[cfg(debug_assertions)]
-    leased: Vec<bool>,
+    /// Per-block reference count: number of block-table entries plus prefix
+    /// index entries holding the block. 0 iff the block is on the free list.
+    /// Always on (not debug-gated) — the sharing protocol's correctness
+    /// hinges on it, and the counts are one `u32` per block.
+    rc: Vec<u32>,
 }
 
 impl KvArena {
@@ -203,8 +244,7 @@ impl KvArena {
             data: vec![0.0; n_blocks * stride],
             free: (0..n_blocks as u32).rev().collect(),
             high_water: 0,
-            #[cfg(debug_assertions)]
-            leased: vec![false; n_blocks],
+            rc: vec![0; n_blocks],
         }
     }
 
@@ -240,7 +280,7 @@ impl KvArena {
         self.n_blocks - self.free.len()
     }
 
-    /// Most blocks simultaneously leased since construction.
+    /// Most blocks simultaneously resident since construction.
     pub fn high_water(&self) -> usize {
         self.high_water
     }
@@ -250,22 +290,31 @@ impl KvArena {
         Self::blocks_for_positions(positions, self.block_positions)
     }
 
-    /// Positions `seq` can hold with its current leases.
+    /// Positions `seq` can hold with its current table.
     pub fn seq_capacity(&self, seq: &KvSeq) -> usize {
         seq.blocks.len() * self.block_positions
     }
 
-    /// Lease one more block onto `seq`'s table. Returns false when the free
-    /// list is empty (the scheduler then evicts or waits).
-    pub fn lease(&mut self, seq: &mut KvSeq) -> bool {
+    /// Current reference count of block `b` (0 = free).
+    pub fn refcount(&self, b: u32) -> u32 {
+        self.rc[b as usize]
+    }
+
+    /// True iff block `b` is aliased by more than one holder — writes must go
+    /// through [`KvArena::prepare_append`] first.
+    pub fn is_shared(&self, b: u32) -> bool {
+        self.rc[b as usize] >= 2
+    }
+
+    /// Acquire one free block onto `seq`'s table at refcount 1. Returns
+    /// false when the free list is empty (the scheduler then reclaims index
+    /// entries, stalls, or evicts).
+    pub fn acquire(&mut self, seq: &mut KvSeq) -> bool {
         match self.free.pop() {
             Some(b) => {
-                #[cfg(debug_assertions)]
-                {
-                    let slot = &mut self.leased[b as usize];
-                    debug_assert!(!*slot, "block {b} double-leased (still marked in use)");
-                    *slot = true;
-                }
+                let rc = &mut self.rc[b as usize];
+                assert_eq!(*rc, 0, "block {b} on the free list with nonzero refcount");
+                *rc = 1;
                 seq.blocks.push(b);
                 self.high_water = self.high_water.max(self.blocks_in_use());
                 true
@@ -274,59 +323,131 @@ impl KvArena {
         }
     }
 
-    /// Lease blocks until `seq` can hold `positions` positions. On failure
-    /// the blocks already leased stay on the table (the scheduler either
+    /// Take one more reference on resident block `b` without putting it on a
+    /// table — the prefix index's references go through here.
+    pub fn retain_block(&mut self, b: u32) {
+        let rc = &mut self.rc[b as usize];
+        assert!(*rc > 0, "block {b} retained while free (refcount zero)");
+        *rc += 1;
+    }
+
+    /// Alias resident block `b` onto `seq`'s table (refcount + 1). The
+    /// admission path uses this to map a new sequence's leading positions
+    /// onto an existing sequence's prefix blocks.
+    pub fn retain(&mut self, seq: &mut KvSeq, b: u32) {
+        self.retain_block(b);
+        seq.blocks.push(b);
+    }
+
+    /// Drop one reference on block `b`; on zero the block returns to the
+    /// free list.
+    pub fn release_block(&mut self, b: u32) {
+        let rc = &mut self.rc[b as usize];
+        assert!(*rc > 0, "block {b} double-released (refcount already zero)");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(b);
+        }
+    }
+
+    /// Acquire blocks until `seq` can hold `positions` positions. On failure
+    /// the blocks already acquired stay on the table (the scheduler either
     /// evicts another sequence and retries, or releases this one).
     pub fn ensure(&mut self, seq: &mut KvSeq, positions: usize) -> bool {
         while self.seq_capacity(seq) < positions {
-            if !self.lease(seq) {
+            if !self.acquire(seq) {
                 return false;
             }
         }
         true
     }
 
-    /// Return every block `seq` holds to the free list and reset it.
-    pub fn release(&mut self, seq: &mut KvSeq) {
-        #[cfg(debug_assertions)]
-        for &b in &seq.blocks {
-            let slot = &mut self.leased[b as usize];
-            debug_assert!(
-                *slot,
-                "block {b} double-released (returned while already on the free list)"
-            );
-            *slot = false;
+    /// Copy-on-write hook: make `seq` writable at its append cursor
+    /// (`seq.len`) and capacious through `positions`.
+    ///
+    /// If the block containing position `seq.len` is shared (refcount ≥ 2 —
+    /// aliased by another table or pinned by the prefix index), it is copied
+    /// into a freshly acquired private block which replaces it on `seq`'s
+    /// table; the shared original keeps its other holders. Then the table is
+    /// grown to hold `positions` positions. Returns `Some(did_cow)` on
+    /// success, `None` when the free list ran dry (already-acquired blocks
+    /// stay on the table, exactly like [`KvArena::ensure`] failure).
+    ///
+    /// Rows the copy carries beyond `seq.len` are the donor's — the appends
+    /// that follow overwrite them before any read, and rows below `seq.len`
+    /// are the shared prefix itself, so the copy is observationally
+    /// identical to having prefilled privately.
+    pub fn prepare_append(&mut self, seq: &mut KvSeq, positions: usize) -> Option<bool> {
+        let mut did_cow = false;
+        let bi = seq.len / self.block_positions;
+        if bi < seq.blocks.len() && self.is_shared(seq.blocks[bi]) {
+            let old = seq.blocks[bi];
+            let fresh = self.free.pop()?;
+            let rc = &mut self.rc[fresh as usize];
+            assert_eq!(*rc, 0, "block {fresh} on the free list with nonzero refcount");
+            *rc = 1;
+            let stride = 2 * self.n_layers * self.block_positions * self.d_model;
+            let src = old as usize * stride;
+            self.data.copy_within(src..src + stride, fresh as usize * stride);
+            seq.blocks[bi] = fresh;
+            self.release_block(old);
+            self.high_water = self.high_water.max(self.blocks_in_use());
+            did_cow = true;
         }
-        self.free.extend(seq.blocks.drain(..));
+        if !self.ensure(seq, positions) {
+            return None;
+        }
+        Some(did_cow)
+    }
+
+    /// Drop `seq`'s reference on every block it holds (free-on-zero) and
+    /// reset it. Blocks aliased elsewhere (other tables, prefix index) stay
+    /// resident.
+    pub fn release(&mut self, seq: &mut KvSeq) {
+        for b in seq.blocks.drain(..) {
+            let rc = &mut self.rc[b as usize];
+            assert!(*rc > 0, "block {b} double-released (refcount already zero)");
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
+            }
+        }
         seq.len = 0;
     }
 
-    /// Invariant checker: given **every** live block table, assert that the
-    /// free list and the leased blocks form an exact partition of the pool —
-    /// no block leaked, none double-leased, none both free and leased, and no
-    /// sequence claiming more positions than its leases hold. O(blocks); the
-    /// continuous batcher calls it at round boundaries in debug builds, and
-    /// the paging-parity tests call it unconditionally. Panics on violation.
-    ///
-    /// Pre-refcounting contract: once copy-on-write prefix sharing lands,
-    /// "exactly one table" relaxes to "refcount many tables" and this checker
-    /// is the place that relaxation must be encoded.
+    /// Invariant checker for the non-sharing configuration: every reference
+    /// comes from a block table. See [`KvArena::assert_partition_with`].
     pub fn assert_partition<'a, I>(&self, tables: I)
     where
         I: IntoIterator<Item = &'a KvSeq>,
     {
-        let mut seen = vec![false; self.n_blocks];
+        self.assert_partition_with(tables, std::iter::empty());
+    }
+
+    /// Invariant checker: given **every** live block table and every block
+    /// the prefix index holds a reference on, assert that
+    /// `free ⊎ uniquely-leased ⊎ shared(refcount ≥ 2)` is an exact partition
+    /// of the pool and that each block's refcount equals the number of
+    /// references actually held — no block leaked, none both free and
+    /// referenced, no count drift, and no sequence claiming more positions
+    /// than its table holds. O(blocks + references); the continuous batcher
+    /// calls it at round boundaries in debug builds, and the paging-parity
+    /// tests call it unconditionally. Panics on violation.
+    pub fn assert_partition_with<'a, I, J>(&self, tables: I, index_blocks: J)
+    where
+        I: IntoIterator<Item = &'a KvSeq>,
+        J: IntoIterator<Item = u32>,
+    {
+        let mut refs = vec![0u32; self.n_blocks];
+        let mut in_free = vec![false; self.n_blocks];
         let mut free_ct = 0usize;
         for &b in &self.free {
             let b = b as usize;
             assert!(b < self.n_blocks, "free list holds out-of-range block {b}");
-            assert!(!seen[b], "block {b} appears twice in the free list");
-            seen[b] = true;
+            assert!(!in_free[b], "block {b} appears twice in the free list");
+            in_free[b] = true;
             free_ct += 1;
-            #[cfg(debug_assertions)]
-            debug_assert!(!self.leased[b], "block {b} is free but marked leased");
         }
-        let mut leased_ct = 0usize;
         for seq in tables {
             assert!(
                 seq.len <= self.seq_capacity(seq),
@@ -338,24 +459,44 @@ impl KvArena {
             for &b in &seq.blocks {
                 let b = b as usize;
                 assert!(b < self.n_blocks, "table holds out-of-range block {b}");
-                assert!(!seen[b], "block {b} is on two tables (or both free and leased)");
-                seen[b] = true;
-                leased_ct += 1;
-                #[cfg(debug_assertions)]
-                debug_assert!(self.leased[b], "block {b} is on a table but marked free");
+                refs[b] += 1;
+            }
+        }
+        for b in index_blocks {
+            let b = b as usize;
+            assert!(b < self.n_blocks, "prefix index holds out-of-range block {b}");
+            refs[b] += 1;
+        }
+        let mut unique_ct = 0usize;
+        let mut shared_ct = 0usize;
+        for b in 0..self.n_blocks {
+            assert_eq!(
+                self.rc[b], refs[b],
+                "block {b} refcount {} disagrees with the {} references actually held \
+                 (a block table or index reference is missing from the checked set, \
+                 or a count drifted)",
+                self.rc[b], refs[b]
+            );
+            if in_free[b] {
+                assert_eq!(refs[b], 0, "block {b} is both free and referenced");
+            } else if refs[b] == 1 {
+                unique_ct += 1;
+            } else if refs[b] >= 2 {
+                shared_ct += 1;
+            } else {
+                panic!("block {b} leaked: neither free nor referenced by any holder");
             }
         }
         assert_eq!(
-            free_ct + leased_ct,
+            free_ct + unique_ct + shared_ct,
             self.n_blocks,
-            "free ⊎ leased must cover the pool exactly (a block table is missing \
-             from the checked set, or a block leaked)"
+            "free ⊎ uniquely-leased ⊎ shared must cover the pool exactly"
         );
     }
 
     #[inline]
     fn row_offset(&self, seq: &KvSeq, layer: usize, pos: usize, is_v: bool) -> usize {
-        debug_assert!(pos < self.seq_capacity(seq), "position beyond leased blocks");
+        debug_assert!(pos < self.seq_capacity(seq), "position beyond acquired blocks");
         debug_assert!(layer < self.n_layers);
         let blk = seq.blocks[pos / self.block_positions] as usize;
         let row = pos % self.block_positions;
@@ -364,6 +505,20 @@ impl KvArena {
             + layer * (2 * self.block_positions * self.d_model)
             + if is_v { self.block_positions * self.d_model } else { 0 }
             + row * self.d_model
+    }
+
+    /// Debug write-guard: a row may only be written through a table whose
+    /// block is privately held — shared blocks must be privatized by
+    /// [`KvArena::prepare_append`] first.
+    #[cfg(debug_assertions)]
+    fn assert_writable(&self, seq: &KvSeq, pos: usize) {
+        let b = seq.blocks[pos / self.block_positions];
+        debug_assert_eq!(
+            self.rc[b as usize], 1,
+            "write to shared block {b} (refcount {}) — copy-on-write must privatize \
+             a block before any write lands in it",
+            self.rc[b as usize]
+        );
     }
 
     #[inline]
@@ -380,14 +535,163 @@ impl KvArena {
 
     #[inline]
     pub fn k_row_mut(&mut self, seq: &KvSeq, layer: usize, pos: usize) -> &mut [f32] {
+        #[cfg(debug_assertions)]
+        self.assert_writable(seq, pos);
         let off = self.row_offset(seq, layer, pos, false);
         &mut self.data[off..off + self.d_model]
     }
 
     #[inline]
     pub fn v_row_mut(&mut self, seq: &KvSeq, layer: usize, pos: usize) -> &mut [f32] {
+        #[cfg(debug_assertions)]
+        self.assert_writable(seq, pos);
         let off = self.row_offset(seq, layer, pos, true);
         &mut self.data[off..off + self.d_model]
+    }
+}
+
+/// Root of the prefix hash chain (the FNV-1a offset basis) — the `parent`
+/// value for a sequence's first block.
+pub const PREFIX_HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Chained FNV-1a over one full block of token ids: `parent` is the hash of
+/// the preceding chain (or [`PREFIX_HASH_SEED`] for block 0), so equal block
+/// contents at different prefix positions hash differently and a match
+/// certifies the **entire** token prefix up to and including this block.
+pub fn chain_hash(parent: u64, tokens: &[u16]) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = parent;
+    for &t in tokens {
+        for byte in t.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// One registered full block: the chain parent and the exact token ids it
+/// covers (collision armor — lookups compare tokens, never trust the hash
+/// alone), the resident block, and an LRU stamp.
+struct PrefixEntry {
+    parent: u64,
+    tokens: Vec<u16>,
+    block: u32,
+    last_used: u64,
+}
+
+/// Hashed-block prefix index: `chain_hash(parent, block tokens)` → resident
+/// arena blocks. One per model lane (token ids are only meaningful within a
+/// tokenizer/model pair). The index owns one arena reference per entry
+/// (taken by the caller via [`KvArena::retain_block`] when
+/// [`PrefixIndex::insert`] returns true), so registered prefixes survive
+/// their originating sequence until [`PrefixIndex::reclaim_one`] evicts
+/// them under memory pressure.
+#[derive(Default)]
+pub struct PrefixIndex {
+    entries: HashMap<u64, Vec<PrefixEntry>>,
+    /// Logical LRU clock: bumped on every hit/insert.
+    clock: u64,
+    len: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Registered entries (== arena references the index holds).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Walk `tokens` a full block at a time and return the longest chain of
+    /// registered blocks matching the leading tokens exactly, plus the chain
+    /// hash after the matched blocks (the `parent` for the sequence's next
+    /// registration). Matched entries' LRU stamps are refreshed. The caller
+    /// decides how many of the returned blocks to actually alias (it must
+    /// [`KvArena::retain`] each one it takes).
+    pub fn match_chain(&mut self, tokens: &[u16], block_positions: usize) -> (Vec<u32>, u64) {
+        let mut parent = PREFIX_HASH_SEED;
+        let mut blocks = Vec::new();
+        for chunk in tokens.chunks_exact(block_positions) {
+            let h = chain_hash(parent, chunk);
+            let hit = self
+                .entries
+                .get_mut(&h)
+                .and_then(|es| es.iter_mut().find(|e| e.parent == parent && e.tokens == chunk));
+            match hit {
+                Some(e) => {
+                    e.last_used = self.clock;
+                    self.clock += 1;
+                    blocks.push(e.block);
+                    parent = h;
+                }
+                None => break,
+            }
+        }
+        (blocks, parent)
+    }
+
+    /// Register `block` as holding the K/V rows for `tokens` under chain
+    /// `parent`. Returns true if a new entry was created — the caller must
+    /// then take the index's reference via [`KvArena::retain_block`]. If an
+    /// equivalent entry already exists (another sequence registered the same
+    /// prefix first), only its LRU stamp is refreshed and false is returned:
+    /// the index never holds two entries for one logical prefix.
+    pub fn insert(&mut self, parent: u64, tokens: &[u16], block: u32) -> bool {
+        let h = chain_hash(parent, tokens);
+        let es = self.entries.entry(h).or_default();
+        if let Some(e) = es.iter_mut().find(|e| e.parent == parent && e.tokens == tokens) {
+            e.last_used = self.clock;
+            self.clock += 1;
+            return false;
+        }
+        es.push(PrefixEntry { parent, tokens: tokens.to_vec(), block, last_used: self.clock });
+        self.clock += 1;
+        self.len += 1;
+        true
+    }
+
+    /// Evict the least-recently-used entry whose block the index is the
+    /// **sole** holder of (refcount 1 — no live sequence aliases it),
+    /// releasing the block back to `arena`'s free list. Ties and HashMap
+    /// iteration order are broken by `(last_used, block id)`, so eviction is
+    /// deterministic. Returns the freed block, or None when every entry is
+    /// still aliased by a live sequence (nothing safely evictable).
+    pub fn reclaim_one(&mut self, arena: &mut KvArena) -> Option<u32> {
+        let mut best: Option<(u64, u32, u64)> = None; // (last_used, block, bucket hash)
+        for (&h, es) in &self.entries {
+            for e in es {
+                let better = best.map_or(true, |(lu, b, _)| (e.last_used, e.block) < (lu, b));
+                if arena.refcount(e.block) == 1 && better {
+                    best = Some((e.last_used, e.block, h));
+                }
+            }
+        }
+        let (lu, block, h) = best?;
+        let es = self.entries.get_mut(&h).expect("bucket of chosen entry");
+        let i = es
+            .iter()
+            .position(|e| e.block == block && e.last_used == lu)
+            .expect("chosen entry in bucket");
+        es.remove(i);
+        if es.is_empty() {
+            self.entries.remove(&h);
+        }
+        self.len -= 1;
+        arena.release_block(block);
+        Some(block)
+    }
+
+    /// Every block the index currently holds a reference on (for
+    /// [`KvArena::assert_partition_with`]).
+    pub fn blocks(&self) -> impl Iterator<Item = u32> + '_ {
+        self.entries.values().flatten().map(|e| e.block)
     }
 }
 
@@ -404,7 +708,7 @@ mod tests {
     }
 
     #[test]
-    fn lease_release_accounting() {
+    fn acquire_release_accounting() {
         let cfg = tiny_cfg();
         let mut arena = KvArena::new(&cfg, 8, 4);
         assert_eq!(arena.blocks_total(), 4);
@@ -417,7 +721,7 @@ mod tests {
         assert!(arena.ensure(&mut b, 8));
         assert_eq!(arena.blocks_free(), 0);
         assert_eq!(arena.high_water(), 4);
-        // Pool exhausted: the next lease must fail, not panic.
+        // Pool exhausted: the next acquire must fail, not panic.
         assert!(!arena.ensure(&mut b, 16));
         arena.release(&mut a);
         assert_eq!(a.n_blocks(), 0);
@@ -428,6 +732,109 @@ mod tests {
         arena.release(&mut b);
         assert_eq!(arena.blocks_free(), 4);
         assert_eq!(arena.high_water(), 4, "high water survives release");
+    }
+
+    #[test]
+    fn retain_release_is_free_on_zero() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        let mut a = KvSeq::new();
+        let mut b = KvSeq::new();
+        assert!(arena.ensure(&mut a, 8));
+        let blk = a.blocks()[0];
+        assert_eq!(arena.refcount(blk), 1);
+        assert!(!arena.is_shared(blk));
+        arena.retain(&mut b, blk);
+        b.len = 8;
+        assert_eq!(arena.refcount(blk), 2);
+        assert!(arena.is_shared(blk));
+        assert_eq!(arena.blocks_free(), 3, "retain takes no new block");
+        arena.assert_partition([&a, &b]);
+        // Releasing one holder keeps the block resident for the other.
+        arena.release(&mut a);
+        assert_eq!(arena.refcount(blk), 1);
+        assert_eq!(arena.blocks_free(), 3);
+        arena.assert_partition([&b]);
+        // Last reference frees it.
+        arena.release(&mut b);
+        assert_eq!(arena.refcount(blk), 0);
+        assert_eq!(arena.blocks_free(), 4);
+        arena.assert_partition(std::iter::empty());
+    }
+
+    #[test]
+    fn prepare_append_copies_shared_block_once() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 4, 4);
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 4));
+        a.len = 4;
+        for li in 0..cfg.n_layers {
+            for pos in 0..4 {
+                for d in 0..cfg.d_model {
+                    arena.k_row_mut(&a, li, pos)[d] = (li * 1000 + pos * 10 + d) as f32;
+                    arena.v_row_mut(&a, li, pos)[d] = -((li * 1000 + pos * 10 + d) as f32);
+                }
+            }
+        }
+        // `b` aliases the block, cursor mid-block (diverges at position 2).
+        let mut b = KvSeq::new();
+        arena.retain(&mut b, a.blocks()[0]);
+        b.len = 2;
+        assert_eq!(arena.prepare_append(&mut b, 3), Some(true), "shared block must CoW");
+        assert_ne!(b.blocks()[0], a.blocks()[0], "b got a private copy");
+        assert_eq!(arena.refcount(a.blocks()[0]), 1);
+        assert_eq!(arena.refcount(b.blocks()[0]), 1);
+        // The shared prefix rows came along with the copy...
+        for li in 0..cfg.n_layers {
+            for pos in 0..2 {
+                assert_eq!(arena.k_row(&b, li, pos), arena.k_row(&a, li, pos));
+                assert_eq!(arena.v_row(&b, li, pos), arena.v_row(&a, li, pos));
+            }
+        }
+        // ...and writes through `b` no longer reach `a`.
+        arena.k_row_mut(&b, 0, 2)[0] = 99.0;
+        assert_eq!(arena.k_row(&a, 0, 2)[0], 20.0);
+        // A second prepare_append is a no-op (already private).
+        assert_eq!(arena.prepare_append(&mut b, 3), Some(false));
+        arena.assert_partition([&a, &b]);
+        arena.release(&mut a);
+        arena.release(&mut b);
+        assert_eq!(arena.blocks_free(), 4);
+    }
+
+    #[test]
+    fn prepare_append_private_block_is_noop() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 4, 4);
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 4));
+        a.len = 2;
+        assert_eq!(arena.prepare_append(&mut a, 4), Some(false));
+        assert_eq!(a.n_blocks(), 1);
+        // Cursor at capacity: grows the table, still no CoW.
+        a.len = 4;
+        assert_eq!(arena.prepare_append(&mut a, 5), Some(false));
+        assert_eq!(a.n_blocks(), 2);
+        arena.release(&mut a);
+    }
+
+    #[test]
+    fn prepare_append_reports_starvation() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 4, 1);
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 4));
+        a.len = 4;
+        let mut b = KvSeq::new();
+        arena.retain(&mut b, a.blocks()[0]);
+        b.len = 2;
+        // CoW needs a free block and there is none.
+        assert_eq!(arena.prepare_append(&mut b, 3), None);
+        assert_eq!(b.n_blocks(), 1, "starved prepare_append leaves the table intact");
+        assert!(arena.is_shared(b.blocks()[0]));
+        arena.release(&mut a);
+        arena.release(&mut b);
     }
 
     #[test]
@@ -468,7 +875,7 @@ mod tests {
     }
 
     #[test]
-    fn partition_checker_accepts_every_lease_release_state() {
+    fn partition_checker_accepts_every_acquire_release_state() {
         let cfg = tiny_cfg();
         let mut arena = KvArena::new(&cfg, 8, 4);
         let mut a = KvSeq::new();
@@ -484,14 +891,36 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "free ⊎ leased")]
+    fn partition_checker_accepts_shared_and_index_references() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        let mut a = KvSeq::new();
+        let mut b = KvSeq::new();
+        assert!(arena.ensure(&mut a, 16));
+        let shared = a.blocks()[0];
+        arena.retain(&mut b, shared);
+        b.len = 8;
+        // The prefix index pins a's second block too.
+        let pinned = a.blocks()[1];
+        arena.retain_block(pinned);
+        arena.assert_partition_with([&a, &b], [pinned]);
+        // Table release leaves the index reference alive.
+        arena.release(&mut a);
+        arena.assert_partition_with([&b], [pinned]);
+        arena.release_block(pinned);
+        arena.release(&mut b);
+        arena.assert_partition_with(std::iter::empty(), std::iter::empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "disagrees with the")]
     fn partition_checker_catches_missing_table() {
         let cfg = tiny_cfg();
         let mut arena = KvArena::new(&cfg, 8, 4);
         let mut a = KvSeq::new();
         assert!(arena.ensure(&mut a, 8));
-        // `a` holds a block but is withheld from the checked set: the
-        // partition no longer covers the pool.
+        // `a` holds a block but is withheld from the checked set: its block's
+        // refcount (1) disagrees with the zero references visible.
         arena.assert_partition(std::iter::empty());
     }
 
@@ -501,25 +930,36 @@ mod tests {
         let cfg = tiny_cfg();
         let mut arena = KvArena::new(&cfg, 8, 4);
         // Corrupt the free list directly (release() itself would catch the
-        // double-release in debug builds before the list is ever corrupted).
+        // double-release before the list is ever corrupted).
         let b = *arena.free.last().unwrap();
         arena.free.push(b);
         arena.assert_partition(std::iter::empty());
     }
 
-    #[cfg(debug_assertions)]
     #[test]
     #[should_panic(expected = "double-released")]
-    fn release_catches_stale_table_in_debug() {
+    fn release_catches_stale_table() {
         let cfg = tiny_cfg();
         let mut arena = KvArena::new(&cfg, 8, 4);
         let mut a = KvSeq::new();
         assert!(arena.ensure(&mut a, 8));
         // Clone the table, release once, then release the stale copy: the
-        // debug occupancy bitmap must flag the second return of the block.
+        // always-on refcount must flag the second return of the block.
         let mut stale = KvSeq { blocks: a.blocks.clone(), len: a.len };
         arena.release(&mut a);
         arena.release(&mut stale);
+    }
+
+    #[test]
+    #[should_panic(expected = "retained while free")]
+    fn retain_catches_free_block() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 8, 4);
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 8));
+        let blk = a.blocks()[0];
+        arena.release(&mut a);
+        arena.retain_block(blk);
     }
 
     #[test]
@@ -541,6 +981,81 @@ mod tests {
         // One full-length sequence in blocks == the contiguous cache bytes.
         let blocks = arena.blocks_for(cfg.max_seq);
         assert_eq!(blocks * KvArena::block_bytes(&cfg, 8), KvCache::size_bytes_for(&cfg));
+    }
+
+    #[test]
+    fn chain_hash_is_positional() {
+        let a = [1u16, 2, 3, 4];
+        let b = [1u16, 2, 3, 5];
+        let h0 = chain_hash(PREFIX_HASH_SEED, &a);
+        assert_eq!(h0, chain_hash(PREFIX_HASH_SEED, &a), "deterministic");
+        assert_ne!(h0, chain_hash(PREFIX_HASH_SEED, &b), "content-sensitive");
+        // The same block content under a different parent hashes differently:
+        // a chain match certifies the whole prefix, not one block in isolation.
+        assert_ne!(h0, chain_hash(h0, &a));
+    }
+
+    #[test]
+    fn prefix_index_match_insert_dedupe() {
+        let mut idx = PrefixIndex::new();
+        let bp = 4usize;
+        let toks: Vec<u16> = (0..12).collect();
+        let (m, parent0) = idx.match_chain(&toks, bp);
+        assert!(m.is_empty());
+        assert_eq!(parent0, PREFIX_HASH_SEED);
+        // Register blocks 0 and 1 of the stream.
+        let h0 = chain_hash(PREFIX_HASH_SEED, &toks[0..4]);
+        assert!(idx.insert(PREFIX_HASH_SEED, &toks[0..4], 7));
+        assert!(idx.insert(h0, &toks[4..8], 3));
+        assert_eq!(idx.len(), 2);
+        // A second registration of the same logical prefix dedupes.
+        assert!(!idx.insert(PREFIX_HASH_SEED, &toks[0..4], 9));
+        assert_eq!(idx.len(), 2);
+        // Full-prefix match walks the chain; a diverging stream stops early.
+        let (m, parent) = idx.match_chain(&toks, bp);
+        assert_eq!(m, vec![7, 3]);
+        assert_eq!(parent, chain_hash(h0, &toks[4..8]));
+        let mut div = toks.clone();
+        div[5] = 999;
+        let (m, _) = idx.match_chain(&div, bp);
+        assert_eq!(m, vec![7], "divergence in block 1 keeps only block 0");
+        // Fewer than bp tokens can never match a full block.
+        let (m, _) = idx.match_chain(&toks[0..3], bp);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn prefix_index_reclaims_lru_index_only_blocks() {
+        let cfg = tiny_cfg();
+        let mut arena = KvArena::new(&cfg, 4, 4);
+        let mut idx = PrefixIndex::new();
+        let mut a = KvSeq::new();
+        assert!(arena.ensure(&mut a, 12)); // blocks for tokens 0..12
+        let toks: Vec<u16> = (100..112).collect();
+        let mut parent = PREFIX_HASH_SEED;
+        for (i, chunk) in toks.chunks_exact(4).enumerate() {
+            assert!(idx.insert(parent, chunk, a.blocks()[i]));
+            arena.retain_block(a.blocks()[i]);
+            parent = chain_hash(parent, chunk);
+        }
+        arena.assert_partition_with([&a], idx.blocks());
+        // While `a` is live every entry is aliased: nothing reclaimable.
+        assert_eq!(idx.reclaim_one(&mut arena), None);
+        let blocks: Vec<u32> = a.blocks().to_vec();
+        arena.release(&mut a);
+        assert_eq!(arena.blocks_free(), 1, "index keeps registered blocks resident");
+        arena.assert_partition_with(std::iter::empty(), idx.blocks());
+        // Refresh block 1's entry: block 0 is now strictly least recent.
+        let (_, _) = idx.match_chain(&toks[0..8], 4);
+        // All stamps refreshed in chain order; LRU falls back to insertion
+        // order for the unmatched tail, so the untouched block 2 entry goes
+        // first, then the chain in match order.
+        assert_eq!(idx.reclaim_one(&mut arena), Some(blocks[2]));
+        assert_eq!(idx.reclaim_one(&mut arena), Some(blocks[0]));
+        assert_eq!(idx.reclaim_one(&mut arena), Some(blocks[1]));
+        assert_eq!(idx.reclaim_one(&mut arena), None);
+        assert!(idx.is_empty());
+        assert_eq!(arena.blocks_free(), 4);
     }
 
     #[test]

@@ -9,7 +9,10 @@ pub mod transformer;
 pub mod weights;
 
 pub use config::ModelConfig;
-pub use kv::{resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, DEFAULT_KV_BLOCK};
+pub use kv::{
+    chain_hash, resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, PrefixIndex,
+    DEFAULT_KV_BLOCK, PREFIX_HASH_SEED,
+};
 pub use tokenizer::{calibration_split, eval_split, load_corpus, split_corpus, ByteTokenizer};
 pub use transformer::{DecodeScratch, Linear, Transformer};
 pub use weights::WeightStore;

@@ -223,9 +223,13 @@ impl KvBatch for ContigKv<'_, '_> {
 }
 
 /// [`KvBatch`] over the shared paged arena: each sequence reads and writes
-/// through its own block table. The scheduler must have leased enough blocks
-/// for one more position per stepping sequence ([`KvArena::ensure`]);
-/// [`KvBatch::check_capacity`] enforces that contract.
+/// through its own block table. Reads tolerate aliased (prefix-shared)
+/// blocks; writes land at the append cursor, so the scheduler must have run
+/// [`KvArena::prepare_append`] (or [`KvArena::ensure`] when sharing is off)
+/// before the round — that privatizes a shared tail block (copy-on-write)
+/// and acquires capacity for one more position per stepping sequence.
+/// [`KvBatch::check_capacity`] enforces the capacity half of that contract;
+/// the arena's debug write-guard enforces the privacy half.
 pub struct PagedKv<'a, 'b> {
     pub arena: &'a mut KvArena,
     pub seqs: &'a mut [&'b mut KvSeq],
@@ -244,8 +248,8 @@ impl KvBatch for PagedKv<'_, '_> {
         let seq = &*self.seqs[i];
         assert!(
             seq.len < self.arena.seq_capacity(seq),
-            "paged KV sequence has no leased block for position {} — the scheduler must \
-             KvArena::ensure capacity before the decode round",
+            "paged KV sequence has no block for position {} — the scheduler must \
+             KvArena::prepare_append/ensure capacity before the decode round",
             seq.len
         );
     }

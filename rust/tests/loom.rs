@@ -16,7 +16,7 @@
 //! Models are deliberately minimal (width-2 pools, 1–2 item jobs, 1-block
 //! arenas): loom cost is exponential in visible operations, and the protocol
 //! logic — busy-gate handoff, epoch observation, countdown-then-park,
-//! lease/release exclusivity — is fully exercised by the smallest instance
+//! lease/retain/release refcounting — is fully exercised by the smallest instance
 //! with real concurrency. Observer counters use plain `std` atomics so they
 //! do not add decision points to the explored schedule.
 
@@ -210,6 +210,63 @@ fn kv_arena_lease_release_partition_under_interleaving() {
         assert!(wins.load(Ordering::SeqCst) >= 1, "the single block must be leasable");
         let ar = arena.lock().unwrap();
         assert_eq!(ar.blocks_free(), 1);
+        ar.assert_partition(std::iter::empty());
+    });
+}
+
+/// Concurrent retain/release of a shared block through the serve loop's
+/// Mutex: the main thread leases the pool's only block, a second thread
+/// aliases it onto its own table (refcount 2) and releases its alias, and
+/// whichever order the release interleaves with the main thread's, free-on-
+/// zero fires exactly once — at every lock point the partition
+/// free ⊎ uniquely-leased ⊎ shared(rc ≥ 2) covers the pool exactly.
+#[test]
+fn kv_arena_shared_retain_release_partition_under_interleaving() {
+    loom::model(|| {
+        let cfg = tiny_cfg();
+        let arena = qtip::util::sync::Arc::new(qtip::util::sync::Mutex::new(KvArena::new(
+            &cfg, 8, 1,
+        )));
+        // Lease the only block before spawning, so the model explores the
+        // retain/release orderings rather than acquire contention (covered by
+        // the lease/release model above).
+        let mut seq_a = KvSeq::new();
+        let block = {
+            let mut ar = arena.lock().unwrap();
+            assert!(ar.ensure(&mut seq_a, 8), "empty pool must serve the first lease");
+            seq_a.blocks()[0]
+        };
+        let a2 = qtip::util::sync::Arc::clone(&arena);
+        let sharer = loom::thread::spawn(move || {
+            let mut seq_b = KvSeq::new();
+            {
+                let mut ar = a2.lock().unwrap();
+                ar.retain(&mut seq_b, block);
+                assert_eq!(ar.refcount(block), 2, "alias must be visible under the lock");
+                assert!(ar.is_shared(block));
+                assert_eq!(ar.blocks_free(), 0);
+            }
+            let mut ar = a2.lock().unwrap();
+            ar.release(&mut seq_b);
+            assert!(
+                ar.refcount(block) >= 1,
+                "dropping the alias must never free the main thread's lease"
+            );
+        });
+        {
+            let ar = arena.lock().unwrap();
+            // Whether the sharer has retained yet or not, our lease pins the
+            // block: never free, refcount at least ours. (The full partition
+            // check needs every table, so it waits for the join below.)
+            assert!(ar.refcount(block) >= 1);
+            assert_eq!(ar.blocks_free(), 0);
+        }
+        sharer.join().unwrap();
+        let mut ar = arena.lock().unwrap();
+        assert_eq!(ar.refcount(block), 1, "after the sharer exits only seq_a holds it");
+        ar.assert_partition([&seq_a]);
+        ar.release(&mut seq_a);
+        assert_eq!(ar.blocks_free(), 1, "free-on-zero must fire exactly once");
         ar.assert_partition(std::iter::empty());
     });
 }

@@ -5,13 +5,21 @@
 //! every registered quant method, both decode-kernel families, and pool
 //! widths 1/2/4. A deliberately tiny block size (4 positions) forces every
 //! sequence across multiple block-table boundaries.
+//!
+//! The prefix-sharing suite at the bottom drives the real [`ServerHandle`]
+//! scheduler: staggered admissions whose prompts share a long prefix must
+//! alias resident blocks (block-boundary and mid-block divergence, plus the
+//! exact-full-match prompt that forces admission's copy-on-write reserve) and
+//! still stream bit-identically to solo contiguous decode — including under a
+//! budget tight enough to evict live holders of shared blocks.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
-use qtip::coordinator::quantize_model_qtip;
+use qtip::coordinator::{quantize_model_qtip, GenRequest, ServerConfig, ServerHandle};
 use qtip::hessian::collect_hessians;
 use qtip::model::{
-    DecodeScratch, KvArena, KvCache, KvSeq, ModelConfig, Transformer, WeightStore,
+    DecodeScratch, KvArena, KvCache, KvLayout, KvSeq, ModelConfig, Transformer, WeightStore,
 };
 use qtip::quant::{registry, KernelKind, QtipConfig};
 use qtip::util::threadpool::ExecPool;
@@ -251,4 +259,187 @@ fn paged_single_round_logits_match_contiguous_for_all_codes() {
             arena.assert_partition(seqs.iter());
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Prefix-sharing parity: the real server scheduler with the hashed-block
+// prefix index enabled.
+// ---------------------------------------------------------------------------
+
+/// 12 bytes = exactly 3 whole blocks at the 4-position test block size, so a
+/// prompt that is the prefix alone fully matches the index (the CoW case).
+const SHARED_PREFIX: &str = "SYSTEM: do x";
+
+fn req(id: u64, prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: prompt.to_string(),
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        top_k: 1,
+        seed: id,
+        model: String::new(),
+    }
+}
+
+/// Reference streams: each request served alone on the contiguous scheduler
+/// (sequential submission, batch width 1 — no sharing, no paging).
+fn solo_reference(model: &Arc<Transformer>, threads: usize, reqs: &[GenRequest]) -> Vec<Vec<u16>> {
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 1,
+            threads,
+            kv_layout: KvLayout::Contig,
+            ..Default::default()
+        },
+    );
+    let out = reqs
+        .iter()
+        .map(|r| {
+            let resp = server.submit(r.clone()).recv().expect("solo request served");
+            assert!(resp.error.is_none(), "solo request rejected: {:?}", resp.error);
+            resp.tokens
+        })
+        .collect();
+    server.shutdown();
+    out
+}
+
+/// Staggered admission with every divergence shape: a seed sequence runs to
+/// completion (registering its prefix blocks in the index), then three
+/// sharers arrive at once — one diverging exactly on a block boundary, one
+/// mid-block, and one whose prompt *is* the shared prefix (full match ⇒ the
+/// admission CoW reserve and a real copy-on-write on its first decode round).
+/// All streams must be bit-identical to solo contiguous decode for every
+/// registered method and pool widths 1/2.
+#[test]
+fn prefix_shared_admission_is_bit_identical_for_all_codes() {
+    assert_eq!(SHARED_PREFIX.len(), 3 * BLOCK, "prefix must cover whole blocks");
+    let jobs = vec![
+        req(0, &format!("{SHARED_PREFIX}A1"), 6),
+        // Divergence at position 12 — the first block boundary past the prefix.
+        req(1, &format!("{SHARED_PREFIX}B2"), 6),
+        // Divergence at position 10 — inside block 2, so only 2 blocks alias.
+        req(2, &format!("{}zzzz", &SHARED_PREFIX[..10]), 6),
+        // The prefix alone: all 3 blocks alias, the cursor re-enters the last
+        // shared block, and the first decode round must copy-on-write it.
+        req(3, SHARED_PREFIX, 6),
+    ];
+    for (code, v) in codes() {
+        let model = Arc::new(quantized_tiny(code, v));
+        for threads in [1usize, 2] {
+            let reference = solo_reference(&model, threads, &jobs);
+            let server = ServerHandle::spawn(
+                model.clone(),
+                ServerConfig {
+                    max_batch: 4,
+                    threads,
+                    kv_layout: KvLayout::Paged,
+                    kv_block: BLOCK,
+                    prefix_share: true,
+                    ..Default::default()
+                },
+            );
+            // Seed first, alone: its completed blocks stay index-resident.
+            let r0 = server.submit(jobs[0].clone()).recv().expect("seed served");
+            assert!(r0.error.is_none(), "{code}: {:?}", r0.error);
+            let rxs: Vec<_> = jobs[1..].iter().map(|j| server.submit(j.clone())).collect();
+            let mut got = vec![r0.tokens];
+            for rx in rxs {
+                let r = rx.recv().expect("sharer served");
+                assert!(r.error.is_none(), "{code}: {:?}", r.error);
+                got.push(r.tokens);
+            }
+            let stats = server.shutdown();
+            assert_eq!(
+                got, reference,
+                "{code} threads={threads}: prefix-shared decode diverged from solo contiguous"
+            );
+            // The three sharers hit (3 + 2 + 3 aliased blocks); the full-match
+            // prompt privatizes its last aliased block exactly once.
+            assert_eq!(stats.prefix_hits, 3, "{code}: every sharer must hit the index");
+            assert_eq!(stats.blocks_shared, 8, "{code}: 3+2+3 blocks must alias");
+            assert_eq!(stats.cow_copies, 1, "{code}: the full-match prompt must CoW once");
+            assert_eq!(stats.completed, jobs.len());
+        }
+    }
+}
+
+/// Tight budget: 16 four-position blocks is ~2.5 sequences' worth for six
+/// same-prefix requests at batch width 4, so the scheduler must reclaim
+/// index-held blocks, stall behind finishers, and evict live holders of
+/// shared blocks — and every preempted request's deterministic replay (now
+/// aliasing the prefix its first run registered) must still be bit-identical
+/// to solo contiguous decode.
+#[test]
+fn prefix_sharing_parity_survives_eviction_under_tight_budget() {
+    let jobs: Vec<GenRequest> =
+        (0..6).map(|i| req(i, &format!("{SHARED_PREFIX}#{i}"), 6)).collect();
+    let (code, v) = codes()[1];
+    let model = Arc::new(quantized_tiny(code, v));
+    let block_bytes = KvArena::block_bytes(&model.cfg, BLOCK);
+    for threads in [1usize, 2] {
+        let reference = solo_reference(&model, threads, &jobs);
+        let server = ServerHandle::spawn(
+            model.clone(),
+            ServerConfig {
+                max_batch: 4,
+                threads,
+                kv_budget_bytes: 16 * block_bytes,
+                kv_layout: KvLayout::Paged,
+                kv_block: BLOCK,
+                prefix_share: true,
+                ..Default::default()
+            },
+        );
+        let rxs: Vec<_> = jobs.iter().map(|j| server.submit(j.clone())).collect();
+        let got: Vec<Vec<u16>> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().expect("request served under pressure");
+                assert!(r.error.is_none(), "{code}: {:?}", r.error);
+                r.tokens
+            })
+            .collect();
+        let stats = server.shutdown();
+        assert_eq!(
+            got, reference,
+            "{code} threads={threads}: eviction/reclaim under sharing broke bit-identity"
+        );
+        assert_eq!(stats.completed, jobs.len());
+        assert_eq!(stats.kv_blocks_total, 16, "budget must size the arena to 16 blocks");
+    }
+}
+
+/// Sharing off is a pure A/B switch: the same staggered workload with
+/// `prefix_share: false` must produce the same streams with zero hits.
+#[test]
+fn prefix_sharing_off_matches_and_reports_no_hits() {
+    let jobs = vec![
+        req(0, &format!("{SHARED_PREFIX}A1"), 5),
+        req(1, &format!("{SHARED_PREFIX}B2"), 5),
+    ];
+    let (code, v) = codes()[0];
+    let model = Arc::new(quantized_tiny(code, v));
+    let reference = solo_reference(&model, 1, &jobs);
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 2,
+            threads: 1,
+            kv_layout: KvLayout::Paged,
+            kv_block: BLOCK,
+            prefix_share: false,
+            ..Default::default()
+        },
+    );
+    let r0 = server.submit(jobs[0].clone()).recv().expect("first served");
+    let r1 = server.submit(jobs[1].clone()).recv().expect("second served");
+    assert!(r0.error.is_none() && r1.error.is_none());
+    let stats = server.shutdown();
+    assert_eq!(vec![r0.tokens, r1.tokens], reference);
+    assert_eq!(stats.prefix_hits, 0, "sharing disabled must never alias");
+    assert_eq!(stats.blocks_shared, 0);
+    assert_eq!(stats.cow_copies, 0);
 }

@@ -2,7 +2,7 @@
 """Schema check for the perf-trajectory files (BENCH_*.json at the repo root).
 
 Usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain]
-                           BENCH_microbench.json [...]
+                           [--require-prefix-gain] BENCH_microbench.json [...]
 
 Pins the same contract as `bench::BenchJson` (rust/src/bench.rs) and its
 `bench_json_schema_roundtrips` unit test: top-level bench / schema_version /
@@ -19,6 +19,12 @@ file carrying `peak_concurrency` rows keyed by a `scheduler` param (the
 serving bench): the paged scheduler's peak concurrency must be *strictly
 greater* than the contiguous (sequence-granular) scheduler's under the same
 KV budget.
+
+With `--require-prefix-gain`, enforces the prefix-sharing acceptance gate on
+the Zipf-shared-prefix serving rows (params carrying `workload=zipf_prefix`
+and `prefix=on|off`): under the same tight KV budget, prefix-on must admit
+*strictly more* peak concurrency AND deliver *strictly lower* mean TTFT than
+prefix-off, and must actually report prefix-index hits.
 """
 
 import json
@@ -103,6 +109,51 @@ def check_paging_gate(path: str, doc: dict) -> None:
     )
 
 
+def check_prefix_gate(path: str, doc: dict) -> None:
+    zrows = [r for r in doc["rows"] if r["params"].get("workload") == "zipf_prefix"]
+    if not zrows:
+        # Same loud-failure stance as --require-paging-gain: this gate is
+        # pointed at the one file that must carry the rows, so an empty match
+        # means the bench stopped emitting them.
+        fail(
+            f"{path}: --require-prefix-gain found no workload=zipf_prefix rows — "
+            f"the serving bench no longer emits the prefix-sharing acceptance metrics"
+        )
+    vals: dict = {}
+    for r in zrows:
+        mode = r["params"].get("prefix")
+        if mode not in ("on", "off"):
+            fail(f"{path}: zipf_prefix row with bad prefix param {mode!r}")
+        vals.setdefault(mode, {})[r["metric"]] = r["value"]
+    for mode in ("on", "off"):
+        for metric in ("peak_concurrency", "mean_ttft_s", "prefix_hits"):
+            if metric not in vals.get(mode, {}):
+                fail(f"{path}: prefix gate needs a {metric} row for prefix={mode}")
+    on, off = vals["on"], vals["off"]
+    if not on["prefix_hits"] > 0:
+        fail(
+            f"{path}: prefix-on run reported zero prefix_hits — the index never "
+            f"aliased a block, so the comparison is vacuous"
+        )
+    if not on["peak_concurrency"] > off["peak_concurrency"]:
+        fail(
+            f"{path}: prefix-on peak_concurrency {on['peak_concurrency']:.0f} is not "
+            f"strictly greater than prefix-off {off['peak_concurrency']:.0f} — aliasing "
+            f"the shared prefix must admit more sequences under the same budget"
+        )
+    if not on["mean_ttft_s"] < off["mean_ttft_s"]:
+        fail(
+            f"{path}: prefix-on mean TTFT {on['mean_ttft_s'] * 1e3:.2f} ms is not "
+            f"strictly lower than prefix-off {off['mean_ttft_s'] * 1e3:.2f} ms — "
+            f"skipping aliased prefill must shorten time to first token"
+        )
+    print(
+        f"{path}: prefix gate ok (concurrency {on['peak_concurrency']:.0f} > "
+        f"{off['peak_concurrency']:.0f}, mean TTFT {on['mean_ttft_s'] * 1e3:.2f} < "
+        f"{off['mean_ttft_s'] * 1e3:.2f} ms, {on['prefix_hits']:.0f} hits)"
+    )
+
+
 def check(path: str) -> dict:
     try:
         with open(path, encoding="utf-8") as f:
@@ -148,6 +199,7 @@ if __name__ == "__main__":
     args = sys.argv[1:]
     min_speedup = None
     require_paging_gain = False
+    require_prefix_gain = False
     while args and args[0].startswith("--"):
         if args[0] == "--min-lanes-speedup":
             if len(args) < 2:
@@ -157,12 +209,15 @@ if __name__ == "__main__":
         elif args[0] == "--require-paging-gain":
             require_paging_gain = True
             args = args[1:]
+        elif args[0] == "--require-prefix-gain":
+            require_prefix_gain = True
+            args = args[1:]
         else:
             fail(f"unknown flag {args[0]}")
     if not args:
         fail(
             "usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain] "
-            "BENCH_<name>.json [...]"
+            "[--require-prefix-gain] BENCH_<name>.json [...]"
         )
     for p in args:
         document = check(p)
@@ -170,3 +225,5 @@ if __name__ == "__main__":
             check_speedup_gate(p, document, min_speedup)
         if require_paging_gain:
             check_paging_gate(p, document)
+        if require_prefix_gain:
+            check_prefix_gate(p, document)
