@@ -17,13 +17,21 @@
 //! instead of re-prefilling them, so admitted concurrency rises and mean
 //! TTFT falls while outputs stay bit-identical.
 //!
+//! The fourth table measures **overload shedding**: the same server shape
+//! under a nominal load (fits the batch, nothing shed) and under a burst far
+//! past a bounded admission queue (`max_queue`). Overload must shed loudly
+//! (`queue_full` rejections, counted in `shed_queue_full`) while the
+//! requests it *does* admit keep a mean TTFT within 2× of the nominal run —
+//! load shedding protects latency instead of letting the backlog eat it.
+//!
 //! Emits `BENCH_serving.json` (schema v1) with `tok_per_sec`,
 //! `peak_concurrency`, and `evictions` rows per scheduler plus
 //! `peak_concurrency` / `mean_ttft_s` / `prefix_hits` rows per prefix mode
-//! for the perf trajectory; `scripts/check_bench_json.py
-//! --require-paging-gain --require-prefix-gain` enforces the
-//! strictly-more-concurrency and shared-beats-unshared acceptance gates in
-//! CI.
+//! and `shed_queue_full` / `mean_ttft_s` / `completed` rows per overload
+//! workload for the perf trajectory; `scripts/check_bench_json.py
+//! --require-paging-gain --require-prefix-gain --require-shed-sanity`
+//! enforces the strictly-more-concurrency, shared-beats-unshared, and
+//! shed-under-overload-only acceptance gates in CI.
 
 use std::sync::Arc;
 
@@ -68,6 +76,7 @@ fn workload(n: usize) -> Vec<GenRequest> {
                 top_k: 1,
                 seed: i as u64,
                 model: String::new(),
+                deadline_ms: 0,
             }
         })
         .collect()
@@ -102,6 +111,7 @@ fn zipf_prefix_workload(n: usize) -> Vec<GenRequest> {
                 top_k: 1,
                 seed: i as u64,
                 model: String::new(),
+                deadline_ms: 0,
             }
         })
         .collect()
@@ -143,6 +153,53 @@ fn run_workload(
     assert_eq!(stats.completed, reqs.len());
     assert!(total_tokens > 0);
     (secs, stats, ttft_sum / reqs.len().max(1) as f64)
+}
+
+/// Overload-tolerant runner: `queue_full` sheds are expected (they are the
+/// measurement), any other error still fails the bench. Returns the final
+/// stats, the mean TTFT over the requests that were actually admitted and
+/// completed, and the count the client saw shed.
+fn run_shedding_workload(
+    model: &Arc<Transformer>,
+    max_queue: usize,
+    reqs: &[GenRequest],
+) -> (ServerStats, f64, usize) {
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 12,
+            kv_budget_bytes: 16 * KvCache::size_bytes_for(&model.cfg),
+            kv_layout: KvLayout::Paged,
+            kv_block: 16,
+            max_queue,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    let mut done = 0usize;
+    let mut shed = 0usize;
+    let mut ttft_sum = 0.0f64;
+    for rx in rxs {
+        let r = rx.recv().expect("request answered");
+        match &r.error {
+            None => {
+                done += 1;
+                ttft_sum += r.ttft;
+            }
+            Some(err) => {
+                assert_eq!(
+                    err.code,
+                    qtip::coordinator::codes::QUEUE_FULL,
+                    "only queue sheds are acceptable under this workload: {err}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, done);
+    assert_eq!(stats.shed_queue_full, shed, "client-observed sheds must match stats");
+    (stats, ttft_sum / done.max(1) as f64, shed)
 }
 
 fn main() {
@@ -236,5 +293,45 @@ fn main() {
         json.row(&params, "cow_copies", stats.cow_copies as f64);
     }
     t3.emit("serving_prefix.md");
+
+    // Overload shedding: nominal load (12 short requests into a 12-wide
+    // batch, unbounded queue) vs a 48-request burst against max_queue 2. The
+    // burst must shed, the nominal run must not, and the requests the burst
+    // admits must keep TTFT in the same regime as nominal.
+    let short = |n: usize| -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| GenRequest {
+                id: i as u64,
+                prompt: "o".repeat(12),
+                max_new_tokens: 8,
+                temperature: 0.0,
+                top_k: 1,
+                seed: i as u64,
+                model: String::new(),
+                deadline_ms: 0,
+            })
+            .collect()
+    };
+    let mut t4 = Table::new(
+        "Overload shedding: nominal vs 4x burst against a bounded queue",
+        &["workload", "requests", "completed", "shed (queue full)", "mean TTFT ms", "tok/s"],
+    );
+    for (name, max_queue, n) in [("nominal", 0usize, 12usize), ("overload", 2, 48)] {
+        let (stats, mean_ttft, shed) = run_shedding_workload(&model, max_queue, &short(n));
+        t4.row(vec![
+            name.into(),
+            format!("{n}"),
+            format!("{}", stats.completed),
+            format!("{shed}"),
+            f2(mean_ttft * 1e3),
+            f2(stats.throughput_tok_per_sec()),
+        ]);
+        let params = [("workload", name.to_string())];
+        json.row(&params, "shed_queue_full", shed as f64);
+        json.row(&params, "mean_ttft_s", mean_ttft);
+        json.row(&params, "completed", stats.completed as f64);
+        json.row(&params, "tok_per_sec", stats.throughput_tok_per_sec());
+    }
+    t4.emit("serving_overload.md");
     json.emit();
 }

@@ -11,12 +11,22 @@
 //!     a terminal event with `"done": true` carrying the full response.
 //!   - `GET /v1/models` — names of the served models (index 0 is the default
 //!     route for requests that omit `"model"`).
-//!   - `GET /health` — liveness probe.
+//!   - `GET /health` — real readiness: per-lane healthy/active/queued state
+//!     plus free KV blocks. 200 with `"status": "ok"` (or `"degraded"` when
+//!     some lanes are poisoned but others still serve), 503 once every lane
+//!     has failed or the serving thread stops answering probes.
+//!   - `GET /v1/stats` — point-in-time [`super::server::ServerStats`]
+//!     snapshot (throughput, shed/expiry counters, KV geometry).
 //!
-//! Status codes: 200 on success, 400 for malformed requests and admission
-//! rejections, 404 for unknown paths and unknown model names. SSE responses
-//! commit to 200 before generation starts, so in-stream failures arrive as a
-//! terminal event with an `"error"` field rather than a status code.
+//! Status codes are derived from the stable `"code"` field every rejection
+//! carries ([`super::server::codes`]): 200 on success, 400 for malformed
+//! requests and budget rejections, 404 for unknown paths and unknown model
+//! names, 408 when a request does not arrive within the read deadline
+//! (slow-loris defense), 413 for oversized bodies, 429 when the lane's
+//! admission queue is full, 503 for deadline-expired / lane-failed /
+//! shutting-down rejections. SSE responses commit to 200 before generation
+//! starts, so in-stream failures arrive as a terminal event with `"error"`
+//! and `"code"` fields rather than a status code.
 //!
 //! Connections are `Connection: close` — one request per connection, no
 //! keep-alive state machine. A client that disconnects mid-request is
@@ -33,14 +43,20 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::server::{GenRequest, ServerHandle, StreamEvent};
+use super::server::{codes, GenRequest, HealthSnapshot, ServerHandle, ServerStats, StreamEvent};
 use super::tcp::{conn_closed, final_json, next_event, server_gone_json, Wait};
+use crate::util::fault;
 use crate::util::json::Json;
 
 /// Parsing caps: a front door for generation requests, not a general web
 /// server — anything larger than these is a malformed or hostile request.
 const MAX_HEAD_BYTES: usize = 64 << 10;
 const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A complete request (head + declared body) must arrive within this window,
+/// or the connection is answered 408 and closed. Bounds how long a slow-loris
+/// client dribbling one byte at a time can pin a connection thread.
+const READ_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 
 pub struct HttpFrontend {
     pub addr: std::net::SocketAddr,
@@ -107,10 +123,31 @@ struct HttpRequest {
     body: Vec<u8>,
 }
 
+/// How reading one request off the socket ended. Only `Req` carries work;
+/// the other arms map to a closed connection or a structured HTTP rejection
+/// (413 / 408) — never a silent close for a request the server refused.
+enum ReadOutcome {
+    Req(HttpRequest),
+    /// Peer closed (or frontend shutdown was requested) before a full
+    /// request arrived: nothing to answer.
+    Closed,
+    /// Declared `Content-Length` (or the head itself) exceeds the parsing
+    /// caps: answered 413 without reading the body off the wire.
+    TooLarge,
+    /// The request did not complete within `deadline` (slow-loris client):
+    /// answered 408 and closed.
+    TimedOut,
+}
+
 /// Read one HTTP/1.1 request off the socket. Bounded reads poll `stop` so
-/// frontend shutdown never hangs on an idle connection; `Ok(None)` means the
-/// peer closed (or shutdown was requested) before a full request arrived.
-fn read_request(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<HttpRequest>> {
+/// frontend shutdown never hangs on an idle connection, and the whole
+/// request (head and body) must arrive within `deadline`.
+fn read_request(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+    deadline: std::time::Duration,
+) -> Result<ReadOutcome> {
+    let started = std::time::Instant::now();
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
     // Head: everything through the blank line.
@@ -118,11 +155,17 @@ fn read_request(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Http
         if let Some(pos) = find_seq(&buf, b"\r\n\r\n") {
             break pos + 4;
         }
-        if stop.load(Ordering::Relaxed) || buf.len() > MAX_HEAD_BYTES {
-            return Ok(None);
+        if stop.load(Ordering::Relaxed) {
+            return Ok(ReadOutcome::Closed);
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Ok(ReadOutcome::TooLarge);
+        }
+        if started.elapsed() > deadline {
+            return Ok(ReadOutcome::TimedOut);
         }
         match stream.read(&mut chunk) {
-            Ok(0) => return Ok(None),
+            Ok(0) => return Ok(ReadOutcome::Closed),
             Ok(n) => buf.extend_from_slice(&chunk[..n]),
             Err(e)
                 if matches!(
@@ -152,16 +195,19 @@ fn read_request(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Http
         }
     }
     if content_length > MAX_BODY_BYTES {
-        return Ok(None);
+        return Ok(ReadOutcome::TooLarge);
     }
     // Body: whatever followed the head in `buf`, plus the rest off the wire.
     let mut body: Vec<u8> = buf[head_end..].to_vec();
     while body.len() < content_length {
         if stop.load(Ordering::Relaxed) {
-            return Ok(None);
+            return Ok(ReadOutcome::Closed);
+        }
+        if started.elapsed() > deadline {
+            return Ok(ReadOutcome::TimedOut);
         }
         match stream.read(&mut chunk) {
-            Ok(0) => return Ok(None),
+            Ok(0) => return Ok(ReadOutcome::Closed),
             Ok(n) => body.extend_from_slice(&chunk[..n]),
             Err(e)
                 if matches!(
@@ -177,7 +223,7 @@ fn read_request(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Http
         }
     }
     body.truncate(content_length);
-    Ok(Some(HttpRequest { method, path, body }))
+    Ok(ReadOutcome::Req(HttpRequest { method, path, body }))
 }
 
 fn find_seq(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -197,14 +243,94 @@ fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &Json
     Ok(())
 }
 
-/// Status for a terminal response object: admission rejections are client
-/// errors, a bad route (unknown model) is a 404, success is 200.
+/// Status for a terminal response object, keyed on the stable `"code"` field
+/// every rejection carries (never on the human-readable message): unknown
+/// model is a routing failure (404), a full admission queue is backpressure
+/// the client should retry (429), deadline/lane/shutdown failures are
+/// server-side unavailability (503), everything else the client sent wrong
+/// (400). Success is 200.
 fn status_for(resp: &Json) -> (u16, &'static str) {
-    match resp.get("error").and_then(|e| e.as_str()) {
-        None => (200, "OK"),
-        Some(e) if e.starts_with("unknown model") => (404, "Not Found"),
-        Some(_) => (400, "Bad Request"),
+    if resp.get("error").is_none() {
+        return (200, "OK");
     }
+    match resp.get("code").and_then(|c| c.as_str()) {
+        Some(c) if c == codes::UNKNOWN_MODEL => (404, "Not Found"),
+        Some(c) if c == codes::QUEUE_FULL => (429, "Too Many Requests"),
+        Some(c)
+            if c == codes::DEADLINE_EXCEEDED
+                || c == codes::LANE_FAILED
+                || c == codes::SERVER_SHUTDOWN =>
+        {
+            (503, "Service Unavailable")
+        }
+        Some(c) if c == codes::PAYLOAD_TOO_LARGE => (413, "Payload Too Large"),
+        Some(c) if c == codes::READ_TIMEOUT => (408, "Request Timeout"),
+        _ => (400, "Bad Request"),
+    }
+}
+
+/// `GET /health` body: overall status plus the per-lane readiness detail the
+/// batcher reported. `"ok"` → every lane serving; `"degraded"` → some lanes
+/// poisoned but the rest still serve (200 — the server is usable);
+/// `"failed"` → no lane can make progress (503).
+fn health_json(h: &HealthSnapshot) -> Json {
+    let status = if h.all_failed() {
+        "failed"
+    } else if h.degraded() {
+        "degraded"
+    } else {
+        "ok"
+    };
+    Json::obj(vec![
+        ("status", Json::Str(status.into())),
+        (
+            "lanes",
+            Json::Arr(
+                h.lanes
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("model", Json::Str(l.name.clone())),
+                            ("healthy", Json::Bool(l.healthy)),
+                            ("active", Json::Num(l.active as f64)),
+                            ("queued", Json::Num(l.queued as f64)),
+                            ("kv_blocks_free", Json::Num(l.kv_blocks_free as f64)),
+                            ("kv_blocks_total", Json::Num(l.kv_blocks_total as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// `GET /v1/stats` body: the operationally interesting subset of
+/// [`ServerStats`] — throughput, queueing, and the overload counters
+/// (shed / expired / panicked) this endpoint exists to expose.
+fn stats_json(s: &ServerStats) -> Json {
+    Json::obj(vec![
+        ("completed", Json::Num(s.completed as f64)),
+        ("rejected", Json::Num(s.rejected as f64)),
+        ("cancelled", Json::Num(s.cancelled as f64)),
+        ("total_generated_tokens", Json::Num(s.total_generated_tokens as f64)),
+        ("peak_active", Json::Num(s.peak_active as f64)),
+        ("queue_high_water", Json::Num(s.queue_high_water as f64)),
+        ("evictions", Json::Num(s.evictions as f64)),
+        ("prefix_hits", Json::Num(s.prefix_hits as f64)),
+        ("blocks_shared", Json::Num(s.blocks_shared as f64)),
+        ("kv_blocks_total", Json::Num(s.kv_blocks_total as f64)),
+        ("kv_blocks_high_water", Json::Num(s.kv_blocks_high_water as f64)),
+        ("kv_layout", Json::Str(s.kv_layout.clone())),
+        ("kernel", Json::Str(s.kernel.clone())),
+        ("workers", Json::Num(s.workers as f64)),
+        ("fused_rounds", Json::Num(s.fused_rounds as f64)),
+        ("shed_queue_full", Json::Num(s.shed_queue_full as f64)),
+        ("shed_slow_clients", Json::Num(s.shed_slow_clients as f64)),
+        ("expired_queued", Json::Num(s.expired_queued as f64)),
+        ("expired_running", Json::Num(s.expired_running as f64)),
+        ("lane_panics", Json::Num(s.lane_panics as f64)),
+        ("watchdog_stalls", Json::Num(s.watchdog_stalls as f64)),
+    ])
 }
 
 fn handle_conn(
@@ -213,13 +339,54 @@ fn handle_conn(
     ids: &AtomicU64,
     stop: &AtomicBool,
 ) -> Result<()> {
+    // Deterministic chaos hook (`QTIP_FAULT=<seed>:io_err=<rate>`): fail the
+    // connection before any protocol work, exactly like a peer reset.
+    if let Some(plan) = fault::global() {
+        if plan.fire(fault::IO_ERR) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "injected frontend IO error",
+            )
+            .into());
+        }
+    }
     stream.set_nodelay(true).ok();
     // Bounded reads: a connection parked on an idle client must re-check the
     // stop flag periodically, or frontend shutdown would hang in join() on
     // every open socket and the server could never drain and report stats.
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
-    let Some(req) = read_request(&mut stream, stop)? else {
-        return Ok(());
+    // Slow-client backpressure: a peer that accepts the connection but stops
+    // draining its socket blocks this connection thread, never the batcher —
+    // and only for as long as the write timeout allows.
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let req = match read_request(&mut stream, stop, READ_DEADLINE)? {
+        ReadOutcome::Req(r) => r,
+        ReadOutcome::Closed => return Ok(()),
+        ReadOutcome::TooLarge => {
+            let body = Json::obj(vec![
+                (
+                    "error",
+                    Json::Str(format!(
+                        "request exceeds caps ({MAX_BODY_BYTES} byte body, {MAX_HEAD_BYTES} byte head)"
+                    )),
+                ),
+                ("code", Json::Str(codes::PAYLOAD_TOO_LARGE.into())),
+            ]);
+            return write_response(&mut stream, 413, "Payload Too Large", &body);
+        }
+        ReadOutcome::TimedOut => {
+            let body = Json::obj(vec![
+                (
+                    "error",
+                    Json::Str(format!(
+                        "request did not complete within {} ms",
+                        READ_DEADLINE.as_millis()
+                    )),
+                ),
+                ("code", Json::Str(codes::READ_TIMEOUT.into())),
+            ]);
+            return write_response(&mut stream, 408, "Request Timeout", &body);
+        }
     };
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/generate") => serve_generate(&req.body, server, ids, &mut stream),
@@ -234,10 +401,36 @@ fn handle_conn(
             ]);
             write_response(&mut stream, 200, "OK", &body)
         }
-        ("GET", "/health") => {
-            let body = Json::obj(vec![("status", Json::Str("ok".into()))]);
-            write_response(&mut stream, 200, "OK", &body)
-        }
+        ("GET", "/health") => match server.health() {
+            Some(h) if h.all_failed() => {
+                write_response(&mut stream, 503, "Service Unavailable", &health_json(&h))
+            }
+            Some(h) => write_response(&mut stream, 200, "OK", &health_json(&h)),
+            None => {
+                // The serving thread did not answer the probe: wedged or gone.
+                let body = Json::obj(vec![
+                    ("status", Json::Str("unavailable".into())),
+                    (
+                        "error",
+                        Json::Str("health probe timed out: serving thread unresponsive".into()),
+                    ),
+                ]);
+                write_response(&mut stream, 503, "Service Unavailable", &body)
+            }
+        },
+        ("GET", "/v1/stats") => match server.stats_snapshot() {
+            Some(s) => write_response(&mut stream, 200, "OK", &stats_json(&s)),
+            None => {
+                let body = Json::obj(vec![
+                    (
+                        "error",
+                        Json::Str("stats probe timed out: serving thread unresponsive".into()),
+                    ),
+                    ("code", Json::Str(codes::SERVER_SHUTDOWN.into())),
+                ]);
+                write_response(&mut stream, 503, "Service Unavailable", &body)
+            }
+        },
         (method, path) => write_response(
             &mut stream,
             404,
@@ -263,6 +456,7 @@ fn serve_generate(
             let body = Json::obj(vec![
                 ("id", Json::Num(id as f64)),
                 ("error", Json::Str("bad request: body is not valid JSON".into())),
+                ("code", Json::Str(codes::BAD_REQUEST.into())),
             ]);
             return write_response(stream, 400, "Bad Request", &body);
         }
@@ -278,6 +472,7 @@ fn serve_generate(
         top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
         seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
         model: j.get("model").and_then(|m| m.as_str()).unwrap_or("").to_string(),
+        deadline_ms: j.get("deadline_ms").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
     };
 
     if stream_mode {
@@ -459,7 +654,14 @@ mod tests {
 
         let health = http(fe.addr, "GET", "/health", "");
         assert_eq!(status_of(&health), 200);
-        assert_eq!(body_of(&health).get("status").unwrap().as_str(), Some("ok"));
+        let h = body_of(&health);
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        let lanes = h.get("lanes").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 2, "one health entry per lane: {health}");
+        for lane in lanes {
+            assert_eq!(lane.get("healthy").unwrap().as_bool(), Some(true));
+            assert!(lane.get("kv_blocks_free").unwrap().as_usize().unwrap() > 0);
+        }
 
         let missing = http(fe.addr, "GET", "/nope", "");
         assert_eq!(status_of(&missing), 404);
@@ -504,7 +706,85 @@ mod tests {
         let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
         let resp = http(fe.addr, "POST", "/v1/generate", "{not json");
         assert_eq!(status_of(&resp), 400);
-        assert!(body_of(&resp).get("error").is_some());
+        let j = body_of(&resp);
+        assert!(j.get("error").is_some());
+        assert_eq!(j.get("code").unwrap().as_str(), Some(codes::BAD_REQUEST));
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_unknown_model_carries_code_and_404() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        let resp = http(
+            fe.addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "x", "max_new_tokens": 2, "model": "nope"}"#,
+        );
+        assert_eq!(status_of(&resp), 404, "{resp}");
+        assert_eq!(body_of(&resp).get("code").unwrap().as_str(), Some(codes::UNKNOWN_MODEL));
+        fe.shutdown();
+    }
+
+    #[test]
+    fn http_oversized_content_length_is_413_not_silent_close() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        // Declare a body over MAX_BODY_BYTES without sending it: the server
+        // must answer 413 off the head alone, not hang waiting or just close.
+        let mut s = TcpStream::connect(fe.addr).unwrap();
+        write!(
+            s,
+            "POST /v1/generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert_eq!(status_of(&out), 413, "{out}");
+        assert_eq!(body_of(&out).get("code").unwrap().as_str(), Some(codes::PAYLOAD_TOO_LARGE));
+        fe.shutdown();
+    }
+
+    #[test]
+    fn read_request_times_out_on_slow_loris() {
+        // Unit-level: a client that sends a partial head and then stalls must
+        // hit ReadOutcome::TimedOut once the deadline passes, not pin the
+        // connection thread forever. Exercised directly so the test can use a
+        // short deadline instead of the production READ_DEADLINE.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        write!(client, "POST /v1/generate HTT").unwrap();
+        client.flush().unwrap();
+        server_side
+            .set_read_timeout(Some(std::time::Duration::from_millis(10)))
+            .unwrap();
+        let stop = AtomicBool::new(false);
+        let out =
+            read_request(&mut server_side, &stop, std::time::Duration::from_millis(60)).unwrap();
+        assert!(matches!(out, ReadOutcome::TimedOut), "partial head must time out");
+        drop(client);
+    }
+
+    #[test]
+    fn http_stats_endpoint_reports_serving_counters() {
+        let fe = HttpFrontend::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+        let gen = http(
+            fe.addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "x", "max_new_tokens": 3, "temperature": 0}"#,
+        );
+        assert_eq!(status_of(&gen), 200);
+        let resp = http(fe.addr, "GET", "/v1/stats", "");
+        assert_eq!(status_of(&resp), 200, "{resp}");
+        let j = body_of(&resp);
+        assert!(j.get("completed").unwrap().as_usize().unwrap() >= 1, "{resp}");
+        assert_eq!(j.get("shed_queue_full").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("lane_panics").unwrap().as_usize(), Some(0));
+        assert!(j.get("kv_layout").unwrap().as_str().is_some());
         fe.shutdown();
     }
 

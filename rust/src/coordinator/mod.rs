@@ -12,5 +12,8 @@ pub use http::HttpFrontend;
 pub use pipeline::{
     layer_seed, quantize_model_baseline, quantize_model_qtip, LayerReport, QuantizeReport,
 };
-pub use server::{GenRequest, GenResponse, ServerConfig, ServerHandle, ServerStats, StreamEvent};
+pub use server::{
+    codes, GenError, GenRequest, GenResponse, HealthSnapshot, LaneHealth, ServerConfig,
+    ServerHandle, ServerStats, StreamEvent,
+};
 pub use tcp::TcpFrontend;

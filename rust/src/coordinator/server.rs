@@ -30,8 +30,11 @@
 //! receiver cancels implicitly and frees the sequence's blocks immediately.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::model::kv::{
     chain_hash, resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, PrefixIndex,
@@ -39,6 +42,7 @@ use crate::model::kv::{
 };
 use crate::model::transformer::{DecodeScratch, Transformer};
 use crate::model::ByteTokenizer;
+use crate::util::fault::{self, FaultPlan};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ExecPool;
 
@@ -56,6 +60,12 @@ pub struct GenRequest {
     /// Empty routes to the default (first) model; an unknown name is rejected
     /// with a structured error response.
     pub model: String,
+    /// Wall-clock budget for the whole request in milliseconds, measured from
+    /// submission. `0` falls back to [`ServerConfig::default_deadline_ms`]
+    /// (which may itself be 0 = no deadline). Enforced at admission, while
+    /// queued, and at every decode round; expiry delivers a structured
+    /// [`codes::DEADLINE_EXCEEDED`] error and frees KV blocks the same round.
+    pub deadline_ms: u64,
 }
 
 impl Default for GenRequest {
@@ -68,7 +78,47 @@ impl Default for GenRequest {
             top_k: 1,
             seed: 0,
             model: String::new(),
+            deadline_ms: 0,
         }
+    }
+}
+
+/// Machine-readable error codes carried by every rejection ([`GenError::code`]).
+/// Frontends map these to HTTP statuses (`http::status_for`); clients branch
+/// on the code, never on message text.
+pub mod codes {
+    /// Malformed request (unparseable JSON, missing fields).
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// The request's `model` field names no configured lane.
+    pub const UNKNOWN_MODEL: &str = "unknown_model";
+    /// The request's lifetime KV needs exceed the lane's whole memory budget.
+    pub const KV_BUDGET: &str = "kv_budget";
+    /// Bounded admission: the lane's waiting queue is at `--max-queue`.
+    pub const QUEUE_FULL: &str = "queue_full";
+    /// The request's deadline expired (queued or mid-decode).
+    pub const DEADLINE_EXCEEDED: &str = "deadline_exceeded";
+    /// The lane's decode panicked; the lane is marked unhealthy.
+    pub const LANE_FAILED: &str = "lane_failed";
+    /// The server is draining and no longer accepts work.
+    pub const SERVER_SHUTDOWN: &str = "server_shutdown";
+    /// HTTP front door: body larger than the configured cap (413).
+    pub const PAYLOAD_TOO_LARGE: &str = "payload_too_large";
+    /// HTTP front door: the client trickled the request past the read
+    /// deadline (slow-loris defense, 408).
+    pub const READ_TIMEOUT: &str = "read_timeout";
+}
+
+/// A structured rejection: a stable machine-readable `code` (one of
+/// [`codes`]) plus a human-oriented message.
+#[derive(Clone, Debug)]
+pub struct GenError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for GenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}]", self.message, self.code)
     }
 }
 
@@ -83,13 +133,14 @@ pub struct GenResponse {
     pub ttft: f64,
     pub total_secs: f64,
     pub decode_tok_per_sec: f64,
-    /// Set when the request was rejected instead of served (e.g. its KV needs
-    /// can never fit the server's memory budget). All other fields are zeroed.
-    pub error: Option<String>,
+    /// Set when the request was rejected or failed instead of served (e.g.
+    /// its KV needs can never fit the budget, its deadline expired, or its
+    /// lane panicked). All other fields are zeroed.
+    pub error: Option<GenError>,
 }
 
 impl GenResponse {
-    fn rejected(id: u64, reason: String) -> GenResponse {
+    fn rejected(id: u64, code: &'static str, message: String) -> GenResponse {
         GenResponse {
             id,
             text: String::new(),
@@ -98,7 +149,7 @@ impl GenResponse {
             ttft: 0.0,
             total_secs: 0.0,
             decode_tok_per_sec: 0.0,
-            error: Some(reason),
+            error: Some(GenError { code, message }),
         }
     }
 }
@@ -158,10 +209,13 @@ fn utf8_flush(pending: &[u8]) -> (usize, String) {
 /// sampling always sees logits over the real vocabulary (byte 0 acts as BOS).
 const BOS_FALLBACK: u16 = 0;
 
-/// Where a request's output goes.
+/// Where a request's output goes. Streams are **bounded**
+/// ([`ServerConfig::stream_buffer`]): the batcher only ever `try_send`s into
+/// them, so one stalled client can neither grow memory unboundedly nor block
+/// the round for everyone else.
 enum Sink {
     Unary(Sender<GenResponse>),
-    Stream(Sender<StreamEvent>),
+    Stream(SyncSender<StreamEvent>),
 }
 
 impl Sink {
@@ -171,7 +225,11 @@ impl Sink {
                 let _ = tx.send(resp);
             }
             Sink::Stream(tx) => {
-                let _ = tx.send(StreamEvent::Done(resp));
+                // Non-blocking even for the terminal event: a client that let
+                // its bounded buffer fill loses the Done and observes the
+                // disconnect when the sink drops instead — the batcher never
+                // waits on a slow reader.
+                let _ = tx.try_send(StreamEvent::Done(resp));
             }
         }
     }
@@ -190,10 +248,14 @@ struct Pending {
     text_emitted: usize,
     admitted_at: Option<std::time::Instant>,
     first_token_at: Option<std::time::Instant>,
+    /// Resolved once at submission (request field, else the server default);
+    /// carried across eviction/re-queue so a restart never extends the budget.
+    deadline: Option<Instant>,
+    submitted_at: Instant,
 }
 
 impl Pending {
-    fn new(req: GenRequest, sink: Sink) -> Pending {
+    fn new(req: GenRequest, sink: Sink, deadline: Option<Instant>) -> Pending {
         Pending {
             req,
             sink,
@@ -201,6 +263,8 @@ impl Pending {
             text_emitted: 0,
             admitted_at: None,
             first_token_at: None,
+            deadline,
+            submitted_at: Instant::now(),
         }
     }
 }
@@ -248,6 +312,9 @@ struct Active {
     /// finisher's blocks instead of forcing an eviction; cleared (and the
     /// sequence skipped) by the next round.
     stalled: bool,
+    /// Expiry instant (None = no deadline); checked before every round.
+    deadline: Option<Instant>,
+    submitted_at: Instant,
 }
 
 impl Active {
@@ -301,6 +368,29 @@ pub struct ServerConfig {
     /// are bit-identical with sharing on or off; off exists for A/B
     /// benchmarking and as a hedge.
     pub prefix_share: bool,
+    /// Bounded admission: per-lane waiting-queue depth above which new
+    /// submissions are shed immediately with [`codes::QUEUE_FULL`] (HTTP 429)
+    /// instead of queueing forever. `0` = unbounded (the pre-hardening
+    /// behavior).
+    pub max_queue: usize,
+    /// Default per-request deadline in milliseconds applied when a request
+    /// leaves [`GenRequest::deadline_ms`] at 0. `0` = no default deadline.
+    pub default_deadline_ms: u64,
+    /// Bounded per-stream token buffer (events). The batcher only `try_send`s
+    /// into stream sinks: a client that falls this many events behind is
+    /// cancelled ([`ServerStats::shed_slow_clients`]) rather than buffered
+    /// unboundedly. Clamped to ≥ 1.
+    pub stream_buffer: usize,
+    /// Round watchdog: if the batcher sits inside the same round for longer
+    /// than this many milliseconds, a diagnosis with per-lane state is logged
+    /// (once per stuck round) and [`ServerStats::watchdog_stalls`] counts it.
+    /// `0` disables the watchdog.
+    pub watchdog_ms: u64,
+    /// Deterministic fault-injection plan for chaos tests. `None` falls back
+    /// to the process-wide `QTIP_FAULT` plan ([`fault::global`]), which is
+    /// itself `None` when the variable is unset — the production case, where
+    /// every injection point is a never-taken branch.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -312,6 +402,11 @@ impl Default for ServerConfig {
             kv_layout: KvLayout::Auto,
             kv_block: 0,
             prefix_share: true,
+            max_queue: 0,
+            default_deadline_ms: 0,
+            stream_buffer: 256,
+            watchdog_ms: 10_000,
+            fault: None,
         }
     }
 }
@@ -370,6 +465,25 @@ pub struct ServerStats {
     /// Decode-kernel family of the served model's quantized layers
     /// (`"scalar"` | `"lanes"`; `"dense"` when no layer is quantized).
     pub kernel: String,
+    /// Requests shed at submission because the lane's queue was at
+    /// `--max-queue` ([`codes::QUEUE_FULL`]); not counted in `rejected`.
+    pub shed_queue_full: usize,
+    /// Streaming requests cancelled because the client fell a full
+    /// `stream_buffer` behind the generated tokens (also counted in
+    /// `cancelled`, like any other mid-flight cancellation).
+    pub shed_slow_clients: usize,
+    /// Requests whose deadline expired while still waiting in the queue.
+    pub expired_queued: usize,
+    /// Requests whose deadline expired mid-decode (their KV blocks were
+    /// freed the same round).
+    pub expired_running: usize,
+    /// Lanes poisoned by a panic inside their decode round; each one failed
+    /// its in-flight requests with [`codes::LANE_FAILED`] and stopped
+    /// admitting, while the batcher kept serving the other lanes.
+    pub lane_panics: usize,
+    /// Rounds the watchdog flagged as stuck (no progress for
+    /// [`ServerConfig::watchdog_ms`]).
+    pub watchdog_stalls: usize,
 }
 
 impl ServerStats {
@@ -385,9 +499,152 @@ impl ServerStats {
     }
 }
 
+/// Per-lane readiness, as reported by [`ServerHandle::health`] and
+/// `GET /health`.
+#[derive(Clone, Debug)]
+pub struct LaneHealth {
+    pub name: String,
+    /// False once the lane was poisoned by a decode panic.
+    pub healthy: bool,
+    /// Sequences currently resident (prefilling or decoding).
+    pub active: usize,
+    /// Requests waiting in the lane's admission queue.
+    pub queued: usize,
+    /// Free / total KV arena blocks (0/0 under the contiguous layout, whose
+    /// admission is budget- rather than block-accounted).
+    pub kv_blocks_free: usize,
+    pub kv_blocks_total: usize,
+}
+
+/// Snapshot answered by [`ServerHandle::health`]: real readiness, not a
+/// constant "ok".
+#[derive(Clone, Debug)]
+pub struct HealthSnapshot {
+    pub lanes: Vec<LaneHealth>,
+}
+
+impl HealthSnapshot {
+    /// Every lane is poisoned: the server can make no progress (503).
+    pub fn all_failed(&self) -> bool {
+        self.lanes.iter().all(|l| !l.healthy)
+    }
+
+    /// At least one lane is poisoned (reported as "degraded", still 200:
+    /// the healthy lanes keep serving).
+    pub fn degraded(&self) -> bool {
+        self.lanes.iter().any(|l| !l.healthy)
+    }
+}
+
+/// State shared between the serving thread and its watchdog. The serving
+/// thread bumps `beat` after every completed pass over the lanes and flips
+/// `busy` around the decode rounds; the watchdog alarms when `busy` holds and
+/// `beat` has not advanced for `watchdog_ms` — a stuck round (deadlocked
+/// pool, wedged kernel, injected stall), diagnosed with the per-lane state
+/// captured at round entry. SeqCst throughout: this is cold telemetry, not a
+/// hot path.
+struct WatchdogShared {
+    stop: AtomicBool,
+    beat: AtomicU64,
+    busy: AtomicBool,
+    alarms: AtomicU64,
+    lanes: Mutex<Vec<(String, usize, usize, bool)>>,
+}
+
+struct Watchdog {
+    shared: Arc<WatchdogShared>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Watchdog {
+    /// Spawn the watchdog thread; `watchdog_ms == 0` disables it (no thread).
+    fn spawn(watchdog_ms: u64) -> Watchdog {
+        let shared = Arc::new(WatchdogShared {
+            stop: AtomicBool::new(false),
+            beat: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+            alarms: AtomicU64::new(0),
+            lanes: Mutex::new(Vec::new()),
+        });
+        if watchdog_ms == 0 {
+            return Watchdog { shared, join: None };
+        }
+        let sh = Arc::clone(&shared);
+        let join = std::thread::spawn(move || {
+            let poll = Duration::from_millis((watchdog_ms / 4).clamp(5, 250));
+            let limit = Duration::from_millis(watchdog_ms);
+            let mut last_beat = sh.beat.load(Ordering::SeqCst);
+            let mut since = Instant::now();
+            let mut alarmed = false;
+            loop {
+                std::thread::sleep(poll);
+                if sh.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let beat = sh.beat.load(Ordering::SeqCst);
+                if beat != last_beat || !sh.busy.load(Ordering::SeqCst) {
+                    last_beat = beat;
+                    since = Instant::now();
+                    alarmed = false;
+                    continue;
+                }
+                if !alarmed && since.elapsed() > limit {
+                    alarmed = true;
+                    sh.alarms.fetch_add(1, Ordering::SeqCst);
+                    let lanes = sh.lanes.lock().unwrap();
+                    eprintln!(
+                        "[watchdog] round stuck for {:.0} ms (beat {beat}); per-lane state:",
+                        since.elapsed().as_secs_f64() * 1e3
+                    );
+                    for (name, active, waiting, failed) in lanes.iter() {
+                        eprintln!(
+                            "[watchdog]   lane '{name}': {active} active, {waiting} queued{}",
+                            if *failed { ", FAILED" } else { "" }
+                        );
+                    }
+                }
+            }
+        });
+        Watchdog { shared, join: Some(join) }
+    }
+
+    /// Entering the decode rounds: snapshot lane state for the diagnosis.
+    fn enter_rounds(&self, lanes: &[Lane]) {
+        if self.join.is_none() {
+            return;
+        }
+        *self.shared.lanes.lock().unwrap() = lanes
+            .iter()
+            .map(|l| (l.name.clone(), l.active.len(), l.waiting.len(), l.failed))
+            .collect();
+        self.shared.busy.store(true, Ordering::SeqCst);
+    }
+
+    /// Rounds completed: progress was made.
+    fn exit_rounds(&self) {
+        self.shared.beat.fetch_add(1, Ordering::SeqCst);
+        self.shared.busy.store(false, Ordering::SeqCst);
+    }
+
+    fn alarms(&self) -> usize {
+        self.shared.alarms.load(Ordering::SeqCst) as usize
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
 enum Msg {
     Submit(GenRequest, Sink),
     Cancel(u64),
+    Health(Sender<HealthSnapshot>),
+    Stats(Sender<ServerStats>),
     Shutdown(Sender<ServerStats>),
 }
 
@@ -396,6 +653,8 @@ pub struct ServerHandle {
     tx: Sender<Msg>,
     join: Option<std::thread::JoinHandle<()>>,
     models: Vec<String>,
+    /// Capacity of each stream sink (from [`ServerConfig::stream_buffer`]).
+    stream_buffer: usize,
 }
 
 impl ServerHandle {
@@ -419,8 +678,9 @@ impl ServerHandle {
             assert!(!names[..i].contains(n), "duplicate model name '{n}'");
         }
         let (tx, rx) = channel::<Msg>();
+        let stream_buffer = cfg.stream_buffer.max(1);
         let join = std::thread::spawn(move || serve_loop(models, cfg, rx));
-        ServerHandle { tx, join: Some(join), models: names }
+        ServerHandle { tx, join: Some(join), models: names, stream_buffer }
     }
 
     /// Names of the served models in registration order; index 0 is the
@@ -439,9 +699,12 @@ impl ServerHandle {
     /// Submit a request and receive tokens incrementally as they are
     /// produced, terminated by [`StreamEvent::Done`]. Dropping the receiver
     /// cancels the request: the scheduler notices the dead stream at its next
-    /// token and frees the sequence's KV blocks immediately.
+    /// token and frees the sequence's KV blocks immediately. The channel is
+    /// bounded ([`ServerConfig::stream_buffer`]): a client that stops reading
+    /// and lets it fill is cancelled (the stream ends without a `Done`, like
+    /// a reset) instead of buffering tokens unboundedly.
     pub fn submit_stream(&self, req: GenRequest) -> Receiver<StreamEvent> {
-        let (tx, rx) = channel();
+        let (tx, rx) = sync_channel(self.stream_buffer);
         self.tx.send(Msg::Submit(req, Sink::Stream(tx))).expect("server gone");
         rx
     }
@@ -451,6 +714,23 @@ impl ServerHandle {
     /// reclaims its KV blocks; no response is sent.
     pub fn cancel(&self, id: u64) {
         let _ = self.tx.send(Msg::Cancel(id));
+    }
+
+    /// Real readiness: per-lane health, queue depth, and free KV blocks.
+    /// `None` when the serving thread is gone or wedged (did not answer
+    /// within the probe timeout) — callers should report unavailable.
+    pub fn health(&self) -> Option<HealthSnapshot> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Health(tx)).ok()?;
+        rx.recv_timeout(Duration::from_secs(2)).ok()
+    }
+
+    /// Point-in-time [`ServerStats`] snapshot without shutting down. Same
+    /// `None`-when-wedged contract as [`Self::health`].
+    pub fn stats_snapshot(&self) -> Option<ServerStats> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Stats(tx)).ok()?;
+        rx.recv_timeout(Duration::from_secs(2)).ok()
     }
 
     /// Graceful shutdown: drains in-flight work, returns aggregate stats.
@@ -478,6 +758,24 @@ enum KvBackend {
         /// token ids only identify content within one tokenizer/model pair.
         prefix: Option<PrefixIndex>,
     },
+}
+
+impl KvBackend {
+    /// Free / total arena blocks for health reporting (0/0 for the
+    /// contiguous layout, whose admission is budget-accounted instead).
+    fn blocks_free(&self) -> usize {
+        match self {
+            KvBackend::Contig { .. } => 0,
+            KvBackend::Paged { arena, .. } => arena.blocks_free(),
+        }
+    }
+
+    fn blocks_total(&self) -> usize {
+        match self {
+            KvBackend::Contig { .. } => 0,
+            KvBackend::Paged { arena, .. } => arena.blocks_total(),
+        }
+    }
 }
 
 /// Return a retired/evicted/cancelled sequence's KV residency to its backend.
@@ -523,6 +821,14 @@ struct Lane {
     step_idx: Vec<usize>,
     step_tokens: Vec<u16>,
     finished: Vec<usize>,
+    /// Poisoned by a panic inside this lane's round: in-flight work was
+    /// failed with [`codes::LANE_FAILED`], the backend is abandoned (its
+    /// arena may have been mid-mutation), and the lane neither admits nor
+    /// decodes again. Other lanes are unaffected.
+    failed: bool,
+    /// Fault-injection plan (config override, else the `QTIP_FAULT` process
+    /// plan, else None = production).
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Lane {
@@ -534,6 +840,7 @@ impl Lane {
     ) -> Lane {
         let max_batch = cfg.max_batch.max(1);
         let max_seq = model.cfg.max_seq;
+        let fault = cfg.fault.clone().or_else(|| fault::global().cloned());
         let backend = match cfg.kv_layout.resolve() {
             KvLayout::Contig => KvBackend::Contig {
                 free: Vec::new(),
@@ -550,8 +857,12 @@ impl Lane {
                 let n_blocks = by_budget.min(by_batch);
                 stats.kv_block_positions = block;
                 stats.kv_blocks_total += n_blocks;
+                let mut arena = KvArena::new(&model.cfg, block, n_blocks);
+                if let Some(plan) = &fault {
+                    arena.set_fault_plan(Arc::clone(plan));
+                }
                 KvBackend::Paged {
-                    arena: KvArena::new(&model.cfg, block, n_blocks),
+                    arena,
                     block_bytes,
                     prefix: cfg.prefix_share.then(PrefixIndex::new),
                 }
@@ -569,6 +880,8 @@ impl Lane {
             step_idx: Vec::new(),
             step_tokens: Vec::new(),
             finished: Vec::new(),
+            failed: false,
+            fault,
         }
     }
 
@@ -579,6 +892,15 @@ impl Lane {
     /// queued forever: the loop would busy-spin and shutdown would never
     /// drain.)
     fn submit(&mut self, req: GenRequest, sink: Sink, cfg: &ServerConfig, stats: &mut ServerStats) {
+        if self.failed {
+            stats.rejected += 1;
+            sink.send_done(GenResponse::rejected(
+                req.id,
+                codes::LANE_FAILED,
+                format!("model lane '{}' failed (panic during decode)", self.name),
+            ));
+            return;
+        }
         let reject = match &self.backend {
             KvBackend::Contig { per_seq_bytes, .. } if *per_seq_bytes > cfg.kv_budget_bytes => {
                 Some(format!(
@@ -604,13 +926,34 @@ impl Lane {
             }
             _ => None,
         };
-        match reject {
-            Some(reason) => {
-                stats.rejected += 1;
-                sink.send_done(GenResponse::rejected(req.id, reason));
-            }
-            None => self.waiting.push_back(Pending::new(req, sink)),
+        if let Some(reason) = reject {
+            stats.rejected += 1;
+            sink.send_done(GenResponse::rejected(req.id, codes::KV_BUDGET, reason));
+            return;
         }
+        // Bounded admission: shed instead of queueing forever. Checked after
+        // the can-ever-fit verdict so an unservable request reports its real
+        // problem, not transient queue depth.
+        if cfg.max_queue > 0 && self.waiting.len() >= cfg.max_queue {
+            stats.shed_queue_full += 1;
+            sink.send_done(GenResponse::rejected(
+                req.id,
+                codes::QUEUE_FULL,
+                format!(
+                    "lane '{}' admission queue is full ({} waiting, --max-queue {})",
+                    self.name,
+                    self.waiting.len(),
+                    cfg.max_queue
+                ),
+            ));
+            return;
+        }
+        // Resolve the deadline once: request field, else the server default,
+        // else none. The queue scan and the per-round check both compare
+        // against this single instant, so eviction/restart never extends it.
+        let deadline_ms = if req.deadline_ms > 0 { req.deadline_ms } else { cfg.default_deadline_ms };
+        let deadline = (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
+        self.waiting.push_back(Pending::new(req, sink, deadline));
     }
 
     /// Cancel a queued or active request; true if it lived on this lane.
@@ -626,6 +969,84 @@ impl Lane {
             true
         } else {
             false
+        }
+    }
+
+    /// Deadline enforcement, run once per scheduler pass (i.e. at every round
+    /// boundary): queued requests past their deadline are rejected without
+    /// ever being admitted, and active sequences past theirs are retired with
+    /// a structured error — their KV blocks return to the arena *this* round,
+    /// not when the generation would have finished.
+    fn expire_deadlines(&mut self, stats: &mut ServerStats) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if self.waiting[i].deadline.is_some_and(|d| d <= now) {
+                let p = self.waiting.remove(i).expect("index checked");
+                stats.expired_queued += 1;
+                p.sink.send_done(GenResponse::rejected(
+                    p.req.id,
+                    codes::DEADLINE_EXCEEDED,
+                    format!(
+                        "deadline exceeded after {:.0} ms waiting in queue",
+                        p.submitted_at.elapsed().as_secs_f64() * 1e3
+                    ),
+                ));
+            } else {
+                i += 1;
+            }
+        }
+        let mut j = 0;
+        while j < self.active.len() {
+            if self.active[j].deadline.is_some_and(|d| d <= now) {
+                let a = self.active.remove(j);
+                release_seq(a.kv, &mut self.backend);
+                if a.dropped {
+                    stats.cancelled += 1;
+                    continue;
+                }
+                stats.expired_running += 1;
+                a.sink.send_done(GenResponse::rejected(
+                    a.req.id,
+                    codes::DEADLINE_EXCEEDED,
+                    format!(
+                        "deadline exceeded after {:.0} ms ({} of {} tokens generated)",
+                        a.submitted_at.elapsed().as_secs_f64() * 1e3,
+                        a.generated.len(),
+                        a.req.max_new_tokens
+                    ),
+                ));
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    /// A panic escaped this lane's round: fail everything in flight with a
+    /// structured error and stop admitting. The KV backend is deliberately
+    /// abandoned rather than drained — the panic may have interrupted an
+    /// arena mutation mid-way, so its free list can no longer be trusted.
+    /// Each lane owns its KV memory outright, so nothing leaks into the
+    /// still-healthy lanes, which keep serving.
+    fn poison(&mut self, stats: &mut ServerStats) {
+        self.failed = true;
+        stats.lane_panics += 1;
+        eprintln!(
+            "[serve] lane '{}' poisoned by a panic; failing {} active and {} queued request(s)",
+            self.name,
+            self.active.len(),
+            self.waiting.len()
+        );
+        let msg = || format!("model lane '{}' failed (panic during decode)", self.name);
+        for a in self.active.drain(..) {
+            if a.dropped {
+                stats.cancelled += 1;
+                continue;
+            }
+            a.sink.send_done(GenResponse::rejected(a.req.id, codes::LANE_FAILED, msg()));
+        }
+        for p in self.waiting.drain(..) {
+            p.sink.send_done(GenResponse::rejected(p.req.id, codes::LANE_FAILED, msg()));
         }
     }
 
@@ -713,8 +1134,15 @@ impl Lane {
                         arena.release(&mut seq);
                         break;
                     }
+                    // The free-list check above makes this succeed in normal
+                    // operation, but an injected kv_alloc fault (chaos tests)
+                    // can still fail it — undo and retry a later round, same
+                    // as the not-admittable-yet path.
                     let ok = arena.ensure(&mut seq, plen);
-                    debug_assert!(ok, "admission checked the free list");
+                    if !ok {
+                        arena.release(&mut seq);
+                        break;
+                    }
                     seq.len = shared_len;
                     if n_alias > 0 {
                         stats.prefix_hits += 1;
@@ -737,6 +1165,8 @@ impl Lane {
                 // total_secs span the whole lifetime, not just the restart.
                 admitted_at: p.admitted_at.unwrap_or_else(std::time::Instant::now),
                 first_token_at: p.first_token_at,
+                deadline: p.deadline,
+                submitted_at: p.submitted_at,
                 req: p.req,
                 sink: p.sink,
                 kv,
@@ -808,10 +1238,12 @@ impl Lane {
                         break;
                     }
                     debug_assert!(
-                        self.active.len() > 1,
+                        self.active.len() > 1 || self.fault.is_some(),
                         "a solo sequence always fits: admission rejects requests whose \
                          lifetime blocks exceed the whole arena and reserves the \
-                         copy-on-write block for a fully-shared prompt"
+                         copy-on-write block for a fully-shared prompt (an injected \
+                         kv_alloc fault is the one legitimate way to get here solo — \
+                         the sequence self-evicts below and is re-queued)"
                     );
                     // Evict the youngest sequence that is still prefilling or
                     // decoding — never one finishing this round, whose blocks
@@ -837,6 +1269,8 @@ impl Lane {
                         text_emitted: v.text_flushed,
                         admitted_at: Some(v.admitted_at),
                         first_token_at: v.first_token_at,
+                        deadline: v.deadline,
+                        submitted_at: v.submitted_at,
                     });
                     if victim == i {
                         evicted_self = true;
@@ -862,6 +1296,17 @@ impl Lane {
     /// and reclaiming their KV the same round.
     fn round(&mut self, pool: &ExecPool, tok: &ByteTokenizer, stats: &mut ServerStats) {
         let max_seq = self.max_seq;
+        // Chaos hooks: an injected stall exercises the watchdog; an injected
+        // panic exercises lane poisoning (caught by serve_loop's
+        // catch_unwind). Both are never-taken branches without a plan.
+        if let Some(plan) = &self.fault {
+            if plan.fire_keyed(fault::ROUND_STALL, &self.name) {
+                std::thread::sleep(Duration::from_millis(plan.stall_ms()));
+            }
+            if plan.fire_keyed(fault::DECODE_PANIC, &self.name) {
+                panic!("injected decode panic (lane '{}')", self.name);
+            }
+        }
         let round_start = std::time::Instant::now();
         self.finished.clear();
         self.step_idx.clear();
@@ -888,7 +1333,10 @@ impl Lane {
             if let Sink::Stream(txs) = &a.sink {
                 // Deliver the token the round it is produced. A dead receiver
                 // means the client is gone: cancel the sequence so its blocks
-                // free this round instead of decoding to completion.
+                // free this round instead of decoding to completion. A *full*
+                // buffer means the client stopped reading: cancel it too
+                // (slow-client backpressure) — the batcher never blocks on a
+                // reader and never buffers more than `stream_buffer` events.
                 if idx >= a.stream_sent {
                     // Text = whatever newly-complete UTF-8 the byte stream now
                     // holds (a multi-byte character split across tokens is
@@ -899,13 +1347,23 @@ impl Lane {
                         .collect();
                     let (consumed, text) = utf8_flush(&pending);
                     let ev = StreamEvent::Token { id: a.req.id, index: idx, token: t, text };
-                    if txs.send(ev).is_err() {
-                        a.dropped = true;
-                        self.finished.push(i);
-                        continue;
+                    match txs.try_send(ev) {
+                        Ok(()) => {
+                            a.stream_sent = idx + 1;
+                            a.text_flushed += consumed;
+                        }
+                        Err(TrySendError::Full(_)) => {
+                            stats.shed_slow_clients += 1;
+                            a.dropped = true;
+                            self.finished.push(i);
+                            continue;
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            a.dropped = true;
+                            self.finished.push(i);
+                            continue;
+                        }
                     }
-                    a.stream_sent = idx + 1;
-                    a.text_flushed += consumed;
                 }
             }
             let done = a.generated.len() >= a.req.max_new_tokens
@@ -1078,6 +1536,8 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
     // per-lane scratch arenas mean the model forwards allocate nothing per
     // round.
     let pool = ExecPool::new(cfg.threads);
+    // Stuck-round detector; its Drop joins the thread on every return path.
+    let watchdog = Watchdog::spawn(cfg.watchdog_ms);
     stats.workers = pool.width();
     stats.kv_layout = cfg.kv_layout.resolve().name().to_string();
     let mut lanes: Vec<Lane> = models
@@ -1109,6 +1569,15 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
             };
             match msg {
                 Msg::Submit(req, sink) => {
+                    if shutting_down.is_some() {
+                        stats.rejected += 1;
+                        sink.send_done(GenResponse::rejected(
+                            req.id,
+                            codes::SERVER_SHUTDOWN,
+                            "server is shutting down".to_string(),
+                        ));
+                        continue;
+                    }
                     // Route on the request's model field: empty selects the
                     // default (first) lane; an unknown name is a structured
                     // rejection, mirroring the admission-time verdicts.
@@ -1128,6 +1597,7 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
                                 .join(", ");
                             sink.send_done(GenResponse::rejected(
                                 req.id,
+                                codes::UNKNOWN_MODEL,
                                 format!("unknown model '{}' (available: {avail})", req.model),
                             ));
                         }
@@ -1140,6 +1610,26 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
                         }
                     }
                 }
+                Msg::Health(tx) => {
+                    let snapshot = HealthSnapshot {
+                        lanes: lanes
+                            .iter()
+                            .map(|l| LaneHealth {
+                                name: l.name.clone(),
+                                healthy: !l.failed,
+                                active: l.active.len(),
+                                queued: l.waiting.len(),
+                                kv_blocks_free: l.backend.blocks_free(),
+                                kv_blocks_total: l.backend.blocks_total(),
+                            })
+                            .collect(),
+                    };
+                    let _ = tx.send(snapshot);
+                }
+                Msg::Stats(tx) => {
+                    stats.watchdog_stalls = watchdog.alarms();
+                    let _ = tx.send(stats.clone());
+                }
                 Msg::Shutdown(tx) => shutting_down = Some(tx),
             }
         }
@@ -1147,8 +1637,19 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
             .queue_high_water
             .max(lanes.iter().map(|l| l.waiting.len()).sum());
 
+        // Deadline sweep + admission, panic-isolated per lane: a panic while
+        // a lane manipulates its own arena poisons that lane only.
         for lane in &mut lanes {
-            lane.admit(&cfg, &tok, &mut stats);
+            if lane.failed {
+                continue;
+            }
+            let ok = catch_unwind(AssertUnwindSafe(|| {
+                lane.expire_deadlines(&mut stats);
+                lane.admit(&cfg, &tok, &mut stats);
+            }));
+            if ok.is_err() {
+                lane.poison(&mut stats);
+            }
         }
         let total_active: usize = lanes.iter().map(|l| l.active.len()).sum();
         stats.peak_batch = stats.peak_batch.max(total_active);
@@ -1157,6 +1658,7 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
         if total_active == 0 {
             if let Some(tx) = shutting_down.take() {
                 if lanes.iter().all(|l| l.waiting.is_empty()) {
+                    stats.watchdog_stalls = watchdog.alarms();
                     let _ = tx.send(stats.clone());
                     return;
                 }
@@ -1165,13 +1667,26 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
             continue;
         }
 
+        // Decode rounds, panic-isolated per lane: `catch_unwind` confines an
+        // escaped panic (a kernel bug, or an injected `decode_panic` fault)
+        // to the lane whose round raised it — its requests fail with
+        // structured errors and the other lanes keep serving. The watchdog
+        // brackets the rounds so a wedged round (as opposed to a panicking
+        // one) gets diagnosed with the lane state captured on entry.
+        watchdog.enter_rounds(&lanes);
         for lane in &mut lanes {
-            if lane.active.is_empty() {
+            if lane.failed || lane.active.is_empty() {
                 continue;
             }
-            lane.capacity_phase(&mut stats);
-            lane.round(&pool, &tok, &mut stats);
+            let ok = catch_unwind(AssertUnwindSafe(|| {
+                lane.capacity_phase(&mut stats);
+                lane.round(&pool, &tok, &mut stats);
+            }));
+            if ok.is_err() {
+                lane.poison(&mut stats);
+            }
         }
+        watchdog.exit_rounds();
     }
 }
 
@@ -1199,6 +1714,7 @@ mod tests {
             top_k: 1,
             seed: id,
             model: String::new(),
+            deadline_ms: 0,
         }
     }
 
@@ -1339,7 +1855,9 @@ mod tests {
         );
         let resp = server.submit(req(3, "x", 4)).recv().unwrap();
         assert!(resp.error.is_some());
-        assert!(resp.error.unwrap().contains("budget"));
+        let err = resp.error.unwrap();
+        assert_eq!(err.code, codes::KV_BUDGET);
+        assert!(err.message.contains("budget"));
         let stats = server.shutdown();
         assert_eq!(stats.completed, 0);
         assert_eq!(stats.rejected, 1);
@@ -1593,6 +2111,7 @@ mod tests {
             top_k: 20,
             seed: 1234,
             model: String::new(),
+            deadline_ms: 0,
         };
         let a = server.submit(mk()).recv().unwrap();
         let b = server.submit(mk()).recv().unwrap();
@@ -1631,6 +2150,7 @@ mod tests {
                         top_k: 16,
                         seed: 99 + i,
                         model: String::new(),
+                        deadline_ms: 0,
                     })
                 })
                 .collect();
@@ -1708,8 +2228,12 @@ mod tests {
         bad.model = "gamma".into();
         let resp = server.submit(bad).recv().unwrap();
         let err = resp.error.expect("unknown model must yield a structured error");
-        assert!(err.contains("unknown model 'gamma'"), "error was: {err}");
-        assert!(err.contains("alpha") && err.contains("beta"), "error lists lanes: {err}");
+        assert_eq!(err.code, codes::UNKNOWN_MODEL);
+        assert!(err.message.contains("unknown model 'gamma'"), "error was: {err}");
+        assert!(
+            err.message.contains("alpha") && err.message.contains("beta"),
+            "error lists lanes: {err}"
+        );
 
         // Empty model field falls back to the default (first) lane.
         let default_out = server.submit(req(8, "x", 4)).recv().unwrap();

@@ -28,7 +28,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::server::{GenRequest, GenResponse, ServerHandle, StreamEvent};
+use super::server::{codes, GenRequest, GenResponse, ServerHandle, StreamEvent};
+use crate::util::fault;
 use crate::util::json::Json;
 
 pub struct TcpFrontend {
@@ -95,11 +96,26 @@ fn handle_conn(
     ids: &AtomicU64,
     stop: &AtomicBool,
 ) -> Result<()> {
+    // Chaos hook: a fired io_err drops the connection at accept, exercising
+    // the client-facing error paths without a flaky network.
+    if let Some(plan) = fault::global() {
+        if plan.fire(fault::IO_ERR) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "injected frontend IO error",
+            )
+            .into());
+        }
+    }
     stream.set_nodelay(true).ok();
     // Bounded reads: a connection parked on an idle client must re-check the
     // stop flag periodically, or frontend shutdown would hang in join() on
     // every open socket and the server could never drain and report stats.
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    // Bounded writes: a client that stops draining its socket gets a failed
+    // write (treated exactly like a disconnect — the request is cancelled)
+    // instead of parking this thread on a full send buffer indefinitely.
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     // Accumulate raw bytes, not a String: read_line's UTF-8 guard discards
@@ -192,6 +208,7 @@ fn serve_line(
             let resp = Json::obj(vec![
                 ("id", Json::Num(id as f64)),
                 ("error", Json::Str(format!("bad request: {e}"))),
+                ("code", Json::Str(codes::BAD_REQUEST.into())),
             ]);
             writeln!(writer, "{resp}")?;
             return Ok(());
@@ -206,6 +223,7 @@ fn serve_line(
         top_k: j.get("top_k").and_then(|v| v.as_usize()).unwrap_or(40),
         seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(id as f64) as u64,
         model: j.get("model").and_then(|m| m.as_str()).unwrap_or("").to_string(),
+        deadline_ms: j.get("deadline_ms").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
     };
 
     if stream_mode {
@@ -296,15 +314,20 @@ pub(super) fn server_gone_json(id: u64) -> Json {
     Json::obj(vec![
         ("id", Json::Num(id as f64)),
         ("error", Json::Str("server shut down before responding".into())),
+        ("code", Json::Str(codes::SERVER_SHUTDOWN.into())),
     ])
 }
 
 /// The terminal response object shared by unary and streaming requests (and
-/// by both wire front-ends).
+/// by both wire front-ends). Rejections carry both the human message
+/// (`"error"`) and the stable machine-readable `"code"` clients branch on.
 pub(super) fn final_json(r: GenResponse) -> Json {
     if let Some(err) = r.error {
-        // Rejected at admission (e.g. KV needs above the budget).
-        return Json::obj(vec![("id", Json::Num(r.id as f64)), ("error", Json::Str(err))]);
+        return Json::obj(vec![
+            ("id", Json::Num(r.id as f64)),
+            ("error", Json::Str(err.message)),
+            ("code", Json::Str(err.code.into())),
+        ]);
     }
     Json::obj(vec![
         ("id", Json::Num(r.id as f64)),
@@ -473,6 +496,7 @@ mod tests {
         let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
         let resp = roundtrip(fe.addr, "{not json");
         assert!(resp.get("error").is_some());
+        assert_eq!(resp.get("code").unwrap().as_str(), Some(codes::BAD_REQUEST));
         fe.shutdown();
     }
 
@@ -489,6 +513,7 @@ mod tests {
         let fe = TcpFrontend::spawn(server, "127.0.0.1:0").unwrap();
         let resp = roundtrip(fe.addr, r#"{"prompt": "x", "max_new_tokens": 4}"#);
         assert!(resp.get("error").unwrap().as_str().unwrap().contains("budget"));
+        assert_eq!(resp.get("code").unwrap().as_str(), Some(codes::KV_BUDGET));
         fe.shutdown();
     }
 

@@ -34,6 +34,13 @@
 //! auto); `info` prints the resolved selection. Scalar and lane kernels are
 //! bit-identical — the flag trades speed, never output.
 //!
+//! `serve` also takes the overload knobs `--max-queue N` (bound each lane's
+//! admission queue; overflow is shed immediately with a `queue_full`
+//! rejection instead of waiting, 0 = unbounded) and `--default-deadline MS`
+//! (deadline applied to requests that do not carry their own `deadline_ms`;
+//! expired requests fail with `deadline_exceeded` and free their KV blocks
+//! the same round, 0 = none).
+//!
 //! `serve` additionally takes `--kv-layout auto|contig|paged` (auto → paged:
 //! the block-arena continuous batcher; contig keeps the sequence-granular
 //! reference scheduler), `--kv-block N` for the arena geometry (precedence
@@ -367,6 +374,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         top_k: args.get_usize("top-k", 40),
         seed: args.get_u64("seed", 1),
         model: String::new(),
+        deadline_ms: 0,
     };
     let resp = server.submit(req).recv()?;
     if let Some(err) = resp.error {
@@ -414,6 +422,27 @@ fn print_server_stats(stats: &ServerStats) {
             stats.blocks_shared,
             stats.cow_copies,
             stats.stalls_instead_of_evictions
+        );
+    }
+    // Overload lines only when something actually happened — the nominal
+    // summary stays as short as it always was.
+    if stats.shed_queue_full + stats.shed_slow_clients + stats.expired_queued
+        + stats.expired_running
+        > 0
+    {
+        println!(
+            "  overload: {} shed (queue full), {} slow clients dropped, {} deadlines \
+             expired queued, {} expired mid-decode",
+            stats.shed_queue_full,
+            stats.shed_slow_clients,
+            stats.expired_queued,
+            stats.expired_running
+        );
+    }
+    if stats.lane_panics + stats.watchdog_stalls > 0 {
+        println!(
+            "  faults: {} lane panic(s) isolated, {} watchdog stall alarm(s)",
+            stats.lane_panics, stats.watchdog_stalls
         );
     }
 }
@@ -472,6 +501,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // Prefix sharing is on by default (bit-identical outputs either way);
         // --no-prefix-share keeps an A/B escape hatch for benchmarking.
         prefix_share: !args.has_flag("no-prefix-share"),
+        // Overload posture: queue bound (0 = unbounded) and the fallback
+        // deadline for requests that do not set their own `deadline_ms`.
+        max_queue: args.get_usize("max-queue", 0),
+        default_deadline_ms: args.get_u64("default-deadline", 0),
+        ..Default::default()
     };
     // Network mode: expose the batcher over newline-JSON TCP and/or HTTP+SSE
     // until Ctrl-C, then close the frontends, drain in-flight requests, and
@@ -531,6 +565,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 seed: i as u64,
                 // Demo requests round-robin across the served lanes.
                 model: lane_names[i % lane_names.len()].clone(),
+                deadline_ms: 0,
             })
         })
         .collect();
@@ -575,6 +610,7 @@ fn main() -> Result<()> {
                  [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
                  [--artifact NAME]... [--threads N] [--kernel auto|scalar|lanes] \
                  [--kv-layout auto|contig|paged] [--kv-block N] \
+                 [--max-queue N] [--default-deadline MS] \
                  [--tcp ADDR] [--http ADDR] [--allow-random] ..."
             );
             std::process::exit(2);

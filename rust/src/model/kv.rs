@@ -67,8 +67,10 @@
 //!   Mutex and re-checks the partition at every join point.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::model::config::ModelConfig;
+use crate::util::fault::{self, FaultPlan};
 use crate::util::matrix::Matrix;
 
 /// Default positions per KV block (tokens per acquired block).
@@ -228,6 +230,11 @@ pub struct KvArena {
     /// Always on (not debug-gated) — the sharing protocol's correctness
     /// hinges on it, and the counts are one `u32` per block.
     rc: Vec<u32>,
+    /// Deterministic fault schedule (chaos testing): when set, [`Self::acquire`]
+    /// consults the [`fault::KV_ALLOC`] site and reports the free list empty
+    /// on a fired draw, exercising every starvation path (reclaim, stall,
+    /// evict, re-queue) without needing a genuinely exhausted pool.
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl KvArena {
@@ -245,7 +252,14 @@ impl KvArena {
             free: (0..n_blocks as u32).rev().collect(),
             high_water: 0,
             rc: vec![0; n_blocks],
+            fault: None,
         }
+    }
+
+    /// Attach a fault-injection plan (see [`crate::util::fault`]); the server
+    /// installs the process plan here so block starvation is injectable.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     fn block_floats(cfg: &ModelConfig, block_positions: usize) -> usize {
@@ -310,6 +324,13 @@ impl KvArena {
     /// false when the free list is empty (the scheduler then reclaims index
     /// entries, stalls, or evicts).
     pub fn acquire(&mut self, seq: &mut KvSeq) -> bool {
+        if let Some(plan) = &self.fault {
+            if plan.fire(fault::KV_ALLOC) {
+                // Injected starvation: indistinguishable from an empty free
+                // list, so every caller's relief ladder gets exercised.
+                return false;
+            }
+        }
         match self.free.pop() {
             Some(b) => {
                 let rc = &mut self.rc[b as usize];

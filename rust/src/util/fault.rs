@@ -1,0 +1,256 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A `FaultPlan` is a seeded schedule of failure rules keyed by *site* (a
+//! static string naming an injection point) and optionally by a dynamic *key*
+//! (e.g. a lane name). Each call to [`FaultPlan::fire`] consumes one step of a
+//! per-rule counter and hashes `(seed, site, key, step)` into a uniform value,
+//! so a given plan fires the exact same schedule on every run regardless of
+//! thread timing — the property `tests/chaos.rs` relies on to replay failures.
+//!
+//! Sites wired into the serving stack:
+//! - [`KV_ALLOC`] — `KvArena::acquire` reports the free list empty.
+//! - [`DECODE_PANIC`] — a lane's decode round panics (keyed by lane name).
+//! - [`ROUND_STALL`] — a lane's round sleeps `stall_ms` before decoding
+//!   (keyed by lane name), exercising the watchdog.
+//! - [`IO_ERR`] — a frontend connection fails at accept time.
+//!
+//! The process-wide plan is read once from `QTIP_FAULT=<seed>:<spec>` where
+//! `<spec>` is a comma-separated list of `site[@key]=rate` rules plus an
+//! optional `stall_ms=<n>` parameter, e.g.
+//! `QTIP_FAULT=1234:kv_alloc=0.3,decode_panic@beta=1,round_stall=0.05,stall_ms=200`.
+//! With the variable unset, [`global`] returns `None` and every injection
+//! point is a branch on an `Option` that is always `None`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use super::rng::mix64;
+
+/// Injection site: paged-KV block acquisition fails as if the arena were full.
+pub const KV_ALLOC: &str = "kv_alloc";
+/// Injection site: a lane's decode round panics (keyed by lane name).
+pub const DECODE_PANIC: &str = "decode_panic";
+/// Injection site: a lane's round stalls for `stall_ms` (keyed by lane name).
+pub const ROUND_STALL: &str = "round_stall";
+/// Injection site: a frontend connection is dropped with an IO error.
+pub const IO_ERR: &str = "io_err";
+
+/// FNV-1a over a string; cheap stateless site/key hashing.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// One `site[@key]=rate` rule. `hits` counts how many times the rule has been
+/// consulted; the counter value is part of the hash so each consultation gets
+/// an independent (but reproducible) draw.
+#[derive(Debug)]
+struct Rule {
+    site: String,
+    /// `None` matches any key at the site; `Some(k)` matches only that key.
+    key: Option<String>,
+    rate: f64,
+    hits: AtomicU64,
+}
+
+/// A seeded, deterministic fault schedule. Shared (`Arc`) between the server,
+/// the KV arena, and the frontends; all counters are atomic so concurrent
+/// consultation stays well-defined (the *set* of draws is deterministic per
+/// consulting site because each site owns its own rule counters).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+    stall_ms: u64,
+    fired: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse `<seed>:<spec>` (the `QTIP_FAULT` grammar, see module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let (seed_str, rules_str) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("fault spec '{spec}' missing '<seed>:' prefix"))?;
+        let seed: u64 = seed_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("fault spec seed '{seed_str}' is not a u64"))?;
+        let mut plan = FaultPlan {
+            seed,
+            rules: Vec::new(),
+            stall_ms: 100,
+            fired: AtomicU64::new(0),
+        };
+        for part in rules_str.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (lhs, rhs) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault rule '{part}' missing '=rate'"))?;
+            if lhs == "stall_ms" {
+                plan.stall_ms = rhs
+                    .parse()
+                    .map_err(|_| format!("stall_ms '{rhs}' is not a u64"))?;
+                continue;
+            }
+            let (site, key) = match lhs.split_once('@') {
+                Some((s, k)) => (s.to_string(), Some(k.to_string())),
+                None => (lhs.to_string(), None),
+            };
+            let rate: f64 = rhs
+                .parse()
+                .map_err(|_| format!("fault rate '{rhs}' is not a number"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("fault rate {rate} outside [0, 1]"));
+            }
+            plan.rules.push(Rule {
+                site,
+                key,
+                rate,
+                hits: AtomicU64::new(0),
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Consult the plan at `site` with no dynamic key.
+    pub fn fire(&self, site: &str) -> bool {
+        self.fire_keyed(site, "")
+    }
+
+    /// Consult the plan at `site` for `key` (e.g. a lane name). The first rule
+    /// whose site matches and whose key is absent or equal decides; its
+    /// counter advances exactly once per consultation.
+    pub fn fire_keyed(&self, site: &str, key: &str) -> bool {
+        for rule in &self.rules {
+            let key_ok = match &rule.key {
+                Some(k) => k == key,
+                None => true,
+            };
+            if rule.site != site || !key_ok {
+                continue;
+            }
+            let n = rule.hits.fetch_add(1, Ordering::SeqCst);
+            let h = mix64(
+                self.seed
+                    ^ fnv64(site)
+                    ^ fnv64(key).rotate_left(31)
+                    ^ n.wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            // 53 mantissa bits -> uniform in [0, 1); rate 0 never fires,
+            // rate 1 always fires.
+            let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if u < rule.rate {
+                self.fired.fetch_add(1, Ordering::SeqCst);
+                return true;
+            }
+            return false;
+        }
+        false
+    }
+
+    /// Stall duration for the `round_stall` site.
+    pub fn stall_ms(&self) -> u64 {
+        self.stall_ms
+    }
+
+    /// Total faults fired so far (all sites); chaos tests use this to assert
+    /// a schedule actually injected something.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// The process-wide plan parsed from `QTIP_FAULT`, or `None` when unset or
+/// malformed (a malformed spec logs once and disables injection rather than
+/// aborting the server).
+pub fn global() -> Option<&'static Arc<FaultPlan>> {
+    static GLOBAL: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+    GLOBAL
+        .get_or_init(|| match std::env::var("QTIP_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+                Ok(plan) => Some(Arc::new(plan)),
+                Err(e) => {
+                    eprintln!("[fault] ignoring QTIP_FAULT: {e}");
+                    None
+                }
+            },
+            _ => None,
+        })
+        .as_ref()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("1234:kv_alloc=0.3,decode_panic@beta=1,stall_ms=200").unwrap();
+        assert_eq!(p.seed, 1234);
+        assert_eq!(p.stall_ms(), 200);
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].site, "kv_alloc");
+        assert!(p.rules[0].key.is_none());
+        assert_eq!(p.rules[1].key.as_deref(), Some("beta"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("no-seed-prefix").is_err());
+        assert!(FaultPlan::parse("x:kv_alloc=0.5").is_err());
+        assert!(FaultPlan::parse("1:kv_alloc").is_err());
+        assert!(FaultPlan::parse("1:kv_alloc=1.5").is_err());
+        assert!(FaultPlan::parse("1:kv_alloc=nan-ish").is_err());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::parse("99:kv_alloc=0.5").unwrap();
+        let b = FaultPlan::parse("99:kv_alloc=0.5").unwrap();
+        let sa: Vec<bool> = (0..256).map(|_| a.fire(KV_ALLOC)).collect();
+        let sb: Vec<bool> = (0..256).map(|_| b.fire(KV_ALLOC)).collect();
+        assert_eq!(sa, sb);
+        // A 0.5-rate schedule over 256 draws fires some but not all.
+        let n = sa.iter().filter(|&&f| f).count();
+        assert!(n > 0 && n < 256, "fired {n}/256");
+        assert_eq!(a.fired(), n as u64);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultPlan::parse("1:kv_alloc=0.5").unwrap();
+        let b = FaultPlan::parse("2:kv_alloc=0.5").unwrap();
+        let sa: Vec<bool> = (0..128).map(|_| a.fire(KV_ALLOC)).collect();
+        let sb: Vec<bool> = (0..128).map(|_| b.fire(KV_ALLOC)).collect();
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let p = FaultPlan::parse("7:decode_panic=1,io_err=0").unwrap();
+        for _ in 0..64 {
+            assert!(p.fire(DECODE_PANIC));
+            assert!(!p.fire(IO_ERR));
+        }
+        // An unlisted site never fires.
+        assert!(!p.fire(KV_ALLOC));
+    }
+
+    #[test]
+    fn keyed_rule_matches_only_its_key() {
+        let p = FaultPlan::parse("5:decode_panic@beta=1").unwrap();
+        assert!(!p.fire_keyed(DECODE_PANIC, "alpha"));
+        assert!(p.fire_keyed(DECODE_PANIC, "beta"));
+        // Unkeyed rules match any key.
+        let q = FaultPlan::parse("5:round_stall=1").unwrap();
+        assert!(q.fire_keyed(ROUND_STALL, "alpha"));
+        assert!(q.fire_keyed(ROUND_STALL, "beta"));
+    }
+}

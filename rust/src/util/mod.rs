@@ -2,6 +2,7 @@
 //! unavailable, so each role is implemented here — see DESIGN.md §3).
 
 pub mod f16;
+pub mod fault;
 pub mod hadamard;
 pub mod json;
 pub mod linalg;

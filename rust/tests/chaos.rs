@@ -1,0 +1,283 @@
+//! Deterministic fault-injection soak against the real serving stack.
+//!
+//! Each test wires a seeded [`FaultPlan`] (`util::fault`) into the server and
+//! asserts the overload-hardening invariants the batcher promises:
+//!
+//!   1. no deadlock — every submitted request terminates within a generous
+//!      wall-clock bound (receiver timeouts are the deadlock detector);
+//!   2. every request ends in exactly one of: a full token stream, or a
+//!      structured error with a stable machine-readable code;
+//!   3. faults never corrupt accepted output — tokens produced under
+//!      injected allocation failures are identical to a fault-free run
+//!      (greedy decoding, so any divergence is corruption, not sampling);
+//!   4. the KV arena's partition invariant (free ⊎ leased ⊎ shared = pool)
+//!      holds after every round — asserted internally by the debug build at
+//!      round boundaries, so simply completing under chaos exercises it.
+//!
+//! The last test additionally honors a `QTIP_FAULT=<seed>:<spec>` schedule
+//! from the environment (the CI chaos lane's seed matrix); without the
+//! variable it runs the same soak fault-free, so plain `cargo test` stays
+//! deterministic.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qtip::coordinator::{
+    codes, quantize_model_qtip, GenRequest, ServerConfig, ServerHandle,
+};
+use qtip::hessian::collect_hessians;
+use qtip::model::{KvArena, KvLayout, ModelConfig, Transformer, WeightStore};
+use qtip::quant::QtipConfig;
+use qtip::util::fault::FaultPlan;
+use qtip::util::threadpool::ExecPool;
+
+/// Generous per-request bound: far above any real decode time for the tiny
+/// model, tight enough that a wedged batcher fails the suite instead of
+/// hanging it.
+const DEADLOCK_BOUND: Duration = Duration::from_secs(60);
+
+fn quantized_tiny() -> Arc<Transformer> {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 2;
+    cfg.max_seq = 96;
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 13));
+    let seqs = vec![
+        (0..64u16).collect::<Vec<_>>(),
+        (100..164u16).collect::<Vec<_>>(),
+    ];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v: 1, tx: 8, ty: 8, code: "3inst".into(), seed: 2 };
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
+    Arc::new(model)
+}
+
+fn req(id: u64, n: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: format!("chaos-{id}"),
+        max_new_tokens: n,
+        temperature: 0.0,
+        top_k: 1,
+        seed: id,
+        model: String::new(),
+        deadline_ms: 0,
+    }
+}
+
+/// A tight paged config: small blocks and an arena that just covers one full
+/// sequence, so injected allocation failures actually exercise the
+/// reclaim → stall → evict relief ladder instead of disappearing into slack.
+fn tight_paged_cfg(model: &Transformer) -> ServerConfig {
+    let block = 8usize;
+    let budget = model.cfg.max_seq.div_ceil(block) * KvArena::block_bytes(&model.cfg, block);
+    ServerConfig {
+        max_batch: 3,
+        kv_budget_bytes: budget,
+        kv_block: block,
+        kv_layout: KvLayout::Paged,
+        ..Default::default()
+    }
+}
+
+/// Outcome classifier shared by the soaks: a response is OK iff it carries a
+/// full token stream or a structured error with a known code. Anything else
+/// (silent truncation, unknown code) is a harness failure.
+fn assert_terminated(resp: &qtip::coordinator::GenResponse, want_tokens: usize) {
+    match &resp.error {
+        None => assert_eq!(
+            resp.tokens.len(),
+            want_tokens,
+            "request {} completed with a truncated stream",
+            resp.id
+        ),
+        Some(err) => {
+            let known = [
+                codes::BAD_REQUEST,
+                codes::UNKNOWN_MODEL,
+                codes::KV_BUDGET,
+                codes::QUEUE_FULL,
+                codes::DEADLINE_EXCEEDED,
+                codes::LANE_FAILED,
+                codes::SERVER_SHUTDOWN,
+            ];
+            assert!(
+                known.contains(&err.code),
+                "request {} failed with unknown code '{}': {}",
+                resp.id,
+                err.code,
+                err.message
+            );
+        }
+    }
+}
+
+#[test]
+fn alloc_faults_never_corrupt_output_and_every_request_terminates() {
+    let model = quantized_tiny();
+    // Fault-free reference streams (greedy): the chaos runs must reproduce
+    // these bit-exactly for every request they complete.
+    let reference: Vec<Vec<u16>> = (0..8)
+        .map(|i| {
+            let solo = ServerHandle::spawn(model.clone(), ServerConfig::default());
+            let r = solo.submit(req(i, 4 + 3 * (i as usize % 4))).recv().unwrap();
+            solo.shutdown();
+            assert!(r.error.is_none());
+            r.tokens
+        })
+        .collect();
+
+    for seed in [11u64, 23, 47] {
+        let plan = FaultPlan::parse(&format!("{seed}:kv_alloc=0.3")).unwrap();
+        let mut cfg = tight_paged_cfg(&model);
+        cfg.fault = Some(Arc::new(plan));
+        let server = ServerHandle::spawn(model.clone(), cfg);
+        let rxs: Vec<_> =
+            (0..8).map(|i| server.submit(req(i, 4 + 3 * (i as usize % 4)))).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx
+                .recv_timeout(DEADLOCK_BOUND)
+                .unwrap_or_else(|_| panic!("seed {seed}: request {i} never terminated"));
+            // No deadlines and transient faults: every request must finish
+            // with tokens, and those tokens must match the fault-free run.
+            assert!(
+                resp.error.is_none(),
+                "seed {seed}: request {i} failed: {:?}",
+                resp.error
+            );
+            assert_eq!(
+                resp.tokens, reference[i],
+                "seed {seed}: injected alloc faults corrupted request {i}"
+            );
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 8, "seed {seed}");
+    }
+}
+
+#[test]
+fn decode_panic_poisons_one_lane_and_spares_the_other() {
+    let model = quantized_tiny();
+    let plan = FaultPlan::parse("3:decode_panic@beta=1.0").unwrap();
+    let mut cfg = ServerConfig { max_batch: 2, ..Default::default() };
+    cfg.fault = Some(Arc::new(plan));
+    let server = ServerHandle::spawn_multi(
+        vec![("alpha".to_string(), model.clone()), ("beta".to_string(), model)],
+        cfg,
+    );
+    let to = |id: u64, lane: &str| {
+        let mut r = req(id, 6);
+        r.model = lane.to_string();
+        r
+    };
+    // Interleave both lanes: beta's poisoning must not take alpha down.
+    let beta_rxs: Vec<_> = (0..3).map(|i| server.submit(to(i, "beta"))).collect();
+    let alpha_rxs: Vec<_> = (10..13).map(|i| server.submit(to(i, "alpha"))).collect();
+    for rx in beta_rxs {
+        let resp = rx.recv_timeout(DEADLOCK_BOUND).expect("beta request never terminated");
+        let err = resp.error.expect("beta always panics; its requests must all fail");
+        assert_eq!(err.code, codes::LANE_FAILED, "{err}");
+    }
+    for rx in alpha_rxs {
+        let resp = rx.recv_timeout(DEADLOCK_BOUND).expect("alpha request never terminated");
+        assert!(resp.error.is_none(), "alpha must be unaffected: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 6);
+    }
+    let health = server.health().expect("batcher must keep answering probes");
+    assert!(health.degraded() && !health.all_failed());
+    let stats = server.shutdown();
+    assert_eq!(stats.lane_panics, 1, "one panic poisons the lane; later requests are rejected");
+    assert_eq!(stats.completed, 3);
+}
+
+#[test]
+fn round_stall_trips_the_watchdog_without_stopping_service() {
+    let model = quantized_tiny();
+    // Every round sleeps 60 ms against a 15 ms watchdog: the watchdog must
+    // alarm (diagnosing the stuck round) while the request still completes.
+    let plan = FaultPlan::parse("5:round_stall=1.0,stall_ms=60").unwrap();
+    let mut cfg = ServerConfig::default();
+    cfg.fault = Some(Arc::new(plan));
+    cfg.watchdog_ms = 15;
+    let server = ServerHandle::spawn(model, cfg);
+    let resp = server
+        .submit(req(1, 4))
+        .recv_timeout(DEADLOCK_BOUND)
+        .expect("stalled rounds must still finish");
+    assert!(resp.error.is_none());
+    assert_eq!(resp.tokens.len(), 4);
+    let stats = server.shutdown();
+    assert!(
+        stats.watchdog_stalls >= 1,
+        "60 ms stalls against a 15 ms watchdog must alarm (got {})",
+        stats.watchdog_stalls
+    );
+}
+
+#[test]
+fn mixed_fault_schedule_soak_terminates_cleanly() {
+    let model = quantized_tiny();
+    // Allocation failures and occasional stalls together, under deadline
+    // pressure: requests may expire, but every one must terminate with a
+    // known outcome and the server must drain without deadlock.
+    let plan = FaultPlan::parse("99:kv_alloc=0.25,round_stall=0.05,stall_ms=10").unwrap();
+    let mut cfg = tight_paged_cfg(&model);
+    cfg.fault = Some(Arc::new(plan));
+    cfg.default_deadline_ms = 30_000;
+    let server = ServerHandle::spawn(model, cfg);
+    let want: Vec<usize> = (0..10).map(|i| 3 + (i % 5) * 2).collect();
+    let rxs: Vec<_> =
+        want.iter().enumerate().map(|(i, &n)| server.submit(req(i as u64, n))).collect();
+    let mut completed = 0usize;
+    let mut errored = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(DEADLOCK_BOUND)
+            .unwrap_or_else(|_| panic!("request {i} never terminated under mixed faults"));
+        assert_terminated(&resp, want[i]);
+        if resp.error.is_none() {
+            completed += 1;
+        } else {
+            errored += 1;
+        }
+    }
+    assert_eq!(completed + errored, 10, "every request accounted for exactly once");
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, completed, "stats must agree with observed completions");
+}
+
+#[test]
+fn env_fault_schedule_soak() {
+    // CI's chaos lane sets QTIP_FAULT to one schedule per matrix seed; the
+    // server picks it up through `fault::global()` (cfg.fault = None). With
+    // the variable unset this is a benign fault-free soak, so the test is
+    // deterministic under plain `cargo test`.
+    let injected = std::env::var("QTIP_FAULT").is_ok();
+    let model = quantized_tiny();
+    let mut cfg = tight_paged_cfg(&model);
+    // Deadlines bound the soak even under hostile schedules (e.g. a high
+    // kv_alloc rate that starves admission for a long time).
+    cfg.default_deadline_ms = 30_000;
+    cfg.watchdog_ms = 500;
+    let server = ServerHandle::spawn(model, cfg);
+    let want: Vec<usize> = (0..12).map(|i| 3 + (i % 4) * 3).collect();
+    let rxs: Vec<_> =
+        want.iter().enumerate().map(|(i, &n)| server.submit(req(i as u64, n))).collect();
+    let mut completed = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(2 * DEADLOCK_BOUND)
+            .unwrap_or_else(|_| panic!("request {i} never terminated (QTIP_FAULT set: {injected})"));
+        assert_terminated(&resp, want[i]);
+        if resp.error.is_none() {
+            completed += 1;
+        }
+    }
+    if !injected {
+        assert_eq!(completed, 12, "fault-free soak must complete everything");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, completed);
+}

@@ -187,6 +187,7 @@ fn serve_tokens(model: Transformer, expect_kernel: &str) -> Vec<Vec<u16>> {
                 top_k: 16,
                 seed: 300 + i,
                 model: String::new(),
+                deadline_ms: 0,
             })
         })
         .collect();

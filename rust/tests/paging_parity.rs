@@ -279,6 +279,7 @@ fn req(id: u64, prompt: &str, max_new: usize) -> GenRequest {
         top_k: 1,
         seed: id,
         model: String::new(),
+        deadline_ms: 0,
     }
 }
 

@@ -1,12 +1,15 @@
 //! Serving-stack integration: quantized model under the continuous batcher,
 //! including mid-flight admission, stress over the paged KV arena,
-//! preemption-by-eviction, and contiguous-vs-paged scheduler parity.
+//! preemption-by-eviction, contiguous-vs-paged scheduler parity, and the
+//! overload behaviors (queue shedding, deadline expiry, slow-client
+//! cancellation, panic-isolated lanes).
 
 use std::sync::Arc;
 
 use qtip::coordinator::{
-    quantize_model_qtip, GenRequest, ServerConfig, ServerHandle, StreamEvent,
+    codes, quantize_model_qtip, GenRequest, ServerConfig, ServerHandle, StreamEvent,
 };
+use qtip::util::fault::FaultPlan;
 use qtip::hessian::collect_hessians;
 use qtip::model::{KvArena, KvCache, KvLayout, ModelConfig, Transformer, WeightStore};
 use qtip::quant::QtipConfig;
@@ -41,6 +44,7 @@ fn req(id: u64, n: usize) -> GenRequest {
         top_k: 1,
         seed: id,
         model: String::new(),
+        deadline_ms: 0,
     }
 }
 
@@ -96,6 +100,7 @@ fn fused_batch_is_token_identical_across_heterogeneous_lengths() {
             top_k: 1,
             seed: i,
             model: String::new(),
+            deadline_ms: 0,
         })
         .collect();
 
@@ -168,6 +173,7 @@ fn paged_and_contig_schedulers_serve_identical_tokens_on_quantized_model() {
                     top_k: 1,
                     seed: i,
                     model: String::new(),
+                    deadline_ms: 0,
                 })
             })
             .collect();
@@ -203,6 +209,7 @@ fn mixed_length_continuous_admission_preserves_streams_and_admits_more() {
             top_k: 1,
             seed: i,
             model: String::new(),
+            deadline_ms: 0,
         })
         .collect();
     let run = |layout: KvLayout| {
@@ -312,4 +319,149 @@ fn disconnect_mid_generation_does_not_hold_blocks() {
         stats.kv_blocks_high_water <= stats.kv_blocks_total,
         "arena accounting corrupted"
     );
+}
+
+#[test]
+fn queue_full_sheds_immediately_with_structured_error() {
+    // Bounded admission: with one decode slot and a one-deep queue, a third
+    // concurrent request must be rejected at submission with `queue_full` —
+    // not parked to wait out the backlog.
+    let server = ServerHandle::spawn(
+        quantized_tiny(),
+        ServerConfig { max_batch: 1, max_queue: 1, ..Default::default() },
+    );
+    // Occupy the only slot; first token proves the request is active, so the
+    // next two submissions land in (and then overflow) the waiting queue.
+    let rx1 = server.submit_stream(req(1, 80));
+    match rx1.recv().unwrap() {
+        StreamEvent::Token { .. } => {}
+        ev => panic!("expected a first token, got {ev:?}"),
+    }
+    let rx2 = server.submit(req(2, 4));
+    let rx3 = server.submit(req(3, 4));
+    let shed = rx3.recv().unwrap();
+    let err = shed.error.expect("third request must be shed");
+    assert_eq!(err.code, codes::QUEUE_FULL, "{err}");
+    assert!(err.message.contains("queue is full"), "{err}");
+    // The occupying and queued requests are unaffected by the shed.
+    while let Ok(ev) = rx1.recv() {
+        if matches!(ev, StreamEvent::Done(_)) {
+            break;
+        }
+    }
+    assert!(rx2.recv().unwrap().error.is_none());
+    let stats = server.shutdown();
+    assert_eq!(stats.shed_queue_full, 1);
+    assert_eq!(stats.rejected, 0, "queue sheds are counted separately from rejections");
+    assert_eq!(stats.completed, 2);
+}
+
+#[test]
+fn queued_deadline_expires_with_structured_error_and_frees_the_slot() {
+    // A request whose deadline lapses while it waits behind a long-running
+    // decode must come back `deadline_exceeded` without ever occupying KV.
+    let server = ServerHandle::spawn(
+        quantized_tiny(),
+        ServerConfig { max_batch: 1, ..Default::default() },
+    );
+    let rx1 = server.submit_stream(req(1, 80));
+    match rx1.recv().unwrap() {
+        StreamEvent::Token { .. } => {}
+        ev => panic!("expected a first token, got {ev:?}"),
+    }
+    let mut hurried = req(2, 8);
+    hurried.deadline_ms = 1;
+    let rx2 = server.submit(hurried);
+    let resp = rx2.recv().unwrap();
+    let err = resp.error.expect("queued request must expire");
+    assert_eq!(err.code, codes::DEADLINE_EXCEEDED, "{err}");
+    assert!(err.message.contains("waiting in queue"), "{err}");
+    // The server keeps serving after the expiry.
+    while let Ok(ev) = rx1.recv() {
+        if matches!(ev, StreamEvent::Done(_)) {
+            break;
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.expired_queued, 1);
+    assert_eq!(stats.expired_running, 0);
+    assert_eq!(stats.completed, 1);
+}
+
+#[test]
+fn slow_reader_is_cancelled_on_buffer_overflow_not_blocked_on() {
+    // Slow-client backpressure: a streaming client that never drains its
+    // bounded token buffer is cancelled when the buffer fills — the batcher
+    // must never block on it, and other requests keep completing.
+    let server = ServerHandle::spawn(
+        quantized_tiny(),
+        ServerConfig { max_batch: 2, stream_buffer: 4, ..Default::default() },
+    );
+    let rx_slow = server.submit_stream(req(1, 40));
+    // Never read from rx_slow until the server has moved on: a healthy unary
+    // request behind it must complete normally.
+    let fast = server.submit(req(2, 8)).recv().unwrap();
+    assert!(fast.error.is_none());
+    assert_eq!(fast.tokens.len(), 8);
+    let stats = server.shutdown();
+    assert_eq!(stats.shed_slow_clients, 1, "overflowing stream must be shed");
+    assert!(stats.cancelled >= 1, "slow-client sheds count as cancellations");
+    assert_eq!(stats.completed, 1);
+    // The abandoned receiver sees at most the buffered tokens, then
+    // disconnect — never a Done event (RST-like termination).
+    let mut tokens = 0;
+    while let Ok(ev) = rx_slow.recv() {
+        match ev {
+            StreamEvent::Token { .. } => tokens += 1,
+            StreamEvent::Done(_) => panic!("cancelled slow stream must not see Done"),
+        }
+    }
+    assert!(tokens <= 4, "at most stream_buffer tokens were ever buffered, got {tokens}");
+}
+
+#[test]
+fn lane_panic_is_isolated_and_health_degrades() {
+    // Panic isolation: an injected decode panic in lane "beta" fails beta's
+    // in-flight request with a structured error, marks the lane unhealthy,
+    // and leaves lane "alpha" serving normally.
+    let plan = FaultPlan::parse("7:decode_panic@beta=1.0").unwrap();
+    let mut cfg = ServerConfig::default();
+    cfg.fault = Some(Arc::new(plan));
+    let server = ServerHandle::spawn_multi(
+        vec![
+            ("alpha".to_string(), quantized_tiny()),
+            ("beta".to_string(), quantized_tiny()),
+        ],
+        cfg,
+    );
+    let mut to_beta = req(1, 8);
+    to_beta.model = "beta".to_string();
+    let resp = server.submit(to_beta).recv().unwrap();
+    let err = resp.error.expect("beta's first round panics; its request must fail");
+    assert_eq!(err.code, codes::LANE_FAILED, "{err}");
+
+    // Alpha is untouched by beta's poisoning.
+    let mut to_alpha = req(2, 8);
+    to_alpha.model = "alpha".to_string();
+    let ok = server.submit(to_alpha).recv().unwrap();
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert_eq!(ok.tokens.len(), 8);
+
+    // Health reflects the partial failure: degraded, not dead.
+    let health = server.health().expect("serving thread must answer the probe");
+    assert!(health.degraded());
+    assert!(!health.all_failed());
+    for lane in &health.lanes {
+        assert_eq!(lane.healthy, lane.name == "alpha", "lane {}", lane.name);
+    }
+
+    // New submissions to the poisoned lane are rejected immediately.
+    let mut again = req(3, 8);
+    again.model = "beta".to_string();
+    let rejected = server.submit(again).recv().unwrap();
+    assert_eq!(rejected.error.expect("poisoned lane rejects").code, codes::LANE_FAILED);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.lane_panics, 1);
+    assert_eq!(stats.completed, 1);
 }

@@ -2,7 +2,8 @@
 """Schema check for the perf-trajectory files (BENCH_*.json at the repo root).
 
 Usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain]
-                           [--require-prefix-gain] BENCH_microbench.json [...]
+                           [--require-prefix-gain] [--require-shed-sanity]
+                           BENCH_microbench.json [...]
 
 Pins the same contract as `bench::BenchJson` (rust/src/bench.rs) and its
 `bench_json_schema_roundtrips` unit test: top-level bench / schema_version /
@@ -25,6 +26,14 @@ the Zipf-shared-prefix serving rows (params carrying `workload=zipf_prefix`
 and `prefix=on|off`): under the same tight KV budget, prefix-on must admit
 *strictly more* peak concurrency AND deliver *strictly lower* mean TTFT than
 prefix-off, and must actually report prefix-index hits.
+
+With `--require-shed-sanity`, enforces the overload-shedding acceptance gate
+on the serving rows keyed by `workload=nominal|overload`: both workloads
+must be present, the overload burst must actually shed (`shed_queue_full`
+> 0) while the nominal run sheds nothing, and the mean TTFT of the requests
+the overload run *admitted* must stay within 2x of the uncontended nominal
+mean — shedding exists to protect latency, so an overload TTFT blowup means
+the bound is not doing its job.
 """
 
 import json
@@ -154,6 +163,50 @@ def check_prefix_gate(path: str, doc: dict) -> None:
     )
 
 
+def check_shed_gate(path: str, doc: dict) -> None:
+    srows = [
+        r for r in doc["rows"] if r["params"].get("workload") in ("nominal", "overload")
+    ]
+    if not srows:
+        # Same loud-failure stance as the other pointed gates: an empty match
+        # means the serving bench stopped emitting the overload rows.
+        fail(
+            f"{path}: --require-shed-sanity found no workload=nominal|overload rows — "
+            f"the serving bench no longer emits the overload-shedding metrics"
+        )
+    vals: dict = {}
+    for r in srows:
+        vals.setdefault(r["params"]["workload"], {})[r["metric"]] = r["value"]
+    for wl in ("nominal", "overload"):
+        for metric in ("shed_queue_full", "mean_ttft_s", "completed"):
+            if metric not in vals.get(wl, {}):
+                fail(f"{path}: shed gate needs a {metric} row for workload={wl}")
+    nominal, overload = vals["nominal"], vals["overload"]
+    if not overload["shed_queue_full"] > 0:
+        fail(
+            f"{path}: overload run shed nothing — a burst past the bounded queue must "
+            f"produce queue_full rejections, or the admission bound is not engaged"
+        )
+    if nominal["shed_queue_full"] != 0:
+        fail(
+            f"{path}: nominal run shed {nominal['shed_queue_full']:.0f} request(s) — "
+            f"an in-capacity workload must never be load-shed"
+        )
+    if not overload["completed"] > 0:
+        fail(f"{path}: overload run admitted nothing — the TTFT comparison is vacuous")
+    if not overload["mean_ttft_s"] <= 2.0 * nominal["mean_ttft_s"]:
+        fail(
+            f"{path}: overload admitted-request mean TTFT {overload['mean_ttft_s'] * 1e3:.2f} ms "
+            f"exceeds 2x the nominal {nominal['mean_ttft_s'] * 1e3:.2f} ms — shedding must "
+            f"protect the latency of the requests it admits"
+        )
+    print(
+        f"{path}: shed gate ok (overload shed {overload['shed_queue_full']:.0f}, "
+        f"nominal shed 0, admitted TTFT {overload['mean_ttft_s'] * 1e3:.2f} ms <= "
+        f"2x nominal {nominal['mean_ttft_s'] * 1e3:.2f} ms)"
+    )
+
+
 def check(path: str) -> dict:
     try:
         with open(path, encoding="utf-8") as f:
@@ -200,6 +253,7 @@ if __name__ == "__main__":
     min_speedup = None
     require_paging_gain = False
     require_prefix_gain = False
+    require_shed_sanity = False
     while args and args[0].startswith("--"):
         if args[0] == "--min-lanes-speedup":
             if len(args) < 2:
@@ -212,12 +266,15 @@ if __name__ == "__main__":
         elif args[0] == "--require-prefix-gain":
             require_prefix_gain = True
             args = args[1:]
+        elif args[0] == "--require-shed-sanity":
+            require_shed_sanity = True
+            args = args[1:]
         else:
             fail(f"unknown flag {args[0]}")
     if not args:
         fail(
             "usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain] "
-            "[--require-prefix-gain] BENCH_<name>.json [...]"
+            "[--require-prefix-gain] [--require-shed-sanity] BENCH_<name>.json [...]"
         )
     for p in args:
         document = check(p)
@@ -227,3 +284,5 @@ if __name__ == "__main__":
             check_paging_gate(p, document)
         if require_prefix_gain:
             check_prefix_gate(p, document)
+        if require_shed_sanity:
+            check_shed_gate(p, document)
