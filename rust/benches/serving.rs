@@ -24,14 +24,25 @@
 //! requests it *does* admit keep a mean TTFT within 2× of the nominal run —
 //! load shedding protects latency instead of letting the backlog eat it.
 //!
+//! The fifth table runs a **long/short prompt mix** with chunked GEMM
+//! prefill on (`--prefill-chunk 32`) vs off (token-at-a-time, chunk 1) at
+//! the same KV budget: chunking decodes each quantized weight tile once per
+//! chunk of prompt positions instead of once per token, so long-prompt mean
+//! and p95 TTFT drop while decode throughput and the emitted tokens stay
+//! unchanged. Tables 1–4 pin `prefill_chunk: 1` so their measurements keep
+//! the pre-chunking semantics and the prefill effect is isolated to table 5.
+//!
 //! Emits `BENCH_serving.json` (schema v1) with `tok_per_sec`,
 //! `peak_concurrency`, and `evictions` rows per scheduler plus
-//! `peak_concurrency` / `mean_ttft_s` / `prefix_hits` rows per prefix mode
-//! and `shed_queue_full` / `mean_ttft_s` / `completed` rows per overload
-//! workload for the perf trajectory; `scripts/check_bench_json.py
-//! --require-paging-gain --require-prefix-gain --require-shed-sanity`
-//! enforces the strictly-more-concurrency, shared-beats-unshared, and
-//! shed-under-overload-only acceptance gates in CI.
+//! `peak_concurrency` / `mean_ttft_s` / `prefix_hits` rows per prefix mode,
+//! `shed_queue_full` / `mean_ttft_s` / `completed` rows per overload
+//! workload, and `long_mean_ttft_s` / `long_p95_ttft_s` /
+//! `decode_tok_per_sec` / `prefill_chunks` rows per prefill mode for the
+//! perf trajectory; `scripts/check_bench_json.py --require-paging-gain
+//! --require-prefix-gain --require-shed-sanity --require-prefill-gain`
+//! enforces the strictly-more-concurrency, shared-beats-unshared,
+//! shed-under-overload-only, and chunked-prefill-TTFT acceptance gates in
+//! CI.
 
 use std::sync::Arc;
 
@@ -135,6 +146,10 @@ fn run_workload(
             kv_layout: layout,
             kv_block,
             prefix_share,
+            // Token-at-a-time: tables 1-3 predate chunked prefill and their
+            // gates compare scheduler/geometry/prefix effects — table 5 owns
+            // the chunking comparison.
+            prefill_chunk: 1,
             ..Default::default()
         },
     );
@@ -155,6 +170,75 @@ fn run_workload(
     (secs, stats, ttft_sum / reqs.len().max(1) as f64)
 }
 
+/// Long/short prompt mix for the chunked-prefill comparison: every fourth
+/// request carries a 100-token prompt (dominated by prefill cost), the rest
+/// a 12-token one; everyone generates 8 tokens at temperature 0 so the on
+/// and off runs emit identical text and differ only in scheduling.
+fn prefill_mix_workload(n: usize) -> Vec<GenRequest> {
+    (0..n)
+        .map(|i| {
+            let long = i % 4 == 0;
+            GenRequest {
+                id: i as u64,
+                prompt: "y".repeat(if long { 100 } else { 12 }),
+                max_new_tokens: 8,
+                temperature: 0.0,
+                top_k: 1,
+                seed: i as u64,
+                model: String::new(),
+                deadline_ms: 0,
+            }
+        })
+        .collect()
+}
+
+/// Sorted-in-place p95 (ceil-rank convention; the max for small samples).
+fn p95(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("TTFTs are finite"));
+    let idx = ((xs.len() as f64) * 0.95).ceil() as usize;
+    xs[idx.saturating_sub(1).min(xs.len() - 1)]
+}
+
+/// Run the prefill mix through a paged server with the given chunk geometry;
+/// returns (stats, long-prompt TTFTs, short-prompt mean TTFT). `kv_block` is
+/// left at 0 so the `QTIP_KV_BLOCK=4` CI variant exercises the chunk/block
+/// interaction.
+fn run_prefill_mix(
+    model: &Arc<Transformer>,
+    prefill_chunk: usize,
+    budget: usize,
+    reqs: &[GenRequest],
+) -> (ServerStats, Vec<f64>, f64) {
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 16,
+            kv_budget_bytes: budget,
+            kv_layout: KvLayout::Paged,
+            kv_block: 0,
+            prefill_chunk,
+            ..Default::default()
+        },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone())).collect();
+    let mut long_ttfts = Vec::new();
+    let mut short_sum = 0.0f64;
+    let mut short_n = 0usize;
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let r = rx.recv().expect("request served");
+        assert!(r.error.is_none(), "prefill-mix request rejected: {:?}", r.error);
+        if req.prompt.len() >= 64 {
+            long_ttfts.push(r.ttft);
+        } else {
+            short_sum += r.ttft;
+            short_n += 1;
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, reqs.len());
+    (stats, long_ttfts, short_sum / short_n.max(1) as f64)
+}
+
 /// Overload-tolerant runner: `queue_full` sheds are expected (they are the
 /// measurement), any other error still fails the bench. Returns the final
 /// stats, the mean TTFT over the requests that were actually admitted and
@@ -171,6 +255,7 @@ fn run_shedding_workload(
             kv_budget_bytes: 16 * KvCache::size_bytes_for(&model.cfg),
             kv_layout: KvLayout::Paged,
             kv_block: 16,
+            prefill_chunk: 1,
             max_queue,
             ..Default::default()
         },
@@ -333,5 +418,47 @@ fn main() {
         json.row(&params, "tok_per_sec", stats.throughput_tok_per_sec());
     }
     t4.emit("serving_overload.md");
+
+    // Chunked prefill on (32) vs off (1) on the long/short mix, same paged
+    // server and KV budget; outputs are bit-identical so the comparison is
+    // pure scheduling. Budget: eight contiguous caches — roomy enough that
+    // capacity pressure does not confound the TTFT comparison.
+    let preqs = prefill_mix_workload(n_requests);
+    let pbudget = 8 * KvCache::size_bytes_for(&model.cfg);
+    let mut t5 = Table::new(
+        "Long/short prompt mix: chunked GEMM prefill on vs off, same KV budget",
+        &[
+            "chunked",
+            "long mean TTFT ms",
+            "long p95 TTFT ms",
+            "short mean TTFT ms",
+            "decode tok/s",
+            "prefill chunks",
+            "budget deferrals",
+        ],
+    );
+    for (mode, chunk) in [("off", 1usize), ("on", 32)] {
+        let (stats, mut long_ttfts, short_mean) =
+            run_prefill_mix(&model, chunk, pbudget, &preqs);
+        let long_mean = long_ttfts.iter().sum::<f64>() / long_ttfts.len().max(1) as f64;
+        let long_p95 = p95(&mut long_ttfts);
+        t5.row(vec![
+            mode.into(),
+            f2(long_mean * 1e3),
+            f2(long_p95 * 1e3),
+            f2(short_mean * 1e3),
+            f2(stats.throughput_tok_per_sec()),
+            format!("{}", stats.prefill_chunks),
+            format!("{}", stats.budget_deferrals),
+        ]);
+        let params = [("workload", "prefill_mix".to_string()), ("chunked", mode.to_string())];
+        json.row(&params, "long_mean_ttft_s", long_mean);
+        json.row(&params, "long_p95_ttft_s", long_p95);
+        json.row(&params, "short_mean_ttft_s", short_mean);
+        json.row(&params, "decode_tok_per_sec", stats.throughput_tok_per_sec());
+        json.row(&params, "prefill_chunks", stats.prefill_chunks as f64);
+        json.row(&params, "prefill_tokens_chunked", stats.prefill_tokens_chunked as f64);
+    }
+    t5.emit("serving_prefill.md");
     json.emit();
 }

@@ -232,11 +232,24 @@ fn find_seq(haystack: &[u8], needle: &[u8]) -> Option<usize> {
 
 /// Write a complete non-streaming response and finish the connection.
 fn write_response(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) -> Result<()> {
+    write_response_extra(stream, status, reason, "", body)
+}
+
+/// [`write_response`] with extra header lines (each `"Name: value\r\n"`,
+/// CRLF-terminated by the caller) — the 429 path uses this to attach
+/// `Retry-After` without every other response paying for an allocation.
+fn write_response_extra(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra_headers: &str,
+    body: &Json,
+) -> Result<()> {
     let payload = body.to_string();
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+         Content-Length: {}\r\n{extra_headers}Connection: close\r\n\r\n{payload}",
         payload.len()
     )?;
     stream.flush()?;
@@ -324,6 +337,9 @@ fn stats_json(s: &ServerStats) -> Json {
         ("kernel", Json::Str(s.kernel.clone())),
         ("workers", Json::Num(s.workers as f64)),
         ("fused_rounds", Json::Num(s.fused_rounds as f64)),
+        ("prefill_chunks", Json::Num(s.prefill_chunks as f64)),
+        ("prefill_tokens_chunked", Json::Num(s.prefill_tokens_chunked as f64)),
+        ("budget_deferrals", Json::Num(s.budget_deferrals as f64)),
         ("shed_queue_full", Json::Num(s.shed_queue_full as f64)),
         ("shed_slow_clients", Json::Num(s.shed_slow_clients as f64)),
         ("expired_queued", Json::Num(s.expired_queued as f64)),
@@ -538,6 +554,16 @@ fn serve_generate(
         Wait::ServerGone => server_gone_json(id),
     };
     let (status, reason) = status_for(&resp);
+    // queue_full backpressure: mirror the response's retry_after_ms hint as a
+    // standard `Retry-After` header (whole seconds, rounded up) so plain HTTP
+    // clients and proxies can honor it without parsing the body.
+    if status == 429 {
+        if let Some(ms) = resp.get("retry_after_ms").and_then(|v| v.as_usize()) {
+            let secs = ms.div_ceil(1000).max(1);
+            let extra = format!("Retry-After: {secs}\r\n");
+            return write_response_extra(stream, status, reason, &extra, &resp);
+        }
+    }
     write_response(stream, status, reason, &resp)
 }
 

@@ -23,8 +23,14 @@
 //! fused [`Transformer::decode_step_batch_with`] /
 //! [`Transformer::decode_step_batch_paged`] call, so every packed weight tile
 //! is decoded once per round and applied to all B sequences. Prompt prefill
-//! runs inside these fused rounds (one prompt token per round per sequence),
-//! so a long prompt never head-of-line blocks sequences mid-decode. Clients
+//! runs inside these rounds too, but as **GEMM chunks**: each round plans a
+//! per-sequence token count (`Lane::plan_round`) — every decoding sequence
+//! gets its 1 token first, then the remaining `--round-budget` (0 = unlimited)
+//! is dealt to prefilling sequences in admission order as chunks of up to
+//! `--prefill-chunk` prompt positions, each executed by one
+//! [`Transformer::prefill_chunk_paged`] call that decodes every weight tile
+//! once for the whole chunk. Decode priority means a long prompt can neither
+//! head-of-line block sequences mid-decode nor starve other prompts. Clients
 //! may subscribe to incremental tokens ([`ServerHandle::submit_stream`]) and
 //! cancel in-flight work ([`ServerHandle::cancel`]); a dropped stream
 //! receiver cancels implicitly and frees the sequence's blocks immediately.
@@ -37,8 +43,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::model::kv::{
-    chain_hash, resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, PrefixIndex,
-    PREFIX_HASH_SEED,
+    chain_hash, resolve_kv_block, resolve_prefill_chunk, resolve_round_budget, KvArena, KvCache,
+    KvLayout, KvSeq, PrefixIndex, PREFIX_HASH_SEED,
 };
 use crate::model::transformer::{DecodeScratch, Transformer};
 use crate::model::ByteTokenizer;
@@ -114,6 +120,12 @@ pub mod codes {
 pub struct GenError {
     pub code: &'static str,
     pub message: String,
+    /// Backpressure hint carried by [`codes::QUEUE_FULL`] sheds: how long the
+    /// client should wait before retrying, derived from queue depth × recent
+    /// round time. Surfaced as an HTTP `Retry-After` header and a
+    /// `retry_after_ms` JSON field on both frontends; `None` on every other
+    /// error code.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl std::fmt::Display for GenError {
@@ -149,7 +161,7 @@ impl GenResponse {
             ttft: 0.0,
             total_secs: 0.0,
             decode_tok_per_sec: 0.0,
-            error: Some(GenError { code, message }),
+            error: Some(GenError { code, message, retry_after_ms: None }),
         }
     }
 }
@@ -312,6 +324,12 @@ struct Active {
     /// finisher's blocks instead of forcing an eviction; cleared (and the
     /// sequence skipped) by the next round.
     stalled: bool,
+    /// Tokens [`Lane::plan_round`] granted this sequence for the current
+    /// round: 1 for a decode step, up to `prefill_chunk` for a prefill chunk,
+    /// 0 when budget-deferred or not stepping. The capacity phase leases
+    /// exactly this many positions; the round executes exactly this plan
+    /// (unless the capacity phase shrank or stalled it).
+    planned: usize,
     /// Expiry instant (None = no deadline); checked before every round.
     deadline: Option<Instant>,
     submitted_at: Instant,
@@ -361,6 +379,17 @@ pub struct ServerConfig {
     /// Positions per KV block for the paged layout (`0` = auto:
     /// `QTIP_KV_BLOCK` env var, else 32). Ignored by the contiguous layout.
     pub kv_block: usize,
+    /// Max prompt positions a prefilling sequence advances per round through
+    /// one GEMM [`Transformer::prefill_chunk_paged`] call (`0` = auto:
+    /// `QTIP_PREFILL_CHUNK` env var, else 32). `1` reproduces the legacy
+    /// token-at-a-time prefill; the contiguous layout always uses 1.
+    pub prefill_chunk: usize,
+    /// Per-round token budget with decode priority: every decoding sequence
+    /// gets its 1 token first, the remainder is split across prefilling
+    /// sequences in admission order (`0` = auto: `QTIP_ROUND_BUDGET` env var,
+    /// else unlimited). Deployment policy, not artifact geometry — there is
+    /// no manifest fallback.
+    pub round_budget: usize,
     /// Prefix sharing (paged layout only): keep a per-lane hashed-block
     /// [`PrefixIndex`] and alias a new sequence's leading blocks onto
     /// resident blocks covering the same token prefix instead of
@@ -401,6 +430,8 @@ impl Default for ServerConfig {
             threads: 0,
             kv_layout: KvLayout::Auto,
             kv_block: 0,
+            prefill_chunk: 0,
+            round_budget: 0,
             prefix_share: true,
             max_queue: 0,
             default_deadline_ms: 0,
@@ -484,6 +515,17 @@ pub struct ServerStats {
     /// Rounds the watchdog flagged as stuck (no progress for
     /// [`ServerConfig::watchdog_ms`]).
     pub watchdog_stalls: usize,
+    /// Multi-position GEMM prefill calls ([`Transformer::prefill_chunk_paged`]
+    /// with ≥ 2 positions) — each one decoded every weight tile once for a
+    /// whole chunk of prompt positions.
+    pub prefill_chunks: usize,
+    /// Prompt positions advanced through those chunked calls (excludes
+    /// positions that went through the one-token fused path).
+    pub prefill_tokens_chunked: usize,
+    /// Times a prefilling sequence received less than its full chunk in a
+    /// round because the `--round-budget` ran out (decode priority: decoding
+    /// sequences are never deferred).
+    pub budget_deferrals: usize,
 }
 
 impl ServerStats {
@@ -817,9 +859,21 @@ struct Lane {
     // guarantee that makes preemption deadlock-free).
     active: Vec<Active>,
     max_seq: usize,
+    /// Resolved chunk width for GEMM prefill (≥ 1; 1 = token-at-a-time, and
+    /// always 1 on the contiguous backend, which has no chunked path).
+    prefill_chunk: usize,
+    /// Resolved per-round token budget (0 = unlimited).
+    round_budget: usize,
+    /// Exponentially-smoothed wall time of this lane's recent rounds, the
+    /// basis for queue-full `Retry-After` hints (0.0 until a round completes).
+    recent_round_secs: f64,
     // Round bookkeeping buffers, reused across rounds.
     step_idx: Vec<usize>,
     step_tokens: Vec<u16>,
+    // Sequences whose plan is a multi-position prefill chunk this round, and
+    // the chunk token staging buffer (reused; allocation-free steady state).
+    chunk_idx: Vec<usize>,
+    chunk_tokens: Vec<u16>,
     finished: Vec<usize>,
     /// Poisoned by a panic inside this lane's round: in-flight work was
     /// failed with [`codes::LANE_FAILED`], the backend is abandoned (its
@@ -869,6 +923,14 @@ impl Lane {
             }
         };
         let scratch = DecodeScratch::new(&model.cfg);
+        // Chunked prefill is a paged-backend path (it bulk-appends K/V rows
+        // through the arena); the contiguous reference lane keeps the legacy
+        // one-token-per-round prefill by pinning its chunk width to 1.
+        let prefill_chunk = match &backend {
+            KvBackend::Contig { .. } => 1,
+            KvBackend::Paged { .. } => resolve_prefill_chunk(cfg.prefill_chunk, 0),
+        };
+        let round_budget = resolve_round_budget(cfg.round_budget);
         Lane {
             name,
             model,
@@ -877,8 +939,13 @@ impl Lane {
             waiting: VecDeque::new(),
             active: Vec::new(),
             max_seq,
+            prefill_chunk,
+            round_budget,
+            recent_round_secs: 0.0,
             step_idx: Vec::new(),
             step_tokens: Vec::new(),
+            chunk_idx: Vec::new(),
+            chunk_tokens: Vec::new(),
             finished: Vec::new(),
             failed: false,
             fault,
@@ -936,7 +1003,7 @@ impl Lane {
         // problem, not transient queue depth.
         if cfg.max_queue > 0 && self.waiting.len() >= cfg.max_queue {
             stats.shed_queue_full += 1;
-            sink.send_done(GenResponse::rejected(
+            let mut resp = GenResponse::rejected(
                 req.id,
                 codes::QUEUE_FULL,
                 format!(
@@ -945,7 +1012,11 @@ impl Lane {
                     self.waiting.len(),
                     cfg.max_queue
                 ),
-            ));
+            );
+            if let Some(err) = resp.error.as_mut() {
+                err.retry_after_ms = Some(self.retry_after_hint_ms());
+            }
+            sink.send_done(resp);
             return;
         }
         // Resolve the deadline once: request field, else the server default,
@@ -954,6 +1025,15 @@ impl Lane {
         let deadline_ms = if req.deadline_ms > 0 { req.deadline_ms } else { cfg.default_deadline_ms };
         let deadline = (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms));
         self.waiting.push_back(Pending::new(req, sink, deadline));
+    }
+
+    /// How long a shed client should wait before retrying: queue depth ×
+    /// smoothed recent round time — roughly when the queue's head should have
+    /// drained one slot. Clamped to ≥ 1 ms so clients always see a positive
+    /// hint; a lane that has not completed a round yet guesses from 10 ms.
+    fn retry_after_hint_ms(&self) -> u64 {
+        let round_secs = if self.recent_round_secs > 0.0 { self.recent_round_secs } else { 0.010 };
+        ((self.waiting.len().max(1) as f64) * round_secs * 1e3).ceil().max(1.0) as u64
     }
 
     /// Cancel a queued or active request; true if it lived on this lane.
@@ -1179,15 +1259,56 @@ impl Lane {
                 chain,
                 registered,
                 stalled: false,
+                planned: 0,
             });
+        }
+    }
+
+    /// Decode-priority round planning: decide how many tokens each active
+    /// sequence advances this round. Every decoding sequence is granted its 1
+    /// token first — decode steps are mandatory and never budget-deferred, so
+    /// a flood of long prompts cannot stall in-flight generations. Whatever
+    /// remains of `round_budget` (0 = unlimited) is then dealt to prefilling
+    /// sequences in admission order (index order — deterministic) as chunks
+    /// of at most `prefill_chunk` prompt positions; a sequence granted less
+    /// than its full chunk counts one [`ServerStats::budget_deferrals`].
+    /// The capacity phase leases exactly `planned` positions and the round
+    /// executes exactly this plan.
+    fn plan_round(&mut self, stats: &mut ServerStats) {
+        let max_seq = self.max_seq;
+        let budget = self.round_budget;
+        let mut remaining = budget;
+        for a in self.active.iter_mut() {
+            a.planned = 0;
+            if !a.pending_prompt.is_empty() || !a.will_step(max_seq) {
+                continue;
+            }
+            a.planned = 1;
+            remaining = remaining.saturating_sub(1);
+        }
+        for a in self.active.iter_mut() {
+            if a.pending_prompt.is_empty() {
+                continue;
+            }
+            let want = a.pending_prompt.len().min(self.prefill_chunk).max(1);
+            let take = if budget == 0 { want } else { want.min(remaining) };
+            if take < want {
+                stats.budget_deferrals += 1;
+            }
+            a.planned = take;
+            if budget > 0 {
+                remaining -= take;
+            }
         }
     }
 
     /// Paged capacity phase: every sequence that will write a position this
     /// round must hold a **writable** block for it —
     /// [`KvArena::prepare_append`] both acquires capacity and privatizes a
-    /// shared tail block (copy-on-write) before the round's stores. Under
-    /// pressure, relief is tried cheapest-first: reclaim an index-only
+    /// shared tail block (copy-on-write) before the round's stores. The lease
+    /// covers all `planned` positions (a whole prefill chunk at once). Under
+    /// pressure, relief is tried cheapest-first: shrink a multi-position
+    /// chunk to a single token, then reclaim an index-only
     /// prefix block (cached capacity, not live state), then stall one round
     /// when a sequence retiring this round is about to free blocks anyway,
     /// and only then evict the youngest sequence (blocks released, request
@@ -1198,14 +1319,14 @@ impl Lane {
         if let KvBackend::Paged { arena, block_bytes, prefix } = &mut self.backend {
             let mut i = 0;
             while i < self.active.len() {
-                if !self.active[i].will_step(max_seq) {
+                if self.active[i].planned == 0 {
                     i += 1;
                     continue;
                 }
                 let mut evicted_self = false;
                 loop {
                     let a = &mut self.active[i];
-                    let need = a.kv_len() + 1;
+                    let need = a.kv_len() + a.planned;
                     let SeqKv::Paged(seq) = &mut a.kv else {
                         unreachable!("paged backend holds paged sequences")
                     };
@@ -1215,8 +1336,16 @@ impl Lane {
                         }
                         break;
                     }
-                    // Starved. Cheapest relief: evict the LRU prefix-index
-                    // entry nothing else references and retry.
+                    // Starved. Cheapest relief first: a multi-position prefill
+                    // chunk shrinks to a single token — exactly what the
+                    // pre-chunking scheduler would have leased, so the ladder
+                    // below keeps its old meaning — and the lease retries.
+                    if a.planned > 1 {
+                        a.planned = 1;
+                        continue;
+                    }
+                    // Next: evict the LRU prefix-index entry nothing else
+                    // references and retry.
                     if let Some(idx) = prefix.as_mut() {
                         if idx.reclaim_one(arena).is_some() {
                             continue;
@@ -1288,12 +1417,14 @@ impl Lane {
         }
     }
 
-    /// One fused round: every active sequence advances one token — prompt
-    /// tokens while prefilling, sampled tokens while decoding — through a
-    /// single fused decode call, so each packed weight tile is decoded
-    /// once for the whole batch (continuous batching: admissions above
-    /// interleave between rounds). Finishes by retiring completed sequences
-    /// and reclaiming their KV the same round.
+    /// One round: every active sequence executes its plan — decoding
+    /// sequences advance one sampled token through a single fused decode call
+    /// (each packed weight tile decoded once for the whole batch), and
+    /// prefilling sequences advance up to `prefill_chunk` prompt positions
+    /// through one GEMM [`Transformer::prefill_chunk_paged`] call each (each
+    /// tile decoded once per chunk). Single-token prefill plans join the
+    /// fused batch so cross-sequence amortization is never lost. Finishes by
+    /// retiring completed sequences and reclaiming their KV the same round.
     fn round(&mut self, pool: &ExecPool, tok: &ByteTokenizer, stats: &mut ServerStats) {
         let max_seq = self.max_seq;
         // Chaos hooks: an injected stall exercises the watchdog; an injected
@@ -1311,6 +1442,7 @@ impl Lane {
         self.finished.clear();
         self.step_idx.clear();
         self.step_tokens.clear();
+        self.chunk_idx.clear();
         for (i, a) in self.active.iter_mut().enumerate() {
             if a.stalled {
                 // Waiting out one round for a finisher's blocks (capacity
@@ -1318,9 +1450,21 @@ impl Lane {
                 a.stalled = false;
                 continue;
             }
-            if let Some(t) = a.pending_prompt.pop_front() {
-                self.step_idx.push(i);
-                self.step_tokens.push(t);
+            if !a.pending_prompt.is_empty() {
+                match a.planned {
+                    // Budget-deferred this round: the prompt waits its turn.
+                    0 => {}
+                    // A 1-token plan rides the fused batch with the decode
+                    // steps — cross-sequence amortization is never lost.
+                    1 => {
+                        let t = a.pending_prompt.pop_front().expect("non-empty checked");
+                        self.step_idx.push(i);
+                        self.step_tokens.push(t);
+                    }
+                    // Multi-position chunk: executed below, after the fused
+                    // round (tokens drained there, against the staging buffer).
+                    _ => self.chunk_idx.push(i),
+                }
                 continue;
             }
             let t = a.next_token.expect("decoding sequence always holds a sampled token");
@@ -1440,7 +1584,52 @@ impl Lane {
                     &mut a.rng,
                 ));
             }
+        }
 
+        // Chunked GEMM prefill: each multi-position plan runs one
+        // `prefill_chunk_paged` call, decoding every weight tile once for the
+        // whole chunk instead of once per position. Runs after the fused
+        // round so every sequence's plan executes exactly once; sequences are
+        // independent, so per-chunk order cannot affect any output.
+        for ci in 0..self.chunk_idx.len() {
+            let i = self.chunk_idx[ci];
+            let a = &mut self.active[i];
+            let take = a.planned.min(a.pending_prompt.len());
+            debug_assert!(take >= 2, "1-token plans join the fused batch");
+            self.chunk_tokens.clear();
+            for _ in 0..take {
+                self.chunk_tokens
+                    .push(a.pending_prompt.pop_front().expect("plan never exceeds the prompt"));
+            }
+            let KvBackend::Paged { arena, .. } = &mut self.backend else {
+                unreachable!("prefill chunks are planned only for the paged backend")
+            };
+            let SeqKv::Paged(seq) = &mut a.kv else {
+                unreachable!("paged backend holds paged sequences")
+            };
+            let logits = self.model.prefill_chunk_paged(
+                arena,
+                seq,
+                &self.chunk_tokens,
+                &mut self.scratch,
+                pool,
+            );
+            stats.prefill_chunks += 1;
+            stats.prefill_tokens_chunked += take;
+            stats.total_step_tokens += take;
+            if a.pending_prompt.is_empty() {
+                // The chunk consumed the final prompt position: its logits
+                // seed the first sample, exactly like the fused path's.
+                a.next_token = Some(Transformer::sample(
+                    logits,
+                    a.req.temperature,
+                    a.req.top_k,
+                    &mut a.rng,
+                ));
+            }
+        }
+
+        if !self.step_idx.is_empty() || !self.chunk_idx.is_empty() {
             // Register every block the round just completed in the prefix
             // index (whole blocks only — a block's hash covers all of its
             // token ids). The index takes its own reference so the prefix
@@ -1449,7 +1638,7 @@ impl Lane {
             // dedupes and takes no reference.
             if let KvBackend::Paged { arena, prefix: Some(idx), .. } = &mut self.backend {
                 let bp = arena.block_positions();
-                for &i in &self.step_idx {
+                for &i in self.step_idx.iter().chain(self.chunk_idx.iter()) {
                     let a = &mut self.active[i];
                     let SeqKv::Paged(seq) = &a.kv else {
                         unreachable!("paged backend holds paged sequences")
@@ -1467,7 +1656,15 @@ impl Lane {
                 }
             }
         }
-        stats.total_decode_secs += round_start.elapsed().as_secs_f64();
+        let round_secs = round_start.elapsed().as_secs_f64();
+        stats.total_decode_secs += round_secs;
+        // Smooth the round time for Retry-After hints: one slow round (a
+        // watchdog-scale hiccup) shouldn't spike what shed clients are told.
+        self.recent_round_secs = if self.recent_round_secs > 0.0 {
+            0.8 * self.recent_round_secs + 0.2 * round_secs
+        } else {
+            round_secs
+        };
 
         // Retire finished sequences (descending index; `remove` keeps the
         // survivors in admission order for the eviction policy). Blocks are
@@ -1535,7 +1732,14 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
     // (spawned once, parked between jobs) and are shared by every lane —
     // per-lane scratch arenas mean the model forwards allocate nothing per
     // round.
-    let pool = ExecPool::new(cfg.threads);
+    let mut pool = ExecPool::new(cfg.threads);
+    // Arm the pool's chaos hook (`pool_panic`) from the same plan the lanes
+    // use; a worker panic then surfaces through the lane round's
+    // catch_unwind exactly like a kernel bug would.
+    if let Some(plan) = cfg.fault.clone().or_else(|| fault::global().cloned()) {
+        pool.set_fault_plan(plan);
+    }
+    let pool = pool;
     // Stuck-round detector; its Drop joins the thread on every return path.
     let watchdog = Watchdog::spawn(cfg.watchdog_ms);
     stats.workers = pool.width();
@@ -1679,6 +1883,7 @@ fn serve_loop(models: Vec<(String, Arc<Transformer>)>, cfg: ServerConfig, rx: Re
                 continue;
             }
             let ok = catch_unwind(AssertUnwindSafe(|| {
+                lane.plan_round(&mut stats);
                 lane.capacity_phase(&mut stats);
                 lane.round(&pool, &tok, &mut stats);
             }));
@@ -2049,20 +2254,92 @@ mod tests {
     }
 
     #[test]
-    fn prefill_runs_inside_fused_rounds() {
-        // A request with a long prompt must not be prefilled in the admission
-        // path: its prompt tokens are consumed one per fused round, so rounds
-        // keep running while it prefills (fused_rounds ≥ prompt_len + decode).
+    fn prefill_is_chunked_through_the_gemm_path() {
+        // Default config: a 10-token prompt fits one GEMM prefill chunk, so
+        // the whole prompt advances in a single chunked call instead of 10
+        // one-token fused rounds.
         let server = ServerHandle::spawn(tiny_model(), ServerConfig::default());
         let resp = server.submit(req(1, "0123456789", 4)).recv().unwrap();
         let stats = server.shutdown();
         assert_eq!(resp.tokens.len(), 4);
         assert_eq!(resp.prompt_tokens, 10);
+        assert_eq!(stats.prefill_chunks, 1, "10 tokens ≤ default chunk ⇒ one chunked call");
+        assert_eq!(stats.prefill_tokens_chunked, 10);
+        assert!(
+            stats.fused_rounds < 10,
+            "chunked prefill must collapse the 10 one-token prefill rounds, got {}",
+            stats.fused_rounds
+        );
+
+        // --prefill-chunk 1 reproduces the legacy behavior bit-for-bit: one
+        // prompt token per fused round, no chunked calls — and the same
+        // output tokens either way.
+        let server = ServerHandle::spawn(
+            tiny_model(),
+            ServerConfig { prefill_chunk: 1, ..Default::default() },
+        );
+        let legacy = server.submit(req(1, "0123456789", 4)).recv().unwrap();
+        let stats = server.shutdown();
+        assert_eq!(legacy.tokens, resp.tokens, "chunked prefill changed the output");
+        assert_eq!(stats.prefill_chunks, 0);
+        assert_eq!(stats.prefill_tokens_chunked, 0);
         assert!(
             stats.fused_rounds >= 10 + 3,
             "expected ≥ 13 fused rounds (10 prefill + 3 decode), got {}",
             stats.fused_rounds
         );
+    }
+
+    #[test]
+    fn round_budget_defers_prefill_without_changing_outputs() {
+        // Two long prompts through a round budget smaller than their combined
+        // chunk demand: the scheduler must defer (counting budget_deferrals)
+        // but never change what either request generates.
+        let model = tiny_model();
+        let long = "a".repeat(48);
+        let run = |round_budget: usize| {
+            let server = ServerHandle::spawn(
+                model.clone(),
+                ServerConfig {
+                    max_batch: 4,
+                    prefill_chunk: 8,
+                    round_budget,
+                    ..Default::default()
+                },
+            );
+            let rx1 = server.submit(req(1, &long, 6));
+            let rx2 = server.submit(req(2, &long, 6));
+            let out = (rx1.recv().unwrap().tokens, rx2.recv().unwrap().tokens);
+            (out, server.shutdown())
+        };
+        let (free_out, free_stats) = run(0);
+        let (tight_out, tight_stats) = run(8);
+        assert_eq!(free_out.0.len(), 6);
+        assert_eq!(free_out, tight_out, "a round budget must never change outputs");
+        assert_eq!(free_stats.budget_deferrals, 0, "no budget ⇒ no deferrals");
+        assert!(
+            tight_stats.budget_deferrals > 0,
+            "two 48-token prompts through an 8-token round budget must defer"
+        );
+    }
+
+    #[test]
+    fn retry_after_hint_scales_with_queue_depth_and_round_time() {
+        let mut stats = ServerStats::default();
+        let mut lane =
+            Lane::new("l".into(), tiny_model(), &ServerConfig::default(), &mut stats);
+        // Cold lane (no completed round): 10 ms guess, floor of one queued.
+        assert_eq!(lane.retry_after_hint_ms(), 10);
+        lane.recent_round_secs = 0.002;
+        for _ in 0..3 {
+            lane.waiting.push_back(Pending::new(
+                GenRequest::default(),
+                Sink::Unary(channel().0),
+                None,
+            ));
+        }
+        // 3 queued × 2 ms/round = 6 ms.
+        assert_eq!(lane.retry_after_hint_ms(), 6);
     }
 
     #[test]

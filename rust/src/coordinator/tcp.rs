@@ -323,11 +323,18 @@ pub(super) fn server_gone_json(id: u64) -> Json {
 /// (`"error"`) and the stable machine-readable `"code"` clients branch on.
 pub(super) fn final_json(r: GenResponse) -> Json {
     if let Some(err) = r.error {
-        return Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(r.id as f64)),
             ("error", Json::Str(err.message)),
             ("code", Json::Str(err.code.into())),
-        ]);
+        ];
+        // Backpressure hint on queue_full sheds: both frontends carry it in
+        // the JSON body, and the HTTP front door mirrors it as a standard
+        // `Retry-After` header on the 429.
+        if let Some(ms) = err.retry_after_ms {
+            fields.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        return Json::obj(fields);
     }
     Json::obj(vec![
         ("id", Json::Num(r.id as f64)),

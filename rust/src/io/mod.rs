@@ -84,6 +84,10 @@ pub struct ArtifactInfo {
     /// geometry so a cold-started server defaults to it (0 when the manifest
     /// predates the field).
     pub kv_block: usize,
+    /// Prefill-chunk geometry (prompt positions per GEMM prefill pass)
+    /// recorded at save time, same contract as `kv_block`: a serving default
+    /// the CLI/env can override, 0 when the manifest predates the field.
+    pub prefill_chunk: usize,
 }
 
 /// Append-only blob builder; returns byte offsets for the manifest.
@@ -230,9 +234,10 @@ fn quant_desc(qm: &QuantizedMatrix) -> String {
 ///
 /// Every decoder linear must be `Linear::Quantized`; embeddings, norms, and
 /// the head travel as dense f32 sections so the load path needs nothing but
-/// the artifact pair. Records the ambient KV-block geometry
-/// (`QTIP_KV_BLOCK` env > default) in the manifest; a CLI `--kv-block` must
-/// go through [`save_quantized_model_with_kv_block`].
+/// the artifact pair. Records the ambient serving geometry
+/// (`QTIP_KV_BLOCK` / `QTIP_PREFILL_CHUNK` env > defaults) in the manifest;
+/// explicit CLI geometry must go through
+/// [`save_quantized_model_with_geometry`].
 pub fn save_quantized_model(
     dir: &Path,
     name: &str,
@@ -240,18 +245,34 @@ pub fn save_quantized_model(
     report: &QuantizeReport,
 ) -> Result<ArtifactInfo> {
     let kv_block = crate::model::kv::resolve_kv_block(0, 0);
-    save_quantized_model_with_kv_block(dir, name, model, report, kv_block)
+    let prefill_chunk = crate::model::kv::resolve_prefill_chunk(0, 0);
+    save_quantized_model_with_geometry(dir, name, model, report, kv_block, prefill_chunk)
 }
 
-/// [`save_quantized_model`] with an explicit KV-block geometry to record in
-/// the manifest (the `quantize --save --kv-block N` path — the CLI flag
-/// outranks the env var, so the caller resolves precedence).
+/// [`save_quantized_model`] with an explicit KV-block geometry; the
+/// prefill-chunk geometry stays ambient (env > default). Kept for callers
+/// predating the chunked-prefill field.
 pub fn save_quantized_model_with_kv_block(
     dir: &Path,
     name: &str,
     model: &Transformer,
     report: &QuantizeReport,
     kv_block: usize,
+) -> Result<ArtifactInfo> {
+    let prefill_chunk = crate::model::kv::resolve_prefill_chunk(0, 0);
+    save_quantized_model_with_geometry(dir, name, model, report, kv_block, prefill_chunk)
+}
+
+/// [`save_quantized_model`] with explicit serving geometry to record in the
+/// manifest (the `quantize --save --kv-block N --prefill-chunk M` path — CLI
+/// flags outrank the env vars, so the caller resolves precedence).
+pub fn save_quantized_model_with_geometry(
+    dir: &Path,
+    name: &str,
+    model: &Transformer,
+    report: &QuantizeReport,
+    kv_block: usize,
+    prefill_chunk: usize,
 ) -> Result<ArtifactInfo> {
     if name.is_empty()
         || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
@@ -365,6 +386,7 @@ pub fn save_quantized_model_with_kv_block(
         ("quant_method", Json::Str(method.clone())),
         ("quantized_layers", num(quantized_layers)),
         ("kv_block", num(kv_block)),
+        ("prefill_chunk", num(prefill_chunk)),
         ("blob_file", Json::Str(format!("quant_{name}.bin"))),
         ("blob_bytes", num(blob.buf.len())),
         ("checksum_fnv1a64", Json::Str(format!("{checksum:016x}"))),
@@ -387,6 +409,7 @@ pub fn save_quantized_model_with_kv_block(
         method,
         quantized_layers,
         kv_block,
+        prefill_chunk,
     })
 }
 
@@ -641,9 +664,11 @@ fn reassemble_model(
         quant_desc: j.req_str("quant_desc").to_string(),
         method: manifest_method(&j),
         quantized_layers: j.req_usize("quantized_layers"),
-        // Optional: manifests saved before the paged KV arena carry no
-        // geometry; 0 lets the serve path fall through to its default.
+        // Optional: manifests saved before the paged KV arena (or before
+        // chunked prefill) carry no geometry; 0 lets the serve path fall
+        // through to its default.
         kv_block: j.get("kv_block").and_then(|v| v.as_usize()).unwrap_or(0),
+        prefill_chunk: j.get("prefill_chunk").and_then(|v| v.as_usize()).unwrap_or(0),
     };
     Ok((model, report, info))
 }
@@ -698,6 +723,7 @@ pub fn list_quantized_artifacts(dir: &Path) -> Vec<ArtifactInfo> {
             method: manifest_method(&j),
             quantized_layers: nlayers,
             kv_block: j.get("kv_block").and_then(|v| v.as_usize()).unwrap_or(0),
+            prefill_chunk: j.get("prefill_chunk").and_then(|v| v.as_usize()).unwrap_or(0),
         });
     }
     out
@@ -826,13 +852,14 @@ mod tests {
         assert!(list_quantized_artifacts(&dir).is_empty());
         let (model, report) = tiny_quantized("3inst", 1);
         save_quantized_model(&dir, "alpha", &model, &report).unwrap();
-        // An explicit geometry (the `--kv-block` path) must be recorded and
-        // listed verbatim, outranking env/default.
-        save_quantized_model_with_kv_block(&dir, "beta", &model, &report, 8).unwrap();
+        // Explicit geometry (the `--kv-block` / `--prefill-chunk` path) must
+        // be recorded and listed verbatim, outranking env/default.
+        save_quantized_model_with_geometry(&dir, "beta", &model, &report, 8, 5).unwrap();
         let infos = list_quantized_artifacts(&dir);
         assert_eq!(infos.len(), 2);
         assert_eq!(infos[0].name, "alpha");
         assert_eq!(infos[1].kv_block, 8, "explicit --kv-block geometry must round-trip");
+        assert_eq!(infos[1].prefill_chunk, 5, "explicit --prefill-chunk must round-trip");
         assert_eq!(infos[1].name, "beta");
         assert!(infos[0].quant_desc.contains("3inst"));
         assert_eq!(infos[0].config.name, "tiny");

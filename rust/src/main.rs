@@ -49,6 +49,15 @@
 //! copy-on-write prefix sharing (on by default). Every combination emits
 //! bit-identical tokens — the flags trade admission capacity and prefill
 //! work, never output.
+//!
+//! Prompt ingestion on the paged layout runs in GEMM chunks: `--prefill-chunk
+//! N` bounds the positions decoded per weight pass (precedence
+//! `--prefill-chunk` > `QTIP_PREFILL_CHUNK` > the artifact manifest > 32; the
+//! contig layout always ingests token-at-a-time), and `--round-budget N` caps
+//! the tokens a lane decodes per round — active decode sequences get their
+//! token first, the remainder is split across prefilling sequences in
+//! admission order (0 = unlimited). Chunked and token-at-a-time prefill are
+//! bit-identical.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -61,8 +70,8 @@ use qtip::coordinator::{
 use qtip::eval::{perplexity_pool, zeroshot_suite_pool};
 use qtip::hessian::collect_hessians;
 use qtip::model::{
-    calibration_split, eval_split, load_corpus, resolve_kv_block, KvLayout, ModelConfig,
-    Transformer, WeightStore,
+    calibration_split, eval_split, load_corpus, resolve_kv_block, resolve_prefill_chunk,
+    resolve_round_budget, KvLayout, ModelConfig, Transformer, WeightStore,
 };
 use qtip::quant::{kernel, KernelKind, QtipConfig};
 use qtip::util::threadpool::{resolve_workers, ExecPool};
@@ -208,6 +217,18 @@ fn cmd_info(args: &Args) -> Result<()> {
          manifest > 32); the serve arena leases blocks per sequence on demand",
         resolve_kv_block(args.get_usize("kv-block", 0), 0)
     );
+    println!(
+        "  prefill chunk: {} positions (precedence --prefill-chunk > QTIP_PREFILL_CHUNK > \
+         artifact manifest > 32); paged-layout prompt ingestion decodes each weight tile \
+         once per chunk, bit-identical to token-at-a-time",
+        resolve_prefill_chunk(args.get_usize("prefill-chunk", 0), 0)
+    );
+    let budget = resolve_round_budget(args.get_usize("round-budget", 0));
+    println!(
+        "  round budget: {} (--round-budget > QTIP_ROUND_BUDGET; tokens per lane round, \
+         decode steps first, remainder to prefill chunks; 0 = unlimited)",
+        if budget == 0 { "unlimited".to_string() } else { budget.to_string() }
+    );
     Ok(())
 }
 
@@ -241,12 +262,13 @@ fn quantize_inner(args: &Args, allow_random: bool) -> Result<(Transformer, Quant
 /// Acquire a quantized model: cold-start from a saved artifact when
 /// `--artifact <name>` is given (no calibration, no quantization), otherwise
 /// run the full quantization pipeline. The third element is the artifact
-/// manifest's recorded KV-block geometry (0 when quantizing fresh) — the
-/// lowest-precedence default for `serve`'s arena geometry.
+/// manifest's recorded `(kv_block, prefill_chunk)` geometry ((0, 0) when
+/// quantizing fresh) — the lowest-precedence defaults for `serve`'s arena
+/// shape and chunked prefill.
 fn quantized_model(
     args: &Args,
     allow_random: bool,
-) -> Result<(Transformer, QuantizeReport, usize)> {
+) -> Result<(Transformer, QuantizeReport, (usize, usize))> {
     if let Some(name) = args.get("artifact") {
         let timer = Timer::start();
         let pool = make_pool(args);
@@ -259,10 +281,10 @@ fn quantized_model(
             info.blob_bytes,
             timer.secs()
         );
-        Ok((model, report, info.kv_block))
+        Ok((model, report, (info.kv_block, info.prefill_chunk)))
     } else {
         let (model, report) = quantize_inner(args, allow_random)?;
-        Ok((model, report, 0))
+        Ok((model, report, (0, 0)))
     }
 }
 
@@ -278,15 +300,17 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         report.mean_relative_proxy()
     );
     if let Some(save_name) = args.get("save") {
-        // Record the resolved geometry (--kv-block > QTIP_KV_BLOCK > 32) in
+        // Record the resolved serving geometry (CLI flag > env > default) in
         // the manifest so cold-started serves default to it.
         let kv_block = resolve_kv_block(args.get_usize("kv-block", 0), 0);
-        let info = qtip::io::save_quantized_model_with_kv_block(
+        let prefill_chunk = resolve_prefill_chunk(args.get_usize("prefill-chunk", 0), 0);
+        let info = qtip::io::save_quantized_model_with_geometry(
             &artifacts_dir(),
             save_name,
             &model,
             &report,
             kv_block,
+            prefill_chunk,
         )?;
         println!(
             "saved quantized artifact '{save_name}' -> {:?} ({} blob bytes, {} layers); \
@@ -352,17 +376,21 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let (mut model, artifact_kv_block) = if args.has_flag("fp32") {
-        (load_model(args.get_or("model", "nano"), args.has_flag("allow-random"))?, 0)
+    let (mut model, (artifact_kv_block, artifact_prefill_chunk)) = if args.has_flag("fp32") {
+        (load_model(args.get_or("model", "nano"), args.has_flag("allow-random"))?, (0, 0))
     } else {
-        let (m, _, kvb) = quantized_model(args, args.has_flag("allow-random"))?;
-        (m, kvb)
+        let (m, _, geo) = quantized_model(args, args.has_flag("allow-random"))?;
+        (m, geo)
     };
     model.ensure_caches();
     let server_cfg = ServerConfig {
         threads: args.get_usize("threads", 0),
         kv_layout: kv_layout_from_args(args)?,
         kv_block: resolve_kv_block(args.get_usize("kv-block", 0), artifact_kv_block),
+        prefill_chunk: resolve_prefill_chunk(
+            args.get_usize("prefill-chunk", 0),
+            artifact_prefill_chunk,
+        ),
         ..Default::default()
     };
     let server = ServerHandle::spawn(Arc::new(model), server_cfg);
@@ -424,6 +452,12 @@ fn print_server_stats(stats: &ServerStats) {
             stats.stalls_instead_of_evictions
         );
     }
+    if stats.prefill_chunks > 0 {
+        println!(
+            "  chunked prefill: {} chunks ({} tokens GEMM-ingested), {} budget deferrals",
+            stats.prefill_chunks, stats.prefill_tokens_chunked, stats.budget_deferrals
+        );
+    }
     // Overload lines only when something actually happened — the nominal
     // summary stays as short as it always was.
     if stats.shed_queue_full + stats.shed_slow_clients + stats.expired_queued
@@ -459,17 +493,20 @@ fn kv_layout_from_args(args: &Args) -> Result<KvLayout> {
 /// none) keeps the historical single-model path with lane name "default";
 /// repeated `--artifact` flags cold-start each saved artifact as its own lane
 /// named after the artifact, all behind the shared batcher.
-fn serve_models(args: &Args) -> Result<(Vec<(String, Arc<Transformer>)>, QuantizeReport, usize)> {
+fn serve_models(
+    args: &Args,
+) -> Result<(Vec<(String, Arc<Transformer>)>, QuantizeReport, (usize, usize))> {
     let artifacts = args.get_all("artifact");
     if artifacts.len() <= 1 {
-        let (mut model, report, kv_block) = quantized_model(args, args.has_flag("allow-random"))?;
+        let (mut model, report, geometry) = quantized_model(args, args.has_flag("allow-random"))?;
         model.ensure_caches();
-        return Ok((vec![("default".to_string(), Arc::new(model))], report, kv_block));
+        return Ok((vec![("default".to_string(), Arc::new(model))], report, geometry));
     }
     let pool = make_pool(args);
     let mut models = Vec::new();
     let mut first_report = None;
     let mut kv_block = 0usize;
+    let mut prefill_chunk = 0usize;
     for name in &artifacts {
         let (mut model, report, info) =
             qtip::io::load_quantized_model_pool(&artifacts_dir(), name, &pool)?;
@@ -479,18 +516,21 @@ fn serve_models(args: &Args) -> Result<(Vec<(String, Arc<Transformer>)>, Quantiz
             info.config.name, info.quant_desc, info.blob_bytes
         );
         // First artifact's recorded geometry is the lowest-precedence default
-        // (the lanes share one --kv-block setting).
+        // (the lanes share one --kv-block / --prefill-chunk setting).
         if kv_block == 0 {
             kv_block = info.kv_block;
+        }
+        if prefill_chunk == 0 {
+            prefill_chunk = info.prefill_chunk;
         }
         first_report.get_or_insert(report);
         models.push((name.to_string(), Arc::new(model)));
     }
-    Ok((models, first_report.expect("at least two artifacts"), kv_block))
+    Ok((models, first_report.expect("at least two artifacts"), (kv_block, prefill_chunk)))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (models, report, artifact_kv_block) = serve_models(args)?;
+    let (models, report, (artifact_kv_block, artifact_prefill_chunk)) = serve_models(args)?;
     let n_models = models.len();
     let server_cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 4),
@@ -498,6 +538,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.get_usize("threads", 0),
         kv_layout: kv_layout_from_args(args)?,
         kv_block: resolve_kv_block(args.get_usize("kv-block", 0), artifact_kv_block),
+        // Chunked prefill geometry and the per-round token budget (decode
+        // steps first, remainder to prefill chunks; 0 = unlimited).
+        prefill_chunk: resolve_prefill_chunk(
+            args.get_usize("prefill-chunk", 0),
+            artifact_prefill_chunk,
+        ),
+        round_budget: resolve_round_budget(args.get_usize("round-budget", 0)),
         // Prefix sharing is on by default (bit-identical outputs either way);
         // --no-prefix-share keeps an A/B escape hatch for benchmarking.
         prefix_share: !args.has_flag("no-prefix-share"),
@@ -610,6 +657,7 @@ fn main() -> Result<()> {
                  [--model nano] [--k 2] [--l 12] [--code 3inst] [--save NAME] \
                  [--artifact NAME]... [--threads N] [--kernel auto|scalar|lanes] \
                  [--kv-layout auto|contig|paged] [--kv-block N] \
+                 [--prefill-chunk N] [--round-budget N] \
                  [--max-queue N] [--default-deadline MS] \
                  [--tcp ADDR] [--http ADDR] [--allow-random] ..."
             );

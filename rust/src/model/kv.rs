@@ -101,6 +101,56 @@ pub fn resolve_kv_block_from(cli: usize, env: Option<&str>, fallback: usize) -> 
     DEFAULT_KV_BLOCK
 }
 
+/// Default prefill chunk: prompt positions fed through one GEMM prefill pass
+/// per sequence per round. 1 would degenerate to the token-at-a-time path;
+/// matching [`DEFAULT_KV_BLOCK`] keeps a default chunk within one arena block.
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
+
+/// Resolve the prefill chunk size: `cli` (`--prefill-chunk`, 0 = unset) >
+/// `QTIP_PREFILL_CHUNK` env > `fallback` (the artifact manifest's recorded
+/// chunk, 0 = unset) > [`DEFAULT_PREFILL_CHUNK`]. Same precedence ladder as
+/// [`resolve_kv_block`]; chunking never changes output, only TTFT.
+pub fn resolve_prefill_chunk(cli: usize, fallback: usize) -> usize {
+    resolve_prefill_chunk_from(cli, std::env::var("QTIP_PREFILL_CHUNK").ok().as_deref(), fallback)
+}
+
+/// Pure precedence rule behind [`resolve_prefill_chunk`].
+pub fn resolve_prefill_chunk_from(cli: usize, env: Option<&str>, fallback: usize) -> usize {
+    if cli > 0 {
+        return cli;
+    }
+    if let Some(v) = env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        if v > 0 {
+            return v;
+        }
+    }
+    if fallback > 0 {
+        return fallback;
+    }
+    DEFAULT_PREFILL_CHUNK
+}
+
+/// Resolve the per-round prefill token budget: `cli` (`--round-budget`) >
+/// `QTIP_ROUND_BUDGET` env > 0 (unlimited). Unlike the geometry knobs this is
+/// deployment policy, not an artifact property, so there is no manifest
+/// fallback and 0 is a meaningful value (no budget) rather than "unset".
+pub fn resolve_round_budget(cli: usize) -> usize {
+    resolve_round_budget_from(cli, std::env::var("QTIP_ROUND_BUDGET").ok().as_deref())
+}
+
+/// Pure precedence rule behind [`resolve_round_budget`].
+pub fn resolve_round_budget_from(cli: usize, env: Option<&str>) -> usize {
+    if cli > 0 {
+        return cli;
+    }
+    if let Some(v) = env.and_then(|v| v.trim().parse::<usize>().ok()) {
+        if v > 0 {
+            return v;
+        }
+    }
+    0
+}
+
 /// Which KV layout the server schedules over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KvLayout {
@@ -1088,6 +1138,27 @@ mod tests {
         assert_eq!(resolve_kv_block_from(0, Some("0"), 4), 4);
         assert_eq!(resolve_kv_block_from(0, None, 4), 4);
         assert_eq!(resolve_kv_block_from(0, None, 0), DEFAULT_KV_BLOCK);
+    }
+
+    #[test]
+    fn prefill_chunk_resolution_precedence() {
+        // Same ladder as kv_block: cli > env > fallback > default.
+        assert_eq!(resolve_prefill_chunk_from(16, Some("8"), 4), 16);
+        assert_eq!(resolve_prefill_chunk_from(0, Some("8"), 4), 8);
+        assert_eq!(resolve_prefill_chunk_from(0, Some("bogus"), 4), 4);
+        assert_eq!(resolve_prefill_chunk_from(0, Some("0"), 4), 4);
+        assert_eq!(resolve_prefill_chunk_from(0, None, 4), 4);
+        assert_eq!(resolve_prefill_chunk_from(0, None, 0), DEFAULT_PREFILL_CHUNK);
+    }
+
+    #[test]
+    fn round_budget_resolution_precedence() {
+        // cli > env > unlimited (0); there is deliberately no manifest tier.
+        assert_eq!(resolve_round_budget_from(16, Some("8")), 16);
+        assert_eq!(resolve_round_budget_from(0, Some("8")), 8);
+        assert_eq!(resolve_round_budget_from(0, Some("bogus")), 0);
+        assert_eq!(resolve_round_budget_from(0, Some("0")), 0);
+        assert_eq!(resolve_round_budget_from(0, None), 0);
     }
 
     #[test]

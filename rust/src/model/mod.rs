@@ -10,8 +10,8 @@ pub mod weights;
 
 pub use config::ModelConfig;
 pub use kv::{
-    chain_hash, resolve_kv_block, KvArena, KvCache, KvLayout, KvSeq, PrefixIndex,
-    DEFAULT_KV_BLOCK, PREFIX_HASH_SEED,
+    chain_hash, resolve_kv_block, resolve_prefill_chunk, resolve_round_budget, KvArena, KvCache,
+    KvLayout, KvSeq, PrefixIndex, DEFAULT_KV_BLOCK, DEFAULT_PREFILL_CHUNK, PREFIX_HASH_SEED,
 };
 pub use tokenizer::{calibration_split, eval_split, load_corpus, split_corpus, ByteTokenizer};
 pub use transformer::{DecodeScratch, Linear, Transformer};

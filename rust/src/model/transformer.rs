@@ -845,6 +845,158 @@ impl Transformer {
         &scratch.blogits
     }
 
+    /// GEMM prefill of one paged sequence: append `tokens` (a chunk of C
+    /// prompt positions) in a single pass, decoding each packed weight tile
+    /// **once** for all C positions via the batched `matvec_multi` kernels —
+    /// the same amortization the fused decode round applies across sequences,
+    /// applied here across positions of one sequence. Returns the logits of
+    /// the chunk's **last** position (borrowed from `scratch`); earlier
+    /// positions' logits are never formed (prefill discards them anyway).
+    ///
+    /// Bit-identical to feeding the chunk token-at-a-time through
+    /// [`Self::decode_step_batch_paged`]: per-row `matvec_multi` output equals
+    /// the single-column `matvec` (the PR-1 kernel contract), each position's
+    /// K/V rows are stored before any in-chunk position attends to them, and
+    /// the per-position attention (RoPE at absolute position, score order,
+    /// softmax, V accumulation) is the same code shape in the same order — so
+    /// every f32 op sequence matches the reference path exactly.
+    ///
+    /// Contract: the scheduler has leased capacity for the whole chunk
+    /// (`KvArena::prepare_append(seq, seq.len + tokens.len())`), which also
+    /// privatized any shared cursor block; blocks past the cursor are freshly
+    /// acquired and thus always private. Steady state is allocation-free: the
+    /// batch matrices in `scratch` are reshaped in place.
+    pub fn prefill_chunk_paged<'s>(
+        &self,
+        arena: &mut KvArena,
+        seq: &mut KvSeq,
+        tokens: &[u16],
+        scratch: &'s mut DecodeScratch,
+        pool: &ExecPool,
+    ) -> &'s [f32] {
+        let cfg = &self.cfg;
+        let c = tokens.len();
+        assert!(c > 0, "prefill chunk must be non-empty");
+        let base = seq.len;
+        assert!(
+            arena.seq_capacity(seq) >= base + c,
+            "paged KV sequence has no block for positions {}..{} — the scheduler must \
+             KvArena::prepare_append the whole chunk before the prefill pass",
+            base,
+            base + c
+        );
+        if c == 1 {
+            // A 1-token chunk is exactly a single-token decode step; route it
+            // through the shared core so the degenerate case cannot drift.
+            let mut one = [seq];
+            let mut kv = PagedKv { arena, seqs: &mut one };
+            self.decode_step_core(&mut kv, 0, tokens[0], scratch, pool);
+            self.head.matvec_into(&scratch.x, &mut scratch.logits, &mut scratch.xt, pool);
+            return &scratch.logits;
+        }
+        let h = cfg.n_heads;
+        let dh = cfg.head_dim();
+
+        let DecodeScratch {
+            scores,
+            xcol,
+            bx,
+            bxn,
+            bq,
+            bk,
+            bv,
+            battn,
+            bproj,
+            bgate,
+            bup,
+            bdown,
+            bxt,
+            logits,
+            xt,
+            ..
+        } = &mut *scratch;
+        bx.reshape_scratch(c, cfg.d_model);
+        for (r, &tok) in tokens.iter().enumerate() {
+            bx.row_mut(r).copy_from_slice(self.tok_emb.row(tok as usize));
+        }
+        let x = bx;
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // --- Attention block (shared weight decode, per-position state) ---
+            bxn.reshape_scratch(c, cfg.d_model);
+            bxn.data.copy_from_slice(&x.data);
+            for r in 0..c {
+                rmsnorm_row(bxn.row_mut(r), &layer.attn_norm, cfg.rms_eps);
+            }
+            layer.attn.q.matvec_multi_into(bxn, bq, bxt, xcol, pool);
+            layer.attn.k.matvec_multi_into(bxn, bk, bxt, xcol, pool);
+            layer.attn.v.matvec_multi_into(bxn, bv, bxt, xcol, pool);
+            // Store every chunk position's K/V before any attention: row r
+            // attends causally over 0..=base+r, which includes earlier rows of
+            // this same chunk at this same layer.
+            for r in 0..c {
+                let pos = base + r;
+                let theta = cfg.rope_theta;
+                for head in 0..h {
+                    rope_rotate(&mut bq.row_mut(r)[head * dh..(head + 1) * dh], pos, theta);
+                    rope_rotate(&mut bk.row_mut(r)[head * dh..(head + 1) * dh], pos, theta);
+                }
+                arena.k_row_mut(seq, li, pos).copy_from_slice(bk.row(r));
+                arena.v_row_mut(seq, li, pos).copy_from_slice(bv.row(r));
+            }
+
+            let scale = 1.0 / (dh as f32).sqrt();
+            battn.reshape_scratch(c, cfg.d_model);
+            battn.data.fill(0.0);
+            for r in 0..c {
+                let pos = base + r;
+                let out = battn.row_mut(r);
+                let scores = &mut scores[..pos + 1];
+                for head in 0..h {
+                    let hs = head * dh;
+                    let qh = &bq.row(r)[hs..hs + dh];
+                    for tk in 0..=pos {
+                        scores[tk] =
+                            crate::util::matrix::dot(qh, &arena.k_row(seq, li, tk)[hs..hs + dh])
+                                * scale;
+                    }
+                    softmax_inplace(scores);
+                    for tk in 0..=pos {
+                        let w = scores[tk];
+                        let vrow = &arena.v_row(seq, li, tk)[hs..hs + dh];
+                        for i in 0..dh {
+                            out[hs + i] += w * vrow[i];
+                        }
+                    }
+                }
+            }
+            layer.attn.o.matvec_multi_into(battn, bproj, bxt, xcol, pool);
+            x.axpy(1.0, bproj);
+
+            // --- MLP block ---
+            bxn.data.copy_from_slice(&x.data);
+            for r in 0..c {
+                rmsnorm_row(bxn.row_mut(r), &layer.mlp_norm, cfg.rms_eps);
+            }
+            layer.mlp.gate.matvec_multi_into(bxn, bgate, bxt, xcol, pool);
+            layer.mlp.up.matvec_multi_into(bxn, bup, bxt, xcol, pool);
+            for (a, &u) in bgate.data.iter_mut().zip(&bup.data) {
+                *a = silu(*a) * u;
+            }
+            layer.mlp.down.matvec_multi_into(bgate, bdown, bxt, xcol, pool);
+            x.axpy(1.0, bdown);
+        }
+
+        seq.len = base + c;
+        // Only the last position's logits are observable (prefill discards
+        // earlier rows), so only that row is out-normed and headed — the
+        // single-column head matvec is bit-identical to the multi kernel's
+        // per-row output.
+        rmsnorm_row(x.row_mut(c - 1), &self.out_norm, cfg.rms_eps);
+        self.head.matvec_into(x.row(c - 1), logits, xt, pool);
+        &scratch.logits
+    }
+
     /// Sample a token from logits (temperature + top-k; greedy if temp == 0).
     ///
     /// NaN-tolerant by construction: comparisons use a total order with NaN

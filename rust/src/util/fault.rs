@@ -13,6 +13,10 @@
 //! - [`ROUND_STALL`] — a lane's round sleeps `stall_ms` before decoding
 //!   (keyed by lane name), exercising the watchdog.
 //! - [`IO_ERR`] — a frontend connection fails at accept time.
+//! - [`POOL_PANIC`] — an [`crate::util::threadpool::ExecPool`] worker panics
+//!   mid-band while executing a claimed index, exercising the
+//!   panic-propagation path below the batcher (the submitter re-panics, the
+//!   lane's `catch_unwind` poisons that lane only).
 //!
 //! The process-wide plan is read once from `QTIP_FAULT=<seed>:<spec>` where
 //! `<spec>` is a comma-separated list of `site[@key]=rate` rules plus an
@@ -34,6 +38,9 @@ pub const DECODE_PANIC: &str = "decode_panic";
 pub const ROUND_STALL: &str = "round_stall";
 /// Injection site: a frontend connection is dropped with an IO error.
 pub const IO_ERR: &str = "io_err";
+/// Injection site: an execution-pool worker panics while running a claimed
+/// band of a submitted job.
+pub const POOL_PANIC: &str = "pool_panic";
 
 /// FNV-1a over a string; cheap stateless site/key hashing.
 fn fnv64(s: &str) -> u64 {

@@ -27,6 +27,7 @@
 //! The raw-pointer surface (`Job::data`, [`SendPtr`], [`ExecPool::map`]) is
 //! additionally exercised under Miri in CI.
 
+use crate::util::fault::{FaultPlan, POOL_PANIC};
 use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use crate::util::sync::{Arc, Condvar, Mutex};
 use std::mem::MaybeUninit;
@@ -66,6 +67,13 @@ struct Job {
     next: Arc<AtomicUsize>,
     remaining: Arc<AtomicUsize>,
     panicked: Arc<AtomicBool>,
+    /// Chaos hook: a `pool_panic` rule makes a claimed index panic mid-band
+    /// (inside the same `catch_unwind` that contains a real job bug, so the
+    /// injected failure takes the production propagation path). `None` in
+    /// production — one never-taken branch per claimed index. Deliberately a
+    /// `std` Arc, not the loom shim: the plan is plain data and loom tests
+    /// never install one.
+    fault: Option<std::sync::Arc<FaultPlan>>,
 }
 
 impl Clone for Job {
@@ -77,6 +85,7 @@ impl Clone for Job {
             next: Arc::clone(&self.next),
             remaining: Arc::clone(&self.remaining),
             panicked: Arc::clone(&self.panicked),
+            fault: self.fault.clone(),
         }
     }
 }
@@ -132,6 +141,9 @@ pub struct ExecPool {
     shared: Arc<Shared>,
     handles: Vec<crate::util::sync::JoinHandle>,
     width: usize,
+    /// Chaos plan consulted per claimed index at the `pool_panic` site
+    /// ([`ExecPool::set_fault_plan`]); `None` in production.
+    fault: Option<std::sync::Arc<FaultPlan>>,
 }
 
 impl ExecPool {
@@ -153,7 +165,16 @@ impl ExecPool {
                 })
             })
             .collect();
-        ExecPool { shared, handles, width }
+        ExecPool { shared, handles, width, fault: None }
+    }
+
+    /// Arm the `pool_panic` chaos site: every subsequently submitted job
+    /// consults `plan` once per claimed index and panics mid-band when a
+    /// rule fires. The panic takes the production propagation path — the
+    /// worker's `catch_unwind` records it, the submitter re-panics after the
+    /// job drains — so chaos tests exercise exactly what a real job bug would.
+    pub fn set_fault_plan(&mut self, plan: std::sync::Arc<FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     /// Width-1 pool: no spawned threads, `run` executes inline. Used as the
@@ -203,7 +224,15 @@ impl ExecPool {
         // the winning swap pairs with the Release store below, so a thread
         // that takes ownership of the pool sees the previous job fully drained.
         if self.width <= 1 || n == 1 || self.shared.busy.swap(true, Ordering::Acquire) {
+            // The inline path consults the chaos plan too, so a width-1 pool
+            // (single-core CI) still exercises the `pool_panic` site — the
+            // panic unwinds straight to the caller, same as the re-panic below.
             for i in 0..n {
+                if let Some(plan) = &self.fault {
+                    if plan.fire(POOL_PANIC) {
+                        panic!("injected pool worker panic (inline index {i})");
+                    }
+                }
                 f(i);
             }
             return;
@@ -215,6 +244,7 @@ impl ExecPool {
             next: Arc::new(AtomicUsize::new(0)),
             remaining: Arc::new(AtomicUsize::new(n)),
             panicked: Arc::new(AtomicBool::new(false)),
+            fault: self.fault.clone(),
         };
         {
             let mut st = self.shared.state.lock().unwrap();
@@ -367,10 +397,21 @@ fn execute(job: &Job, shared: &Shared) {
         }
         // A panic must still decrement `remaining`, or the submitter (and any
         // borrowed data the job closure captures) would deadlock forever.
+        // The injected `pool_panic` fires inside the same catch_unwind so a
+        // chaos-injected worker panic is indistinguishable from a job bug.
         //
         // SAFETY: `i` was claimed exactly once from `next` and `i < n`; the
         // closure behind `data` outlives the dispatch (see `Job` docs).
-        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) })).is_ok();
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(plan) = &job.fault {
+                if plan.fire(POOL_PANIC) {
+                    panic!("injected pool worker panic (index {i})");
+                }
+            }
+            // SAFETY: see above.
+            unsafe { (job.call)(job.data, i) }
+        }))
+        .is_ok();
         if !ok {
             job.panicked.store(true, Ordering::Release);
         }
@@ -568,6 +609,30 @@ mod tests {
             ran.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ran.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn injected_pool_panic_propagates_like_a_job_bug() {
+        // Both the dispatched (width ≥ 2) and inline (width 1) paths must
+        // surface an armed pool_panic to the submitter as a plain panic —
+        // the same contract as worker_panic_propagates_not_deadlocks.
+        for width in [2usize, 1] {
+            let mut pool = ExecPool::new(width);
+            pool.set_fault_plan(std::sync::Arc::new(
+                crate::util::fault::FaultPlan::parse("7:pool_panic=1").unwrap(),
+            ));
+            let r = catch_unwind(AssertUnwindSafe(|| pool.run(8, |_| {})));
+            assert!(r.is_err(), "armed pool_panic must reach the width-{width} submitter");
+            // The pool stays usable: the next (un-fired) run would need a
+            // fresh plan to panic again, but rate-1 rules always fire, so
+            // drop the plan via a new pool and run a clean job.
+            let clean = ExecPool::new(width);
+            let ran = AtomicUsize::new(0);
+            clean.run(4, |_| {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(ran.load(Ordering::SeqCst), 4);
+        }
     }
 
     #[test]

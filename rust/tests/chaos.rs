@@ -193,6 +193,36 @@ fn decode_panic_poisons_one_lane_and_spares_the_other() {
 }
 
 #[test]
+fn pool_worker_panic_surfaces_as_lane_failure_without_wedging_the_batcher() {
+    let model = quantized_tiny();
+    // Every ExecPool band panics mid-run: the submitting lane re-panics, its
+    // catch_unwind poisons the lane, and the batcher itself must stay alive.
+    let plan = FaultPlan::parse("17:pool_panic=1.0").unwrap();
+    let mut cfg = ServerConfig { max_batch: 2, threads: 2, ..Default::default() };
+    cfg.fault = Some(Arc::new(plan));
+    let server = ServerHandle::spawn(model, cfg);
+    let resp = server
+        .submit(req(1, 6))
+        .recv_timeout(DEADLOCK_BOUND)
+        .expect("a pool worker panic must fail the request, not wedge it");
+    let err = resp.error.expect("the worker panic must surface as a structured error");
+    assert_eq!(err.code, codes::LANE_FAILED, "{err}");
+    // The batcher outlives its lane's death: probes still answer and later
+    // submissions fail fast with the same structured code instead of queuing
+    // behind a corpse.
+    let health = server.health().expect("batcher must keep answering probes");
+    assert!(health.degraded(), "a poisoned lane must show up in health");
+    let resp2 = server
+        .submit(req(2, 4))
+        .recv_timeout(DEADLOCK_BOUND)
+        .expect("post-poisoning submission must fail fast");
+    assert_eq!(resp2.error.expect("lane is down").code, codes::LANE_FAILED);
+    let stats = server.shutdown();
+    assert_eq!(stats.lane_panics, 1, "one pool panic poisons the lane exactly once");
+    assert_eq!(stats.completed, 0);
+}
+
+#[test]
 fn round_stall_trips_the_watchdog_without_stopping_service() {
     let model = quantized_tiny();
     // Every round sleeps 60 ms against a 15 ms watchdog: the watchdog must

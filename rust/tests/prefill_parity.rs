@@ -1,0 +1,268 @@
+//! Chunked-prefill bit-identity: [`Transformer::prefill_chunk_paged`] must
+//! leave exactly the K/V rows, final logits, and continued greedy stream of
+//! token-at-a-time paged decode, for every registered quant method, both
+//! decode-kernel families, chunk sizes {1, 3, kv_block, ≥ prompt}, and pool
+//! widths 1/2. A deliberately tiny block size (4 positions) makes every
+//! multi-token chunk straddle KV-block boundaries.
+//!
+//! The server-level suite at the bottom drives the real [`ServerHandle`]
+//! scheduler with chunking on vs off over the prefix-sharing divergence
+//! shapes (block-boundary, mid-block, and the exact-full-match prompt that
+//! forces the admission copy-on-write reserve): token streams, aliasing
+//! counts, and the CoW count must all be unchanged by the chunk size.
+
+use std::sync::Arc;
+
+use qtip::coordinator::{
+    quantize_model_qtip, GenRequest, ServerConfig, ServerHandle, ServerStats,
+};
+use qtip::hessian::collect_hessians;
+use qtip::model::{
+    DecodeScratch, KvArena, KvLayout, KvSeq, ModelConfig, Transformer, WeightStore,
+};
+use qtip::quant::{registry, KernelKind, QtipConfig};
+use qtip::util::threadpool::ExecPool;
+
+const BLOCK: usize = 4;
+const WIDTHS: [usize; 2] = [1, 2];
+/// 11 tokens: not a multiple of any tested chunk size except 1, so the
+/// chunk-3 and chunk-4 sweeps end on ragged tails (3+3+3+2, 4+4+3).
+const PROMPT: [u16; 11] = [10, 200, 37, 99, 5, 7, 7, 140, 3, 88, 250];
+const DECODE_STEPS: usize = 6;
+
+/// Every registered method as a (code name, V) quantizer config — iterating
+/// the registry keeps this sweep complete as methods are added.
+fn codes() -> Vec<(&'static str, u32)> {
+    registry::all().iter().map(|m| (m.name(), m.preferred_v())).collect()
+}
+
+fn quantized_tiny(code: &str, v: u32) -> Transformer {
+    let mut cfg = ModelConfig::nano();
+    cfg.d_model = 32;
+    cfg.n_heads = 2;
+    cfg.d_ff = 64;
+    cfg.n_layers = 2;
+    cfg.max_seq = 64;
+    let mut model = Transformer::from_store(&WeightStore::random(&cfg, 21));
+    let seqs = vec![(0..48u16).collect::<Vec<_>>(), (60..108u16).collect::<Vec<_>>()];
+    let hs = collect_hessians(&model, &seqs);
+    let qcfg = QtipConfig { l: 10, k: 2, v, tx: 8, ty: 8, code: code.into(), seed: 5 };
+    quantize_model_qtip(&mut model, &hs, &qcfg, &ExecPool::sequential(), |_| {}).unwrap();
+    model
+}
+
+/// Snapshot of every K/V row a sequence holds — the bit-identity claim is on
+/// the cache contents, not just the logits that happen to read them.
+fn kv_snapshot(arena: &KvArena, seq: &KvSeq, n_layers: usize) -> Vec<Vec<f32>> {
+    let mut rows = Vec::new();
+    for li in 0..n_layers {
+        for pos in 0..seq.len {
+            rows.push(arena.k_row(seq, li, pos).to_vec());
+            rows.push(arena.v_row(seq, li, pos).to_vec());
+        }
+    }
+    rows
+}
+
+/// Greedy continuation for `DECODE_STEPS` tokens from `logits`, decoding
+/// token-at-a-time (both runs share this tail, so any divergence it reports
+/// was introduced during prefill).
+fn greedy_tail(
+    model: &Transformer,
+    arena: &mut KvArena,
+    seq: &mut KvSeq,
+    scratch: &mut DecodeScratch,
+    pool: &ExecPool,
+    logits: &[f32],
+) -> Vec<u16> {
+    let mut rng = qtip::util::rng::Rng::new(1);
+    let mut tokens = Vec::new();
+    let mut next = Transformer::sample(logits, 0.0, 1, &mut rng);
+    for _ in 0..DECODE_STEPS {
+        tokens.push(next);
+        let need = seq.len + 1;
+        assert!(arena.ensure(seq, need), "arena sized for the whole run");
+        let mut refs = [&mut *seq];
+        let m = model.decode_step_batch_paged(arena, &mut refs, &[next], scratch, pool);
+        next = Transformer::sample(m.row(0), 0.0, 1, &mut rng);
+    }
+    tokens
+}
+
+/// Reference: the prompt ingested one position per pass over the paged arena.
+fn token_at_a_time(
+    model: &Transformer,
+    pool: &ExecPool,
+) -> (Vec<Vec<f32>>, Vec<f32>, Vec<u16>) {
+    let mut arena = KvArena::new(&model.cfg, BLOCK, model.cfg.max_seq.div_ceil(BLOCK));
+    let mut seq = KvSeq::new();
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    let mut logits: Vec<f32> = Vec::new();
+    for &t in &PROMPT {
+        let need = seq.len + 1;
+        assert!(arena.ensure(&mut seq, need), "arena sized for the prompt");
+        let mut refs = [&mut seq];
+        let m = model.decode_step_batch_paged(&mut arena, &mut refs, &[t], &mut scratch, pool);
+        logits = m.row(0).to_vec();
+    }
+    let snap = kv_snapshot(&arena, &seq, model.cfg.n_layers);
+    let tokens = greedy_tail(model, &mut arena, &mut seq, &mut scratch, pool, &logits);
+    (snap, logits, tokens)
+}
+
+/// The same prompt ingested through [`Transformer::prefill_chunk_paged`] in
+/// chunks of `chunk` positions (ragged final chunk included).
+fn chunked(
+    model: &Transformer,
+    chunk: usize,
+    pool: &ExecPool,
+) -> (Vec<Vec<f32>>, Vec<f32>, Vec<u16>) {
+    let mut arena = KvArena::new(&model.cfg, BLOCK, model.cfg.max_seq.div_ceil(BLOCK));
+    let mut seq = KvSeq::new();
+    let mut scratch = DecodeScratch::new(&model.cfg);
+    let mut logits: Vec<f32> = Vec::new();
+    let mut off = 0usize;
+    while off < PROMPT.len() {
+        let take = chunk.min(PROMPT.len() - off);
+        let need = seq.len + take;
+        assert!(arena.ensure(&mut seq, need), "arena sized for the chunk");
+        logits = model
+            .prefill_chunk_paged(&mut arena, &mut seq, &PROMPT[off..off + take], &mut scratch, pool)
+            .to_vec();
+        off += take;
+    }
+    assert_eq!(seq.len, PROMPT.len(), "chunked prefill must consume the whole prompt");
+    let snap = kv_snapshot(&arena, &seq, model.cfg.n_layers);
+    let tokens = greedy_tail(model, &mut arena, &mut seq, &mut scratch, pool, &logits);
+    (snap, logits, tokens)
+}
+
+#[test]
+fn chunked_prefill_matches_token_at_a_time_for_all_codes_kernels_widths() {
+    for (code, v) in codes() {
+        let mut model = quantized_tiny(code, v);
+        for kernel in [KernelKind::Scalar, KernelKind::Lanes] {
+            model.set_decode_kernel(kernel);
+            for width in WIDTHS {
+                let pool = ExecPool::new(width);
+                let (ref_snap, ref_logits, ref_tokens) = token_at_a_time(&model, &pool);
+                for chunk in [1usize, 3, BLOCK, PROMPT.len()] {
+                    let (snap, logits, tokens) = chunked(&model, chunk, &pool);
+                    let tag = format!("{code} kernel={} width={width} chunk={chunk}", kernel.name());
+                    assert_eq!(snap, ref_snap, "{tag}: chunked prefill wrote different K/V rows");
+                    assert_eq!(logits, ref_logits, "{tag}: final prefill logits diverged");
+                    assert_eq!(tokens, ref_tokens, "{tag}: continued greedy stream diverged");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server-level parity: chunking on vs off through the real scheduler, over
+// prefix-aliased blocks and the CoW divergence shapes.
+// ---------------------------------------------------------------------------
+
+/// 12 bytes = exactly 3 whole blocks at the 4-position test block size, so a
+/// prompt that is the prefix alone fully matches the index (the CoW case).
+const SHARED_PREFIX: &str = "SYSTEM: do x";
+
+fn req(id: u64, prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: prompt.to_string(),
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        top_k: 1,
+        seed: id,
+        model: String::new(),
+        deadline_ms: 0,
+    }
+}
+
+/// Serve the prefix-divergence jobs (seed alone first so its blocks are
+/// index-resident, then the three sharers) with the given chunk geometry;
+/// returns per-request token streams and the final stats.
+fn serve_prefix_jobs(
+    model: &Arc<Transformer>,
+    threads: usize,
+    prefill_chunk: usize,
+    jobs: &[GenRequest],
+) -> (Vec<Vec<u16>>, ServerStats) {
+    let server = ServerHandle::spawn(
+        model.clone(),
+        ServerConfig {
+            max_batch: 4,
+            threads,
+            kv_layout: KvLayout::Paged,
+            kv_block: BLOCK,
+            prefix_share: true,
+            prefill_chunk,
+            ..Default::default()
+        },
+    );
+    let r0 = server.submit(jobs[0].clone()).recv().expect("seed served");
+    assert!(r0.error.is_none(), "seed rejected: {:?}", r0.error);
+    let rxs: Vec<_> = jobs[1..].iter().map(|j| server.submit(j.clone())).collect();
+    let mut got = vec![r0.tokens];
+    for rx in rxs {
+        let r = rx.recv().expect("sharer served");
+        assert!(r.error.is_none(), "sharer rejected: {:?}", r.error);
+        got.push(r.tokens);
+    }
+    (got, server.shutdown())
+}
+
+/// Chunk boundaries must compose with prefix aliasing: only the un-aliased
+/// prompt tail is chunked, divergence mid-block and on block boundaries
+/// included, and the full-match prompt's copy-on-write still fires exactly
+/// once — with token streams identical to the token-at-a-time scheduler.
+#[test]
+fn chunked_prefill_is_bit_identical_over_aliased_blocks_and_cow() {
+    let jobs = vec![
+        req(0, &format!("{SHARED_PREFIX}A1"), 6),
+        // Divergence at position 12 — the first block boundary past the prefix.
+        req(1, &format!("{SHARED_PREFIX}B2"), 6),
+        // Divergence at position 10 — inside block 2, so only 2 blocks alias.
+        req(2, &format!("{}zzzz", &SHARED_PREFIX[..10]), 6),
+        // The prefix alone: all 3 blocks alias, the cursor re-enters the last
+        // shared block, and the first decode round must copy-on-write it.
+        req(3, SHARED_PREFIX, 6),
+    ];
+    let (code, v) = codes()[1];
+    let model = Arc::new(quantized_tiny(code, v));
+    for threads in [1usize, 2] {
+        let (reference, base_stats) = serve_prefix_jobs(&model, threads, 1, &jobs);
+        assert_eq!(
+            base_stats.prefill_chunks, 0,
+            "threads={threads}: chunk 1 must stay on the fused token-at-a-time path"
+        );
+        // Chunk 3 splits the seed prompt mid-block, BLOCK aligns chunks to
+        // block boundaries, 32 swallows every prompt whole.
+        for chunk in [3usize, BLOCK, 32] {
+            let (got, stats) = serve_prefix_jobs(&model, threads, chunk, &jobs);
+            assert_eq!(
+                got, reference,
+                "threads={threads} chunk={chunk}: chunked prefill diverged over \
+                 prefix-aliased admission"
+            );
+            assert!(
+                stats.prefill_chunks > 0,
+                "threads={threads} chunk={chunk}: no prompt went through the GEMM path"
+            );
+            assert_eq!(
+                stats.prefix_hits, 3,
+                "threads={threads} chunk={chunk}: every sharer must still hit the index"
+            );
+            assert_eq!(
+                stats.blocks_shared, 8,
+                "threads={threads} chunk={chunk}: 3+2+3 blocks must still alias"
+            );
+            assert_eq!(
+                stats.cow_copies, 1,
+                "threads={threads} chunk={chunk}: the full-match prompt must CoW once"
+            );
+            assert_eq!(stats.completed, jobs.len());
+        }
+    }
+}

@@ -343,6 +343,10 @@ fn queue_full_sheds_immediately_with_structured_error() {
     let err = shed.error.expect("third request must be shed");
     assert_eq!(err.code, codes::QUEUE_FULL, "{err}");
     assert!(err.message.contains("queue is full"), "{err}");
+    // Backpressure hint: queue_full sheds tell the client when to retry
+    // (queue depth × recent round time, never zero).
+    let hint = err.retry_after_ms.expect("queue_full must carry retry_after_ms");
+    assert!(hint >= 1, "retry hint must be a positive number of ms, got {hint}");
     // The occupying and queued requests are unaffected by the shed.
     while let Ok(ev) = rx1.recv() {
         if matches!(ev, StreamEvent::Done(_)) {

@@ -3,6 +3,7 @@
 
 Usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain]
                            [--require-prefix-gain] [--require-shed-sanity]
+                           [--require-prefill-gain]
                            BENCH_microbench.json [...]
 
 Pins the same contract as `bench::BenchJson` (rust/src/bench.rs) and its
@@ -34,6 +35,15 @@ must be present, the overload burst must actually shed (`shed_queue_full`
 the overload run *admitted* must stay within 2x of the uncontended nominal
 mean — shedding exists to protect latency, so an overload TTFT blowup means
 the bound is not doing its job.
+
+With `--require-prefill-gain`, enforces the chunked-prefill acceptance gate
+on the long/short-mix serving rows (params carrying `workload=prefill_mix`
+and `chunked=on|off`): at the same KV budget, the chunked run must deliver
+*strictly lower* long-prompt mean AND p95 TTFT than the token-at-a-time run,
+keep decode throughput within 10% (>= 0.9x), and actually report GEMM
+prefill chunks — decoding each weight tile once per chunk of prompt
+positions must shorten time to first token without costing steady-state
+decode.
 """
 
 import json
@@ -207,6 +217,68 @@ def check_shed_gate(path: str, doc: dict) -> None:
     )
 
 
+def check_prefill_gate(path: str, doc: dict) -> None:
+    prows = [r for r in doc["rows"] if r["params"].get("workload") == "prefill_mix"]
+    if not prows:
+        # Same loud-failure stance as the other pointed gates: an empty match
+        # means the serving bench stopped emitting the prefill-mix rows.
+        fail(
+            f"{path}: --require-prefill-gain found no workload=prefill_mix rows — "
+            f"the serving bench no longer emits the chunked-prefill acceptance metrics"
+        )
+    vals: dict = {}
+    for r in prows:
+        mode = r["params"].get("chunked")
+        if mode not in ("on", "off"):
+            fail(f"{path}: prefill_mix row with bad chunked param {mode!r}")
+        vals.setdefault(mode, {})[r["metric"]] = r["value"]
+    for mode in ("on", "off"):
+        for metric in (
+            "long_mean_ttft_s",
+            "long_p95_ttft_s",
+            "decode_tok_per_sec",
+            "prefill_chunks",
+        ):
+            if metric not in vals.get(mode, {}):
+                fail(f"{path}: prefill gate needs a {metric} row for chunked={mode}")
+    on, off = vals["on"], vals["off"]
+    if not on["prefill_chunks"] > 0:
+        fail(
+            f"{path}: chunked-on run reported zero prefill_chunks — prompts never went "
+            f"through the GEMM path, so the comparison is vacuous"
+        )
+    if off["prefill_chunks"] != 0:
+        fail(
+            f"{path}: chunked-off run reported {off['prefill_chunks']:.0f} prefill "
+            f"chunks — the token-at-a-time baseline must not chunk"
+        )
+    if not on["long_mean_ttft_s"] < off["long_mean_ttft_s"]:
+        fail(
+            f"{path}: chunked long-prompt mean TTFT {on['long_mean_ttft_s'] * 1e3:.2f} ms "
+            f"is not strictly lower than token-at-a-time "
+            f"{off['long_mean_ttft_s'] * 1e3:.2f} ms — GEMM prefill must shorten time "
+            f"to first token on long prompts"
+        )
+    if not on["long_p95_ttft_s"] < off["long_p95_ttft_s"]:
+        fail(
+            f"{path}: chunked long-prompt p95 TTFT {on['long_p95_ttft_s'] * 1e3:.2f} ms "
+            f"is not strictly lower than token-at-a-time "
+            f"{off['long_p95_ttft_s'] * 1e3:.2f} ms — the tail must improve too"
+        )
+    if not on["decode_tok_per_sec"] >= 0.9 * off["decode_tok_per_sec"]:
+        fail(
+            f"{path}: chunked decode throughput {on['decode_tok_per_sec']:.1f} tok/s "
+            f"fell below 90% of token-at-a-time {off['decode_tok_per_sec']:.1f} tok/s — "
+            f"prefill chunking must not cost steady-state decode"
+        )
+    print(
+        f"{path}: prefill gate ok (long mean TTFT {on['long_mean_ttft_s'] * 1e3:.2f} < "
+        f"{off['long_mean_ttft_s'] * 1e3:.2f} ms, p95 {on['long_p95_ttft_s'] * 1e3:.2f} < "
+        f"{off['long_p95_ttft_s'] * 1e3:.2f} ms, decode {on['decode_tok_per_sec']:.1f} >= "
+        f"0.9x {off['decode_tok_per_sec']:.1f} tok/s, {on['prefill_chunks']:.0f} chunks)"
+    )
+
+
 def check(path: str) -> dict:
     try:
         with open(path, encoding="utf-8") as f:
@@ -254,6 +326,7 @@ if __name__ == "__main__":
     require_paging_gain = False
     require_prefix_gain = False
     require_shed_sanity = False
+    require_prefill_gain = False
     while args and args[0].startswith("--"):
         if args[0] == "--min-lanes-speedup":
             if len(args) < 2:
@@ -269,12 +342,16 @@ if __name__ == "__main__":
         elif args[0] == "--require-shed-sanity":
             require_shed_sanity = True
             args = args[1:]
+        elif args[0] == "--require-prefill-gain":
+            require_prefill_gain = True
+            args = args[1:]
         else:
             fail(f"unknown flag {args[0]}")
     if not args:
         fail(
             "usage: check_bench_json.py [--min-lanes-speedup X] [--require-paging-gain] "
-            "[--require-prefix-gain] [--require-shed-sanity] BENCH_<name>.json [...]"
+            "[--require-prefix-gain] [--require-shed-sanity] [--require-prefill-gain] "
+            "BENCH_<name>.json [...]"
         )
     for p in args:
         document = check(p)
@@ -286,3 +363,5 @@ if __name__ == "__main__":
             check_prefix_gate(p, document)
         if require_shed_sanity:
             check_shed_gate(p, document)
+        if require_prefill_gain:
+            check_prefill_gate(p, document)
